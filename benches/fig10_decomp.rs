@@ -1,0 +1,60 @@
+//! Fig. 10 — sensitivity to the decomposition metric: magnitude /
+//! weight-activation-product / quantization-error saliency, each with
+//! Large (descending) or Small (ascending) selection order, on the
+//! headline SDQ-W7:8-1:8int8-6:8fp4 configuration.
+
+use sdq::harness;
+use sdq::sdq::config::{CompressionConfig, DecompMetric, DecompOrder, Stages};
+use sdq::util::bench::Table;
+
+fn main() {
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let mname = "gpt-micro";
+    let model = harness::load_model(mname).expect("model");
+    let ds = harness::load_dataset().expect("corpus");
+    let ecfg = harness::eval_cfg_for(&model, false);
+
+    let mut table = Table::new(
+        &format!("Fig 10: decomposition-metric sensitivity — {mname} SDQ-W7:8-1:8int8-6:8fp4"),
+        &["Metric", "Order", "ppl", "Δ vs product-large %"],
+    );
+    let mut results = Vec::new();
+    for (metric, mn) in [
+        (DecompMetric::Magnitude, "magnitude"),
+        (DecompMetric::Product, "product"),
+        (DecompMetric::Error, "error"),
+    ] {
+        for (order, on) in [(DecompOrder::Large, "Large"), (DecompOrder::Small, "Small")] {
+            let mut cfg: CompressionConfig = "SDQ-W7:8-1:8int8-6:8fp4".parse().unwrap();
+            if let Stages::Sdq { decompose, .. } = &mut cfg.stages {
+                decompose.metric = metric;
+                decompose.order = order;
+            }
+            match harness::eval_config(&model, &ds, &cfg, ecfg) {
+                Ok(r) => {
+                    eprintln!("  {mn}/{on}: {:.3}", r.ppl.ppl);
+                    results.push((mn, on, r.ppl.ppl));
+                }
+                Err(e) => eprintln!("  {mn}/{on}: {e}"),
+            }
+        }
+    }
+    let reference = results
+        .iter()
+        .find(|(m, o, _)| *m == "product" && *o == "Large")
+        .map(|(_, _, p)| *p)
+        .unwrap_or(f64::NAN);
+    for (m, o, p) in &results {
+        table.row(vec![
+            m.to_string(),
+            o.to_string(),
+            format!("{p:.3}"),
+            format!("{:+.2}", (p - reference) / reference * 100.0),
+        ]);
+    }
+    table.print();
+    table.save_json("fig10_decomp");
+    println!("\nExpected shape: product/Large best; Small orders clearly worse (paper: up to ~7% swing).");
+}

@@ -1,0 +1,41 @@
+//! Fig. 11 — sensitivity to the scale-factor number format:
+//! ufp8-e6m2 vs fp8-e4m3 per-vector scales for int8 dual quant, fp4 dual
+//! quant, and the headline SDQ configuration.
+
+use sdq::formats::NumFormat;
+use sdq::harness;
+use sdq::sdq::config::CompressionConfig;
+use sdq::util::bench::Table;
+
+fn main() {
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let mname = "gpt-micro";
+    let model = harness::load_model(mname).expect("model");
+    let ds = harness::load_dataset().expect("corpus");
+    let ecfg = harness::eval_cfg_for(&model, false);
+
+    let mut table = Table::new(
+        &format!("Fig 11: scale-factor-format sensitivity — {mname}"),
+        &["Configuration", "ufp8-e6m2", "fp8-e4m3"],
+    );
+    for cfg_str in ["Q-VSQuant-WAint8", "Q-VSQuant-WAfp4", "SDQ-W7:8-1:8int8-6:8fp4"] {
+        let mut cells = vec![cfg_str.to_string()];
+        for scale_fmt in [NumFormat::UFp8E6M2, NumFormat::Fp8E4M3] {
+            let mut cfg: CompressionConfig = cfg_str.parse().unwrap();
+            cfg.scale_fmt = scale_fmt;
+            match harness::eval_config(&model, &ds, &cfg, ecfg) {
+                Ok(r) => {
+                    eprintln!("  {cfg_str} scale={scale_fmt}: {:.3}", r.ppl.ppl);
+                    cells.push(format!("{:.3}", r.ppl.ppl));
+                }
+                Err(e) => cells.push(format!("err {e}")),
+            }
+        }
+        table.row(cells);
+    }
+    table.print();
+    table.save_json("fig11_scalefmt");
+    println!("\nExpected shape: fp8-e4m3 column ≤ ufp8-e6m2 column everywhere (paper Fig. 11).");
+}

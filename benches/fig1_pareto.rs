@@ -1,0 +1,61 @@
+//! Fig. 1 — Pareto frontier: effective compute throughput vs perplexity
+//! increase, for sparsification-only, quantization-only and SDQ on one
+//! GPT and one LLaMA model (paper: OPT-6.7B / LLaMA-7B).
+
+use sdq::harness;
+use sdq::sdq::config::CompressionConfig;
+use sdq::util::bench::Table;
+
+fn main() {
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let ds = harness::load_dataset().expect("corpus");
+    for mname in ["gpt-micro", "llama-micro"] {
+        let model = match harness::load_model(mname) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("skip {mname}: {e}");
+                continue;
+            }
+        };
+        let ecfg = harness::eval_cfg_for(&model, false);
+        let mut table = Table::new(
+            &format!("Fig 1: throughput vs Δppl Pareto — {mname}"),
+            &["Configuration", "Family", "EffTput", "ppl", "Δppl%"],
+        );
+        let mut baseline = f64::NAN;
+        for cfg_str in harness::table2_configs() {
+            let cfg: CompressionConfig = cfg_str.parse().unwrap();
+            let family = if cfg_str.starts_with("SDQ") {
+                "SDQ"
+            } else if cfg_str.starts_with("S-") {
+                "sparsify-only"
+            } else if cfg_str.starts_with("Q-") {
+                "quantize-only"
+            } else {
+                "baseline"
+            };
+            match harness::eval_config(&model, &ds, &cfg, ecfg) {
+                Ok(r) => {
+                    if cfg_str == "Dense-WA16" {
+                        baseline = r.ppl.ppl;
+                    }
+                    let delta = (r.ppl.ppl - baseline) / baseline * 100.0;
+                    eprintln!("  {mname} {cfg_str}: {:.3} ({delta:+.2}%)", r.ppl.ppl);
+                    table.row(vec![
+                        cfg_str.to_string(),
+                        family.to_string(),
+                        format!("{:.2}", r.effective_throughput),
+                        format!("{:.3}", r.ppl.ppl),
+                        format!("{delta:+.2}"),
+                    ]);
+                }
+                Err(e) => eprintln!("  {mname} {cfg_str}: {e}"),
+            }
+        }
+        table.print();
+        table.save_json(&format!("fig1_pareto_{mname}"));
+    }
+    println!("\nExpected shape: at 4x only SDQ rows stay near Δppl 0 (paper Fig. 1).");
+}

@@ -1,0 +1,50 @@
+//! Fig. 9 — sensitivity to the sparsification stage: Wanda vs SparseGPT
+//! at N:8 for N ∈ {7, 6, 5, 4}, both sparsification-only and as SDQ's
+//! stage 1 (outliers fixed at 1:8 int8, inliers (N−1):8 fp4).
+
+use sdq::harness;
+use sdq::sdq::config::CompressionConfig;
+use sdq::util::bench::Table;
+
+fn main() {
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let mname = "gpt-micro"; // paper uses OPT-6.7B
+    let model = harness::load_model(mname).expect("model");
+    let ds = harness::load_dataset().expect("corpus");
+    let ecfg = harness::eval_cfg_for(&model, false);
+
+    let mut table = Table::new(
+        &format!("Fig 9: sparsification-stage sensitivity — {mname}"),
+        &["N:8", "S-Wanda", "S-SparseGPT", "SDQ-W", "SDQ-S"],
+    );
+    let dense = harness::eval_config(&model, &ds, &"Dense-WA16".parse().unwrap(), ecfg)
+        .unwrap()
+        .ppl
+        .ppl;
+    println!("baseline Dense-WA16 ppl = {dense:.3}");
+
+    for n in [7usize, 6, 5, 4] {
+        let mut cells = vec![format!("{n}:8")];
+        for cfg_str in [
+            format!("S-Wanda-{n}:8"),
+            format!("S-SparseGPT-{n}:8"),
+            format!("SDQ-W{n}:8-1:8int8-{}:8fp4", n - 1),
+            format!("SDQ-S{n}:8-1:8int8-{}:8fp4", n - 1),
+        ] {
+            let cfg: CompressionConfig = cfg_str.parse().unwrap();
+            match harness::eval_config(&model, &ds, &cfg, ecfg) {
+                Ok(r) => {
+                    eprintln!("  {cfg_str}: {:.3}", r.ppl.ppl);
+                    cells.push(format!("{:.3}", r.ppl.ppl));
+                }
+                Err(e) => cells.push(format!("err {e}")),
+            }
+        }
+        table.row(cells);
+    }
+    table.print();
+    table.save_json("fig9_sparsifier");
+    println!("\nExpected shape: SDQ rows track their stage-1 sparsifier; ppl grows as N falls.");
+}

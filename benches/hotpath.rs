@@ -1,0 +1,124 @@
+//! Hot-path microbenchmarks: the kernels the eval/serving stack spends
+//! its time in. Drives the §Perf optimization loop (EXPERIMENTS.md).
+//!
+//! Covers: dense GEMM, packed N:M SpMM at several densities (validating
+//! `PACK_DENSITY_THRESHOLD`), dynamic activation quantization, the
+//! compression pipeline itself, and the simulated tensor core.
+
+use sdq::formats::NumFormat;
+use sdq::perfmodel::simtc::TensorCoreSpec;
+use sdq::sdq::nm::{topn_block_mask, NmPattern};
+use sdq::sdq::packed::pack;
+use sdq::sdq::pipeline::compress_layer;
+use sdq::sdq::quantize::fake_quant_dynamic_inplace;
+use sdq::tensor::{matmul_into, Matrix};
+use sdq::util::bench::{bench, report, Measurement, Table};
+use sdq::util::rng::Rng;
+
+fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seed_from_u64(seed);
+    Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+}
+
+fn sparse_matrix(rows: usize, cols: usize, pat: NmPattern, seed: u64) -> Matrix {
+    let mut w = rand_matrix(rows, cols, seed);
+    let mut mask = vec![false; cols];
+    for r in 0..rows {
+        let row = w.row_mut(r);
+        let scores: Vec<f32> = row.iter().map(|v| v.abs()).collect();
+        topn_block_mask(&scores, pat, &mut mask);
+        for (v, keep) in row.iter_mut().zip(&mask) {
+            if !keep {
+                *v = 0.0;
+            }
+        }
+    }
+    w
+}
+
+fn gflops(m: &Measurement, flops: f64) -> String {
+    format!("{:.2}", flops / m.median_ns)
+}
+
+fn main() {
+    let mut table = Table::new("hotpath microbenchmarks", &["bench", "median ms", "GFLOP/s"]);
+
+    // Dense GEMM at serving shapes (prefill + eval batch).
+    for (t, k, o) in [(64usize, 384usize, 384usize), (512, 384, 384), (512, 384, 1536)] {
+        let x = rand_matrix(t, k, 1);
+        let w = rand_matrix(o, k, 2);
+        let mut c = Matrix::zeros(t, o);
+        let m = bench(&format!("gemm {t}x{k}x{o}"), 300, || {
+            matmul_into(&x, &w, &mut c);
+            std::hint::black_box(&c);
+        });
+        report(&m);
+        table.row(vec![m.name.clone(), format!("{:.3}", m.median_ms()),
+                       gflops(&m, 2.0 * (t * k * o) as f64)]);
+    }
+
+    // Packed SpMM vs dense at several densities (threshold validation).
+    let (t, k, o) = (256usize, 512usize, 512usize);
+    let x = rand_matrix(t, k, 3);
+    for pat in [NmPattern::new(1, 8), NmPattern::new(2, 8), NmPattern::new(4, 8), NmPattern::new(6, 8)] {
+        let w = sparse_matrix(o, k, pat, 4);
+        let p = pack(&w, pat).unwrap();
+        let mut c = Matrix::zeros(t, o);
+        let m = bench(&format!("spmm {pat} {t}x{k}x{o}"), 300, || {
+            c.data.fill(0.0);
+            p.spmm_into(&x, &mut c);
+            std::hint::black_box(&c);
+        });
+        report(&m);
+        let useful = 2.0 * (t * k * o) as f64 * pat.density();
+        table.row(vec![m.name.clone(), format!("{:.3}", m.median_ms()), gflops(&m, useful)]);
+        let mut cd = Matrix::zeros(t, o);
+        let md = bench(&format!("gemm-as-dense {pat}"), 300, || {
+            matmul_into(&x, &w, &mut cd);
+            std::hint::black_box(&cd);
+        });
+        report(&md);
+        table.row(vec![md.name.clone(), format!("{:.3}", md.median_ms()),
+                       gflops(&md, 2.0 * (t * k * o) as f64)]);
+    }
+
+    // Dynamic activation quantization.
+    for fmt in [NumFormat::Int(8), NumFormat::Fp4E2M1] {
+        let mut x = rand_matrix(512, 384, 5);
+        let m = bench(&format!("act-quant {fmt} 512x384"), 200, || {
+            fake_quant_dynamic_inplace(&mut x, fmt, 16);
+            std::hint::black_box(&x);
+        });
+        report(&m);
+        table.row(vec![m.name.clone(), format!("{:.3}", m.median_ms()),
+                       format!("{:.2}", (512 * 384) as f64 / m.median_ns)]);
+    }
+
+    // Compression pipeline cost (per layer).
+    let w = rand_matrix(384, 384, 6);
+    for cfg_str in ["Q-VSQuant-WAint4", "SDQ-8:8-1:8int8-7:8fp4"] {
+        let mut cfg: sdq::sdq::config::CompressionConfig = cfg_str.parse().unwrap();
+        // Calibration-free microbench: magnitude decomposition metric.
+        if let sdq::sdq::config::Stages::Sdq { decompose, .. } = &mut cfg.stages {
+            decompose.metric = sdq::sdq::config::DecompMetric::Magnitude;
+        }
+        let m = bench(&format!("compress {cfg_str} 384x384"), 300, || {
+            let c = compress_layer("l", &w, &cfg, None).unwrap();
+            std::hint::black_box(&c);
+        });
+        report(&m);
+        table.row(vec![m.name.clone(), format!("{:.3}", m.median_ms()), "-".into()]);
+    }
+
+    // Simulated tensor core (pure model, should be ~ns).
+    let spec = TensorCoreSpec::default();
+    let cfg = "SDQ-W7:8-1:8int8-6:8fp4".parse().unwrap();
+    let m = bench("simtc 512x4096x4096", 100, || {
+        std::hint::black_box(spec.simulate(&cfg, 512, 4096, 4096));
+    });
+    report(&m);
+    table.row(vec![m.name.clone(), format!("{:.4}", m.median_ms()), "-".into()]);
+
+    table.print();
+    table.save_json("hotpath");
+}

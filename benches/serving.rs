@@ -1,0 +1,52 @@
+//! Serving benchmark: coordinator throughput + latency, dense vs SDQ
+//! compressed model, across batch widths — the end-to-end L3 numbers.
+
+use sdq::coordinator::{batcher::BatchPolicy, Engine, Request};
+use sdq::data::Split;
+use sdq::harness;
+use sdq::util::bench::Table;
+
+fn main() {
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let mname = "gpt-micro";
+    let base = harness::load_model(mname).expect("model");
+    let ds = harness::load_dataset().expect("corpus");
+    let test = ds.split(Split::Test);
+
+    let mut table = Table::new(
+        &format!("Serving: coordinator throughput/latency — {mname}"),
+        &["Config", "max_active", "req", "tok/s", "ttft p50 ms", "ttft p99 ms", "total mean ms"],
+    );
+    for cfg_str in ["Dense-WA16", "Q-VSQuant-WAint8", "SDQ-W7:8-1:8int8-6:8fp4"] {
+        let cfg = cfg_str.parse().unwrap();
+        let mut model = base.clone();
+        let calib = harness::calibrate(&model, &ds, 1024, harness::needs_gram(&cfg));
+        model.compress(&cfg, &calib).unwrap();
+        for max_active in [1usize, 4, 8] {
+            let n_req = 16;
+            let reqs: Vec<Request> = (0..n_req)
+                .map(|i| {
+                    let start = (i * 1013) % (test.len() - 33);
+                    Request::new(i as u64, test[start..start + 32].to_vec(), 24)
+                })
+                .collect();
+            let policy = BatchPolicy { max_active, ..Default::default() };
+            let (resps, metrics) = Engine::run_batch(model.clone(), policy, reqs);
+            assert_eq!(resps.len(), n_req);
+            table.row(vec![
+                cfg_str.to_string(),
+                max_active.to_string(),
+                n_req.to_string(),
+                format!("{:.1}", metrics.tokens_per_second()),
+                format!("{:.1}", metrics.ttft.quantile(0.5).as_secs_f64() * 1e3),
+                format!("{:.1}", metrics.ttft.quantile(0.99).as_secs_f64() * 1e3),
+                format!("{:.1}", metrics.total_latency.mean().as_secs_f64() * 1e3),
+            ]);
+            eprintln!("  {cfg_str} active={max_active}: {}", metrics.summary());
+        }
+    }
+    table.print();
+    table.save_json("serving");
+}

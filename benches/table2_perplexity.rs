@@ -1,0 +1,62 @@
+//! Table 2 — perplexity of the GPT (OPT-family stand-in) model ladder on
+//! the held-out corpus under every compression configuration.
+//!
+//! Regenerates the paper's Table 2 rows (configs × model sizes) with the
+//! same grouping by effective compute throughput. Run via
+//! `cargo bench --bench table2_perplexity` (artifacts required).
+
+use sdq::harness;
+use sdq::sdq::config::CompressionConfig;
+use sdq::util::bench::Table;
+
+fn main() {
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let models = harness::available_models("gpt-");
+    if models.is_empty() {
+        eprintln!("no gpt-* models trained");
+        return;
+    }
+    let ds = harness::load_dataset().expect("corpus");
+    let full = std::env::var("SDQ_FULL_EVAL").is_ok();
+
+    let mut headers: Vec<&str> = vec!["Configuration", "Tput"];
+    headers.extend(models.iter().map(|s| s.as_str()));
+    let mut table = Table::new(
+        "Table 2: GPT-family perplexity on held-out corpus (lower is better)",
+        &headers,
+    );
+
+    // Baselines per model for Δ% reporting.
+    let mut baselines = vec![f64::NAN; models.len()];
+    for cfg_str in harness::table2_configs() {
+        let cfg: CompressionConfig = cfg_str.parse().unwrap();
+        let mut row =
+            vec![cfg_str.to_string(), format!("{:.2}x", cfg.effective_throughput())];
+        for (mi, mname) in models.iter().enumerate() {
+            let model = harness::load_model(mname).expect("model");
+            let ecfg = harness::eval_cfg_for(&model, full);
+            let t0 = std::time::Instant::now();
+            match harness::eval_config(&model, &ds, &cfg, ecfg) {
+                Ok(r) => {
+                    if cfg_str == "Dense-WA16" {
+                        baselines[mi] = r.ppl.ppl;
+                    }
+                    let delta = (r.ppl.ppl - baselines[mi]) / baselines[mi] * 100.0;
+                    row.push(format!("{:.3} ({:+.1}%)", r.ppl.ppl, delta));
+                    eprintln!(
+                        "  {mname} {cfg_str}: ppl {:.3} [{:.1}s]",
+                        r.ppl.ppl,
+                        t0.elapsed().as_secs_f64()
+                    );
+                }
+                Err(e) => row.push(format!("err: {e}")),
+            }
+        }
+        table.row(row);
+    }
+    table.print();
+    table.save_json("table2_perplexity");
+    println!("\n(JSON saved under target/bench-results/table2_perplexity.json)");
+}

@@ -1,0 +1,50 @@
+//! Table 3 — perplexity of the LLaMA-family stand-ins under every
+//! compression configuration (`cargo bench --bench table3_perplexity`).
+
+use sdq::harness;
+use sdq::sdq::config::CompressionConfig;
+use sdq::util::bench::Table;
+
+fn main() {
+    if !harness::artifacts_ready() {
+        return;
+    }
+    let models = harness::available_models("llama-");
+    if models.is_empty() {
+        eprintln!("no llama-* models trained");
+        return;
+    }
+    let ds = harness::load_dataset().expect("corpus");
+    let full = std::env::var("SDQ_FULL_EVAL").is_ok();
+
+    let mut headers: Vec<&str> = vec!["Configuration", "Tput"];
+    headers.extend(models.iter().map(|s| s.as_str()));
+    let mut table = Table::new(
+        "Table 3: LLaMA-family perplexity on held-out corpus (lower is better)",
+        &headers,
+    );
+    let mut baselines = vec![f64::NAN; models.len()];
+    for cfg_str in harness::table2_configs() {
+        let cfg: CompressionConfig = cfg_str.parse().unwrap();
+        let mut row =
+            vec![cfg_str.to_string(), format!("{:.2}x", cfg.effective_throughput())];
+        for (mi, mname) in models.iter().enumerate() {
+            let model = harness::load_model(mname).expect("model");
+            let ecfg = harness::eval_cfg_for(&model, full);
+            match harness::eval_config(&model, &ds, &cfg, ecfg) {
+                Ok(r) => {
+                    if cfg_str == "Dense-WA16" {
+                        baselines[mi] = r.ppl.ppl;
+                    }
+                    let delta = (r.ppl.ppl - baselines[mi]) / baselines[mi] * 100.0;
+                    row.push(format!("{:.3} ({:+.1}%)", r.ppl.ppl, delta));
+                    eprintln!("  {mname} {cfg_str}: ppl {:.3}", r.ppl.ppl);
+                }
+                Err(e) => row.push(format!("err: {e}")),
+            }
+        }
+        table.row(row);
+    }
+    table.print();
+    table.save_json("table3_perplexity");
+}

@@ -1,0 +1,62 @@
+//! Table 4 — zero-shot task-suite accuracy under the paper's comparison
+//! set: Dense vs the best 4× sparsification-only, quantization-only and
+//! SDQ configurations (`cargo bench --bench table4_zeroshot`).
+
+use sdq::eval::zeroshot;
+use sdq::harness;
+use sdq::sdq::config::CompressionConfig;
+use sdq::util::bench::Table;
+
+const CONFIGS: &[&str] = &[
+    "Dense-WA16",
+    "S-SparseGPT-2:8",
+    "S-Wanda-2:8",
+    "Q-VSQuant-WAint4",
+    "Q-VSQuant-WAfp4",
+    "SDQ-7:8-1:8int8-6:8fp4",
+];
+
+fn main() {
+    if !harness::artifacts_ready() {
+        return;
+    }
+    // One GPT + the LLaMA stand-ins (paper: OPT-6.7B, LLaMA-1-7B, LLaMA-2-7B).
+    let mut models = vec!["gpt-micro".to_string()];
+    models.extend(harness::available_models("llama-"));
+    let ds = harness::load_dataset().expect("corpus");
+    let per_task = if std::env::var("SDQ_FULL_EVAL").is_ok() { 50 } else { 25 };
+    let tasks = zeroshot::build_tasks(&ds, per_task, 42);
+    let mut task_headers: Vec<String> = tasks.iter().map(|t| t.name.clone()).collect();
+    task_headers.push("Average".into());
+
+    for mname in &models {
+        let base = match harness::load_model(mname) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("skip {mname}: {e}");
+                continue;
+            }
+        };
+        let mut headers: Vec<&str> = vec!["Method"];
+        headers.extend(task_headers.iter().map(|s| s.as_str()));
+        let mut table =
+            Table::new(&format!("Table 4: zero-shot accuracy — {mname}"), &headers);
+        for cfg_str in CONFIGS {
+            let cfg: CompressionConfig = cfg_str.parse().unwrap();
+            let mut model = base.clone();
+            let calib = harness::calibrate(&model, &ds, 1536, harness::needs_gram(&cfg));
+            if let Err(e) = model.compress(&cfg, &calib) {
+                eprintln!("{mname} {cfg_str}: {e}");
+                continue;
+            }
+            let (results, avg) = zeroshot::eval_suite(&model, &tasks);
+            let mut row = vec![cfg_str.to_string()];
+            row.extend(results.iter().map(|r| format!("{:.2}", r.accuracy)));
+            row.push(format!("{avg:.2}"));
+            eprintln!("  {mname} {cfg_str}: avg {avg:.2}%");
+            table.row(row);
+        }
+        table.print();
+        table.save_json(&format!("table4_zeroshot_{mname}"));
+    }
+}

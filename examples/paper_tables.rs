@@ -1,0 +1,113 @@
+//! Regenerate every paper table/figure in one run and write a combined
+//! markdown report to `target/paper_tables.md` (the EXPERIMENTS.md
+//! source). This is the long-running full-eval driver; the individual
+//! `cargo bench --bench …` targets run the same experiments one at a
+//! time.
+//!
+//! Run: `cargo run --release --example paper_tables [-- --fast]`
+
+use std::fmt::Write as _;
+
+use sdq::eval::zeroshot;
+use sdq::harness;
+use sdq::sdq::config::CompressionConfig;
+
+fn main() -> sdq::Result<()> {
+    if !harness::artifacts_ready() {
+        return Ok(());
+    }
+    let args = sdq::util::cli::Args::parse();
+    let fast = args.has("fast");
+    let ds = harness::load_dataset()?;
+    let mut md = String::new();
+    writeln!(md, "# Paper tables — measured\n").unwrap();
+
+    for (title, prefix) in [("Table 2 (GPT family)", "gpt-"), ("Table 3 (LLaMA family)", "llama-")] {
+        let models = harness::available_models(prefix);
+        writeln!(md, "## {title}\n").unwrap();
+        write!(md, "| Configuration | Tput |").unwrap();
+        for m in &models {
+            write!(md, " {m} |").unwrap();
+        }
+        writeln!(md).unwrap();
+        write!(md, "|---|---|").unwrap();
+        for _ in &models {
+            write!(md, "---|").unwrap();
+        }
+        writeln!(md).unwrap();
+        let mut baselines = vec![f64::NAN; models.len()];
+        for cfg_str in harness::table2_configs() {
+            let cfg: CompressionConfig = cfg_str.parse().unwrap();
+            write!(md, "| {cfg_str} | {:.2}x |", cfg.effective_throughput()).unwrap();
+            for (mi, mname) in models.iter().enumerate() {
+                let model = harness::load_model(mname)?;
+                let ecfg = harness::eval_cfg_for(&model, !fast);
+                match harness::eval_config(&model, &ds, &cfg, ecfg) {
+                    Ok(r) => {
+                        if cfg_str == "Dense-WA16" {
+                            baselines[mi] = r.ppl.ppl;
+                        }
+                        let d = (r.ppl.ppl - baselines[mi]) / baselines[mi] * 100.0;
+                        write!(md, " {:.3} ({d:+.1}%) |", r.ppl.ppl).unwrap();
+                        eprintln!("{title} {mname} {cfg_str}: {:.3}", r.ppl.ppl);
+                    }
+                    Err(e) => {
+                        write!(md, " err |").unwrap();
+                        eprintln!("{title} {mname} {cfg_str}: {e}");
+                    }
+                }
+            }
+            writeln!(md).unwrap();
+        }
+        writeln!(md).unwrap();
+    }
+
+    // Table 4.
+    writeln!(md, "## Table 4 (zero-shot)\n").unwrap();
+    let per_task = if fast { 15 } else { 30 };
+    let tasks = zeroshot::build_tasks(&ds, per_task, 42);
+    let configs = [
+        "Dense-WA16",
+        "S-SparseGPT-2:8",
+        "S-Wanda-2:8",
+        "Q-VSQuant-WAint4",
+        "Q-VSQuant-WAfp4",
+        "SDQ-7:8-1:8int8-6:8fp4",
+    ];
+    let mut models = vec!["gpt-micro".to_string()];
+    models.extend(harness::available_models("llama-"));
+    for mname in &models {
+        writeln!(md, "### {mname}\n").unwrap();
+        write!(md, "| Method |").unwrap();
+        for t in &tasks {
+            write!(md, " {} |", t.name).unwrap();
+        }
+        writeln!(md, " Average |").unwrap();
+        write!(md, "|---|").unwrap();
+        for _ in 0..tasks.len() + 1 {
+            write!(md, "---|").unwrap();
+        }
+        writeln!(md).unwrap();
+        let base = harness::load_model(mname)?;
+        for cfg_str in configs {
+            let cfg: CompressionConfig = cfg_str.parse().unwrap();
+            let mut model = base.clone();
+            let calib = harness::calibrate(&model, &ds, 1536, harness::needs_gram(&cfg));
+            model.compress(&cfg, &calib)?;
+            let (results, avg) = zeroshot::eval_suite(&model, &tasks);
+            write!(md, "| {cfg_str} |").unwrap();
+            for r in &results {
+                write!(md, " {:.2} |", r.accuracy).unwrap();
+            }
+            writeln!(md, " **{avg:.2}** |").unwrap();
+            eprintln!("table4 {mname} {cfg_str}: avg {avg:.2}%");
+        }
+        writeln!(md).unwrap();
+    }
+
+    let out = harness::repo_root().join("target/paper_tables.md");
+    std::fs::create_dir_all(out.parent().unwrap())?;
+    std::fs::write(&out, &md)?;
+    println!("\nwrote {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Serving demo: batched request serving with latency metrics, native
+//! engine + the AOT PJRT scoring path side by side.
+//!
+//! Run: `cargo run --release --example serve -- [--model gpt-micro]
+//!       [--config SDQ-W7:8-1:8int8-6:8fp4] [--requests 16] [--max-new 32]`
+
+use sdq::coordinator::{batcher::BatchPolicy, Engine, Request};
+use sdq::data::Split;
+use sdq::harness;
+use sdq::util::cli::Args;
+
+fn main() -> sdq::Result<()> {
+    if !harness::artifacts_ready() {
+        return Ok(());
+    }
+    let args = Args::parse();
+    let mname = args.get_or("model", "gpt-micro").to_string();
+    let cfg_str = args.get_or("config", "SDQ-W7:8-1:8int8-6:8fp4").to_string();
+    let n_req = args.get_usize("requests", 16)?;
+    let max_new = args.get_usize("max-new", 32)?;
+
+    let cfg = cfg_str.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let mut model = harness::load_model(&mname)?;
+    let ds = harness::load_dataset()?;
+    let calib = harness::calibrate(&model, &ds, 1024, harness::needs_gram(&cfg));
+    model.compress(&cfg, &calib)?;
+    println!("serving {mname} under {cfg_str}");
+
+    let test = ds.split(Split::Test);
+    let reqs: Vec<Request> = (0..n_req)
+        .map(|i| {
+            let start = (i * 709) % (test.len() - 65);
+            Request::new(i as u64, test[start..start + 32].to_vec(), max_new)
+                .with_temperature(0.8)
+        })
+        .collect();
+    let policy = BatchPolicy { max_active: args.get_usize("max-active", 8)?, ..Default::default() };
+    let (resps, metrics) = Engine::run_batch(model, policy, reqs);
+    for r in resps.iter().take(4) {
+        println!(
+            "[req {}] ttft {:>6.1}ms total {:>7.1}ms  {:.40}…",
+            r.id,
+            r.timing.ttft.as_secs_f64() * 1e3,
+            r.timing.total.as_secs_f64() * 1e3,
+            r.text().replace('\n', " ")
+        );
+    }
+    println!("\nnative engine: {}", metrics.summary());
+
+    // PJRT batch-scoring path: the AOT SDQ forward (fixed [4, 64] shape).
+    let art_name = format!("model_fwd_sdq_{mname}");
+    let art = sdq::runtime::artifact_path(&harness::repo_root(), &art_name);
+    let bundle_path =
+        harness::repo_root().join(format!("artifacts/models/{mname}.sdq.bin"));
+    if art.exists() && bundle_path.exists() {
+        let mut rt = sdq::runtime::PjrtRuntime::cpu()?;
+        rt.load_hlo("fwd", &art)?;
+        let bundle = sdq::artifacts::load_weights(&bundle_path)?;
+        let (b, s) = (4usize, 64usize);
+        let tokens: Vec<u8> = test[..b * s].to_vec();
+        let mut inputs = vec![sdq::runtime::Input::tokens(&tokens, b, s)];
+        for (_n, m) in bundle.tensors.iter() {
+            inputs.push(sdq::runtime::Input::F32(m.clone()));
+        }
+        let t0 = std::time::Instant::now();
+        let iters = 5;
+        let mut out_len = 0;
+        for _ in 0..iters {
+            let out = rt.execute("fwd", &inputs)?;
+            out_len = out[0].len();
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "PJRT AOT scoring ({art_name}): {} logits / batch, {:.1} ms/batch, {:.0} tok/s prefill",
+            out_len,
+            dt * 1e3,
+            (b * s) as f64 / dt
+        );
+    } else {
+        println!("(PJRT path skipped: {} missing)", art.display());
+    }
+    Ok(())
+}

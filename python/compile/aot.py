@@ -1,0 +1,141 @@
+"""AOT lowering: JAX/Pallas graphs → HLO **text** artifacts for the Rust
+PJRT runtime.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the published `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly.
+
+Artifacts produced (fixed shapes; the Rust side pads/crops):
+  sdq_gemm.hlo.txt             standalone L1 SDQ GEMM kernel
+  dual_gemm_int8.hlo.txt       single-path dual-quant GEMM baseline
+  model_fwd_<name>.hlo.txt     fp32 forward of a trained model
+  model_fwd_sdq_<name>.hlo.txt SDQ-kernel forward of a trained model
+  <name>.sdq.bin               SDQ parameter bundle (codes+scales) whose
+                               sorted tensor order == HLO parameter order
+
+Usage: python -m compile.aot [--out DIR] [--models a,b] [--skip-model-fwd]
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import io
+from .kernels.sdq_matmul import dual_quant_matmul, sdq_matmul
+from .model import FAMILY, ModelConfig, compress_params_sdq, forward, forward_sdq
+
+REPO = Path(__file__).resolve().parents[2]
+
+# Fixed serving shapes (documented in DESIGN.md; Rust pads batches).
+GEMM_T, GEMM_K, GEMM_O = 64, 512, 512
+FWD_B, FWD_S = 4, 64
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation (return_tuple=True) → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def dump(path: Path, lowered) -> None:
+    text = to_hlo_text(lowered)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(text)
+    print(f"wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+
+def lower_sdq_gemm(out_dir: Path, qvec=16) -> None:
+    t, k, o = GEMM_T, GEMM_K, GEMM_O
+    sq = k // qvec
+    f32 = jnp.float32
+    spec = [
+        jax.ShapeDtypeStruct((t, k), f32),
+        jax.ShapeDtypeStruct((o, k), f32),
+        jax.ShapeDtypeStruct((o, sq), f32),
+        jax.ShapeDtypeStruct((o, k), f32),
+        jax.ShapeDtypeStruct((o, sq), f32),
+    ]
+
+    def fn(x, woc, wos, wic, wis):
+        return (sdq_matmul(x, woc, wos, wic, wis, qvec=qvec),)
+
+    dump(out_dir / "sdq_gemm.hlo.txt", jax.jit(fn).lower(*spec))
+
+    def fn_dual(x, wc, ws):
+        return (dual_quant_matmul(x, wc, ws, qvec=qvec, fmt="int8"),)
+
+    dump(out_dir / "dual_gemm_int8.hlo.txt", jax.jit(fn_dual).lower(*spec[:3]))
+
+
+def lower_model(cfg: ModelConfig, params: dict, out_dir: Path) -> None:
+    """Lower fp32 + SDQ forwards with weights as parameters, ordered by
+    sorted tensor name (the Rust loader feeds them in BTreeMap order)."""
+    names = sorted(params)
+    arrays = [jnp.asarray(params[n]) for n in names]
+    tok_spec = jax.ShapeDtypeStruct((FWD_B, FWD_S), jnp.int32)
+
+    def fn(tokens, *flat):
+        p = dict(zip(names, flat))
+        return (forward(cfg, p, tokens),)
+
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrays]
+    dump(out_dir / f"model_fwd_{cfg.name}.hlo.txt", jax.jit(fn).lower(tok_spec, *specs))
+
+    # SDQ-kernel forward over the compressed parameter set.
+    sdq_params = compress_params_sdq(cfg, params)
+    snames = sorted(sdq_params)
+    sarrays = [jnp.asarray(sdq_params[n]) for n in snames]
+
+    def fn_sdq(tokens, *flat):
+        p = dict(zip(snames, flat))
+        return (forward_sdq(cfg, p, tokens),)
+
+    sspecs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in sarrays]
+    dump(
+        out_dir / f"model_fwd_sdq_{cfg.name}.hlo.txt",
+        jax.jit(fn_sdq).lower(tok_spec, *sspecs),
+    )
+    # Companion bundle so Rust can feed the exact parameter values.
+    io.save_weights(
+        out_dir / "models" / f"{cfg.name}.sdq.bin",
+        cfg.to_dict(),
+        {n: np.asarray(a) for n, a in zip(snames, sarrays)},
+    )
+    print(f"wrote {out_dir / 'models' / (cfg.name + '.sdq.bin')}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(REPO / "artifacts"))
+    ap.add_argument("--models", default="gpt-micro",
+                    help="comma-separated models to lower forwards for")
+    ap.add_argument("--skip-model-fwd", action="store_true")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    lower_sdq_gemm(out_dir)
+    if args.skip_model_fwd:
+        return
+    for name in [n for n in args.models.split(",") if n]:
+        bundle = out_dir / "models" / f"{name}.bin"
+        if not bundle.exists():
+            print(f"skipping {name}: {bundle} missing (train first)")
+            continue
+        config, tensors = io.load_weights(bundle)
+        cfg = FAMILY[name]
+        params = {k: v for k, v in tensors.items() if not k.startswith("probe.")}
+        lower_model(cfg, params, out_dir)
+
+
+if __name__ == "__main__":
+    main()

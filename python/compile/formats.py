@@ -1,0 +1,83 @@
+"""Low-bit number-format quantizers in jnp (build-time mirror of
+`rust/src/formats/`).
+
+Each `quantize_*` snaps values onto the format's representable grid with
+round-to-nearest-even, matching VS-Quant. These run inside the Pallas
+kernels (interpret=True lowers them to plain HLO ops) and inside the
+pure-jnp reference oracles, so kernel-vs-ref comparisons are exact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Largest finite magnitudes (mirrors NumFormat::max_value()).
+MAX_VALUE = {
+    "fp32": jnp.finfo(jnp.float32).max,
+    "fp16": 65504.0,
+    "fp8-e4m3": 448.0,
+    "fp8-e5m2": 57344.0,
+    "fp4": 6.0,
+    "ufp8-e6m2": (2.0**32) * 1.75,
+    "int8": 127.0,
+    "int4": 7.0,
+}
+
+BITS = {
+    "fp32": 32,
+    "fp16": 16,
+    "fp8-e4m3": 8,
+    "fp8-e5m2": 8,
+    "fp4": 4,
+    "ufp8-e6m2": 8,
+    "int8": 8,
+    "int4": 4,
+}
+
+
+def _round_half_even(x):
+    # jnp.round implements banker's rounding (ties to even).
+    return jnp.round(x)
+
+
+def quantize_int(x, bits: int):
+    """Symmetric signed integer grid: ±(2^(b-1)-1)."""
+    m = float((1 << (bits - 1)) - 1)
+    return jnp.clip(_round_half_even(x), -m, m)
+
+
+def quantize_minifloat(x, man_bits: int, bias: int, max_value: float):
+    """Generic minifloat RNE with subnormal support (mirror of
+    `minifloat_round` in rust)."""
+    a = jnp.abs(x)
+    sign = jnp.sign(x)
+    e_min = 1 - bias
+    # exponent of the value, clamped at the subnormal floor
+    safe = jnp.maximum(a, 1e-45)
+    e = jnp.floor(jnp.log2(safe))
+    e_eff = jnp.maximum(e, float(e_min))
+    quantum = jnp.exp2(e_eff - man_bits)
+    q = _round_half_even(a / quantum) * quantum
+    q = jnp.minimum(q, max_value)
+    return jnp.where(a == 0.0, 0.0, sign * q)
+
+
+def quantize(x, fmt: str):
+    """Snap `x` onto `fmt`'s grid (RNE, clamp to ±max)."""
+    if fmt == "fp32":
+        return x
+    if fmt == "fp16":
+        return x.astype(jnp.float16).astype(jnp.float32)
+    if fmt == "fp8-e4m3":
+        return quantize_minifloat(x, 3, 7, 448.0)
+    if fmt == "fp8-e5m2":
+        return quantize_minifloat(x, 2, 15, 57344.0)
+    if fmt == "fp4":
+        return quantize_minifloat(x, 1, 1, 6.0)
+    if fmt == "ufp8-e6m2":
+        return quantize_minifloat(x, 2, 31, MAX_VALUE["ufp8-e6m2"])
+    if fmt == "int8":
+        return quantize_int(x, 8)
+    if fmt == "int4":
+        return quantize_int(x, 4)
+    raise ValueError(f"unknown format {fmt}")

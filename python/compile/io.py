@@ -1,0 +1,57 @@
+"""SDQW1 weight-bundle writer/reader — python mirror of
+`rust/src/artifacts.rs` (the interchange format between the JAX trainer
+and the Rust engine)."""
+
+from __future__ import annotations
+
+import json
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"SDQW1\n"
+
+
+def save_weights(path, config: dict, tensors: dict[str, np.ndarray]) -> None:
+    """Write a bundle. Tensors are stored sorted by name (matching the
+    Rust side's BTreeMap ordering) as little-endian f32."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    entries = []
+    offset = 0
+    names = sorted(tensors)
+    for name in names:
+        a = np.asarray(tensors[name], dtype=np.float32)
+        if a.ndim == 1:
+            a = a[None, :]
+        assert a.ndim == 2, f"{name}: tensors must be 1-D or 2-D"
+        entries.append(
+            {"name": name, "rows": a.shape[0], "cols": a.shape[1], "offset": offset}
+        )
+        offset += a.size
+    header = json.dumps({"config": config, "tensors": entries}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<Q", len(header)))
+        f.write(header)
+        for name in names:
+            a = np.asarray(tensors[name], dtype=np.float32)
+            f.write(a.astype("<f4").tobytes())
+
+
+def load_weights(path) -> tuple[dict, dict[str, np.ndarray]]:
+    """Read a bundle back (tests + aot reuse)."""
+    with open(path, "rb") as f:
+        magic = f.read(6)
+        assert magic == MAGIC, f"{path}: bad magic"
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen))
+        data = np.frombuffer(f.read(), dtype="<f4")
+    tensors = {}
+    for t in header["tensors"]:
+        n = t["rows"] * t["cols"]
+        tensors[t["name"]] = (
+            data[t["offset"] : t["offset"] + n].reshape(t["rows"], t["cols"]).copy()
+        )
+    return header["config"], tensors

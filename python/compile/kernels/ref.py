@@ -1,0 +1,107 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Everything here is the *specification*: the Pallas kernels in
+`sdq_matmul.py` must match these under interpret=True (asserted by
+`python/tests/test_kernel.py`, including hypothesis sweeps), and the Rust
+pipeline mirrors the same math.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import formats
+
+
+def act_quant(x, fmt: str, qvec: int):
+    """Dynamic per-Q-vector activation fake-quant: max-abs fp32 scales
+    (mirror of `fake_quant_dynamic` in rust). `x: [t, k]`, qvec | k."""
+    t, k = x.shape
+    assert k % qvec == 0
+    g = x.reshape(t, k // qvec, qvec)
+    max_abs = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = max_abs / formats.MAX_VALUE[fmt]
+    q = formats.quantize(jnp.where(scale > 0, g / scale, 0.0), fmt) * scale
+    q = jnp.where(max_abs > 0, q, 0.0)
+    return q.reshape(t, k)
+
+
+def weight_fake_quant(w, fmt: str, qvec: int, scale_fmt: str = "fp8-e4m3"):
+    """Two-level VS-Quant weight fake-quant (mirror of `quantize_tensor` →
+    `dequantize` in rust). `w: [o, k]`, Q-vectors along k."""
+    codes, scales = quantize_weight_codes(w, fmt, qvec, scale_fmt)
+    return dequant(codes, scales, qvec)
+
+
+def quantize_weight_codes(w, fmt: str, qvec: int, scale_fmt: str = "fp8-e4m3"):
+    """Split VS-Quant into (codes, scales) — the representation the Pallas
+    kernel consumes. Returns codes `[o, k]` (grid values) and combined
+    per-vector scales `[o, k/qvec]` (ratio_q · chan)."""
+    o, k = w.shape
+    assert k % qvec == 0
+    g = w.reshape(o, k // qvec, qvec)
+    max_abs = jnp.max(jnp.abs(g), axis=-1)
+    raw = max_abs / formats.MAX_VALUE[fmt]
+    chan = jnp.max(raw, axis=-1, keepdims=True)
+    chan = jnp.where(chan > 0, chan, 1.0)
+    ratio = raw / chan
+    ratio_q = jnp.where(ratio > 0, formats.quantize(ratio, scale_fmt), 0.0)
+    scales = ratio_q * chan  # [o, k/qvec]
+    s = scales[..., None]
+    codes = formats.quantize(jnp.where(s > 0, g / s, 0.0), fmt)
+    return codes.reshape(o, k), scales
+
+
+def dequant(codes, scales, qvec: int):
+    """Inverse of `quantize_weight_codes`."""
+    o, k = codes.shape
+    g = codes.reshape(o, k // qvec, qvec) * scales[..., None]
+    return g.reshape(o, k)
+
+
+def nm_mask(w, n: int, m: int):
+    """Top-|w| N:M mask along the last dim (ties to lower index)."""
+    o, k = w.shape
+    g = jnp.abs(w).reshape(o, k // m, m)
+    # rank by descending magnitude; stable tie-break on index
+    order = jnp.argsort(-g, axis=-1, stable=True)
+    rank = jnp.argsort(order, axis=-1, stable=True)
+    return (rank < n).reshape(o, k)
+
+
+def decompose_local_outliers(w, n_out: int, m: int):
+    """N:M local outlier extraction by magnitude (§4): returns
+    (outliers, inliers) with disjoint support summing to `w`."""
+    mask = nm_mask(w, n_out, m)
+    mask = mask & (w != 0.0)
+    return jnp.where(mask, w, 0.0), jnp.where(mask, 0.0, w)
+
+
+def sdq_matmul_ref(
+    x,
+    wo_codes,
+    wo_scales,
+    wi_codes,
+    wi_scales,
+    *,
+    qvec: int,
+    outlier_fmt: str = "int8",
+    inlier_fmt: str = "fp4",
+):
+    """Reference decomposed dual-quantized GEMM (Fig. 8):
+
+        Y = Q_o(X) · Wo_deqᵀ + Q_i(X) · Wi_deqᵀ
+
+    with dynamic activation quantization per path."""
+    wo = dequant(wo_codes, wo_scales, qvec)
+    wi = dequant(wi_codes, wi_scales, qvec)
+    xo = act_quant(x, outlier_fmt, qvec)
+    xi = act_quant(x, inlier_fmt, qvec)
+    return xo @ wo.T + xi @ wi.T
+
+
+def dual_quant_matmul_ref(x, w_codes, w_scales, *, qvec: int, fmt: str):
+    """Reference single-path dual-quantized GEMM (Q-VSQuant-WA rows)."""
+    w = dequant(w_codes, w_scales, qvec)
+    xq = act_quant(x, fmt, qvec)
+    return xq @ w.T

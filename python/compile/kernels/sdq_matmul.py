@@ -1,0 +1,262 @@
+"""L1 Pallas kernels: the SDQ decomposed dual-quantized GEMM hot spot.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper
+targets GPU sparse tensor cores; on TPU the same decomposition maps to
+
+* **BlockSpec tiling** — the HBM↔VMEM schedule that threadblock tiling
+  did on GPU. Each grid step stages an activation tile and the packed
+  weight tiles (codes + per-Q-vector scales) into VMEM.
+* **VPU dequant + MXU matmul** — per-vector scale application and
+  activation quantization fuse into the element-wise stage feeding the
+  MXU `jnp.dot`, replacing the GPU's tensor-core WMMA with scale fixup.
+* **Metadata decode** — the N:M unpack kernel reconstructs the dense
+  tile from packed values + indices in VMEM (what the sparse TC's
+  metadata decoder does in silicon), then runs the MXU on it.
+
+All kernels run with `interpret=True`: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute. Correctness is pinned
+against `ref.py` by `python/tests/test_kernel.py`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import formats
+
+# Default tile sizes (chosen so one (bm×bk) x tile + two (bn×bk) weight
+# tiles + scales fit comfortably in ~16 MiB VMEM at f32; see DESIGN.md
+# §Perf for the footprint table).
+BM, BN, BK = 64, 64, 128
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest divisor of `dim` that is ≤ pref and a multiple of 8 when
+    possible (lane alignment); falls back to `dim`."""
+    if dim % pref == 0:
+        return pref
+    for cand in (64, 32, 16, 8):
+        if cand <= pref and dim % cand == 0:
+            return cand
+    return dim
+
+
+def _act_quant_tile(x, fmt: str, qvec: int):
+    """Per-Q-vector dynamic activation quantization of a VMEM tile.
+    Identical math to ref.act_quant (tile-local == global because the
+    K-block size is a multiple of qvec)."""
+    bm, bk = x.shape
+    g = x.reshape(bm, bk // qvec, qvec)
+    max_abs = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = max_abs / formats.MAX_VALUE[fmt]
+    q = formats.quantize(jnp.where(scale > 0, g / scale, 0.0), fmt) * scale
+    q = jnp.where(max_abs > 0, q, 0.0)
+    return q.reshape(bm, bk)
+
+
+def _dequant_tile(codes, scales, qvec: int):
+    """Apply per-Q-vector scales to a codes tile (VPU stage)."""
+    bn, bk = codes.shape
+    g = codes.reshape(bn, bk // qvec, qvec) * scales[..., None]
+    return g.reshape(bn, bk)
+
+
+def _sdq_kernel(x_ref, woc_ref, wos_ref, wic_ref, wis_ref, o_ref, *, qvec, ofmt, ifmt):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    # Outlier path: int8 activations × int8-coded weights.
+    xo = _act_quant_tile(x, ofmt, qvec)
+    wo = _dequant_tile(woc_ref[...], wos_ref[...], qvec)
+    # Inlier path: fp4 activations × fp4-coded weights.
+    xi = _act_quant_tile(x, ifmt, qvec)
+    wi = _dequant_tile(wic_ref[...], wis_ref[...], qvec)
+    # Two MXU passes sharing the accumulator (Fig. 8).
+    acc = jnp.dot(xo, wo.T, preferred_element_type=jnp.float32)
+    acc += jnp.dot(xi, wi.T, preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("qvec", "outlier_fmt", "inlier_fmt", "interpret")
+)
+def sdq_matmul(
+    x,
+    wo_codes,
+    wo_scales,
+    wi_codes,
+    wi_scales,
+    *,
+    qvec: int = 16,
+    outlier_fmt: str = "int8",
+    inlier_fmt: str = "fp4",
+    interpret: bool = True,
+):
+    """Decomposed dual-quantized GEMM: `Y = Q_o(X)·Wo_deqᵀ + Q_i(X)·Wi_deqᵀ`.
+
+    `x: [t, k]`, codes `[o, k]`, scales `[o, k/qvec]` → `[t, o]`.
+    """
+    t, k = x.shape
+    o, _ = wo_codes.shape
+    bm = _pick_block(t, BM)
+    bn = _pick_block(o, BN)
+    bk = _pick_block(k, BK)
+    assert bk % qvec == 0, f"K block {bk} must be a multiple of qvec {qvec}"
+    grid = (t // bm, o // bn, k // bk)
+    sq = bk // qvec
+    kernel = functools.partial(
+        _sdq_kernel, qvec=qvec, ofmt=outlier_fmt, ifmt=inlier_fmt
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, sq), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, sq), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, o), jnp.float32),
+        interpret=interpret,
+    )(x, wo_codes, wo_scales, wi_codes, wi_scales)
+
+
+def _dual_kernel(x_ref, wc_ref, ws_ref, o_ref, *, qvec, fmt):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xq = _act_quant_tile(x_ref[...], fmt, qvec)
+    w = _dequant_tile(wc_ref[...], ws_ref[...], qvec)
+    o_ref[...] += jnp.dot(xq, w.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("qvec", "fmt", "interpret"))
+def dual_quant_matmul(x, w_codes, w_scales, *, qvec: int = 16, fmt: str = "int8",
+                      interpret: bool = True):
+    """Single-path dual-quantized GEMM (the Q-VSQuant-WA baseline)."""
+    t, k = x.shape
+    o, _ = w_codes.shape
+    bm, bn, bk = _pick_block(t, BM), _pick_block(o, BN), _pick_block(k, BK)
+    assert bk % qvec == 0
+    grid = (t // bm, o // bn, k // bk)
+    kernel = functools.partial(_dual_kernel, qvec=qvec, fmt=fmt)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk // qvec), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, o), jnp.float32),
+        interpret=interpret,
+    )(x, w_codes, w_scales)
+
+
+def _unpack_kernel(vals_ref, idx_ref, x_ref, o_ref, *, m, n):
+    """Metadata-decode + MXU: reconstruct the dense (bn, bk) weight tile
+    from packed (bn, bk//m*n) values + intra-block indices, then matmul."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vals = vals_ref[...]
+    idx = idx_ref[...]
+    bn, slots = vals.shape
+    blocks = slots // n
+    bk = blocks * m
+    # Absolute column of each slot within the tile.
+    block_of_slot = jnp.arange(slots) // n
+    cols = block_of_slot[None, :] * m + idx
+    # Scatter-add into the dense tile (zero-padded slots carry value 0 and
+    # index 0 — a harmless duplicate write of +0).
+    w = jnp.zeros((bn, bk), jnp.float32)
+    rows = jnp.broadcast_to(jnp.arange(bn)[:, None], (bn, slots))
+    w = w.at[rows, cols].add(vals)
+    o_ref[...] += jnp.dot(x_ref[...], w.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "k", "interpret"))
+def nm_spmm(packed_vals, packed_idx, x, *, n: int, m: int, k: int,
+            interpret: bool = True):
+    """Packed N:M structured SpMM: `Y = X · unpack(vals, idx)ᵀ`.
+
+    `packed_vals/idx: [o, k//m*n]` (ELLPACK layout from the Rust packer),
+    `x: [t, k]` → `[t, o]`.
+    """
+    t, _ = x.shape
+    o, slots = packed_vals.shape
+    assert slots == k // m * n
+    bm = _pick_block(t, BM)
+    bn = _pick_block(o, BN)
+    bk = _pick_block(k, BK)
+    assert bk % m == 0
+    bslots = bk // m * n
+    grid = (t // bm, o // bn, k // bk)
+    kernel = functools.partial(_unpack_kernel, m=m, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bslots), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bslots), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, o), jnp.float32),
+        interpret=interpret,
+    )(packed_vals, packed_idx, x)
+
+
+def _quant_kernel(x_ref, o_ref, *, qvec, fmt):
+    o_ref[...] = _act_quant_tile(x_ref[...], fmt, qvec)
+
+
+@functools.partial(jax.jit, static_argnames=("qvec", "fmt", "interpret"))
+def act_quantize(x, *, qvec: int = 16, fmt: str = "int8", interpret: bool = True):
+    """Fused dynamic activation quantize-dequantize kernel."""
+    t, k = x.shape
+    bm = _pick_block(t, BM)
+    bk = _pick_block(k, BK)
+    assert bk % qvec == 0
+    kernel = functools.partial(_quant_kernel, qvec=qvec, fmt=fmt)
+    return pl.pallas_call(
+        kernel,
+        grid=(t // bm, k // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, k), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+def pack_nm(w, n: int, m: int):
+    """Pack an N:M-sparse weight matrix into ELLPACK (vals, idx) — the
+    python mirror of `rust/src/sdq/packed.rs` (build-time only)."""
+    import numpy as np
+
+    w = np.asarray(w)
+    o, k = w.shape
+    assert k % m == 0
+    blocks = k // m
+    vals = np.zeros((o, blocks * n), np.float32)
+    idx = np.zeros((o, blocks * n), np.int32)
+    for r in range(o):
+        for b in range(blocks):
+            blk = w[r, b * m : (b + 1) * m]
+            nz = np.nonzero(blk)[0]
+            assert len(nz) <= n, f"row {r} block {b} violates {n}:{m}"
+            for s, c in enumerate(nz):
+                vals[r, b * n + s] = blk[c]
+                idx[r, b * n + s] = c
+    return jnp.asarray(vals), jnp.asarray(idx)

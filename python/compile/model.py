@@ -1,0 +1,246 @@
+"""L2: the JAX transformer (decoder-only LM), numerically mirroring the
+Rust inference engine (`rust/src/model/`).
+
+Two architecture flavours (paper's evaluation families):
+* ``gpt``   — OPT-style: learned positional embeddings, LayerNorm, GELU.
+* ``llama`` — LLaMA-style: RoPE, RMSNorm, SwiGLU.
+
+`forward` is the trainable fp32 graph; `forward_sdq` swaps every linear
+layer for the L1 Pallas decomposed dual-quantized GEMM (`sdq_matmul`),
+which is what `aot.py` lowers for the serving artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.sdq_matmul import sdq_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch: str  # "gpt" | "llama"
+    d_model: int
+    n_layer: int
+    n_head: int
+    d_ff: int
+    vocab: int = 256
+    max_seq: int = 128
+    eps: float = 1e-5
+    rope_theta: float = 10000.0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_head
+
+    def linear_names(self) -> list[str]:
+        names = []
+        for i in range(self.n_layer):
+            names += [f"block{i}.attn.{x}" for x in ("q", "k", "v", "o")]
+            names += [f"block{i}.mlp.ff1", f"block{i}.mlp.ff2"]
+            if self.arch == "llama":
+                names.append(f"block{i}.mlp.ff3")
+        return names
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Scaled-normal init; weights stored `[out, in]` like the Rust side."""
+    params = {}
+    keys = iter(jax.random.split(key, 64 + 16 * cfg.n_layer))
+
+    def mat(rows, cols, std):
+        return (jax.random.normal(next(keys), (rows, cols)) * std).astype(jnp.float32)
+
+    d, f = cfg.d_model, cfg.d_ff
+    params["tok_emb"] = mat(cfg.vocab, d, 0.02)
+    if cfg.arch == "gpt":
+        params["pos_emb"] = mat(cfg.max_seq, d, 0.01)
+    res_std = 0.02 / math.sqrt(2 * cfg.n_layer)
+    for i in range(cfg.n_layer):
+        p = f"block{i}."
+        std = 1.0 / math.sqrt(d)
+        params[p + "attn.q"] = mat(d, d, std)
+        params[p + "attn.k"] = mat(d, d, std)
+        params[p + "attn.v"] = mat(d, d, std)
+        params[p + "attn.o"] = mat(d, d, res_std)
+        params[p + "mlp.ff1"] = mat(f, d, std)
+        params[p + "mlp.ff2"] = mat(d, f, res_std)
+        if cfg.arch == "llama":
+            params[p + "mlp.ff3"] = mat(f, d, std)
+        params[p + "ln1.g"] = jnp.ones((1, d), jnp.float32)
+        params[p + "ln2.g"] = jnp.ones((1, d), jnp.float32)
+        if cfg.arch == "gpt":
+            params[p + "ln1.b"] = jnp.zeros((1, d), jnp.float32)
+            params[p + "ln2.b"] = jnp.zeros((1, d), jnp.float32)
+    params["ln_f.g"] = jnp.ones((1, d), jnp.float32)
+    if cfg.arch == "gpt":
+        params["ln_f.b"] = jnp.zeros((1, d), jnp.float32)
+    return params
+
+
+def _layernorm(x, g, b, eps):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    y = (x - mean) / jnp.sqrt(var + eps) * g[0]
+    return y + b[0] if b is not None else y
+
+
+def _rmsnorm(x, g, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * g[0]
+
+
+def _norm(cfg, params, prefix, x):
+    if cfg.arch == "gpt":
+        return _layernorm(x, params[prefix + ".g"], params[prefix + ".b"], cfg.eps)
+    return _rmsnorm(x, params[prefix + ".g"], cfg.eps)
+
+
+def _rope(x, theta_base):
+    """Interleaved-pair RoPE over `[B, S, H, dh]` (matches rust
+    `rope_inplace`: pairs (2i, 2i+1), theta = pos / base^(2i/dh))."""
+    b, s, h, dh = x.shape
+    pos = jnp.arange(s, dtype=jnp.float32)[None, :, None, None]
+    i = jnp.arange(dh // 2, dtype=jnp.float32)[None, None, None, :]
+    theta = pos / jnp.power(theta_base, 2.0 * i / dh)
+    sin, cos = jnp.sin(theta), jnp.cos(theta)
+    x2 = x.reshape(b, s, h, dh // 2, 2)
+    a, bb = x2[..., 0], x2[..., 1]
+    rot = jnp.stack([a * cos - bb * sin, a * sin + bb * cos], axis=-1)
+    return rot.reshape(b, s, h, dh)
+
+
+def _attention(cfg: ModelConfig, q, k, v):
+    """Causal MHA over `[B, S, D]` projections."""
+    b, s, d = q.shape
+    h, dh = cfg.n_head, cfg.head_dim
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, h, dh)
+    v = v.reshape(b, s, h, dh)
+    if cfg.arch == "llama":
+        q = _rope(q, cfg.rope_theta)
+        k = _rope(k, cfg.rope_theta)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(dh)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out.reshape(b, s, d)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens, linear_fn=None):
+    """Logits `[B, S, vocab]` for int32 tokens `[B, S]`.
+
+    `linear_fn(name, x2d) -> y2d` overrides linear execution (used by
+    `forward_sdq`); default is plain `x @ Wᵀ`.
+    """
+    if linear_fn is None:
+        def linear_fn(name, x2d):
+            return x2d @ params[name].T
+
+    b, s = tokens.shape
+    x = params["tok_emb"][tokens]
+    if cfg.arch == "gpt":
+        x = x + params["pos_emb"][None, :s]
+
+    def lin(name, t3d, out_dim):
+        y = linear_fn(name, t3d.reshape(b * s, -1))
+        return y.reshape(b, s, out_dim)
+
+    d, f = cfg.d_model, cfg.d_ff
+    for i in range(cfg.n_layer):
+        p = f"block{i}."
+        h = _norm(cfg, params, p + "ln1", x)
+        q = lin(p + "attn.q", h, d)
+        k = lin(p + "attn.k", h, d)
+        v = lin(p + "attn.v", h, d)
+        attn = _attention(cfg, q, k, v)
+        x = x + lin(p + "attn.o", attn, d)
+        h = _norm(cfg, params, p + "ln2", x)
+        a = lin(p + "mlp.ff1", h, f)
+        if cfg.arch == "gpt":
+            a = jax.nn.gelu(a, approximate=True)
+        else:
+            a = jax.nn.silu(a) * lin(p + "mlp.ff3", h, f)
+        x = x + lin(p + "mlp.ff2", a, d)
+
+    x = _norm(cfg, params, "ln_f", x)
+    return x @ params["tok_emb"].T  # tied LM head
+
+
+def loss_fn(cfg: ModelConfig, params: dict, inputs, targets):
+    """Mean next-token cross-entropy in nats."""
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# SDQ serving graph: linears run the L1 Pallas kernel.
+# ---------------------------------------------------------------------------
+
+def compress_params_sdq(cfg: ModelConfig, params: dict, *, n_out=1, m=8,
+                        qvec=16, outlier_fmt="int8", inlier_fmt="fp4"):
+    """Build the SDQ serving parameter set: per-linear outlier/inlier
+    codes + scales (magnitude decomposition — the calibration-free
+    configuration), everything else passed through."""
+    out = {}
+    lin_names = set(cfg.linear_names())
+    for name, w in params.items():
+        if name in lin_names:
+            wo, wi = ref.decompose_local_outliers(jnp.asarray(w), n_out, m)
+            woc, wos = ref.quantize_weight_codes(wo, outlier_fmt, qvec)
+            wic, wis = ref.quantize_weight_codes(wi, inlier_fmt, qvec)
+            out[name + ".woc"] = woc
+            out[name + ".wos"] = wos
+            out[name + ".wic"] = wic
+            out[name + ".wis"] = wis
+        else:
+            out[name] = jnp.asarray(w)
+    return out
+
+
+def forward_sdq(cfg: ModelConfig, sdq_params: dict, tokens, *, qvec=16,
+                outlier_fmt="int8", inlier_fmt="fp4", interpret=True):
+    """Forward pass where every linear layer executes the Pallas
+    decomposed dual-quantized GEMM (the graph `aot.py` lowers)."""
+    lin_names = set(cfg.linear_names())
+
+    def linear_fn(name, x2d):
+        if name not in lin_names:  # pragma: no cover - defensive
+            raise KeyError(name)
+        return sdq_matmul(
+            x2d,
+            sdq_params[name + ".woc"],
+            sdq_params[name + ".wos"],
+            sdq_params[name + ".wic"],
+            sdq_params[name + ".wis"],
+            qvec=qvec,
+            outlier_fmt=outlier_fmt,
+            inlier_fmt=inlier_fmt,
+            interpret=interpret,
+        )
+
+    return forward(cfg, sdq_params, tokens, linear_fn=linear_fn)
+
+
+# Model family registry (paper's OPT / LLaMA size ladders, scaled to this
+# testbed — see DESIGN.md substitutions).
+FAMILY = {
+    "gpt-nano": ModelConfig("gpt-nano", "gpt", 48, 2, 4, 192),
+    "gpt-micro": ModelConfig("gpt-micro", "gpt", 96, 3, 4, 384),
+    "gpt-tiny": ModelConfig("gpt-tiny", "gpt", 160, 4, 4, 640),
+    "gpt-small": ModelConfig("gpt-small", "gpt", 224, 4, 8, 896),
+    "llama-micro": ModelConfig("llama-micro", "llama", 96, 3, 4, 256),
+    "llama-tiny": ModelConfig("llama-tiny", "llama", 160, 4, 4, 432),
+}

@@ -1,0 +1,1 @@
+import sys, pathlib; sys.path.insert(0, str(pathlib.Path(__file__).parent))

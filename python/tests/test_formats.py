@@ -1,0 +1,70 @@
+"""Format quantizer tests: grids, RNE, and agreement with the spec."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import formats
+
+
+FP4_GRID = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+
+
+def test_fp4_grid_fixed_points():
+    for g in FP4_GRID:
+        assert float(formats.quantize(jnp.float32(g), "fp4")) == g
+        assert float(formats.quantize(jnp.float32(-g), "fp4")) == -g
+
+
+def test_fp4_rounding_and_clamp():
+    q = lambda x: float(formats.quantize(jnp.float32(x), "fp4"))
+    assert q(2.5) == 2.0  # tie → even mantissa
+    assert q(5.0) == 4.0
+    assert q(7.0) == 6.0
+    assert q(100.0) == 6.0
+    assert q(0.2) == 0.0
+    assert q(0.3) == 0.5
+
+
+def test_int_grids():
+    q8 = lambda x: float(formats.quantize(jnp.float32(x), "int8"))
+    assert q8(127.7) == 127.0
+    assert q8(-200.0) == -127.0
+    assert q8(2.5) == 2.0  # RNE
+    assert q8(3.5) == 4.0
+
+
+def test_e4m3_max():
+    q = lambda x: float(formats.quantize(jnp.float32(x), "fp8-e4m3"))
+    assert q(448.0) == 448.0
+    assert q(1000.0) == 448.0
+    assert q(1.05) == 1.0
+    assert q(1.07) == 1.125
+
+
+@pytest.mark.parametrize("fmt", ["fp4", "fp8-e4m3", "fp8-e5m2", "int4", "int8"])
+@given(x=st.floats(-1000, 1000, allow_nan=False, width=32))
+@settings(max_examples=200, deadline=None)
+def test_idempotent(fmt, x):
+    q1 = formats.quantize(jnp.float32(x), fmt)
+    q2 = formats.quantize(q1, fmt)
+    assert float(q1) == float(q2)
+
+
+@pytest.mark.parametrize("fmt", ["fp4", "fp8-e4m3", "int4", "int8"])
+@given(x=st.floats(-100, 100, allow_nan=False, width=32))
+@settings(max_examples=200, deadline=None)
+def test_bounded_by_max(fmt, x):
+    q = float(formats.quantize(jnp.float32(x), fmt))
+    assert abs(q) <= formats.MAX_VALUE[fmt]
+    # sign preserved (or zero)
+    assert q == 0.0 or np.sign(q) == np.sign(x)
+
+
+def test_vectorized_matches_scalar():
+    xs = np.linspace(-8, 8, 257).astype(np.float32)
+    v = np.asarray(formats.quantize(jnp.asarray(xs), "fp4"))
+    s = np.array([float(formats.quantize(jnp.float32(x), "fp4")) for x in xs])
+    np.testing.assert_array_equal(v, s)

@@ -1,0 +1,34 @@
+"""SDQW1 bundle format round-trip (python side)."""
+
+import numpy as np
+
+from compile import io
+
+
+def test_roundtrip(tmp_path):
+    cfg = {"name": "x", "d_model": 32}
+    tensors = {
+        "b": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "a": np.array([1.5, -2.5], dtype=np.float32),  # 1-D promoted to [1,2]
+    }
+    p = tmp_path / "w.bin"
+    io.save_weights(p, cfg, tensors)
+    cfg2, t2 = io.load_weights(p)
+    assert cfg2 == cfg
+    np.testing.assert_array_equal(t2["b"], tensors["b"])
+    assert t2["a"].shape == (1, 2)
+
+
+def test_sorted_order_on_disk(tmp_path):
+    """Tensor data must be laid out in sorted-name order (the contract
+    with the Rust loader and the AOT parameter ordering)."""
+    p = tmp_path / "w.bin"
+    io.save_weights(
+        p,
+        {},
+        {"z": np.full((1, 1), 9.0, np.float32), "a": np.full((1, 1), 1.0, np.float32)},
+    )
+    _, t = io.load_weights(p)
+    raw = p.read_bytes()
+    data = np.frombuffer(raw[-8:], dtype="<f4")
+    assert data[0] == 1.0 and data[1] == 9.0  # 'a' first

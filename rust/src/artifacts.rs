@@ -1,0 +1,219 @@
+//! Artifact interchange: model weights + manifest.
+//!
+//! The JAX trainer (`python/compile/train.py`) writes model checkpoints
+//! in a simple self-describing binary format that this module reads (and
+//! can also write, for tests and for saving compressed models):
+//!
+//! ```text
+//! magic  b"SDQW1\n"
+//! u64 LE header_len
+//! header_len bytes of JSON: { "config": {...}, "tensors": [
+//!     {"name": "...", "rows": R, "cols": C, "offset": O}, ... ] }
+//! raw little-endian f32 data (offsets are element offsets)
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail};
+
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use crate::Result;
+
+const MAGIC: &[u8; 6] = b"SDQW1\n";
+
+/// Tensor entry in the manifest.
+#[derive(Clone, Debug)]
+pub struct TensorEntry {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub offset: usize,
+}
+
+/// Manifest header.
+#[derive(Clone, Debug)]
+pub struct Header {
+    /// Opaque model configuration (interpreted by `model::ModelConfig`).
+    pub config: Json,
+    pub tensors: Vec<TensorEntry>,
+}
+
+impl Header {
+    fn from_json(j: &Json) -> anyhow::Result<Header> {
+        let config = j.get("config").cloned().unwrap_or(Json::Null);
+        let mut tensors = Vec::new();
+        for t in j
+            .get("tensors")
+            .and_then(|t| t.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing `tensors`"))?
+        {
+            tensors.push(TensorEntry {
+                name: t.req_str("name")?.to_string(),
+                rows: t.req_usize("rows")?,
+                cols: t.req_usize("cols")?,
+                offset: t.req_usize("offset")?,
+            });
+        }
+        Ok(Header { config, tensors })
+    }
+
+    fn to_json(&self) -> Json {
+        let tensors: Vec<Json> = self
+            .tensors
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("name", Json::from(t.name.clone())),
+                    ("rows", Json::from(t.rows)),
+                    ("cols", Json::from(t.cols)),
+                    ("offset", Json::from(t.offset)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("config", self.config.clone()), ("tensors", Json::Arr(tensors))])
+    }
+}
+
+/// A loaded weight bundle.
+#[derive(Clone, Debug)]
+pub struct WeightBundle {
+    pub config: Json,
+    pub tensors: BTreeMap<String, Matrix>,
+}
+
+impl WeightBundle {
+    /// Fetch a tensor by name or fail with a clear message.
+    pub fn take(&mut self, name: &str) -> Result<Matrix> {
+        self.tensors
+            .remove(name)
+            .ok_or_else(|| anyhow!("tensor `{name}` missing from weight bundle"))
+    }
+
+    /// Fetch a `[1, n]` tensor as a flat vector.
+    pub fn take_vec(&mut self, name: &str) -> Result<Vec<f32>> {
+        let m = self.take(name)?;
+        Ok(m.data)
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(|m| m.len()).sum()
+    }
+}
+
+/// Read a weight bundle from disk.
+pub fn load_weights(path: &Path) -> Result<WeightBundle> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| anyhow!("open {}: {e}", path.display()))?;
+    let mut magic = [0u8; 6];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad magic (not an SDQW1 weight file)", path.display());
+    }
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    if hlen > 64 << 20 {
+        bail!("unreasonable header length {hlen}");
+    }
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Header::from_json(&Json::parse(std::str::from_utf8(&hbuf)?)?)?;
+    let mut data = Vec::new();
+    f.read_to_end(&mut data)?;
+    if data.len() % 4 != 0 {
+        bail!("data section not a multiple of 4 bytes");
+    }
+    let floats: Vec<f32> = data
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    let mut tensors = BTreeMap::new();
+    for t in &header.tensors {
+        let n = t.rows * t.cols;
+        let end = t.offset + n;
+        if end > floats.len() {
+            bail!("tensor {} overruns data section ({} > {})", t.name, end, floats.len());
+        }
+        tensors.insert(
+            t.name.clone(),
+            Matrix::from_vec(t.rows, t.cols, floats[t.offset..end].to_vec()),
+        );
+    }
+    Ok(WeightBundle { config: header.config, tensors })
+}
+
+/// Write a weight bundle (used by tests and by `sdq compress --save`).
+pub fn save_weights(
+    path: &Path,
+    config: &Json,
+    tensors: &[(String, &Matrix)],
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut entries = Vec::new();
+    let mut offset = 0usize;
+    for (name, m) in tensors {
+        entries.push(TensorEntry { name: name.clone(), rows: m.rows, cols: m.cols, offset });
+        offset += m.len();
+    }
+    let header = Header { config: config.clone(), tensors: entries };
+    let hjson = header.to_json().to_string().into_bytes();
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(hjson.len() as u64).to_le_bytes())?;
+    f.write_all(&hjson)?;
+    for (_, m) in tensors {
+        let mut buf = Vec::with_capacity(m.len() * 4);
+        for v in &m.data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = crate::util::testdir::TempDir::new("artifacts_roundtrip");
+        let path = dir.path().join("w.bin");
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(1, 2, vec![-1.5, 0.25]);
+        let cfg = Json::obj(vec![("d_model", Json::from(64usize))]);
+        save_weights(&path, &cfg, &[("a".into(), &a), ("b".into(), &b)]).unwrap();
+        let mut bundle = load_weights(&path).unwrap();
+        assert_eq!(bundle.config.req_usize("d_model").unwrap(), 64);
+        assert_eq!(bundle.param_count(), 8);
+        assert_eq!(bundle.take("a").unwrap(), a);
+        assert_eq!(bundle.take("b").unwrap(), b);
+        assert!(bundle.take("c").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = crate::util::testdir::TempDir::new("artifacts_badmagic");
+        let path = dir.path().join("bad.bin");
+        std::fs::write(&path, b"NOTMAGIC").unwrap();
+        assert!(load_weights(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_overrun_tensor() {
+        let dir = crate::util::testdir::TempDir::new("artifacts_overrun");
+        let path = dir.path().join("w.bin");
+        let a = Matrix::from_vec(1, 2, vec![1., 2.]);
+        save_weights(&path, &Json::Obj(Default::default()), &[("a".into(), &a)]).unwrap();
+        // Corrupt: truncate data section
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(load_weights(&path).is_err());
+    }
+}

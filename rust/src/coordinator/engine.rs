@@ -1,0 +1,143 @@
+//! Thread-safe serving engine handle.
+//!
+//! Owns the model on a dedicated worker thread; callers submit requests
+//! over a channel and receive responses over another. `run_batch` is the
+//! synchronous convenience used by examples and benches.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::request::{Request, Response};
+use super::scheduler::Scheduler;
+use crate::model::Model;
+
+enum Msg {
+    Submit(Request),
+    Shutdown,
+}
+
+/// A running engine: submit requests, receive responses.
+pub struct Engine {
+    tx: Sender<Msg>,
+    rx: Receiver<Response>,
+    worker: Option<JoinHandle<super::metrics::Metrics>>,
+}
+
+impl Engine {
+    /// Start the engine on its own worker thread.
+    pub fn start(model: Model, policy: BatchPolicy) -> Self {
+        let (tx, req_rx) = channel::<Msg>();
+        let (resp_tx, rx) = channel::<Response>();
+        let worker = std::thread::spawn(move || {
+            let mut sched = Scheduler::new(&model, policy);
+            let mut batcher = Batcher::new();
+            let mut shutdown = false;
+            loop {
+                // Drain incoming messages; block only when idle.
+                if sched.has_work(&batcher) {
+                    while let Ok(msg) = req_rx.try_recv() {
+                        match msg {
+                            Msg::Submit(r) => batcher.enqueue(r),
+                            Msg::Shutdown => shutdown = true,
+                        }
+                    }
+                } else {
+                    if shutdown {
+                        break;
+                    }
+                    match req_rx.recv() {
+                        Ok(Msg::Submit(r)) => batcher.enqueue(r),
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                    }
+                }
+                for resp in sched.round(&mut batcher) {
+                    let _ = resp_tx.send(resp);
+                }
+            }
+            sched.metrics
+        });
+        Engine { tx, rx, worker: Some(worker) }
+    }
+
+    /// Submit a request (non-blocking).
+    pub fn submit(&self, req: Request) {
+        let _ = self.tx.send(Msg::Submit(req));
+    }
+
+    /// Receive the next completed response (blocking).
+    pub fn recv(&self) -> Option<Response> {
+        self.rx.recv().ok()
+    }
+
+    /// Shut down and return final metrics.
+    pub fn shutdown(mut self) -> super::metrics::Metrics {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.worker.take().map(|w| w.join().expect("engine worker")).unwrap_or_default()
+    }
+
+    /// Synchronous batch helper: submit all, wait for all, shut down.
+    /// Returns responses (request order not guaranteed) plus metrics.
+    pub fn run_batch(
+        model: Model,
+        policy: BatchPolicy,
+        requests: Vec<Request>,
+    ) -> (Vec<Response>, super::metrics::Metrics) {
+        let n = requests.len();
+        let engine = Engine::start(model, policy);
+        for r in requests {
+            engine.submit(r);
+        }
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            match engine.recv() {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        let metrics = engine.shutdown();
+        (out, metrics)
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_model;
+    use crate::model::Arch;
+
+    #[test]
+    fn run_batch_completes_all() {
+        let model = tiny_model(Arch::Gpt, 1);
+        let reqs: Vec<Request> =
+            (0..5).map(|i| Request::new(i, vec![(65 + i) as u8; 3], 4)).collect();
+        let (resps, metrics) = Engine::run_batch(model, BatchPolicy::default(), reqs);
+        assert_eq!(resps.len(), 5);
+        assert_eq!(metrics.requests_completed, 5);
+        assert!(metrics.tokens_per_second() > 0.0);
+        let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn streaming_submit_recv() {
+        let model = tiny_model(Arch::Llama, 2);
+        let engine = Engine::start(model, BatchPolicy::default());
+        engine.submit(Request::new(42, b"hello".to_vec(), 3));
+        let r = engine.recv().expect("response");
+        assert_eq!(r.id, 42);
+        assert_eq!(r.tokens.len(), 3);
+        let m = engine.shutdown();
+        assert_eq!(m.requests_completed, 1);
+    }
+}

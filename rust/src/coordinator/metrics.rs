@@ -1,0 +1,128 @@
+//! Serving metrics: counters and latency histograms.
+
+use std::time::Duration;
+
+/// Fixed-bucket latency histogram (log-spaced, µs to minutes).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Bucket upper bounds in µs.
+    bounds: Vec<u64>,
+    counts: Vec<u64>,
+    sum_us: u64,
+    n: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        // 1µs … ~134s in ×2 steps
+        let bounds: Vec<u64> = (0..28).map(|i| 1u64 << i).collect();
+        let len = bounds.len();
+        Histogram { bounds, counts: vec![0; len + 1], sum_us: 0, n: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = self.bounds.partition_point(|b| *b < us);
+        self.counts[idx] += 1;
+        self.sum_us += us;
+        self.n += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.n)
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.n == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * self.n as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let us = if i < self.bounds.len() { self.bounds[i] } else { u64::MAX / 2 };
+                return Duration::from_micros(us);
+            }
+        }
+        Duration::from_micros(*self.bounds.last().unwrap())
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    pub decode_rounds: u64,
+    pub ttft: Histogram,
+    pub total_latency: Histogram,
+    /// Wall time the engine spent serving (for throughput).
+    pub serve_time: Duration,
+}
+
+impl Metrics {
+    /// End-to-end generation throughput.
+    pub fn tokens_per_second(&self) -> f64 {
+        if self.serve_time.is_zero() {
+            return f64::NAN;
+        }
+        self.tokens_generated as f64 / self.serve_time.as_secs_f64()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} tokens={} tput={:.1} tok/s ttft_mean={:.1}ms ttft_p99={:.1}ms \
+             total_mean={:.1}ms",
+            self.requests_completed,
+            self.tokens_generated,
+            self.tokens_per_second(),
+            self.ttft.mean().as_secs_f64() * 1e3,
+            self.ttft.quantile(0.99).as_secs_f64() * 1e3,
+            self.total_latency.mean().as_secs_f64() * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_quantiles() {
+        let mut h = Histogram::default();
+        for ms in [1u64, 2, 4, 8, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() >= Duration::from_millis(10));
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::default();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.9), Duration::ZERO);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut m = Metrics::default();
+        m.tokens_generated = 100;
+        m.serve_time = Duration::from_secs(2);
+        assert!((m.tokens_per_second() - 50.0).abs() < 1e-9);
+        assert!(m.summary().contains("tokens=100"));
+    }
+}

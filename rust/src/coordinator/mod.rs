@@ -1,0 +1,23 @@
+//! L3 serving coordinator.
+//!
+//! A vLLM-router-style inference front end over the compressed model:
+//! request queue → admission → continuous-batching scheduler → per-token
+//! decode rounds → responses with latency metrics. Python is never on
+//! this path; the model weights come from `artifacts/` and the compute
+//! is either the native Rust engine ([`crate::model`]) or the AOT
+//! PJRT executable ([`crate::runtime`]).
+//!
+//! * [`request`] — request/response types.
+//! * [`batcher`] — admission queue and batch formation policy.
+//! * [`scheduler`] — the continuous-batching decode loop.
+//! * [`metrics`] — counters + latency histograms.
+//! * [`engine`] — ties them together behind a thread-safe handle.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+
+pub use engine::Engine;
+pub use request::{Request, Response};

@@ -1,0 +1,181 @@
+//! Continuous-batching scheduler.
+//!
+//! Each scheduling **round**: admit + prefill a bounded burst of waiting
+//! requests, then decode one token for every active sequence. Decode
+//! parallelism is across sequences (each sequence's single-token GEMMs
+//! are too small to parallelize internally); prefill parallelism is
+//! inside the GEMMs (prompt rows). Completed sequences retire at the end
+//! of the round.
+
+use std::time::Instant;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::request::{InFlight, Response};
+use crate::model::generate::KvCache;
+use crate::model::Model;
+use crate::util::par::par_chunks_mut;
+
+/// Scheduler over a (possibly compressed) model.
+pub struct Scheduler<'m> {
+    model: &'m Model,
+    pub policy: BatchPolicy,
+    active: Vec<InFlight>,
+    pub metrics: Metrics,
+}
+
+impl<'m> Scheduler<'m> {
+    pub fn new(model: &'m Model, policy: BatchPolicy) -> Self {
+        Scheduler { model, policy, active: Vec::new(), metrics: Metrics::default() }
+    }
+
+    pub fn active(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Whether any work remains (active or waiting).
+    pub fn has_work(&self, batcher: &Batcher) -> bool {
+        !self.active.is_empty() || batcher.waiting() > 0
+    }
+
+    /// KV bytes a single sequence costs in this engine (fixed-size cache).
+    pub fn kv_bytes_per_seq(&self) -> usize {
+        self.model.cfg.n_layer * self.model.cfg.max_seq * self.model.cfg.d_model * 4 * 2
+    }
+
+    /// One scheduling round. Returns completed responses.
+    pub fn round(&mut self, batcher: &mut Batcher) -> Vec<Response> {
+        let t0 = Instant::now();
+        // ---- admission + prefill ----
+        let kv_per = self.kv_bytes_per_seq();
+        let kv_in_use = self.active.len() * kv_per;
+        let mut admitted =
+            batcher.admit(&self.policy, self.active.len(), kv_in_use, kv_per);
+        for f in &mut admitted {
+            f.started = Some(Instant::now());
+            let mut cache = KvCache::new(self.model);
+            // Clamp over-long prompts to leave ≥1 slot for generation.
+            let keep = f.req.prompt.len().min(self.model.cfg.max_seq - 1);
+            let prompt = &f.req.prompt[f.req.prompt.len() - keep..];
+            let logits = self.model.forward_cached(prompt, &mut cache);
+            self.metrics.prefill_tokens += prompt.len() as u64;
+            let tok = self.model.sample(&logits, f.req.temperature, &mut f.rng);
+            f.generated.push(tok);
+            f.first_token = Some(Instant::now());
+            f.cache = Some(cache);
+        }
+        self.active.append(&mut admitted);
+
+        // ---- decode one token for all active (parallel across seqs) ----
+        let model = self.model;
+        par_chunks_mut(&mut self.active, 1, |_i, slot| {
+            let f = &mut slot[0];
+            if f.remaining() == 0 {
+                return;
+            }
+            let cache = f.cache.as_mut().expect("prefilled");
+            if cache.remaining() == 0 {
+                return;
+            }
+            let last = *f.generated.last().expect("has first token");
+            let logits = model.forward_cached(&[last], cache);
+            let tok = model.sample(&logits, f.req.temperature, &mut f.rng);
+            f.generated.push(tok);
+        });
+        self.metrics.decode_rounds += 1;
+
+        // ---- retire completed ----
+        let mut done = Vec::new();
+        let mut still = Vec::with_capacity(self.active.len());
+        for f in self.active.drain(..) {
+            let out_of_cache =
+                f.cache.as_ref().map(|c| c.remaining() == 0).unwrap_or(false);
+            if f.remaining() == 0 || out_of_cache {
+                let resp = f.finish();
+                self.metrics.requests_completed += 1;
+                self.metrics.tokens_generated += resp.tokens.len() as u64;
+                self.metrics.ttft.record(resp.timing.ttft);
+                self.metrics.total_latency.record(resp.timing.total);
+                done.push(resp);
+            } else {
+                still.push(f);
+            }
+        }
+        self.active = still;
+        self.metrics.serve_time += t0.elapsed();
+        done
+    }
+
+    /// Drive rounds until the queue and active set drain.
+    pub fn run_to_completion(&mut self, batcher: &mut Batcher) -> Vec<Response> {
+        let mut out = Vec::new();
+        while self.has_work(batcher) {
+            out.extend(self.round(batcher));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+    use crate::model::testutil::tiny_model;
+    use crate::model::Arch;
+
+    #[test]
+    fn serves_all_requests() {
+        let model = tiny_model(Arch::Gpt, 1);
+        let mut sched = Scheduler::new(&model, BatchPolicy::default());
+        let mut batcher = Batcher::new();
+        for i in 0..6 {
+            batcher.enqueue(Request::new(i, vec![(i + 65) as u8; 4], 5));
+        }
+        let responses = sched.run_to_completion(&mut batcher);
+        assert_eq!(responses.len(), 6);
+        for r in &responses {
+            assert_eq!(r.tokens.len(), 5);
+            assert!(r.timing.ttft <= r.timing.total);
+        }
+        assert_eq!(sched.metrics.requests_completed, 6);
+        assert_eq!(sched.metrics.tokens_generated, 30);
+    }
+
+    #[test]
+    fn deterministic_greedy_matches_generate() {
+        let model = tiny_model(Arch::Llama, 2);
+        let prompt = b"abcd".to_vec();
+        let direct = model.generate(&prompt, 6, 0.0, 0);
+        let mut sched = Scheduler::new(&model, BatchPolicy::default());
+        let mut batcher = Batcher::new();
+        batcher.enqueue(Request::new(0, prompt, 6));
+        let resp = sched.run_to_completion(&mut batcher);
+        assert_eq!(resp[0].tokens, direct);
+    }
+
+    #[test]
+    fn respects_max_active() {
+        let model = tiny_model(Arch::Gpt, 3);
+        let policy = BatchPolicy { max_active: 2, max_prefill_per_round: 2, ..Default::default() };
+        let mut sched = Scheduler::new(&model, policy);
+        let mut batcher = Batcher::new();
+        for i in 0..4 {
+            batcher.enqueue(Request::new(i, vec![65u8; 2], 3));
+        }
+        let _ = sched.round(&mut batcher);
+        assert!(sched.active() <= 2);
+        let all = sched.run_to_completion(&mut batcher);
+        assert_eq!(all.len() + 0, 4);
+    }
+
+    #[test]
+    fn long_prompt_is_clamped() {
+        let model = tiny_model(Arch::Gpt, 4);
+        let mut sched = Scheduler::new(&model, BatchPolicy::default());
+        let mut batcher = Batcher::new();
+        batcher.enqueue(Request::new(0, vec![66u8; 200], 4)); // > max_seq=64
+        let resp = sched.run_to_completion(&mut batcher);
+        assert_eq!(resp.len(), 1);
+        assert!(!resp[0].tokens.is_empty());
+    }
+}

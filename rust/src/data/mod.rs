@@ -1,0 +1,294 @@
+//! Data substrate: synthetic corpus + byte-level tokenization + batching.
+//!
+//! The paper evaluates on raw-WikiText2, which is not available in this
+//! sandbox; per DESIGN.md we substitute a deterministic **synthetic
+//! natural-language-like corpus**: a Zipfian vocabulary of syllabic
+//! words driven by a structured bigram Markov chain, with sentence and
+//! paragraph structure. A byte-level (vocab 256) tokenizer keeps the
+//! model and evaluation pipeline identical to the paper's protocol
+//! (perplexity over a held-out split, non-overlapping windows).
+//!
+//! The Rust generator is canonical: `sdq gen-corpus` writes
+//! `artifacts/corpus.bin` at build time and both the JAX trainer and the
+//! Rust evaluator consume the same bytes.
+
+use crate::util::rng::Rng;
+
+use crate::tensor::Matrix;
+use crate::Result;
+
+/// Corpus generation parameters.
+#[derive(Clone, Debug)]
+pub struct CorpusCfg {
+    /// Total bytes to generate.
+    pub bytes: usize,
+    /// Vocabulary size (distinct words).
+    pub vocab_words: usize,
+    /// Markov branching: likely successors per word.
+    pub successors: usize,
+    /// RNG seed (corpus is fully deterministic given cfg).
+    pub seed: u64,
+}
+
+impl Default for CorpusCfg {
+    fn default() -> Self {
+        CorpusCfg { bytes: 4 << 20, vocab_words: 800, successors: 24, seed: 1234 }
+    }
+}
+
+const SYLLABLES: &[&str] = &[
+    "ba", "be", "bi", "bo", "bu", "da", "de", "di", "do", "du", "ka", "ke", "ki", "ko", "ku",
+    "la", "le", "li", "lo", "lu", "ma", "me", "mi", "mo", "mu", "na", "ne", "ni", "no", "nu",
+    "ra", "re", "ri", "ro", "ru", "sa", "se", "si", "so", "su", "ta", "te", "ti", "to", "tu",
+    "va", "ve", "vi", "vo", "vu", "za", "ze", "zi", "zo", "zu", "sh", "th", "an", "en", "in",
+    "on", "un", "ar", "er", "ir", "or", "ur", "al", "el", "il", "ol", "ul",
+];
+
+/// Build the synthetic vocabulary: syllabic words, short words get low
+/// ranks (Zipf-style length/frequency correlation).
+fn build_vocab(cfg: &CorpusCfg, rng: &mut Rng) -> Vec<String> {
+    let mut vocab = Vec::with_capacity(cfg.vocab_words);
+    let mut seen = std::collections::HashSet::new();
+    while vocab.len() < cfg.vocab_words {
+        // Rank-correlated length: earlier words are shorter.
+        let frac = vocab.len() as f64 / cfg.vocab_words as f64;
+        let syls = 1 + (frac * 3.0) as usize + rng.below(2);
+        let mut w = String::new();
+        for _ in 0..syls {
+            w.push_str(SYLLABLES[rng.below(SYLLABLES.len())]);
+        }
+        if seen.insert(w.clone()) {
+            vocab.push(w);
+        }
+    }
+    vocab
+}
+
+/// Generate the corpus bytes.
+pub fn generate_corpus(cfg: &CorpusCfg) -> Vec<u8> {
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let vocab = build_vocab(cfg, &mut rng);
+    let v = vocab.len();
+
+    // Structured bigram chain: each word transitions to a small successor
+    // set with Zipfian weights; successor identity is deterministic.
+    let succ: Vec<Vec<usize>> = (0..v)
+        .map(|_| (0..cfg.successors).map(|_| zipf(&mut rng, v)).collect())
+        .collect();
+
+    let mut out = Vec::with_capacity(cfg.bytes + 64);
+    let mut word = zipf(&mut rng, v);
+    let mut sentence_len = 0usize;
+    let mut sentences_in_par = 0usize;
+    let mut capitalize = true;
+    while out.len() < cfg.bytes {
+        let w = &vocab[word];
+        if capitalize {
+            let mut chars = w.chars();
+            if let Some(c) = chars.next() {
+                out.extend(c.to_ascii_uppercase().to_string().as_bytes());
+                out.extend(chars.as_str().as_bytes());
+            }
+            capitalize = false;
+        } else {
+            out.extend(w.as_bytes());
+        }
+        sentence_len += 1;
+        // Sentence termination: 6–18 words.
+        if sentence_len >= 6 && (sentence_len >= 18 || rng.bool(0.15)) {
+            out.push(b'.');
+            sentence_len = 0;
+            sentences_in_par += 1;
+            capitalize = true;
+            if sentences_in_par >= 5 && (sentences_in_par >= 12 || rng.bool(0.3)) {
+                out.push(b'\n');
+                out.push(b'\n');
+                sentences_in_par = 0;
+            } else {
+                out.push(b' ');
+            }
+            word = zipf(&mut rng, v);
+            continue;
+        }
+        if sentence_len > 2 && rng.bool(0.08) {
+            out.push(b',');
+        }
+        out.push(b' ');
+        // Bigram step: mostly follow the chain, sometimes jump (topic shift).
+        word = if rng.bool(0.85) {
+            let s = &succ[word];
+            s[zipf(&mut rng, s.len())]
+        } else {
+            zipf(&mut rng, v)
+        };
+    }
+    out.truncate(cfg.bytes);
+    out
+}
+
+/// Zipf(1.1)-ish sampler over `0..n` (rank 0 most likely).
+fn zipf(rng: &mut Rng, n: usize) -> usize {
+    // Inverse-CDF approximation: u^a maps uniform to heavy head.
+    let u: f64 = rng.f64();
+    let r = (u.powf(3.0) * n as f64) as usize;
+    r.min(n - 1)
+}
+
+/// A tokenized corpus with canonical train/valid/test splits.
+#[derive(Clone, Debug)]
+pub struct TokenDataset {
+    pub tokens: Vec<u8>,
+}
+
+/// Which split to read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    /// First 90%.
+    Train,
+    /// Next 5%.
+    Valid,
+    /// Final 5%.
+    Test,
+}
+
+impl TokenDataset {
+    pub fn new(tokens: Vec<u8>) -> Self {
+        TokenDataset { tokens }
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Ok(TokenDataset { tokens: std::fs::read(path)? })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, &self.tokens)?;
+        Ok(())
+    }
+
+    /// Token slice for a split (90/5/5).
+    pub fn split(&self, s: Split) -> &[u8] {
+        let n = self.tokens.len();
+        let (a, b) = match s {
+            Split::Train => (0, n * 90 / 100),
+            Split::Valid => (n * 90 / 100, n * 95 / 100),
+            Split::Test => (n * 95 / 100, n),
+        };
+        &self.tokens[a..b]
+    }
+
+    /// Non-overlapping `[batch, seq]` evaluation windows over a split:
+    /// yields `(inputs, targets)` where `targets[i] = inputs[i+1]`
+    /// (next-token prediction), as `u8` matrices row-per-sequence.
+    pub fn windows(&self, s: Split, batch: usize, seq: usize) -> Vec<(Vec<u8>, Vec<u8>)> {
+        let data = self.split(s);
+        let win = seq + 1;
+        let n_windows = data.len() / win;
+        let mut out = Vec::new();
+        let mut w = 0;
+        while w < n_windows {
+            let b = batch.min(n_windows - w);
+            let mut inp = Vec::with_capacity(b * seq);
+            let mut tgt = Vec::with_capacity(b * seq);
+            for i in 0..b {
+                let start = (w + i) * win;
+                inp.extend_from_slice(&data[start..start + seq]);
+                tgt.extend_from_slice(&data[start + 1..start + seq + 1]);
+            }
+            out.push((inp, tgt));
+            w += b;
+        }
+        out
+    }
+}
+
+/// One-hot-free embedding lookup helper: tokens → `[n, d]` rows gathered
+/// from an embedding matrix.
+pub fn embed(tokens: &[u8], emb: &Matrix) -> Matrix {
+    let d = emb.cols;
+    let mut out = Matrix::zeros(tokens.len(), d);
+    for (i, t) in tokens.iter().enumerate() {
+        out.row_mut(i).copy_from_slice(emb.row(*t as usize));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> CorpusCfg {
+        CorpusCfg { bytes: 20_000, vocab_words: 100, successors: 8, seed: 7 }
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let a = generate_corpus(&small_cfg());
+        let b = generate_corpus(&small_cfg());
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 20_000);
+    }
+
+    #[test]
+    fn corpus_changes_with_seed() {
+        let a = generate_corpus(&small_cfg());
+        let mut cfg = small_cfg();
+        cfg.seed = 8;
+        assert_ne!(a, generate_corpus(&cfg));
+    }
+
+    #[test]
+    fn corpus_is_texty() {
+        let c = generate_corpus(&small_cfg());
+        let text = String::from_utf8(c).unwrap();
+        assert!(text.contains(". "));
+        assert!(text.contains("\n\n"));
+        // Mostly lowercase ascii letters + punctuation
+        let letters = text.chars().filter(|c| c.is_ascii_lowercase()).count();
+        assert!(letters as f64 / text.len() as f64 > 0.6);
+    }
+
+    #[test]
+    fn corpus_has_zipfian_structure() {
+        // Common bytes should dominate: 'a' much more frequent than 'z'-ish.
+        let c = generate_corpus(&CorpusCfg { bytes: 100_000, ..small_cfg() });
+        let mut hist = [0usize; 256];
+        for b in &c {
+            hist[*b as usize] += 1;
+        }
+        let space = hist[b' ' as usize];
+        assert!(space > c.len() / 20, "spaces should be frequent");
+        assert_eq!(hist[0], 0, "no NUL bytes");
+    }
+
+    #[test]
+    fn splits_partition() {
+        let ds = TokenDataset::new((0..=255u8).cycle().take(10_000).collect());
+        let total = ds.split(Split::Train).len()
+            + ds.split(Split::Valid).len()
+            + ds.split(Split::Test).len();
+        assert_eq!(total, 10_000);
+        assert_eq!(ds.split(Split::Train).len(), 9_000);
+    }
+
+    #[test]
+    fn windows_shift_targets() {
+        let ds = TokenDataset::new((0..200u8).collect());
+        let w = ds.windows(Split::Train, 2, 9);
+        let (inp, tgt) = &w[0];
+        assert_eq!(inp.len(), 18);
+        assert_eq!(inp[0] + 1, tgt[0]);
+        assert_eq!(inp[8] + 1, tgt[8]);
+        // second sequence starts where the first window ended
+        assert_eq!(inp[9], 10);
+    }
+
+    #[test]
+    fn embed_gathers_rows() {
+        let emb = Matrix::from_vec(4, 2, vec![0., 0., 1., 1., 2., 2., 3., 3.]);
+        let x = embed(&[3, 0, 2], &emb);
+        assert_eq!(x.data, vec![3., 3., 0., 0., 2., 2.]);
+    }
+}

@@ -1,0 +1,84 @@
+//! Evaluation harness: perplexity (§6.2) and zero-shot tasks (§6.3).
+//!
+//! Perplexity follows the paper's raw-WikiText2 protocol on our corpus:
+//! non-overlapping windows over the held-out split, next-token NLL,
+//! `ppl = exp(mean nll)`.
+//!
+//! Zero-shot evaluation mirrors LM-Eval's multiple-choice scoring
+//! (length-normalized continuation log-likelihood, argmax over choices)
+//! over six synthetic tasks standing in for BoolQ / HellaSwag /
+//! WinoGrande / ARC-e / ARC-c / PIQA (see DESIGN.md substitutions).
+
+pub mod zeroshot;
+
+
+use crate::data::{Split, TokenDataset};
+use crate::model::Model;
+
+/// Perplexity evaluation result.
+#[derive(Clone, Copy, Debug)]
+pub struct PplResult {
+    pub ppl: f64,
+    pub mean_nll: f64,
+    pub tokens: usize,
+}
+
+/// Evaluate perplexity on a split, capped at `max_tokens` target tokens.
+pub fn perplexity(
+    model: &Model,
+    ds: &TokenDataset,
+    split: Split,
+    batch: usize,
+    seq: usize,
+    max_tokens: usize,
+) -> PplResult {
+    let mut nll = 0.0f64;
+    let mut tokens = 0usize;
+    for (inp, tgt) in ds.windows(split, batch, seq) {
+        let b = inp.len() / seq;
+        nll += model.nll_sum(&inp, &tgt, b, seq);
+        tokens += tgt.len();
+        if tokens >= max_tokens {
+            break;
+        }
+    }
+    let mean = if tokens > 0 { nll / tokens as f64 } else { f64::NAN };
+    PplResult { ppl: mean.exp(), mean_nll: mean, tokens }
+}
+
+/// Percentage perplexity increase vs a baseline (the paper's headline
+/// quality metric; MLPerf's bar is 1%).
+pub fn ppl_increase_pct(baseline: f64, compressed: f64) -> f64 {
+    (compressed - baseline) / baseline * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_corpus, CorpusCfg};
+    use crate::model::testutil::tiny_model;
+    use crate::model::Arch;
+
+    #[test]
+    fn perplexity_of_random_model_near_uniform() {
+        let m = tiny_model(Arch::Gpt, 1);
+        let corpus = generate_corpus(&CorpusCfg {
+            bytes: 40_000,
+            vocab_words: 100,
+            successors: 8,
+            seed: 3,
+        });
+        let ds = TokenDataset::new(corpus);
+        let r = perplexity(&m, &ds, Split::Test, 4, 32, 512);
+        assert!(r.tokens >= 512);
+        // An untrained model should be in the vicinity of uniform (256);
+        // random inits give a broad band.
+        assert!(r.ppl > 100.0 && r.ppl < 400.0, "ppl {}", r.ppl);
+    }
+
+    #[test]
+    fn ppl_increase_math() {
+        assert!((ppl_increase_pct(10.0, 10.1) - 1.0).abs() < 1e-9);
+        assert!(ppl_increase_pct(10.0, 9.9) < 0.0);
+    }
+}

@@ -1,0 +1,233 @@
+//! Experiment harness: shared plumbing for the CLI, benches and examples.
+//!
+//! Locates artifacts, loads models/datasets, runs the calibration pass,
+//! applies compression configurations, and evaluates perplexity /
+//! zero-shot accuracy — one place for the logic every paper table needs.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Context};
+
+use crate::artifacts::load_weights;
+use crate::data::{Split, TokenDataset};
+use crate::eval::{perplexity, PplResult};
+use crate::model::Model;
+use crate::sdq::calib::CalibStats;
+use crate::sdq::config::{CompressionConfig, Stages};
+use crate::sdq::pipeline::LayerReport;
+use crate::Result;
+
+/// Repository root: `$SDQ_ROOT` or the current directory.
+pub fn repo_root() -> PathBuf {
+    std::env::var_os("SDQ_ROOT").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("."))
+}
+
+/// Path to a trained model bundle.
+pub fn model_path(name: &str) -> PathBuf {
+    repo_root().join("artifacts/models").join(format!("{name}.bin"))
+}
+
+/// Load a trained model from `artifacts/models/<name>.bin`.
+pub fn load_model(name: &str) -> Result<Model> {
+    let path = model_path(name);
+    let bundle = load_weights(&path)
+        .with_context(|| format!("loading {} (run `make artifacts`)", path.display()))?;
+    Model::from_bundle(bundle)
+}
+
+/// Model names present under `artifacts/models/` (sorted), optionally
+/// filtered by prefix.
+pub fn available_models(prefix: &str) -> Vec<String> {
+    let dir = repo_root().join("artifacts/models");
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter_map(|e| {
+                    let n = e.file_name().to_string_lossy().into_owned();
+                    n.strip_suffix(".bin").map(|s| s.to_string())
+                })
+                // `.sdq.bin` companions are AOT parameter bundles, not models.
+                .filter(|n| n.starts_with(prefix) && !n.ends_with(".sdq"))
+                .collect()
+        })
+        .unwrap_or_default();
+    names.sort();
+    names
+}
+
+/// Load the shared corpus dataset.
+pub fn load_dataset() -> Result<TokenDataset> {
+    let path = repo_root().join("artifacts/corpus.bin");
+    TokenDataset::load(&path)
+        .map_err(|e| anyhow!("loading corpus {}: {e} (run `make artifacts`)", path.display()))
+}
+
+/// Whether a configuration needs Hessian (Gram) calibration.
+pub fn needs_gram(cfg: &CompressionConfig) -> bool {
+    use crate::sdq::config::SparsifyMethod;
+    match &cfg.stages {
+        Stages::SparsifyOnly(s) => s.method == SparsifyMethod::SparseGpt,
+        Stages::Sdq { sparsify: Some(s), .. } => s.method == SparsifyMethod::SparseGpt,
+        Stages::QuantOnly { algo, .. } => *algo == crate::sdq::config::QuantAlgo::Gptq,
+        _ => false,
+    }
+}
+
+/// Run the calibration pass over the validation split.
+pub fn calibrate(model: &Model, ds: &TokenDataset, tokens: usize, with_gram: bool) -> CalibStats {
+    let mut stats = CalibStats::new(with_gram);
+    let seq = (model.cfg.max_seq / 2).max(16);
+    let mut seen = 0;
+    for (inp, _) in ds.windows(Split::Valid, 4, seq) {
+        let b = inp.len() / seq;
+        model.forward(&inp, b, seq, Some(&mut stats));
+        seen += inp.len();
+        if seen >= tokens {
+            break;
+        }
+    }
+    stats
+}
+
+/// Evaluation knobs (scaled by model size in the benches).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalCfg {
+    pub calib_tokens: usize,
+    pub eval_tokens: usize,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Default for EvalCfg {
+    fn default() -> Self {
+        EvalCfg { calib_tokens: 2048, eval_tokens: 4096, batch: 8, seq: 64 }
+    }
+}
+
+/// Result of evaluating one compression configuration on one model.
+#[derive(Clone, Debug)]
+pub struct ConfigEval {
+    pub config: String,
+    pub ppl: PplResult,
+    pub effective_throughput: f64,
+    pub bits_per_weight: f64,
+    pub mean_rel_err: f64,
+    pub reports: Vec<LayerReport>,
+}
+
+/// Compress a *clone* of `base` under `cfg` (calibrating as needed) and
+/// evaluate test perplexity. The base model is untouched.
+pub fn eval_config(
+    base: &Model,
+    ds: &TokenDataset,
+    cfg: &CompressionConfig,
+    ecfg: EvalCfg,
+) -> Result<ConfigEval> {
+    let mut model = base.clone();
+    let calib = calibrate(&model, ds, ecfg.calib_tokens, needs_gram(cfg));
+    let reports = model.compress(cfg, &calib)?;
+    let ppl = perplexity(&model, ds, Split::Test, ecfg.batch, ecfg.seq, ecfg.eval_tokens);
+    let mean_rel_err =
+        reports.iter().map(|r| r.rel_err).sum::<f64>() / reports.len().max(1) as f64;
+    Ok(ConfigEval {
+        config: cfg.to_string(),
+        ppl,
+        effective_throughput: cfg.effective_throughput(),
+        bits_per_weight: crate::perfmodel::bits_per_weight(cfg),
+        mean_rel_err,
+        reports,
+    })
+}
+
+/// The Table-2/3 configuration grid (paper §6.1/§6.2), grouped by
+/// effective-throughput category.
+pub fn table2_configs() -> Vec<&'static str> {
+    vec![
+        // 1× (weight-only quantization rows: RTN ≙ VS-Quant W4, GPTQ)
+        "Dense-WA16",
+        "Q-VSQuant-Wfp4",
+        "Q-GPTQ-Wfp4",
+        // 2×
+        "S-Wanda-4:8",
+        "S-SparseGPT-4:8",
+        "Q-VSQuant-WAint8",
+        "Q-VSQuant-WAfp8",
+        // 3.6×
+        "SDQ-8:8-1:8int8-7:8fp4",
+        // 4×
+        "S-Wanda-2:8",
+        "S-SparseGPT-2:8",
+        "Q-VSQuant-WAint4",
+        "Q-VSQuant-WAfp4",
+        "SDQ-W3:4-1:4int8-2:4fp4",
+        "SDQ-S3:4-1:4int8-2:4fp4",
+        "SDQ-W6:8-2:8int8-4:8fp4",
+        "SDQ-S6:8-2:8int8-4:8fp4",
+        "SDQ-W7:8-1:8int8-6:8fp4",
+        "SDQ-S7:8-1:8int8-6:8fp4",
+    ]
+}
+
+/// Scale evaluation cost down for larger models so table benches finish
+/// on one core (documented in EXPERIMENTS.md).
+pub fn eval_cfg_for(model: &Model, full: bool) -> EvalCfg {
+    let params = model.cfg.param_count();
+    let base = EvalCfg::default();
+    if full || params < 500_000 {
+        base
+    } else if params < 2_000_000 {
+        EvalCfg { calib_tokens: 1536, eval_tokens: 3072, ..base }
+    } else {
+        EvalCfg { calib_tokens: 1024, eval_tokens: 2048, ..base }
+    }
+}
+
+/// Ensure artifacts exist; returns false (and prints a hint) otherwise.
+/// Benches use this to no-op gracefully before `make artifacts`.
+pub fn artifacts_ready() -> bool {
+    let ok = repo_root().join("artifacts/corpus.bin").exists()
+        && !available_models("").is_empty();
+    if !ok {
+        eprintln!(
+            "artifacts missing under {} — run `make artifacts` first",
+            repo_root().join("artifacts").display()
+        );
+    }
+    ok
+}
+
+/// Write a JSON record (used by benches to persist table data).
+pub fn save_json(stem: &str, json: &crate::util::json::Json) {
+    let dir = repo_root().join("target/bench-results");
+    let _ = std::fs::create_dir_all(&dir);
+    let _ = std::fs::write(dir.join(format!("{stem}.json")), json.to_string());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_grid_parses() {
+        for s in table2_configs() {
+            let c: CompressionConfig = s.parse().unwrap_or_else(|e| panic!("{s}: {e}"));
+            assert!(c.validate().is_ok(), "{s}");
+        }
+    }
+
+    #[test]
+    fn gram_detection() {
+        let s: CompressionConfig = "S-SparseGPT-4:8".parse().unwrap();
+        assert!(needs_gram(&s));
+        let w: CompressionConfig = "SDQ-W7:8-1:8int8-6:8fp4".parse().unwrap();
+        assert!(!needs_gram(&w));
+        let sg: CompressionConfig = "SDQ-S7:8-1:8int8-6:8fp4".parse().unwrap();
+        assert!(needs_gram(&sg));
+    }
+
+    #[test]
+    fn model_path_layout() {
+        std::env::remove_var("SDQ_ROOT");
+        assert!(model_path("gpt-nano").ends_with("artifacts/models/gpt-nano.bin"));
+    }
+}

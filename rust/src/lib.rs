@@ -1,0 +1,43 @@
+//! # SDQ — Sparse Decomposed Quantization for LLM Inference
+//!
+//! Full-system reproduction of *SDQ: Sparse Decomposed Quantization for
+//! LLM Inference* (Jeong, Tsai, Keckler, Krishna; cs.LG 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the compression library (sparsify → decompose
+//!   → quantize), the serving coordinator, the analytical performance
+//!   model for N:M structured-sparse tensor-core hardware, and every
+//!   substrate the paper's evaluation depends on (transformer inference
+//!   engine, perplexity / zero-shot harness, synthetic corpus).
+//! * **L2 (python/compile/model.py)** — JAX model graphs lowered AOT to
+//!   HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the decomposed
+//!   dual-quantized GEMM hot spot (interpret=True for CPU PJRT).
+//!
+//! Python never runs on the request path: the [`runtime`] module loads
+//! the AOT artifacts via PJRT and the coordinator serves from Rust.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use sdq::sdq::config::CompressionConfig;
+//! // Parse the paper's own configuration naming scheme:
+//! let cfg: CompressionConfig = "SDQ-W7:8-1:8int8-6:8fp4".parse().unwrap();
+//! assert_eq!(cfg.effective_throughput(), 4.0);
+//! ```
+
+pub mod artifacts;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod formats;
+pub mod harness;
+pub mod model;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sdq;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

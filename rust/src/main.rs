@@ -1,0 +1,281 @@
+//! `sdq` — command-line front end for the SDQ reproduction.
+//!
+//! Subcommands:
+//!   gen-corpus   generate the synthetic corpus artifact
+//!   info         model + configuration summary
+//!   compress     compress a model and report per-layer stats
+//!   eval-ppl     perplexity of a (compressed) model on the test split
+//!   zeroshot     zero-shot task-suite accuracy
+//!   serve        batched generation through the coordinator
+//!   simulate     simulated sparse-tensor-core GEMM timing
+//!   coverage     Fig. 5 local-outlier coverage analysis
+//!   runtime      load + execute AOT PJRT artifacts (smoke)
+
+use std::path::PathBuf;
+
+use sdq::coordinator::{batcher::BatchPolicy, Engine, Request};
+use sdq::data::{generate_corpus, CorpusCfg, Split, TokenDataset};
+use sdq::eval::zeroshot;
+use sdq::harness;
+use sdq::perfmodel::simtc::TensorCoreSpec;
+use sdq::sdq::config::CompressionConfig;
+use sdq::sdq::decompose::{coverage, OutlierScope};
+use sdq::sdq::nm::NmPattern;
+use sdq::util::cli::Args;
+use sdq::Result;
+
+fn main() {
+    let args = Args::parse();
+    let r = match args.command.as_str() {
+        "gen-corpus" => gen_corpus(&args),
+        "info" => info(&args),
+        "compress" => compress(&args),
+        "eval-ppl" => eval_ppl(&args),
+        "zeroshot" => zeroshot_cmd(&args),
+        "serve" => serve(&args),
+        "simulate" => simulate(&args),
+        "coverage" => coverage_cmd(&args),
+        "runtime" => runtime_cmd(&args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "sdq — Sparse Decomposed Quantization for LLM inference\n\n\
+         USAGE: sdq <command> [--flags]\n\n\
+         COMMANDS:\n\
+           gen-corpus  --out PATH --bytes N --seed S      generate corpus artifact\n\
+           info        --model NAME                        model summary\n\
+           compress    --model NAME --config CFG           per-layer compression report\n\
+           eval-ppl    --model NAME --config CFG           test-split perplexity\n\
+           zeroshot    --model NAME --config CFG           zero-shot suite accuracy\n\
+           serve       --model NAME --config CFG --requests N --max-new N\n\
+           simulate    --config CFG --t N --k N --o N      simulated sparse-TC GEMM\n\
+           coverage    --model NAME --extract N:M          Fig. 5 outlier coverage\n\
+           runtime     --artifact NAME                     PJRT artifact smoke-run\n\n\
+         CFG examples: Dense-WA16, S-Wanda-4:8, Q-VSQuant-WAint4,\n\
+                       SDQ-W7:8-1:8int8-6:8fp4 (paper naming)"
+    );
+}
+
+fn gen_corpus(args: &Args) -> Result<()> {
+    let cfg = CorpusCfg {
+        bytes: args.get_usize("bytes", 4 << 20)?,
+        vocab_words: args.get_usize("vocab-words", 800)?,
+        successors: args.get_usize("successors", 24)?,
+        seed: args.get_u64("seed", 1234)?,
+    };
+    let out = PathBuf::from(args.get_or("out", "artifacts/corpus.bin"));
+    let corpus = generate_corpus(&cfg);
+    let ds = TokenDataset::new(corpus);
+    ds.save(&out)?;
+    println!(
+        "wrote {} bytes to {} (train/valid/test = {}/{}/{})",
+        ds.tokens.len(),
+        out.display(),
+        ds.split(Split::Train).len(),
+        ds.split(Split::Valid).len(),
+        ds.split(Split::Test).len()
+    );
+    Ok(())
+}
+
+fn parse_config(args: &Args) -> Result<CompressionConfig> {
+    let s = args.get_or("config", "Dense-WA16");
+    s.parse::<CompressionConfig>().map_err(|e| anyhow::anyhow!(e))
+}
+
+fn info(args: &Args) -> Result<()> {
+    let name = args.get_or("model", "gpt-micro");
+    let model = harness::load_model(name)?;
+    let c = &model.cfg;
+    println!(
+        "model {name}: arch={:?} d_model={} n_layer={} n_head={} d_ff={}",
+        c.arch, c.d_model, c.n_layer, c.n_head, c.d_ff
+    );
+    println!(
+        "params: {:.2}M  max_seq={}  vocab={}",
+        c.param_count() as f64 / 1e6,
+        c.max_seq,
+        c.vocab
+    );
+    for cfg_str in harness::table2_configs() {
+        let cfg: CompressionConfig = cfg_str.parse().unwrap();
+        let mc = sdq::perfmodel::model_cost(&cfg, &c.linear_shapes());
+        println!(
+            "  {:<28} tput {:>5.2}x  bits/w {:>6.3}  weight MiB {:>7.2}",
+            cfg_str,
+            mc.effective_throughput,
+            mc.bits_per_weight,
+            mc.weight_bytes / (1 << 20) as f64
+        );
+    }
+    Ok(())
+}
+
+fn compress(args: &Args) -> Result<()> {
+    let name = args.get_or("model", "gpt-micro");
+    let cfg = parse_config(args)?;
+    let mut model = harness::load_model(name)?;
+    let ds = harness::load_dataset()?;
+    let calib_tokens = args.get_usize("calib-tokens", 2048)?;
+    let calib = harness::calibrate(&model, &ds, calib_tokens, harness::needs_gram(&cfg));
+    let reports = model.compress(&cfg, &calib)?;
+    println!("{:<20} {:>8} {:>10} {:>8} {:>8}", "layer", "density", "rel_err", "bits/w", "tput");
+    for r in &reports {
+        println!(
+            "{:<20} {:>8.3} {:>10.5} {:>8.3} {:>7.2}x",
+            r.name, r.density, r.rel_err, r.bits_per_weight, r.effective_throughput
+        );
+    }
+    if let Some(out) = args.get("save") {
+        let tensors: Vec<(String, sdq::tensor::Matrix)> = model
+            .linears()
+            .iter()
+            .map(|l| (l.name.clone(), l.lin.dense_view()))
+            .collect();
+        let refs: Vec<(String, &sdq::tensor::Matrix)> =
+            tensors.iter().map(|(n, m)| (n.clone(), m)).collect();
+        sdq::artifacts::save_weights(&PathBuf::from(out), &model.cfg.to_json(), &refs)?;
+        println!("saved compressed dense views to {out}");
+    }
+    Ok(())
+}
+
+fn eval_ppl(args: &Args) -> Result<()> {
+    let name = args.get_or("model", "gpt-micro");
+    let cfg = parse_config(args)?;
+    let model = harness::load_model(name)?;
+    let ds = harness::load_dataset()?;
+    let ecfg = harness::EvalCfg {
+        calib_tokens: args.get_usize("calib-tokens", 2048)?,
+        eval_tokens: args.get_usize("eval-tokens", 4096)?,
+        batch: args.get_usize("batch", 8)?,
+        seq: args.get_usize("seq", 64)?,
+    };
+    let t0 = std::time::Instant::now();
+    let r = harness::eval_config(&model, &ds, &cfg, ecfg)?;
+    println!(
+        "{name} {cfg}: ppl {:.4} (nll {:.4}, {} tokens, tput {:.2}x, bits/w {:.3}, \
+         rel_err {:.4}) [{:.1}s]",
+        r.ppl.ppl,
+        r.ppl.mean_nll,
+        r.ppl.tokens,
+        r.effective_throughput,
+        r.bits_per_weight,
+        r.mean_rel_err,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn zeroshot_cmd(args: &Args) -> Result<()> {
+    let name = args.get_or("model", "gpt-micro");
+    let cfg = parse_config(args)?;
+    let mut model = harness::load_model(name)?;
+    let ds = harness::load_dataset()?;
+    let calib = harness::calibrate(&model, &ds, 2048, harness::needs_gram(&cfg));
+    model.compress(&cfg, &calib)?;
+    let per_task = args.get_usize("examples", 25)?;
+    let tasks = zeroshot::build_tasks(&ds, per_task, 42);
+    let (results, avg) = zeroshot::eval_suite(&model, &tasks);
+    for r in &results {
+        println!("  {:<12} {:>6.2}% ({} examples)", r.task, r.accuracy, r.examples);
+    }
+    println!("{name} {cfg}: average {avg:.2}%");
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let name = args.get_or("model", "gpt-micro");
+    let cfg = parse_config(args)?;
+    let mut model = harness::load_model(name)?;
+    let ds = harness::load_dataset()?;
+    let calib = harness::calibrate(&model, &ds, 1024, harness::needs_gram(&cfg));
+    model.compress(&cfg, &calib)?;
+
+    let n = args.get_usize("requests", 16)?;
+    let max_new = args.get_usize("max-new", 32)?;
+    let temperature = args.get_f64("temperature", 0.7)? as f32;
+    let policy =
+        BatchPolicy { max_active: args.get_usize("max-active", 8)?, ..Default::default() };
+    // Prompts: snippets from the test split.
+    let test = ds.split(Split::Test);
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| {
+            let start = (i * 997) % (test.len() - 33);
+            Request::new(i as u64, test[start..start + 32].to_vec(), max_new)
+                .with_temperature(temperature)
+        })
+        .collect();
+    let (responses, metrics) = Engine::run_batch(model, policy, reqs);
+    for r in responses.iter().take(3) {
+        println!(
+            "--- request {} ({} tokens, ttft {:.1}ms) ---",
+            r.id,
+            r.tokens.len(),
+            r.timing.ttft.as_secs_f64() * 1e3
+        );
+        println!("{}", r.text());
+    }
+    println!("{}", metrics.summary());
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let cfg = parse_config(args)?;
+    let t = args.get_usize("t", 512)?;
+    let k = args.get_usize("k", 4096)?;
+    let o = args.get_usize("o", 4096)?;
+    let spec = TensorCoreSpec::default();
+    let r = spec.simulate(&cfg, t, k, o);
+    println!(
+        "{cfg} on [{t}x{k}]·[{o}x{k}]ᵀ: {} cycles ({:.3} ms), speedup {:.3}x \
+         (analytic {:.3}x, tax {:.1}%)",
+        r.cycles,
+        spec.seconds(r.cycles) * 1e3,
+        r.speedup,
+        r.analytic_speedup,
+        r.tax * 100.0
+    );
+    Ok(())
+}
+
+fn coverage_cmd(args: &Args) -> Result<()> {
+    let name = args.get_or("model", "gpt-micro");
+    let extract: NmPattern =
+        args.get_or("extract", "1:8").parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let model = harness::load_model(name)?;
+    let w = model.linears()[0].lin.dense_view();
+    println!("coverage of {extract} local extraction on {name} layer0 q-proj:");
+    println!("{:>8} {:>10} {:>12}", "ratio%", "global", "semi-local64");
+    for pct in [0.5, 1.0, 2.0, 3.0, 4.0, 5.0, 8.0, 10.0] {
+        let ratio = pct / 100.0;
+        let g = coverage(&w, extract, ratio, OutlierScope::Global);
+        let s = coverage(&w, extract, ratio, OutlierScope::SemiLocal { qvec: 64 });
+        println!("{pct:>8.1} {g:>10.4} {s:>12.4}");
+    }
+    Ok(())
+}
+
+fn runtime_cmd(args: &Args) -> Result<()> {
+    let name = args.get_or("artifact", "sdq_gemm");
+    let mut rt = sdq::runtime::PjrtRuntime::cpu()?;
+    let path = sdq::runtime::artifact_path(&harness::repo_root(), name);
+    rt.load_hlo(name, &path)?;
+    println!("loaded {} on {}", path.display(), rt.platform());
+    Ok(())
+}

@@ -1,0 +1,242 @@
+//! Full-sequence batched forward pass (perplexity eval + calibration).
+
+
+use super::ops::*;
+use super::{Arch, Model};
+use crate::data::embed;
+use crate::sdq::calib::CalibStats;
+use crate::tensor::{matmul, Matrix};
+
+/// Observe activations into the calibration collector, if any.
+fn obs(calib: &mut Option<&mut CalibStats>, key: &str, x: &Matrix) {
+    if let Some(c) = calib {
+        c.observe(key, x);
+    }
+}
+
+impl Model {
+    /// Forward `batch` sequences of `seq` tokens (`tokens.len() ==
+    /// batch*seq`, row-major). Returns logits `[batch*seq, vocab]`.
+    ///
+    /// When `calib` is provided, per-layer input activations are recorded
+    /// (the calibration pass of Fig. 7).
+    pub fn forward(
+        &self,
+        tokens: &[u8],
+        batch: usize,
+        seq: usize,
+        mut calib: Option<&mut CalibStats>,
+    ) -> Matrix {
+        assert_eq!(tokens.len(), batch * seq, "token count mismatch");
+        assert!(seq <= self.cfg.max_seq, "sequence longer than max_seq");
+        let d = self.cfg.d_model;
+        let mut x = embed(tokens, &self.tok_emb);
+        if let Some(pe) = &self.pos_emb {
+            for b in 0..batch {
+                for s in 0..seq {
+                    let row = x.row_mut(b * seq + s);
+                    for (v, p) in row.iter_mut().zip(pe.row(s)) {
+                        *v += *p;
+                    }
+                }
+            }
+        }
+
+        for blk in &self.blocks {
+            // ---- attention ----
+            let mut h = x.clone();
+            self.norm1(blk, &mut h);
+            obs(&mut calib, &blk.q.stats_key, &h);
+            let mut q = Matrix::zeros(h.rows, d);
+            let mut k = Matrix::zeros(h.rows, d);
+            let mut v = Matrix::zeros(h.rows, d);
+            blk.q.lin.forward_into(&h, &mut q);
+            blk.k.lin.forward_into(&h, &mut k);
+            blk.v.lin.forward_into(&h, &mut v);
+
+            let attn = self.attention(&q, &k, &v, batch, seq, 0);
+            obs(&mut calib, &blk.o.stats_key, &attn);
+            let mut o_out = Matrix::zeros(h.rows, d);
+            blk.o.lin.forward_into(&attn, &mut o_out);
+            add_inplace(&mut x, &o_out);
+
+            // ---- MLP ----
+            let mut h = x.clone();
+            self.norm2(blk, &mut h);
+            obs(&mut calib, &blk.ff1.stats_key, &h);
+            let mut a = Matrix::zeros(h.rows, self.cfg.d_ff);
+            blk.ff1.lin.forward_into(&h, &mut a);
+            match self.cfg.arch {
+                Arch::Gpt => map_inplace(&mut a, gelu),
+                Arch::Llama => {
+                    let ff3 = blk.ff3.as_ref().expect("llama gate");
+                    let mut g = Matrix::zeros(h.rows, self.cfg.d_ff);
+                    ff3.lin.forward_into(&h, &mut g);
+                    map_inplace(&mut a, silu);
+                    mul_inplace(&mut a, &g);
+                }
+            }
+            obs(&mut calib, &blk.ff2.stats_key, &a);
+            let mut m_out = Matrix::zeros(h.rows, d);
+            blk.ff2.lin.forward_into(&a, &mut m_out);
+            add_inplace(&mut x, &m_out);
+        }
+
+        match self.cfg.arch {
+            Arch::Gpt => layernorm(&mut x, &self.lnf_g, self.lnf_b.as_deref(), self.cfg.eps),
+            Arch::Llama => rmsnorm(&mut x, &self.lnf_g, self.cfg.eps),
+        }
+        // Tied LM head: logits = x · tok_embᵀ
+        matmul(&x, &self.tok_emb)
+    }
+
+    pub(crate) fn norm1(&self, blk: &super::Block, h: &mut Matrix) {
+        match self.cfg.arch {
+            Arch::Gpt => layernorm(h, &blk.ln1_g, blk.ln1_b.as_deref(), self.cfg.eps),
+            Arch::Llama => rmsnorm(h, &blk.ln1_g, self.cfg.eps),
+        }
+    }
+
+    pub(crate) fn norm2(&self, blk: &super::Block, h: &mut Matrix) {
+        match self.cfg.arch {
+            Arch::Gpt => layernorm(h, &blk.ln2_g, blk.ln2_b.as_deref(), self.cfg.eps),
+            Arch::Llama => rmsnorm(h, &blk.ln2_g, self.cfg.eps),
+        }
+    }
+
+    /// Multi-head causal attention over flattened `[batch*seq, d]` q/k/v.
+    /// `past` shifts the causal mask (0 for full-sequence forward).
+    /// Q rows correspond to positions `past..past+seq` of each sequence;
+    /// K/V rows to positions `0..kv_seq`.
+    pub(crate) fn attention(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        batch: usize,
+        seq: usize,
+        past: usize,
+    ) -> Matrix {
+        let d = self.cfg.d_model;
+        let dh = self.cfg.head_dim();
+        let nh = self.cfg.n_head;
+        let kv_seq = k.rows / batch;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut out = Matrix::zeros(q.rows, d);
+
+        // Parallelize over (batch, head) pairs; each writes a disjoint
+        // (row-range × column-range) region collected at the end.
+        let results: Vec<(usize, usize, Matrix)> =
+            crate::util::par::par_map(batch * nh, |bh| {
+                let b = bh / nh;
+                let hd = bh % nh;
+                let slice_head = |m: &Matrix, rows: usize, pos0: usize, rope: bool| {
+                    let mut s = Matrix::zeros(rows, dh);
+                    for r in 0..rows {
+                        let src = m.row(b * rows + r);
+                        s.row_mut(r).copy_from_slice(&src[hd * dh..(hd + 1) * dh]);
+                    }
+                    if rope && self.cfg.arch == Arch::Llama {
+                        rope_inplace(&mut s, pos0, self.cfg.rope_theta);
+                    }
+                    s
+                };
+                let qh = slice_head(q, seq, past, true);
+                let kh = slice_head(k, kv_seq, 0, true);
+                let vh = slice_head(v, kv_seq, 0, false);
+                let mut scores = matmul(&qh, &kh);
+                for s in &mut scores.data {
+                    *s *= scale;
+                }
+                causal_softmax(&mut scores, past);
+                let oh = matmul(&scores, &vh.transpose());
+                (b, hd, oh)
+            });
+        for (b, hd, oh) in results {
+            for r in 0..seq {
+                out.row_mut(b * seq + r)[hd * dh..(hd + 1) * dh]
+                    .copy_from_slice(oh.row(r));
+            }
+        }
+        out
+    }
+
+    /// Sum of next-token NLL (nats) over a `[batch, seq]` window.
+    pub fn nll_sum(&self, inputs: &[u8], targets: &[u8], batch: usize, seq: usize) -> f64 {
+        let logits = self.forward(inputs, batch, seq, None);
+        cross_entropy_sum(&logits, targets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::tiny_model;
+    use super::super::Arch;
+    use crate::sdq::calib::CalibStats;
+
+    #[test]
+    fn forward_shapes() {
+        let m = tiny_model(Arch::Gpt, 1);
+        let tokens: Vec<u8> = (0..32).collect();
+        let logits = m.forward(&tokens, 2, 16, None);
+        assert_eq!(logits.rows, 32);
+        assert_eq!(logits.cols, 256);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_llama_shapes() {
+        let m = tiny_model(Arch::Llama, 2);
+        let tokens: Vec<u8> = (0..48).collect();
+        let logits = m.forward(&tokens, 3, 16, None);
+        assert_eq!(logits.rows, 48);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn batch_equals_separate_sequences() {
+        let m = tiny_model(Arch::Llama, 3);
+        let a: Vec<u8> = (10..26).collect();
+        let b: Vec<u8> = (50..66).collect();
+        let mut both = a.clone();
+        both.extend(&b);
+        let lb = m.forward(&both, 2, 16, None);
+        let la = m.forward(&a, 1, 16, None);
+        for i in 0..16 * 256 {
+            assert!((lb.data[i] - la.data[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // Changing a later token must not affect earlier logits.
+        let m = tiny_model(Arch::Gpt, 4);
+        let mut t1: Vec<u8> = (0..16).collect();
+        let l1 = m.forward(&t1, 1, 16, None);
+        t1[15] = 99;
+        let l2 = m.forward(&t1, 1, 16, None);
+        for i in 0..15 * 256 {
+            assert!((l1.data[i] - l2.data[i]).abs() < 1e-5, "position {}", i / 256);
+        }
+        // but the last position must change
+        let last: f32 = (15 * 256..16 * 256)
+            .map(|i| (l1.data[i] - l2.data[i]).abs())
+            .fold(0.0, f32::max);
+        assert!(last > 1e-6);
+    }
+
+    #[test]
+    fn calibration_captures_all_layer_groups() {
+        let m = tiny_model(Arch::Llama, 5);
+        let mut st = CalibStats::new(false);
+        let tokens: Vec<u8> = (0..16).collect();
+        m.forward(&tokens, 1, 16, Some(&mut st));
+        for key in ["block0.attn.in", "block0.attn.o.in", "block0.mlp.in", "block0.mlp.ff2.in"]
+        {
+            assert!(st.get(key).is_some(), "missing {key}");
+            assert_eq!(st.get(key).unwrap().tokens, 16);
+        }
+        // llama: ff1 and ff3 share `mlp.in`
+        assert_eq!(st.layers.len(), 4 * m.cfg.n_layer);
+    }
+}

@@ -1,0 +1,219 @@
+//! KV-cached incremental decoding (the serving path).
+
+use crate::util::rng::Rng;
+
+use super::ops::*;
+use super::{Arch, Model};
+use crate::data::embed;
+use crate::tensor::{matmul, Matrix};
+
+/// Per-request KV cache: one K and one V buffer per layer, `[len, d]`
+/// prefix valid. K is stored pre-RoPE; rotation is applied at attention
+/// time from absolute positions (keeps cache layout format-agnostic).
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub k: Vec<Matrix>,
+    pub v: Vec<Matrix>,
+    pub len: usize,
+    max_seq: usize,
+}
+
+impl KvCache {
+    pub fn new(model: &Model) -> Self {
+        let d = model.cfg.d_model;
+        let ms = model.cfg.max_seq;
+        KvCache {
+            k: (0..model.cfg.n_layer).map(|_| Matrix::zeros(ms, d)).collect(),
+            v: (0..model.cfg.n_layer).map(|_| Matrix::zeros(ms, d)).collect(),
+            len: 0,
+            max_seq: ms,
+        }
+    }
+
+    /// Remaining capacity in tokens.
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.len
+    }
+
+    /// Approximate resident bytes (for the coordinator's memory manager).
+    pub fn bytes(&self) -> usize {
+        self.k.iter().map(|m| m.len() * 4).sum::<usize>() * 2
+    }
+}
+
+impl Model {
+    /// Process `tokens` (batch = 1) on top of `cache`, appending to it.
+    /// Returns logits `[tokens.len(), vocab]`.
+    pub fn forward_cached(&self, tokens: &[u8], cache: &mut KvCache) -> Matrix {
+        let n = tokens.len();
+        let past = cache.len;
+        assert!(past + n <= self.cfg.max_seq, "KV cache overflow");
+        let d = self.cfg.d_model;
+        let mut x = embed(tokens, &self.tok_emb);
+        if let Some(pe) = &self.pos_emb {
+            for i in 0..n {
+                let row = x.row_mut(i);
+                for (v, p) in row.iter_mut().zip(pe.row(past + i)) {
+                    *v += *p;
+                }
+            }
+        }
+        for (li, blk) in self.blocks.iter().enumerate() {
+            let mut h = x.clone();
+            self.norm1(blk, &mut h);
+            let mut q = Matrix::zeros(n, d);
+            let mut k_new = Matrix::zeros(n, d);
+            let mut v_new = Matrix::zeros(n, d);
+            blk.q.lin.forward_into(&h, &mut q);
+            blk.k.lin.forward_into(&h, &mut k_new);
+            blk.v.lin.forward_into(&h, &mut v_new);
+            // Append to cache.
+            for i in 0..n {
+                cache.k[li].row_mut(past + i).copy_from_slice(k_new.row(i));
+                cache.v[li].row_mut(past + i).copy_from_slice(v_new.row(i));
+            }
+            let kv_len = past + n;
+            let k_full = Matrix::from_vec(
+                kv_len,
+                d,
+                cache.k[li].data[..kv_len * d].to_vec(),
+            );
+            let v_full = Matrix::from_vec(
+                kv_len,
+                d,
+                cache.v[li].data[..kv_len * d].to_vec(),
+            );
+            let attn = self.attention(&q, &k_full, &v_full, 1, n, past);
+            let mut o_out = Matrix::zeros(n, d);
+            blk.o.lin.forward_into(&attn, &mut o_out);
+            add_inplace(&mut x, &o_out);
+
+            let mut h = x.clone();
+            self.norm2(blk, &mut h);
+            let mut a = Matrix::zeros(n, self.cfg.d_ff);
+            blk.ff1.lin.forward_into(&h, &mut a);
+            match self.cfg.arch {
+                Arch::Gpt => map_inplace(&mut a, gelu),
+                Arch::Llama => {
+                    let ff3 = blk.ff3.as_ref().expect("llama gate");
+                    let mut g = Matrix::zeros(h.rows, self.cfg.d_ff);
+                    ff3.lin.forward_into(&h, &mut g);
+                    map_inplace(&mut a, silu);
+                    mul_inplace(&mut a, &g);
+                }
+            }
+            let mut m_out = Matrix::zeros(n, d);
+            blk.ff2.lin.forward_into(&a, &mut m_out);
+            add_inplace(&mut x, &m_out);
+        }
+        cache.len += n;
+        match self.cfg.arch {
+            Arch::Gpt => layernorm(&mut x, &self.lnf_g, self.lnf_b.as_deref(), self.cfg.eps),
+            Arch::Llama => rmsnorm(&mut x, &self.lnf_g, self.cfg.eps),
+        }
+        matmul(&x, &self.tok_emb)
+    }
+
+    /// Greedy / temperature sampling from the last row of `logits`.
+    pub fn sample(&self, logits: &Matrix, temperature: f32, rng: &mut Rng) -> u8 {
+        let row = logits.row(logits.rows - 1);
+        if temperature <= 0.0 {
+            // Greedy.
+            let mut best = 0;
+            let mut bv = f32::NEG_INFINITY;
+            for (i, v) in row.iter().enumerate() {
+                if *v > bv {
+                    bv = *v;
+                    best = i;
+                }
+            }
+            return best as u8;
+        }
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
+        let probs: Vec<f32> = row.iter().map(|v| ((v - max) / temperature).exp()).collect();
+        let sum: f32 = probs.iter().sum();
+        let mut u = rng.range_f32(0.0, sum);
+        for (i, p) in probs.iter().enumerate() {
+            u -= p;
+            if u <= 0.0 {
+                return i as u8;
+            }
+        }
+        255
+    }
+
+    /// Generate `max_new` tokens after `prompt` (batch = 1).
+    pub fn generate(&self, prompt: &[u8], max_new: usize, temperature: f32, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut cache = KvCache::new(self);
+        let budget = max_new.min(self.cfg.max_seq.saturating_sub(prompt.len()));
+        let mut out = Vec::with_capacity(budget);
+        let mut logits = self.forward_cached(prompt, &mut cache);
+        for _ in 0..budget {
+            let t = self.sample(&logits, temperature, &mut rng);
+            out.push(t);
+            if cache.remaining() == 0 {
+                break;
+            }
+            logits = self.forward_cached(&[t], &mut cache);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::tiny_model;
+    use super::super::Arch;
+    use super::*;
+
+    #[test]
+    fn cached_matches_full_forward() {
+        for arch in [Arch::Gpt, Arch::Llama] {
+            let m = tiny_model(arch, 7);
+            let tokens: Vec<u8> = (5..21).collect();
+            let full = m.forward(&tokens, 1, 16, None);
+            // Incremental: prefill 10, then 6 single steps.
+            let mut cache = KvCache::new(&m);
+            let mut last = m.forward_cached(&tokens[..10], &mut cache);
+            for (i, t) in tokens[10..].iter().enumerate() {
+                // check logits for position 9+i match the full pass
+                let pos = 9 + i;
+                let fr = full.row(pos);
+                let cr = last.row(last.rows - 1);
+                for (a, b) in fr.iter().zip(cr) {
+                    assert!((a - b).abs() < 1e-3, "{arch:?} pos {pos}: {a} vs {b}");
+                }
+                last = m.forward_cached(&[*t], &mut cache);
+            }
+            assert_eq!(cache.len, 16);
+        }
+    }
+
+    #[test]
+    fn greedy_generation_is_deterministic() {
+        let m = tiny_model(Arch::Gpt, 8);
+        let a = m.generate(b"hello ", 10, 0.0, 1);
+        let b = m.generate(b"hello ", 10, 0.0, 2);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 10);
+    }
+
+    #[test]
+    fn generation_respects_max_seq() {
+        let m = tiny_model(Arch::Llama, 9);
+        let prompt = vec![1u8; 60];
+        let out = m.generate(&prompt, 100, 0.5, 3);
+        assert!(out.len() <= m.cfg.max_seq - 60);
+    }
+
+    #[test]
+    fn cache_accounting() {
+        let m = tiny_model(Arch::Gpt, 10);
+        let mut cache = KvCache::new(&m);
+        assert_eq!(cache.remaining(), 64);
+        m.forward_cached(&[1, 2, 3], &mut cache);
+        assert_eq!(cache.len, 3);
+        assert!(cache.bytes() > 0);
+    }
+}

@@ -1,0 +1,503 @@
+//! Transformer inference engine (the evaluation substrate).
+//!
+//! A decoder-only LM in two architectural flavours matching the paper's
+//! evaluation families:
+//!
+//! * `Gpt` — OPT-style: learned positional embeddings, LayerNorm
+//!   (gain+bias), GELU MLP;
+//! * `Llama` — LLaMA-style: RoPE, RMSNorm, SwiGLU MLP.
+//!
+//! Every linear layer is a [`Linear`] that is either plain fp32 weights
+//! or a compressed [`CompressedLayer`] executing the paper's fake-quant /
+//! decomposed two-path GEMM (§5.1). The engine supports full-sequence
+//! forward (perplexity eval + calibration capture) and KV-cached
+//! incremental decode (serving).
+
+pub mod forward;
+pub mod generate;
+pub mod ops;
+
+use anyhow::bail;
+
+use crate::artifacts::WeightBundle;
+use crate::sdq::calib::CalibStats;
+use crate::sdq::config::CompressionConfig;
+use crate::sdq::pipeline::{compress_layer, CompressedLayer, ExecPath, LayerReport};
+use crate::sdq::quantize::fake_quant_dynamic_inplace;
+use crate::tensor::{matmul_into, Matrix};
+use crate::Result;
+
+/// Architecture flavour.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    Gpt,
+    Llama,
+}
+
+impl Arch {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Arch::Gpt => "gpt",
+            Arch::Llama => "llama",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Arch> {
+        match s {
+            "gpt" => Ok(Arch::Gpt),
+            "llama" => Ok(Arch::Llama),
+            _ => anyhow::bail!("unknown arch: {s}"),
+        }
+    }
+}
+
+/// Model hyperparameters (mirrors the JSON the JAX trainer writes).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub arch: Arch,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub eps: f32,
+    pub rope_theta: f32,
+}
+
+impl ModelConfig {
+    /// Parse from the JSON the JAX trainer writes (missing optional
+    /// fields get defaults: vocab 256, eps 1e-5, rope_theta 10000).
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        Ok(ModelConfig {
+            name: j.req_str("name")?.to_string(),
+            arch: Arch::parse(j.req_str("arch")?)?,
+            d_model: j.req_usize("d_model")?,
+            n_layer: j.req_usize("n_layer")?,
+            n_head: j.req_usize("n_head")?,
+            d_ff: j.req_usize("d_ff")?,
+            vocab: j.get("vocab").and_then(|v| v.as_usize()).unwrap_or(256),
+            max_seq: j.req_usize("max_seq")?,
+            eps: j.get("eps").and_then(|v| v.as_f64()).unwrap_or(1e-5) as f32,
+            rope_theta: j.get("rope_theta").and_then(|v| v.as_f64()).unwrap_or(10000.0)
+                as f32,
+        })
+    }
+
+    /// Serialize back to JSON (round-trips with [`Self::from_json`]).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("name", Json::from(self.name.clone())),
+            ("arch", Json::from(self.arch.tag())),
+            ("d_model", Json::from(self.d_model)),
+            ("n_layer", Json::from(self.n_layer)),
+            ("n_head", Json::from(self.n_head)),
+            ("d_ff", Json::from(self.d_ff)),
+            ("vocab", Json::from(self.vocab)),
+            ("max_seq", Json::from(self.max_seq)),
+            ("eps", Json::Num(self.eps as f64)),
+            ("rope_theta", Json::Num(self.rope_theta as f64)),
+        ])
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_head
+    }
+
+    /// Linear-layer shapes `(out, in)` — what the perf model rolls up.
+    pub fn linear_shapes(&self) -> Vec<(usize, usize)> {
+        let d = self.d_model;
+        let f = self.d_ff;
+        let mut shapes = Vec::new();
+        for _ in 0..self.n_layer {
+            shapes.extend([(d, d); 4]); // q, k, v, o
+            shapes.push((f, d)); // ff1
+            shapes.push((d, f)); // ff2
+            if self.arch == Arch::Llama {
+                shapes.push((f, d)); // ff3 (gate)
+            }
+        }
+        shapes
+    }
+
+    /// Total parameters (embeddings + linears + norms).
+    pub fn param_count(&self) -> usize {
+        let lin: usize = self.linear_shapes().iter().map(|(o, i)| o * i).sum();
+        let emb = self.vocab * self.d_model
+            + if self.arch == Arch::Gpt { self.max_seq * self.d_model } else { 0 };
+        let norms = self.n_layer * 2 * self.d_model * if self.arch == Arch::Gpt { 2 } else { 1 }
+            + self.d_model;
+        lin + emb + norms
+    }
+}
+
+/// A linear layer: plain fp32 or compressed.
+#[derive(Clone, Debug)]
+pub enum Linear {
+    Plain(Matrix),
+    Compressed(Box<CompressedLayer>),
+}
+
+impl Linear {
+    /// Output features.
+    pub fn out_features(&self) -> usize {
+        match self {
+            Linear::Plain(w) => w.rows,
+            Linear::Compressed(c) => match &c.path {
+                ExecPath::Dense { w, .. } => w.rows,
+                ExecPath::Decomposed { outlier_w, .. } => outlier_w.rows,
+            },
+        }
+    }
+
+    /// Input features.
+    pub fn in_features(&self) -> usize {
+        match self {
+            Linear::Plain(w) => w.cols,
+            Linear::Compressed(c) => match &c.path {
+                ExecPath::Dense { w, .. } => w.cols,
+                ExecPath::Decomposed { outlier_w, .. } => outlier_w.cols,
+            },
+        }
+    }
+
+    /// `out = x · Wᵀ` with whatever quantization/sparsity this layer
+    /// carries. `out` is fully overwritten.
+    pub fn forward_into(&self, x: &Matrix, out: &mut Matrix) {
+        match self {
+            Linear::Plain(w) => matmul_into(x, w, out),
+            Linear::Compressed(c) => match &c.path {
+                ExecPath::Dense { w, act_fmt, packed } => {
+                    let xq;
+                    let x_eff = match act_fmt {
+                        Some(fmt) => {
+                            let mut t = x.clone();
+                            fake_quant_dynamic_inplace(&mut t, *fmt, c.qvec);
+                            xq = t;
+                            &xq
+                        }
+                        None => x,
+                    };
+                    match packed {
+                        Some(p) => {
+                            out.data.fill(0.0);
+                            p.spmm_into(x_eff, out);
+                        }
+                        None => matmul_into(x_eff, w, out),
+                    }
+                }
+                ExecPath::Decomposed {
+                    outlier_w,
+                    outlier_packed,
+                    outlier_act,
+                    inlier_w,
+                    inlier_packed,
+                    inlier_act,
+                } => {
+                    // Y = Q_o(X)·W_oᵀ + Q_i(X)·W_iᵀ  (Fig. 8)
+                    out.data.fill(0.0);
+                    let mut xo = x.clone();
+                    fake_quant_dynamic_inplace(&mut xo, *outlier_act, c.qvec);
+                    match outlier_packed {
+                        Some(p) => p.spmm_into(&xo, out),
+                        None => {
+                            let mut t = Matrix::zeros(out.rows, out.cols);
+                            matmul_into(&xo, outlier_w, &mut t);
+                            ops::add_inplace(out, &t);
+                        }
+                    }
+                    let mut xi = x.clone();
+                    fake_quant_dynamic_inplace(&mut xi, *inlier_act, c.qvec);
+                    match inlier_packed {
+                        Some(p) => p.spmm_into(&xi, out),
+                        None => {
+                            let mut t = Matrix::zeros(out.rows, out.cols);
+                            matmul_into(&xi, inlier_w, &mut t);
+                            ops::add_inplace(out, &t);
+                        }
+                    }
+                }
+            },
+        }
+    }
+
+    /// Underlying dense weight view (original or dequantized-summed).
+    pub fn dense_view(&self) -> Matrix {
+        match self {
+            Linear::Plain(w) => w.clone(),
+            Linear::Compressed(c) => match &c.path {
+                ExecPath::Dense { w, .. } => w.clone(),
+                ExecPath::Decomposed { outlier_w, inlier_w, .. } => {
+                    let mut s = outlier_w.clone();
+                    ops::add_inplace(&mut s, inlier_w);
+                    s
+                }
+            },
+        }
+    }
+}
+
+/// A named linear with its calibration-stats key (q/k/v share inputs, so
+/// they share one stats entry).
+#[derive(Clone, Debug)]
+pub struct NamedLinear {
+    pub name: String,
+    pub stats_key: String,
+    pub lin: Linear,
+}
+
+/// One transformer block.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Option<Vec<f32>>,
+    pub q: NamedLinear,
+    pub k: NamedLinear,
+    pub v: NamedLinear,
+    pub o: NamedLinear,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Option<Vec<f32>>,
+    pub ff1: NamedLinear,
+    pub ff2: NamedLinear,
+    /// SwiGLU gate (llama arch only).
+    pub ff3: Option<NamedLinear>,
+}
+
+/// The model: embeddings + blocks + final norm (lm head tied to tok_emb).
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub tok_emb: Matrix,
+    pub pos_emb: Option<Matrix>,
+    pub blocks: Vec<Block>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Option<Vec<f32>>,
+}
+
+impl Model {
+    /// Build from a loaded weight bundle (as written by train.py).
+    pub fn from_bundle(mut b: WeightBundle) -> Result<Self> {
+        let cfg = ModelConfig::from_json(&b.config)?;
+        if cfg.d_model % cfg.n_head != 0 {
+            bail!("d_model must divide n_head");
+        }
+        let gpt = cfg.arch == Arch::Gpt;
+        let tok_emb = b.take("tok_emb")?;
+        let pos_emb = if gpt { Some(b.take("pos_emb")?) } else { None };
+        let mut blocks = Vec::with_capacity(cfg.n_layer);
+        for i in 0..cfg.n_layer {
+            let p = |s: &str| format!("block{i}.{s}");
+            let nl = |b: &mut WeightBundle, name: &str, key: &str| -> Result<NamedLinear> {
+                Ok(NamedLinear {
+                    name: p(name),
+                    stats_key: p(key),
+                    lin: Linear::Plain(b.take(&p(name))?),
+                })
+            };
+            blocks.push(Block {
+                ln1_g: b.take_vec(&p("ln1.g"))?,
+                ln1_b: gpt.then(|| b.take_vec(&p("ln1.b"))).transpose()?,
+                q: nl(&mut b, "attn.q", "attn.in")?,
+                k: nl(&mut b, "attn.k", "attn.in")?,
+                v: nl(&mut b, "attn.v", "attn.in")?,
+                o: nl(&mut b, "attn.o", "attn.o.in")?,
+                ln2_g: b.take_vec(&p("ln2.g"))?,
+                ln2_b: gpt.then(|| b.take_vec(&p("ln2.b"))).transpose()?,
+                ff1: nl(&mut b, "mlp.ff1", "mlp.in")?,
+                ff2: nl(&mut b, "mlp.ff2", "mlp.ff2.in")?,
+                ff3: (cfg.arch == Arch::Llama)
+                    .then(|| nl(&mut b, "mlp.ff3", "mlp.in"))
+                    .transpose()?,
+            });
+        }
+        let lnf_g = b.take_vec("ln_f.g")?;
+        let lnf_b = gpt.then(|| b.take_vec("ln_f.b")).transpose()?;
+        Ok(Model { cfg, tok_emb, pos_emb, blocks, lnf_g, lnf_b })
+    }
+
+    /// Iterate all linear layers mutably.
+    pub fn linears_mut(&mut self) -> Vec<&mut NamedLinear> {
+        let mut v = Vec::new();
+        for blk in &mut self.blocks {
+            v.push(&mut blk.q);
+            v.push(&mut blk.k);
+            v.push(&mut blk.v);
+            v.push(&mut blk.o);
+            v.push(&mut blk.ff1);
+            v.push(&mut blk.ff2);
+            if let Some(f3) = &mut blk.ff3 {
+                v.push(f3);
+            }
+        }
+        v
+    }
+
+    /// Iterate all linear layers.
+    pub fn linears(&self) -> Vec<&NamedLinear> {
+        let mut v = Vec::new();
+        for blk in &self.blocks {
+            v.push(&blk.q);
+            v.push(&blk.k);
+            v.push(&blk.v);
+            v.push(&blk.o);
+            v.push(&blk.ff1);
+            v.push(&blk.ff2);
+            if let Some(f3) = &blk.ff3 {
+                v.push(f3);
+            }
+        }
+        v
+    }
+
+    /// Apply a compression configuration to every linear layer, using the
+    /// given calibration statistics. Returns per-layer reports.
+    ///
+    /// Embeddings, norms and the (tied) LM head stay fp16, matching the
+    /// paper's scope (§2.1: only linear-layer GEMMs are compressed).
+    pub fn compress(
+        &mut self,
+        cfg: &CompressionConfig,
+        calib: &CalibStats,
+    ) -> Result<Vec<LayerReport>> {
+        let mut reports = Vec::new();
+        for nl in self.linears_mut() {
+            let w = match &nl.lin {
+                Linear::Plain(w) => w.clone(),
+                Linear::Compressed(_) => bail!("layer {} already compressed", nl.name),
+            };
+            let stats = calib.get(&nl.stats_key);
+            let c = compress_layer(&nl.name, &w, cfg, stats)?;
+            reports.push(c.report.clone());
+            nl.lin = Linear::Compressed(Box::new(c));
+        }
+        Ok(reports)
+    }
+
+    /// Restore all layers to plain weights (from their dense views) —
+    /// used by sweeps that re-compress the same base model.
+    pub fn decompress(&mut self) {
+        for nl in self.linears_mut() {
+            if let Linear::Compressed(_) = nl.lin {
+                let w = nl.lin.dense_view();
+                nl.lin = Linear::Plain(w);
+            }
+        }
+    }
+}
+
+/// Test/bench utilities: small randomly-initialized models.
+pub mod testutil {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Random small model for unit tests.
+    pub fn tiny_model(arch: Arch, seed: u64) -> Model {
+        let cfg = ModelConfig {
+            name: "test-tiny".into(),
+            arch,
+            d_model: 32,
+            n_layer: 2,
+            n_head: 4,
+            d_ff: 64,
+            vocab: 256,
+            max_seq: 64,
+            eps: 1e-5,
+            rope_theta: 10000.0,
+        };
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut m = |r: usize, c: usize| {
+            let s = 1.0 / (c as f32).sqrt();
+            Matrix::from_vec(r, c, (0..r * c).map(|_| rng.range_f32(-s, s)).collect())
+        };
+        let d = cfg.d_model;
+        let f = cfg.d_ff;
+        let gpt = arch == Arch::Gpt;
+        let blocks = (0..cfg.n_layer)
+            .map(|i| {
+                let p = |s: &str| format!("block{i}.{s}");
+                let mut nl = |name: &str, key: &str, r: usize, c: usize| NamedLinear {
+                    name: p(name),
+                    stats_key: p(key),
+                    lin: Linear::Plain(m(r, c)),
+                };
+                Block {
+                    ln1_g: vec![1.0; d],
+                    ln1_b: gpt.then(|| vec![0.0; d]),
+                    q: nl("attn.q", "attn.in", d, d),
+                    k: nl("attn.k", "attn.in", d, d),
+                    v: nl("attn.v", "attn.in", d, d),
+                    o: nl("attn.o", "attn.o.in", d, d),
+                    ln2_g: vec![1.0; d],
+                    ln2_b: gpt.then(|| vec![0.0; d]),
+                    ff1: nl("mlp.ff1", "mlp.in", f, d),
+                    ff2: nl("mlp.ff2", "mlp.ff2.in", d, f),
+                    ff3: (!gpt).then(|| nl("mlp.ff3", "mlp.in", f, d)),
+                }
+            })
+            .collect();
+        Model {
+            tok_emb: m(cfg.vocab, d),
+            pos_emb: gpt.then(|| m(cfg.max_seq, d)),
+            blocks,
+            lnf_g: vec![1.0; d],
+            lnf_b: gpt.then(|| vec![0.0; d]),
+            cfg,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::tiny_model;
+    use super::*;
+
+    #[test]
+    fn config_param_count_matches_shapes() {
+        let m = tiny_model(Arch::Gpt, 1);
+        let lin: usize = m.linears().iter().map(|l| {
+            match &l.lin {
+                Linear::Plain(w) => w.len(),
+                _ => 0,
+            }
+        }).sum();
+        let expect: usize = m.cfg.linear_shapes().iter().map(|(o, i)| o * i).sum();
+        assert_eq!(lin, expect);
+    }
+
+    #[test]
+    fn llama_has_gate_and_no_pos_emb() {
+        let m = tiny_model(Arch::Llama, 2);
+        assert!(m.pos_emb.is_none());
+        assert!(m.blocks[0].ff3.is_some());
+        assert_eq!(m.linears().len(), 2 * 7);
+    }
+
+    #[test]
+    fn compress_then_decompress_roundtrips_dense_view() {
+        let mut m = tiny_model(Arch::Gpt, 3);
+        let orig: Vec<Matrix> = m.linears().iter().map(|l| l.lin.dense_view()).collect();
+        let calib = crate::sdq::calib::CalibStats::new(false);
+        let cfg: CompressionConfig = "Q-VSQuant-WAint8".parse().unwrap();
+        let reports = m.compress(&cfg, &calib).unwrap();
+        assert_eq!(reports.len(), 12);
+        for r in &reports {
+            assert!(r.rel_err < 0.02, "{}: {}", r.name, r.rel_err);
+        }
+        m.decompress();
+        for (l, o) in m.linears().iter().zip(&orig) {
+            let now = l.lin.dense_view();
+            assert!(now.rel_frob_dist(o) < 0.02);
+        }
+    }
+
+    #[test]
+    fn double_compress_fails() {
+        let mut m = tiny_model(Arch::Gpt, 4);
+        let calib = crate::sdq::calib::CalibStats::new(false);
+        let cfg: CompressionConfig = "Q-VSQuant-WAint8".parse().unwrap();
+        m.compress(&cfg, &calib).unwrap();
+        assert!(m.compress(&cfg, &calib).is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! Elementwise / normalization / positional ops for the transformer.
+
+use crate::tensor::Matrix;
+
+/// In-place LayerNorm over the last dim with gain `g` and optional bias.
+pub fn layernorm(x: &mut Matrix, g: &[f32], b: Option<&[f32]>, eps: f32) {
+    assert_eq!(x.cols, g.len());
+    for r in 0..x.rows {
+        let row = x.row_mut(r);
+        let mean: f32 = row.iter().sum::<f32>() / row.len() as f32;
+        let var: f32 =
+            row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / row.len() as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        match b {
+            Some(b) => {
+                for ((v, gi), bi) in row.iter_mut().zip(g).zip(b) {
+                    *v = (*v - mean) * inv * gi + bi;
+                }
+            }
+            None => {
+                for (v, gi) in row.iter_mut().zip(g) {
+                    *v = (*v - mean) * inv * gi;
+                }
+            }
+        }
+    }
+}
+
+/// In-place RMSNorm (LLaMA-style) over the last dim.
+pub fn rmsnorm(x: &mut Matrix, g: &[f32], eps: f32) {
+    assert_eq!(x.cols, g.len());
+    for r in 0..x.rows {
+        let row = x.row_mut(r);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / row.len() as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for (v, gi) in row.iter_mut().zip(g) {
+            *v = *v * inv * gi;
+        }
+    }
+}
+
+/// GELU (tanh approximation, matches JAX `jax.nn.gelu(approximate=True)`).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)) as f32).tanh())
+}
+
+/// SiLU / swish.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// In-place map.
+pub fn map_inplace(x: &mut Matrix, f: impl Fn(f32) -> f32 + Sync) {
+    for v in &mut x.data {
+        *v = f(*v);
+    }
+}
+
+/// In-place elementwise product `a *= b`.
+pub fn mul_inplace(a: &mut Matrix, b: &Matrix) {
+    assert_eq!(a.data.len(), b.data.len());
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x *= *y;
+    }
+}
+
+/// In-place residual add `a += b`.
+pub fn add_inplace(a: &mut Matrix, b: &Matrix) {
+    assert_eq!(a.data.len(), b.data.len());
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += *y;
+    }
+}
+
+/// Row-wise in-place softmax with optional causal masking offset:
+/// row `i` may only attend to columns `0..=i + past` (KV-cache decode
+/// passes `past = cached_len`).
+pub fn causal_softmax(scores: &mut Matrix, past: usize) {
+    for r in 0..scores.rows {
+        let limit = (r + past + 1).min(scores.cols);
+        let row = scores.row_mut(r);
+        for v in row[limit..].iter_mut() {
+            *v = f32::NEG_INFINITY;
+        }
+        let max = row[..limit].iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
+        let mut sum = 0.0;
+        for v in row[..limit].iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum.max(1e-30);
+        for v in row[..limit].iter_mut() {
+            *v *= inv;
+        }
+        for v in row[limit..].iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Rotary position embedding applied in place to a `[S, dh]` per-head
+/// slice whose rows correspond to absolute positions `pos0..pos0+S`.
+pub fn rope_inplace(x: &mut Matrix, pos0: usize, theta_base: f32) {
+    let dh = x.cols;
+    assert_eq!(dh % 2, 0, "head dim must be even for RoPE");
+    for r in 0..x.rows {
+        let pos = (pos0 + r) as f32;
+        let row = x.row_mut(r);
+        for i in 0..dh / 2 {
+            let theta = pos / theta_base.powf(2.0 * i as f32 / dh as f32);
+            let (sin, cos) = theta.sin_cos();
+            let (a, b) = (row[2 * i], row[2 * i + 1]);
+            row[2 * i] = a * cos - b * sin;
+            row[2 * i + 1] = a * sin + b * cos;
+        }
+    }
+}
+
+/// Log-softmax cross-entropy over logits `[n, vocab]` against `targets`;
+/// returns summed negative log-likelihood in nats (divide by `n` then
+/// `exp` for perplexity).
+pub fn cross_entropy_sum(logits: &Matrix, targets: &[u8]) -> f64 {
+    assert_eq!(logits.rows, targets.len());
+    let mut nll = 0.0f64;
+    for (r, t) in targets.iter().enumerate() {
+        let row = logits.row(r);
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
+        let logsum: f64 =
+            (row.iter().map(|v| ((v - max) as f64).exp()).sum::<f64>()).ln() + max as f64;
+        nll += logsum - row[*t as usize] as f64;
+    }
+    nll
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut x = Matrix::from_vec(1, 4, vec![1., 2., 3., 4.]);
+        layernorm(&mut x, &[1.0; 4], None, 1e-5);
+        let mean: f32 = x.data.iter().sum::<f32>() / 4.0;
+        let var: f32 = x.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rms() {
+        let mut x = Matrix::from_vec(1, 4, vec![2., -2., 2., -2.]);
+        rmsnorm(&mut x, &[1.0; 4], 1e-6);
+        for v in &x.data {
+            assert!((v.abs() - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn causal_softmax_masks_future() {
+        let mut s = Matrix::from_vec(2, 3, vec![1., 5., 9., 1., 1., 9.]);
+        causal_softmax(&mut s, 0);
+        // row 0 sees only col 0
+        assert_eq!(s.row(0), &[1.0, 0.0, 0.0]);
+        // row 1 sees cols 0..=1, equal logits → 0.5/0.5
+        assert!((s.at(1, 0) - 0.5).abs() < 1e-6);
+        assert!((s.at(1, 1) - 0.5).abs() < 1e-6);
+        assert_eq!(s.at(1, 2), 0.0);
+    }
+
+    #[test]
+    fn causal_softmax_with_past_sees_cache() {
+        let mut s = Matrix::from_vec(1, 4, vec![1., 1., 1., 1.]);
+        causal_softmax(&mut s, 2); // row 0 sees cols 0..=2
+        assert!((s.at(0, 0) - 1.0 / 3.0).abs() < 1e-6);
+        assert_eq!(s.at(0, 3), 0.0);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_is_position_dependent() {
+        let base = Matrix::from_vec(2, 4, vec![1., 0., 0.5, -0.5, 1., 0., 0.5, -0.5]);
+        let mut x = base.clone();
+        rope_inplace(&mut x, 0, 10000.0);
+        // position 0 row unchanged
+        assert_eq!(x.row(0), base.row(0));
+        // position 1 row rotated but norm preserved
+        assert_ne!(x.row(1), base.row(1));
+        let n0: f32 = base.row(1).iter().map(|v| v * v).sum();
+        let n1: f32 = x.row(1).iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rope_offset_matches_absolute() {
+        // Processing row at offset pos0=5 equals processing position 5.
+        let row = vec![0.3f32, -0.7, 1.1, 0.2];
+        let mut a = Matrix::from_vec(6, 4, (0..24).map(|i| (i % 4) as f32).collect());
+        for i in 0..4 {
+            *a.at_mut(5, i) = row[i];
+        }
+        rope_inplace(&mut a, 0, 10000.0);
+        let mut b = Matrix::from_vec(1, 4, row);
+        rope_inplace(&mut b, 5, 10000.0);
+        for i in 0..4 {
+            assert!((a.at(5, i) - b.at(0, i)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cross_entropy_uniform() {
+        let logits = Matrix::zeros(3, 256);
+        let nll = cross_entropy_sum(&logits, &[0, 17, 255]);
+        let per = nll / 3.0;
+        assert!((per - (256.0f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gelu_silu_sane() {
+        assert!(gelu(0.0).abs() < 1e-9);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-3);
+        assert!(gelu(-10.0).abs() < 1e-3);
+        assert!((silu(10.0) - 10.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,204 @@
+//! Analytical performance model (§3, Fig. 4, Fig. 8).
+//!
+//! The paper evaluates SDQ against a *futuristic flexible N:M sparse
+//! tensor core*: N:M sparsity contributes `M/N×` compute throughput,
+//! n-bit dual-quantized arithmetic contributes `16/n×` versus fp16
+//! (§3.1–3.2). This module implements that model exactly, plus the
+//! §3.3 average-bits-per-weight accounting (values + sparsity index
+//! metadata + quantization scale metadata) that Fig. 4 plots, and a
+//! cycle-level simulated sparse tensor core ([`simtc`]) used to sanity-
+//! check the analytical numbers including the sparsity tax.
+
+pub mod energy;
+pub mod simtc;
+
+
+use crate::sdq::config::{CompressionConfig, Stages};
+use crate::sdq::nm::NmPattern;
+
+/// Bits-per-element breakdown for a (sparsity, quantization) combination
+/// over a reference span of elements — the Fig. 4 bars.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BitsBreakdown {
+    /// Value bits per original element.
+    pub data: f64,
+    /// Sparsity index metadata (Metadata-S) per original element.
+    pub metadata_s: f64,
+    /// Scale-factor metadata (Metadata-Q) per original element.
+    pub metadata_q: f64,
+}
+
+impl BitsBreakdown {
+    /// Total average bits per original weight element.
+    pub fn total(&self) -> f64 {
+        self.data + self.metadata_s + self.metadata_q
+    }
+}
+
+/// §3.3 accounting for one N:M-sparse, `value_bits`-quantized tensor with
+/// `scale_bits`-wide scale factors every `qvec` elements (dense layout).
+///
+/// * data: `N/M · value_bits`
+/// * Metadata-S: `N/M · log2(M)` (ELLPACK index per stored value);
+///   zero for dense patterns.
+/// * Metadata-Q: `scale_bits / qvec`.
+pub fn bits_breakdown(
+    pattern: NmPattern,
+    value_bits: u32,
+    scale_bits: u32,
+    qvec: usize,
+) -> BitsBreakdown {
+    let density = pattern.density();
+    let idx_bits = if pattern.is_dense() { 0 } else { pattern.index_bits() };
+    BitsBreakdown {
+        data: density * value_bits as f64,
+        metadata_s: density * idx_bits as f64,
+        metadata_q: scale_bits as f64 / qvec as f64,
+    }
+}
+
+/// Average bits per original weight element for a full configuration,
+/// including all metadata (§3.3). SDQ stores two tensors (outliers +
+/// inliers), each with its own values, indices and scale factors.
+pub fn bits_per_weight(cfg: &CompressionConfig) -> f64 {
+    let scale_bits = cfg.scale_fmt.bits();
+    match &cfg.stages {
+        Stages::Dense => 16.0,
+        Stages::SparsifyOnly(sp) => {
+            // fp16 values, index metadata, no scale factors.
+            bits_breakdown(sp.pattern, 16, 0, usize::MAX.min(1 << 30)).data
+                + sp.pattern.density() * sp.pattern.index_bits() as f64
+        }
+        Stages::QuantOnly { weight_fmt, .. } => {
+            let dense = NmPattern::new(1, 1);
+            bits_breakdown(dense, weight_fmt.bits(), scale_bits, cfg.qvec).total()
+        }
+        Stages::Sdq { decompose, .. } => {
+            let o = bits_breakdown(
+                decompose.outlier_pattern,
+                decompose.outlier_fmt.bits(),
+                scale_bits,
+                cfg.qvec,
+            );
+            let i = bits_breakdown(
+                decompose.inlier_pattern,
+                decompose.inlier_fmt.bits(),
+                scale_bits,
+                cfg.qvec,
+            );
+            o.total() + i.total()
+        }
+    }
+}
+
+/// MAC-level cost model for one GEMM `[t×k]·[o×k]ᵀ` under a config:
+/// returns (dense-equivalent MACs, executed MAC-slot cost normalized to
+/// fp16 units). `executed / dense` is the inverse effective throughput —
+/// Fig. 8's `1/16 + 3/16 = 1/4` arithmetic.
+pub fn gemm_cost(cfg: &CompressionConfig, t: usize, k: usize, o: usize) -> (f64, f64) {
+    let dense = (t * k * o) as f64;
+    let cost = dense / cfg.effective_throughput();
+    (dense, cost)
+}
+
+/// Model-level roll-up: effective throughput, bits/weight, and weight
+/// memory for a set of layer shapes.
+#[derive(Clone, Debug)]
+pub struct ModelCost {
+    pub config: String,
+    pub effective_throughput: f64,
+    pub bits_per_weight: f64,
+    /// Total weight bytes after compression (incl. metadata).
+    pub weight_bytes: f64,
+    /// Total dense-equivalent MACs per token.
+    pub dense_macs_per_token: f64,
+    /// Executed fp16-equivalent MAC cost per token.
+    pub effective_macs_per_token: f64,
+}
+
+/// Roll up cost for a model described by its linear-layer shapes
+/// (`[(out, in); L]`), one token per layer pass.
+pub fn model_cost(cfg: &CompressionConfig, layer_shapes: &[(usize, usize)]) -> ModelCost {
+    let bpw = bits_per_weight(cfg);
+    let params: f64 = layer_shapes.iter().map(|(o, i)| (o * i) as f64).sum();
+    let dense_macs = params; // one token: MACs == params for linear layers
+    let eff = cfg.effective_throughput();
+    ModelCost {
+        config: cfg.to_string(),
+        effective_throughput: eff,
+        bits_per_weight: bpw,
+        weight_bytes: params * bpw / 8.0,
+        dense_macs_per_token: dense_macs,
+        effective_macs_per_token: dense_macs / eff,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_examples() {
+        // §3.3 worked example: 16-bit→4-bit, scale 16-bit, Q-vector 4:
+        // data 4, metadata-Q 16/4 = 4 ⇒ 8 bits/element.
+        let b = bits_breakdown(NmPattern::new(1, 1), 4, 16, 4);
+        assert_eq!(b.total(), 8.0);
+
+        // 2:4 sparsity: 2 bits/index per stored value ⇒ 4 bits per 4-elem
+        // vector ⇒ 1 bit per original element.
+        let b = bits_breakdown(NmPattern::new(2, 4), 4, 0, 1 << 30);
+        assert!((b.metadata_s - 1.0).abs() < 1e-12);
+
+        // 1:8: 3 bits per stored value ⇒ 3/8 per element.
+        let b = bits_breakdown(NmPattern::new(1, 8), 8, 0, 1 << 30);
+        assert!((b.metadata_s - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig4_crossover_3_4_sparse_beats_dense() {
+        // "a 3:4 sparse, 4-bit quantized model can have a higher
+        //  bit-per-weight than a dense, 4-bit quantized model"
+        // with 32-bit scale factors and Q-vector 16:
+        let sparse = bits_breakdown(NmPattern::new(3, 4), 4, 32, 16).total();
+        let dense = bits_breakdown(NmPattern::new(1, 1), 4, 32, 16).total();
+        assert!(
+            sparse > dense,
+            "3:4+4b ({sparse}) must exceed dense 4b ({dense})"
+        );
+    }
+
+    #[test]
+    fn bits_per_weight_orderings() {
+        let dense: CompressionConfig = "Dense-WA16".parse().unwrap();
+        let q8: CompressionConfig = "Q-VSQuant-WAint8".parse().unwrap();
+        let q4: CompressionConfig = "Q-VSQuant-WAfp4".parse().unwrap();
+        let sdq: CompressionConfig = "SDQ-W7:8-1:8int8-6:8fp4".parse().unwrap();
+        let bd = bits_per_weight(&dense);
+        let b8 = bits_per_weight(&q8);
+        let b4 = bits_per_weight(&q4);
+        let bs = bits_per_weight(&sdq);
+        assert_eq!(bd, 16.0);
+        assert!(b8 < bd && b4 < b8, "{bd} > {b8} > {b4}");
+        // SDQ-7:8 stores 1/8·(8+3) + 6/8·(4+3) + 2·8/16 = 1.375+5.25+1 = 7.625
+        assert!((bs - 7.625).abs() < 1e-9, "sdq bpw {bs}");
+        // SDQ sits between int8 dual quant and fp16
+        assert!(bs < bd && bs > b4);
+    }
+
+    #[test]
+    fn fig8_throughput_decomposition() {
+        let sdq: CompressionConfig = "SDQ-W7:8-1:8int8-6:8fp4".parse().unwrap();
+        let (dense, cost) = gemm_cost(&sdq, 1, 4096, 4096);
+        // 1/8·1/2 + 6/8·1/4 = 1/4 of dense
+        assert!((cost / dense - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_cost_rollup() {
+        let cfg: CompressionConfig = "Q-VSQuant-WAint8".parse().unwrap();
+        let mc = model_cost(&cfg, &[(64, 64), (128, 64)]);
+        assert_eq!(mc.dense_macs_per_token, (64 * 64 + 128 * 64) as f64);
+        assert_eq!(mc.effective_macs_per_token, mc.dense_macs_per_token / 2.0);
+        assert!(mc.weight_bytes < mc.dense_macs_per_token * 2.0);
+    }
+}

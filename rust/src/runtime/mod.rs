@@ -1,0 +1,159 @@
+//! PJRT runtime: load and execute AOT-compiled XLA artifacts.
+//!
+//! The build-time pipeline (`make artifacts`) lowers the L2 JAX model —
+//! including the L1 Pallas decomposed-GEMM kernels (interpret=True) — to
+//! **HLO text** under `artifacts/*.hlo.txt` (text, not serialized proto:
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids). This module compiles those
+//! artifacts once on the PJRT CPU client and executes them from the
+//! serving hot path. Python never runs here.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::tensor::Matrix;
+use crate::Result;
+
+/// A compiled artifact cache over one PJRT client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(PjrtRuntime { client, executables: HashMap::new() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact under `name`.
+    pub fn load_hlo(&mut self, name: &str, path: &Path) -> Result<()> {
+        if !path.exists() {
+            bail!("artifact {} not found (run `make artifacts`)", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Loaded artifact names.
+    pub fn loaded(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute `name` with mixed inputs; returns all tuple outputs as
+    /// flat f32 vectors.
+    pub fn execute(&self, name: &str, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not loaded"))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|i| i.to_literal())
+            .collect::<Result<_>>()
+            .context("building input literals")?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        // jax lowers with return_tuple=True: one device, one tuple output.
+        let mut lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>().map_err(|e| anyhow!("read output: {e:?}"))?);
+        }
+        Ok(out)
+    }
+}
+
+/// A typed input to an artifact execution.
+pub enum Input {
+    F32(Matrix),
+    /// Flat i32 data + shape.
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl Input {
+    /// Token ids as `[batch, seq]` i32.
+    pub fn tokens(tokens: &[u8], batch: usize, seq: usize) -> Input {
+        assert_eq!(tokens.len(), batch * seq);
+        Input::I32(
+            tokens.iter().map(|t| *t as i32).collect(),
+            vec![batch as i64, seq as i64],
+        )
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Input::F32(m) => {
+                let lit = xla::Literal::vec1(&m.data);
+                lit.reshape(&[m.rows as i64, m.cols as i64])
+                    .map_err(|e| anyhow!("reshape f32 literal: {e:?}"))
+            }
+            Input::I32(data, shape) => {
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(shape).map_err(|e| anyhow!("reshape i32 literal: {e:?}"))
+            }
+        }
+    }
+}
+
+/// Standard artifact locations relative to a repo root.
+pub fn artifact_path(root: &Path, name: &str) -> PathBuf {
+    root.join("artifacts").join(format!("{name}.hlo.txt"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT smoke tests live in `tests/runtime_pjrt.rs` (they need the
+    // artifacts built); here we only check pure logic.
+
+    #[test]
+    fn artifact_path_layout() {
+        let p = artifact_path(Path::new("/repo"), "model_fwd");
+        assert_eq!(p, PathBuf::from("/repo/artifacts/model_fwd.hlo.txt"));
+    }
+
+    #[test]
+    fn tokens_input_shape() {
+        let i = Input::tokens(&[1, 2, 3, 4, 5, 6], 2, 3);
+        match i {
+            Input::I32(data, shape) => {
+                assert_eq!(data, vec![1, 2, 3, 4, 5, 6]);
+                assert_eq!(shape, vec![2, 3]);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let mut rt = match PjrtRuntime::cpu() {
+            Ok(rt) => rt,
+            Err(_) => return, // PJRT unavailable in this env: skip
+        };
+        assert!(rt.load_hlo("x", Path::new("/nonexistent/x.hlo.txt")).is_err());
+        assert!(rt.execute("x", &[]).is_err());
+    }
+}

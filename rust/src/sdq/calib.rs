@@ -1,0 +1,148 @@
+//! Calibration pipeline: per-layer input-activation statistics.
+//!
+//! Wanda and the product-based decomposition metric need per-input-column
+//! activation norms ‖X_j‖₂; SparseGPT needs the Gram/Hessian `XᵀX`. Both
+//! are accumulated streamingly while running the model over a calibration
+//! set (§5 Stage 1: "if using calibration data is allowed").
+
+use std::collections::HashMap;
+
+use super::linalg::SquareMat;
+use crate::tensor::Matrix;
+
+/// Streaming statistics for one linear layer's *input* activations.
+#[derive(Clone, Debug)]
+pub struct LayerStats {
+    pub in_features: usize,
+    /// Σ_t x²_{t,j} per input column (f64 accumulation).
+    pub col_sq_sum: Vec<f64>,
+    /// Gram matrix XᵀX (only when Hessian collection is enabled).
+    pub gram: Option<SquareMat>,
+    /// Tokens accumulated.
+    pub tokens: usize,
+}
+
+impl LayerStats {
+    fn new(in_features: usize, with_gram: bool) -> Self {
+        LayerStats {
+            in_features,
+            col_sq_sum: vec![0.0; in_features],
+            gram: with_gram.then(|| SquareMat::zeros(in_features)),
+            tokens: 0,
+        }
+    }
+
+    /// Accumulate a `[tokens, in_features]` activation batch.
+    pub fn update(&mut self, x: &Matrix) {
+        assert_eq!(x.cols, self.in_features);
+        for t in 0..x.rows {
+            let row = x.row(t);
+            for (j, v) in row.iter().enumerate() {
+                self.col_sq_sum[j] += (*v as f64) * (*v as f64);
+            }
+        }
+        if let Some(g) = &mut self.gram {
+            let d = self.in_features;
+            for t in 0..x.rows {
+                let row = x.row(t);
+                // Symmetric rank-1 update; upper triangle only, mirrored.
+                for i in 0..d {
+                    let xi = row[i] as f64;
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let gi = &mut g.data[i * d..(i + 1) * d];
+                    for (j, gj) in gi.iter_mut().enumerate().skip(i) {
+                        *gj += xi * row[j] as f64;
+                    }
+                }
+            }
+        }
+        self.tokens += x.rows;
+    }
+
+    /// ‖X_j‖₂ per column (the Wanda norm).
+    pub fn col_norms(&self) -> Vec<f32> {
+        self.col_sq_sum.iter().map(|s| (s.sqrt()) as f32).collect()
+    }
+
+    /// Finalized symmetric Gram matrix (mirrors the upper triangle down).
+    pub fn finalized_gram(&self) -> Option<SquareMat> {
+        let g = self.gram.as_ref()?;
+        let d = self.in_features;
+        let mut out = g.clone();
+        for i in 0..d {
+            for j in 0..i {
+                out.data[i * d + j] = g.data[j * d + i];
+            }
+        }
+        Some(out)
+    }
+}
+
+/// Calibration statistics for every linear layer of a model, keyed by a
+/// stable layer name (e.g. `block3.attn.q`).
+#[derive(Clone, Debug, Default)]
+pub struct CalibStats {
+    pub layers: HashMap<String, LayerStats>,
+    /// Whether Gram matrices are being collected.
+    pub with_gram: bool,
+}
+
+impl CalibStats {
+    /// New collector; `with_gram` enables Hessian accumulation (needed by
+    /// SparseGPT; costs O(d²) memory per layer).
+    pub fn new(with_gram: bool) -> Self {
+        CalibStats { layers: HashMap::new(), with_gram }
+    }
+
+    /// Record a batch of input activations for `layer`.
+    pub fn observe(&mut self, layer: &str, x: &Matrix) {
+        let with_gram = self.with_gram;
+        self.layers
+            .entry(layer.to_string())
+            .or_insert_with(|| LayerStats::new(x.cols, with_gram))
+            .update(x);
+    }
+
+    /// Look up a layer's stats.
+    pub fn get(&self, layer: &str) -> Option<&LayerStats> {
+        self.layers.get(layer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn col_norms_accumulate_across_batches() {
+        let mut st = CalibStats::new(false);
+        st.observe("l", &Matrix::from_vec(2, 2, vec![3.0, 0.0, 4.0, 1.0]));
+        st.observe("l", &Matrix::from_vec(1, 2, vec![0.0, 2.0]));
+        let n = st.get("l").unwrap().col_norms();
+        assert!((n[0] - 5.0).abs() < 1e-6); // sqrt(9+16)
+        assert!((n[1] - (5.0f32).sqrt()).abs() < 1e-6); // sqrt(1+4)
+        assert_eq!(st.get("l").unwrap().tokens, 3);
+    }
+
+    #[test]
+    fn gram_matches_xtx() {
+        let mut st = CalibStats::new(true);
+        let x = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        st.observe("l", &x);
+        let g = st.get("l").unwrap().finalized_gram().unwrap();
+        // XᵀX = [[35, 44], [44, 56]]
+        assert_eq!(g.at(0, 0), 35.0);
+        assert_eq!(g.at(0, 1), 44.0);
+        assert_eq!(g.at(1, 0), 44.0);
+        assert_eq!(g.at(1, 1), 56.0);
+    }
+
+    #[test]
+    fn no_gram_when_disabled() {
+        let mut st = CalibStats::new(false);
+        st.observe("l", &Matrix::zeros(1, 4));
+        assert!(st.get("l").unwrap().finalized_gram().is_none());
+    }
+}

@@ -1,0 +1,354 @@
+//! Stage 2 — N:M local outlier extraction (§4, §5 Stage 2).
+//!
+//! Splits a (possibly already sparsified) weight matrix into two tensors
+//! that sum back to the original:
+//!
+//! * **outliers** — at most `N_o` per `M`-block, chosen by a metric
+//!   (magnitude / weight·activation product / quantization error), kept
+//!   in a higher-precision format;
+//! * **inliers** — the remaining survivors, guaranteed `N_i:M`
+//!   structured-sparse by construction.
+//!
+//! Both halves are N:M structured, so both run on structured-sparse
+//! tensor cores — the paper's key idea versus unstructured global
+//! outlier extraction (LLM.int8, SpQR, OWQ, SqueezeLLM).
+//!
+//! Also hosts the **Fig. 5 coverage analysis**: how many *global* (whole
+//! tensor) or *semi-local* (per Q-vector) outliers an N:M local
+//! extraction captures, as a function of the outlier ratio.
+
+use anyhow::{anyhow, bail};
+
+use super::calib::LayerStats;
+use super::config::{DecompMetric, DecompOrder, DecomposeCfg};
+use super::nm::NmPattern;
+use crate::formats::NumFormat;
+use crate::tensor::Matrix;
+use crate::Result;
+
+/// Result of the decomposition stage. `outliers + inliers == input`.
+#[derive(Clone, Debug)]
+pub struct Decomposed {
+    pub outliers: Matrix,
+    pub inliers: Matrix,
+}
+
+/// Decompose `w` per `cfg`. `stats` is required for the `Product` metric;
+/// `qvec` feeds the `Error` metric (quantization-error saliency uses the
+/// same Q-vector granularity the quantizer will use).
+pub fn decompose(
+    w: &Matrix,
+    cfg: &DecomposeCfg,
+    stats: Option<&LayerStats>,
+    qvec: usize,
+) -> Result<Decomposed> {
+    let m = cfg.outlier_pattern.m;
+    if cfg.inlier_pattern.m != m {
+        bail!("outlier/inlier S-vector sizes differ");
+    }
+    if w.cols % m != 0 {
+        bail!("in_features {} not a multiple of M={m}", w.cols);
+    }
+    let norms: Option<Vec<f32>> = match cfg.metric {
+        DecompMetric::Product => {
+            let st =
+                stats.ok_or_else(|| anyhow!("product metric requires calibration stats"))?;
+            if st.in_features != w.cols {
+                bail!("calibration width mismatch");
+            }
+            Some(st.col_norms())
+        }
+        _ => None,
+    };
+
+    let mut outliers = Matrix::zeros(w.rows, w.cols);
+    let mut inliers = Matrix::zeros(w.rows, w.cols);
+    let n_out = cfg.outlier_pattern.n;
+
+    let mut scores: Vec<f32> = vec![0.0; w.cols];
+    for r in 0..w.rows {
+        let row = w.row(r);
+        score_row(row, cfg, norms.as_deref(), qvec, &mut scores);
+        let out_row = outliers.row_mut(r);
+        for (b, blk) in row.chunks(m).enumerate() {
+            let base = b * m;
+            // Rank surviving (non-zero) elements by the metric.
+            let mut idx: Vec<usize> =
+                (0..blk.len()).filter(|&i| blk[i] != 0.0).collect();
+            idx.sort_by(|&a, &c| {
+                let (sa, sc) = (scores[base + a], scores[base + c]);
+                match cfg.order {
+                    DecompOrder::Large => {
+                        sc.partial_cmp(&sa).unwrap_or(std::cmp::Ordering::Equal)
+                    }
+                    DecompOrder::Small => {
+                        sa.partial_cmp(&sc).unwrap_or(std::cmp::Ordering::Equal)
+                    }
+                }
+                .then(a.cmp(&c))
+            });
+            for &i in idx.iter().take(n_out) {
+                out_row[base + i] = blk[i];
+            }
+        }
+        let in_row = inliers.row_mut(r);
+        for i in 0..w.cols {
+            if out_row[i] == 0.0 {
+                in_row[i] = row[i];
+            }
+        }
+    }
+
+    debug_assert!(cfg.outlier_pattern.check(&outliers));
+    debug_assert!(cfg.inlier_pattern.check(&inliers));
+    Ok(Decomposed { outliers, inliers })
+}
+
+/// Fill `scores` with the per-element saliency for one row.
+fn score_row(
+    row: &[f32],
+    cfg: &DecomposeCfg,
+    norms: Option<&[f32]>,
+    qvec: usize,
+    scores: &mut [f32],
+) {
+    match cfg.metric {
+        DecompMetric::Magnitude => {
+            for (s, v) in scores.iter_mut().zip(row) {
+                *s = v.abs();
+            }
+        }
+        DecompMetric::Product => {
+            let norms = norms.expect("checked by caller");
+            for ((s, v), n) in scores.iter_mut().zip(row).zip(norms) {
+                *s = v.abs() * n.max(1e-12);
+            }
+        }
+        DecompMetric::Error => {
+            // Saliency = the error this element would suffer if quantized
+            // as an inlier at the Q-vector scale it will actually get.
+            quant_error_scores(row, cfg.inlier_fmt, qvec, scores);
+        }
+    }
+}
+
+/// Per-element quantization error under per-Q-vector max-abs scaling.
+fn quant_error_scores(row: &[f32], fmt: NumFormat, qvec: usize, scores: &mut [f32]) {
+    for (q, blk) in row.chunks(qvec).enumerate() {
+        let max_abs = blk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let scale = if max_abs == 0.0 { 1.0 } else { max_abs / fmt.max_value() };
+        for (i, v) in blk.iter().enumerate() {
+            let deq = fmt.quantize(v / scale) * scale;
+            scores[q * qvec + i] = (v - deq).abs();
+        }
+    }
+}
+
+/// Scope for the Fig. 5 coverage study.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OutlierScope {
+    /// Top-⌊ε·numel⌋ elements of the whole tensor by |·|.
+    Global,
+    /// Top-⌊ε·qvec⌋ elements of each Q-vector by |·| (the outliers a
+    /// per-vector scale factor actually needs to dodge).
+    SemiLocal { qvec: usize },
+}
+
+/// Fraction of ε-ratio outliers (per `scope`) that an `extract` N:M
+/// *local* extraction by magnitude captures (Fig. 5). Returns 1.0 when
+/// the scope yields no outliers at this ratio.
+pub fn coverage(w: &Matrix, extract: NmPattern, outlier_ratio: f64, scope: OutlierScope) -> f64 {
+    assert!((0.0..=1.0).contains(&outlier_ratio));
+    // Positions the local extraction captures: top-N of each M-block.
+    let mut captured = vec![false; w.len()];
+    for r in 0..w.rows {
+        let row = w.row(r);
+        for (b, blk) in row.chunks(extract.m).enumerate() {
+            let base = r * w.cols + b * extract.m;
+            let mut idx: Vec<usize> = (0..blk.len()).collect();
+            idx.sort_by(|&a, &c| {
+                blk[c].abs().partial_cmp(&blk[a].abs()).unwrap().then(a.cmp(&c))
+            });
+            for &i in idx.iter().take(extract.n) {
+                captured[base + i] = true;
+            }
+        }
+    }
+
+    // Target outlier positions per scope.
+    let mut targets: Vec<usize> = Vec::new();
+    match scope {
+        OutlierScope::Global => {
+            let k = (outlier_ratio * w.len() as f64).floor() as usize;
+            if k == 0 {
+                return 1.0;
+            }
+            let mut idx: Vec<usize> = (0..w.len()).collect();
+            idx.sort_by(|&a, &c| {
+                w.data[c].abs().partial_cmp(&w.data[a].abs()).unwrap().then(a.cmp(&c))
+            });
+            targets.extend(&idx[..k]);
+        }
+        OutlierScope::SemiLocal { qvec } => {
+            let k = (outlier_ratio * qvec as f64).floor() as usize;
+            if k == 0 {
+                return 1.0;
+            }
+            for r in 0..w.rows {
+                let row = w.row(r);
+                for (q, blk) in row.chunks(qvec).enumerate() {
+                    let base = r * w.cols + q * qvec;
+                    let mut idx: Vec<usize> = (0..blk.len()).collect();
+                    idx.sort_by(|&a, &c| {
+                        blk[c].abs().partial_cmp(&blk[a].abs()).unwrap().then(a.cmp(&c))
+                    });
+                    targets.extend(idx[..k.min(blk.len())].iter().map(|i| base + i));
+                }
+            }
+        }
+    }
+    let hit = targets.iter().filter(|&&p| captured[p]).count();
+    hit as f64 / targets.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sdq::calib::CalibStats;
+    use crate::sdq::config::{DecompMetric, DecompOrder, DecomposeCfg};
+    use crate::util::rng::Rng;
+
+    fn cfg(metric: DecompMetric, order: DecompOrder) -> DecomposeCfg {
+        DecomposeCfg {
+            outlier_pattern: NmPattern::new(1, 8),
+            outlier_fmt: NumFormat::Int(8),
+            inlier_pattern: NmPattern::new(7, 8),
+            inlier_fmt: NumFormat::Fp4E2M1,
+            metric,
+            order,
+        }
+    }
+
+    #[test]
+    fn partition_sums_back() {
+        let mut rng = Rng::seed_from_u64(3);
+        let w = Matrix::from_vec(4, 32, (0..128).map(|_| rng.range_f32(-2.0, 2.0)).collect());
+        let d = decompose(&w, &cfg(DecompMetric::Magnitude, DecompOrder::Large), None, 16)
+            .unwrap();
+        for i in 0..w.len() {
+            assert_eq!(d.outliers.data[i] + d.inliers.data[i], w.data[i]);
+            // Disjoint support
+            assert!(d.outliers.data[i] == 0.0 || d.inliers.data[i] == 0.0);
+        }
+    }
+
+    #[test]
+    fn magnitude_large_takes_block_max() {
+        let mut row = vec![0.1f32; 8];
+        row[5] = -9.0;
+        let w = Matrix::from_vec(1, 8, row);
+        let d = decompose(&w, &cfg(DecompMetric::Magnitude, DecompOrder::Large), None, 8)
+            .unwrap();
+        assert_eq!(d.outliers.data[5], -9.0);
+        assert_eq!(d.outliers.data.iter().filter(|v| **v != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn small_order_takes_block_min() {
+        let w = Matrix::from_vec(1, 8, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let d =
+            decompose(&w, &cfg(DecompMetric::Magnitude, DecompOrder::Small), None, 8).unwrap();
+        assert_eq!(d.outliers.data[0], 1.0);
+    }
+
+    #[test]
+    fn product_metric_uses_norms() {
+        let w = Matrix::from_vec(1, 8, vec![0.1, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5]);
+        let mut st = CalibStats::new(false);
+        let mut act = vec![1.0f32; 8];
+        act[0] = 1000.0; // column 0 has huge activations
+        st.observe("l", &Matrix::from_vec(1, 8, act));
+        let d = decompose(
+            &w,
+            &cfg(DecompMetric::Product, DecompOrder::Large),
+            st.get("l"),
+            8,
+        )
+        .unwrap();
+        assert_eq!(d.outliers.data[0], 0.1);
+    }
+
+    #[test]
+    fn error_metric_prefers_badly_quantized() {
+        // A lone huge value inflates the Q-vector scale; its own error is
+        // small but it must still rank as the outlier per error scoring?
+        // No: the *error* metric picks the element with the largest
+        // quantization error — typically the big value itself when the
+        // grid is coarse. Verify scoring is finite and selection works.
+        let w = Matrix::from_vec(1, 8, vec![0.3, 0.31, 0.29, 0.3, 12.0, 0.3, 0.28, 0.3]);
+        let d =
+            decompose(&w, &cfg(DecompMetric::Error, DecompOrder::Large), None, 8).unwrap();
+        let nnz_out: Vec<usize> =
+            (0..8).filter(|&i| d.outliers.data[i] != 0.0).collect();
+        assert_eq!(nnz_out.len(), 1);
+    }
+
+    #[test]
+    fn sparsified_input_keeps_inlier_pattern() {
+        // 6:8 input, extract 1:8 → inliers must be 5:8… but the config
+        // says inlier 7:8; pattern check still passes (5 ≤ 7).
+        let mut rng = Rng::seed_from_u64(5);
+        let mut w = Matrix::from_vec(2, 16, (0..32).map(|_| rng.range_f32(-1.0, 1.0)).collect());
+        // zero two per block
+        for r in 0..2 {
+            for b in 0..2 {
+                *w.at_mut(r, b * 8) = 0.0;
+                *w.at_mut(r, b * 8 + 1) = 0.0;
+            }
+        }
+        let d = decompose(&w, &cfg(DecompMetric::Magnitude, DecompOrder::Large), None, 16)
+            .unwrap();
+        assert!(NmPattern::new(5, 8).check(&d.inliers));
+    }
+
+    #[test]
+    fn coverage_full_for_tiny_ratio() {
+        let mut rng = Rng::seed_from_u64(9);
+        let w =
+            Matrix::from_vec(8, 64, (0..512).map(|_| rng.range_f32(-1.0, 1.0)).collect());
+        // ratio so small no outliers exist at all
+        assert_eq!(coverage(&w, NmPattern::new(1, 8), 0.0001, OutlierScope::Global), 1.0);
+    }
+
+    #[test]
+    fn coverage_semilocal_one_per_qvec_is_perfect() {
+        // One outlier per 64-wide Q-vector: the Q-vector max is always the
+        // max of its own 8-block too, so 1:8 captures it.
+        let mut rng = Rng::seed_from_u64(10);
+        let mut w =
+            Matrix::from_vec(4, 128, (0..512).map(|_| rng.range_f32(-0.1, 0.1)).collect());
+        for r in 0..4 {
+            for q in 0..2 {
+                *w.at_mut(r, q * 64 + (r * 13) % 64) = 50.0;
+            }
+        }
+        let c = coverage(&w, NmPattern::new(1, 8), 1.0 / 64.0, OutlierScope::SemiLocal { qvec: 64 });
+        assert_eq!(c, 1.0);
+    }
+
+    #[test]
+    fn coverage_monotone_in_n() {
+        let mut rng = Rng::seed_from_u64(11);
+        let w = Matrix::from_vec(
+            16,
+            256,
+            (0..4096).map(|_| rng.range_f32(-1.0, 1.0).powi(5)).collect(),
+        );
+        let mut prev = 0.0;
+        for n in 1..=4 {
+            let c = coverage(&w, NmPattern::new(n, 8), 0.05, OutlierScope::Global);
+            assert!(c >= prev - 1e-12, "coverage must grow with N");
+            prev = c;
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Small dense linear algebra for SparseGPT/GPTQ.
+//!
+//! SparseGPT needs the upper-triangular Cholesky factor of the *inverse*
+//! Hessian `H⁻¹ = (XᵀX + λI)⁻¹` (Frantar & Alistarh, 2023, Alg. 1). The
+//! layer widths in this reproduction are ≤ a few thousand, so a plain
+//! `O(d³)` implementation in f64 is fast and numerically comfortable.
+
+/// Row-major square matrix in f64 (internal to the pruners).
+#[derive(Clone, Debug)]
+pub struct SquareMat {
+    pub d: usize,
+    pub data: Vec<f64>,
+}
+
+impl SquareMat {
+    pub fn zeros(d: usize) -> Self {
+        SquareMat { d, data: vec![0.0; d * d] }
+    }
+
+    pub fn identity(d: usize) -> Self {
+        let mut m = Self::zeros(d);
+        for i in 0..d {
+            m.data[i * d + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.d + c]
+    }
+
+    #[inline(always)]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.data[r * self.d + c]
+    }
+
+    /// In-place add `v` to the diagonal (Hessian dampening).
+    pub fn add_diag(&mut self, v: f64) {
+        for i in 0..self.d {
+            self.data[i * self.d + i] += v;
+        }
+    }
+
+    /// Mean of the diagonal (used to scale dampening).
+    pub fn diag_mean(&self) -> f64 {
+        if self.d == 0 {
+            return 0.0;
+        }
+        (0..self.d).map(|i| self.at(i, i)).sum::<f64>() / self.d as f64
+    }
+
+    /// Lower-triangular Cholesky factor `L` with `L·Lᵀ = self`.
+    /// Returns `None` when the matrix is not positive definite.
+    pub fn cholesky(&self) -> Option<SquareMat> {
+        let d = self.d;
+        let mut l = SquareMat::zeros(d);
+        for i in 0..d {
+            for j in 0..=i {
+                let mut s = self.at(i, j);
+                for k in 0..j {
+                    s -= l.at(i, k) * l.at(j, k);
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return None;
+                    }
+                    *l.at_mut(i, j) = s.sqrt();
+                } else {
+                    *l.at_mut(i, j) = s / l.at(j, j);
+                }
+            }
+        }
+        Some(l)
+    }
+
+    /// Inverse via Cholesky: `self⁻¹` for SPD matrices.
+    pub fn spd_inverse(&self) -> Option<SquareMat> {
+        let d = self.d;
+        let l = self.cholesky()?;
+        // Invert L (lower triangular) by forward substitution.
+        let mut linv = SquareMat::zeros(d);
+        for c in 0..d {
+            *linv.at_mut(c, c) = 1.0 / l.at(c, c);
+            for r in c + 1..d {
+                let mut s = 0.0;
+                for k in c..r {
+                    s += l.at(r, k) * linv.at(k, c);
+                }
+                *linv.at_mut(r, c) = -s / l.at(r, r);
+            }
+        }
+        // self⁻¹ = Linv^T · Linv
+        let mut inv = SquareMat::zeros(d);
+        for i in 0..d {
+            for j in 0..=i {
+                let mut s = 0.0;
+                // Linv is lower triangular: rows ≥ max(i, j) contribute.
+                for k in i.max(j)..d {
+                    s += linv.at(k, i) * linv.at(k, j);
+                }
+                *inv.at_mut(i, j) = s;
+                *inv.at_mut(j, i) = s;
+            }
+        }
+        Some(inv)
+    }
+
+    /// Upper-triangular Cholesky of this matrix: `Uᵀ·U = self` with `U`
+    /// upper triangular — the decomposition SparseGPT applies to `H⁻¹`.
+    pub fn cholesky_upper(&self) -> Option<SquareMat> {
+        // U = (chol of reversed matrix) trick is unnecessary: SparseGPT
+        // uses `U = chol(H⁻¹, upper=True)`, i.e. the transpose of the
+        // lower factor of the *same* matrix reversed. numpy/torch's
+        // `cholesky(A).T` is NOT the upper factor of A unless A is
+        // reordered; torch.linalg.cholesky(A, upper=True) returns U with
+        // UᵀU = A... actually torch returns U = Lᵀ where L Lᵀ = A, and
+        // indeed (Lᵀ)ᵀ(Lᵀ) = L Lᵀ = A. So U = Lᵀ.
+        let l = self.cholesky()?;
+        let d = self.d;
+        let mut u = SquareMat::zeros(d);
+        for i in 0..d {
+            for j in 0..=i {
+                *u.at_mut(j, i) = l.at(i, j);
+            }
+        }
+        Some(u)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd3() -> SquareMat {
+        // A = Bᵀ·B + I for B = [[1,2,0],[0,1,1],[1,0,1]]
+        let b = [[1.0, 2.0, 0.0], [0.0, 1.0, 1.0], [1.0, 0.0, 1.0]];
+        let mut a = SquareMat::identity(3);
+        for i in 0..3 {
+            for j in 0..3 {
+                for k in 0..3 {
+                    *a.at_mut(i, j) += b[k][i] * b[k][j];
+                }
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd3();
+        let l = a.cholesky().unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += l.at(i, k) * l.at(j, k);
+                }
+                assert!((s - a.at(i, j)).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = spd3();
+        let inv = a.spd_inverse().unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += a.at(i, k) * inv.at(k, j);
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-10, "({i},{j}) = {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn upper_factor_matches_transpose() {
+        let a = spd3();
+        let l = a.cholesky().unwrap();
+        let u = a.cholesky_upper().unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(u.at(i, j), l.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let mut a = SquareMat::identity(2);
+        *a.at_mut(0, 0) = -1.0;
+        assert!(a.cholesky().is_none());
+    }
+}

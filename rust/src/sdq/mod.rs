@@ -1,0 +1,33 @@
+//! The paper's core contribution: **S**parsify → **D**ecompose →
+//! **Q**uantize.
+//!
+//! * [`nm`] — N:M structured-sparsity patterns and masks (§3.1).
+//! * [`config`] — configuration system, including a parser for the
+//!   paper's own naming scheme (`SDQ-W7:8-1:8int8-6:8fp4`).
+//! * [`calib`] — calibration pipeline: per-layer activation statistics
+//!   (column norms for Wanda/product metrics, Gram/Hessian for
+//!   SparseGPT).
+//! * [`sparsify`] — Stage 1: magnitude / Wanda / SparseGPT-OBS pruning
+//!   under an N:M constraint (§5 Stage 1).
+//! * [`decompose`] — Stage 2: N:M *local outlier extraction* splitting a
+//!   weight tensor into structured-sparse outliers + inliers (§4, §5
+//!   Stage 2), plus the Fig. 5 coverage analysis.
+//! * [`quantize`] — Stage 3: VS-Quant per-vector scaled quantization with
+//!   quantized scale factors (§5 Stage 3, Fig. 11).
+//! * [`packed`] — ELLPACK-like packed N:M storage (values + index
+//!   metadata) feeding the bits-per-weight model (§3.3, Fig. 4).
+//! * [`pipeline`] — applies a full [`config::CompressionConfig`] to every
+//!   linear layer of a model.
+//! * [`linalg`] — small dense linear algebra (Cholesky, inversion) used
+//!   by SparseGPT.
+
+pub mod calib;
+pub mod config;
+pub mod decompose;
+pub mod gptq;
+pub mod linalg;
+pub mod nm;
+pub mod packed;
+pub mod pipeline;
+pub mod quantize;
+pub mod sparsify;

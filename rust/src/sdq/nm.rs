@@ -1,0 +1,175 @@
+//! N:M structured-sparsity patterns.
+//!
+//! An `N:M` pattern keeps **at most N non-zero values in every block of M
+//! consecutive values** along the reduction (input-feature) dimension —
+//! the layout structured-sparse tensor cores consume (§3.1). `8:8` (or
+//! any N==M) degenerates to dense.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::tensor::Matrix;
+
+/// An `N:M` structured sparsity pattern.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct NmPattern {
+    /// Maximum non-zeros per block.
+    pub n: usize,
+    /// Block (S-vector) size.
+    pub m: usize,
+}
+
+impl NmPattern {
+    /// Construct, validating `0 < n <= m` and `m` power-of-two-ish sanity.
+    pub fn new(n: usize, m: usize) -> Self {
+        assert!(n >= 1 && n <= m, "invalid N:M pattern {n}:{m}");
+        NmPattern { n, m }
+    }
+
+    /// True when the pattern keeps everything (dense).
+    pub fn is_dense(&self) -> bool {
+        self.n == self.m
+    }
+
+    /// Density `N/M`.
+    pub fn density(&self) -> f64 {
+        self.n as f64 / self.m as f64
+    }
+
+    /// Effective compute-throughput multiplier on N:M sparse hardware:
+    /// `M/N` (§3.1).
+    pub fn throughput_multiplier(&self) -> f64 {
+        self.m as f64 / self.n as f64
+    }
+
+    /// Index-metadata bits per *non-zero* value in an ELLPACK-like packed
+    /// format: `log2(M)` (§3.3).
+    pub fn index_bits(&self) -> u32 {
+        (self.m as f64).log2().ceil() as u32
+    }
+
+    /// Complement pattern `(M-N):M` — what remains after extracting this
+    /// pattern from a dense block (§5 Stage 2).
+    pub fn complement(&self) -> NmPattern {
+        assert!(self.n < self.m, "dense pattern has empty complement");
+        NmPattern::new(self.m - self.n, self.m)
+    }
+
+    /// Check a row satisfies the pattern (at most N non-zeros per block;
+    /// ragged tail blocks are checked pro-rata).
+    pub fn check_row(&self, row: &[f32]) -> bool {
+        if self.is_dense() {
+            return true;
+        }
+        row.chunks(self.m).all(|blk| {
+            let nnz = blk.iter().filter(|v| **v != 0.0).count();
+            nnz <= self.n
+        })
+    }
+
+    /// Check every row of a matrix satisfies the pattern along `cols`.
+    pub fn check(&self, w: &Matrix) -> bool {
+        (0..w.rows).all(|r| self.check_row(w.row(r)))
+    }
+}
+
+impl fmt::Display for NmPattern {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.n, self.m)
+    }
+}
+
+impl FromStr for NmPattern {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let (n, m) = s.split_once(':').ok_or_else(|| format!("bad N:M pattern: {s}"))?;
+        let n: usize = n.trim().parse().map_err(|_| format!("bad N in {s}"))?;
+        let m: usize = m.trim().parse().map_err(|_| format!("bad M in {s}"))?;
+        if n == 0 || n > m {
+            return Err(format!("invalid pattern {n}:{m}"));
+        }
+        Ok(NmPattern { n, m })
+    }
+}
+
+/// Keep the top-`n` entries of `scores` within each `m`-block of a row,
+/// writing `true` into `mask` for kept positions. Ties broken by lower
+/// index (deterministic). `scores` and `mask` must have equal length.
+pub fn topn_block_mask(scores: &[f32], pat: NmPattern, mask: &mut [bool]) {
+    assert_eq!(scores.len(), mask.len());
+    if pat.is_dense() {
+        mask.fill(true);
+        return;
+    }
+    mask.fill(false);
+    let mut idx: Vec<usize> = Vec::with_capacity(pat.m);
+    for (b, blk) in scores.chunks(pat.m).enumerate() {
+        idx.clear();
+        idx.extend(0..blk.len());
+        // Keep top-N by score, stable towards lower index on ties.
+        idx.sort_by(|&a, &c| {
+            blk[c].partial_cmp(&blk[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&c))
+        });
+        // Ragged tail blocks keep a pro-rata count (only full blocks are
+        // guaranteed by construction in the model dims we use).
+        let keep = pat.n.min(blk.len());
+        for &i in idx.iter().take(keep) {
+            mask[b * pat.m + i] = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display() {
+        let p: NmPattern = "2:4".parse().unwrap();
+        assert_eq!(p, NmPattern::new(2, 4));
+        assert_eq!(p.to_string(), "2:4");
+        assert!("0:4".parse::<NmPattern>().is_err());
+        assert!("5:4".parse::<NmPattern>().is_err());
+        assert!("24".parse::<NmPattern>().is_err());
+    }
+
+    #[test]
+    fn throughput_and_bits() {
+        assert_eq!(NmPattern::new(2, 4).throughput_multiplier(), 2.0);
+        assert_eq!(NmPattern::new(1, 8).throughput_multiplier(), 8.0);
+        assert_eq!(NmPattern::new(2, 4).index_bits(), 2);
+        assert_eq!(NmPattern::new(1, 8).index_bits(), 3);
+        assert_eq!(NmPattern::new(6, 8).complement(), NmPattern::new(2, 8));
+    }
+
+    #[test]
+    fn topn_mask_keeps_largest() {
+        let scores = [0.1, 5.0, 3.0, 0.2, 9.0, 0.0, 1.0, 2.0];
+        let mut mask = [false; 8];
+        topn_block_mask(&scores, NmPattern::new(2, 4), &mut mask);
+        assert_eq!(mask, [false, true, true, false, true, false, false, true]);
+    }
+
+    #[test]
+    fn topn_mask_tie_break_deterministic() {
+        let scores = [1.0, 1.0, 1.0, 1.0];
+        let mut mask = [false; 4];
+        topn_block_mask(&scores, NmPattern::new(2, 4), &mut mask);
+        assert_eq!(mask, [true, true, false, false]);
+    }
+
+    #[test]
+    fn dense_pattern_keeps_all() {
+        let scores = [0.0, -1.0, 2.0];
+        let mut mask = [false; 3];
+        topn_block_mask(&scores, NmPattern::new(4, 4), &mut mask[..3]);
+        assert!(mask.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn check_row_detects_violation() {
+        let p = NmPattern::new(2, 4);
+        assert!(p.check_row(&[1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 3.0]));
+        assert!(!p.check_row(&[1.0, 1.0, 2.0, 0.0]));
+    }
+}

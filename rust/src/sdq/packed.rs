@@ -1,0 +1,247 @@
+//! Packed N:M structured-sparse storage (§3.3, Fig. 4).
+//!
+//! ELLPACK-like layout: for every M-block of every row we store exactly
+//! `N` value slots plus `log2(M)`-bit intra-block indices — the format a
+//! structured-sparse tensor core streams. Blocks with fewer than N
+//! survivors are zero-padded (a zero value with index 0 is a no-op MAC).
+//!
+//! The packed form powers
+//! * the **bits-per-weight accounting** (`perfmodel::bits`),
+//! * the **sparse compute path**: [`PackedNm::spmm_into`] skips all
+//!   pruned positions, the CPU analogue of the paper's sparse-TC SpMM.
+
+use anyhow::bail;
+use crate::util::par::par_chunks_mut;
+
+use super::nm::NmPattern;
+use crate::tensor::Matrix;
+use crate::Result;
+
+/// A matrix packed under an N:M pattern along the column (input) dim.
+#[derive(Clone, Debug)]
+pub struct PackedNm {
+    pub pattern: NmPattern,
+    pub rows: usize,
+    pub cols: usize,
+    /// `rows × blocks × N` value slots (zero-padded).
+    pub values: Vec<f32>,
+    /// Intra-block position of each value slot (0..M).
+    pub indices: Vec<u8>,
+    /// Absolute column of each value slot (precomputed for the hot loop).
+    pub abs_cols: Vec<u32>,
+}
+
+impl PackedNm {
+    /// Blocks per row.
+    pub fn blocks(&self) -> usize {
+        self.cols / self.pattern.m
+    }
+
+    /// Value slots per row.
+    pub fn slots_per_row(&self) -> usize {
+        self.blocks() * self.pattern.n
+    }
+
+    /// Stored non-zero count (excludes padding).
+    pub fn nnz(&self) -> usize {
+        self.values.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// Unpack to a dense matrix.
+    pub fn unpack(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        let spr = self.slots_per_row();
+        for r in 0..self.rows {
+            for s in 0..spr {
+                let v = self.values[r * spr + s];
+                if v != 0.0 {
+                    out.data[r * self.cols + self.abs_cols[r * spr + s] as usize] = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Structured-sparse GEMM: `out[t, o] += Σ_s values[o, s] · x[t, col(o, s)]`.
+    ///
+    /// `x: [tokens, cols]`, `out: [tokens, rows]`. This is the CPU
+    /// analogue of the sparse tensor-core SpMM: work scales with N/M.
+    pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
+        assert_eq!(x.cols, self.cols);
+        assert_eq!(out.rows, x.rows);
+        assert_eq!(out.cols, self.rows);
+        let spr = self.slots_per_row();
+        par_chunks_mut(&mut out.data, self.rows, |t, orow| {
+            let xrow = x.row(t);
+            for (o, o_el) in orow.iter_mut().enumerate() {
+                let vals = &self.values[o * spr..(o + 1) * spr];
+                let cols = &self.abs_cols[o * spr..(o + 1) * spr];
+                // 4 independent accumulators hide the FMA latency of the
+                // serial gather chain (§Perf iteration 7).
+                let mut acc = [0.0f32; 4];
+                let q = spr / 4 * 4;
+                for i in (0..q).step_by(4) {
+                    for l in 0..4 {
+                        acc[l] += vals[i + l] * xrow[cols[i + l] as usize];
+                    }
+                }
+                let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+                for i in q..spr {
+                    s += vals[i] * xrow[cols[i] as usize];
+                }
+                *o_el += s;
+            }
+        });
+    }
+
+    /// Storage bits for values at `value_bits` per element, *excluding*
+    /// scale-factor metadata (that is format-level, see `perfmodel`).
+    pub fn value_bits_total(&self, value_bits: u32) -> u64 {
+        (self.values.len() as u64) * value_bits as u64
+    }
+
+    /// Index-metadata bits: `log2(M)` per stored slot.
+    pub fn index_bits_total(&self) -> u64 {
+        (self.indices.len() as u64) * self.pattern.index_bits() as u64
+    }
+}
+
+/// Pack `w` under `pat`. Fails if any block exceeds N non-zeros (i.e. the
+/// matrix does not actually satisfy the pattern).
+pub fn pack(w: &Matrix, pat: NmPattern) -> Result<PackedNm> {
+    if w.cols % pat.m != 0 {
+        bail!("cols {} not a multiple of M={}", w.cols, pat.m);
+    }
+    let blocks = w.cols / pat.m;
+    let spr = blocks * pat.n;
+    let mut values = vec![0.0f32; w.rows * spr];
+    let mut indices = vec![0u8; w.rows * spr];
+    let mut abs_cols = vec![0u32; w.rows * spr];
+    for r in 0..w.rows {
+        let row = w.row(r);
+        for b in 0..blocks {
+            let blk = &row[b * pat.m..(b + 1) * pat.m];
+            let mut slot = 0;
+            for (i, v) in blk.iter().enumerate() {
+                if *v != 0.0 {
+                    if slot >= pat.n {
+                        bail!(
+                            "row {r} block {b} has more than N={} non-zeros; \
+                             matrix violates {pat}",
+                            pat.n
+                        );
+                    }
+                    let s = r * spr + b * pat.n + slot;
+                    values[s] = *v;
+                    indices[s] = i as u8;
+                    abs_cols[s] = (b * pat.m + i) as u32;
+                    slot += 1;
+                }
+            }
+            // Padding slots keep index 0 / abs col = block start: value 0
+            // makes them no-op MACs.
+            for pad in slot..pat.n {
+                let s = r * spr + b * pat.n + pad;
+                abs_cols[s] = (b * pat.m) as u32;
+            }
+        }
+    }
+    Ok(PackedNm { pattern: pat, rows: w.rows, cols: w.cols, values, indices, abs_cols })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sdq::nm::topn_block_mask;
+    use crate::tensor::matmul;
+    use crate::util::rng::Rng;
+
+    fn sparse_matrix(rows: usize, cols: usize, pat: NmPattern, seed: u64) -> Matrix {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut w = Matrix::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.range_f32(-1.0, 1.0)).collect(),
+        );
+        for r in 0..rows {
+            let row = w.row_mut(r);
+            let scores: Vec<f32> = row.iter().map(|v| v.abs()).collect();
+            let mut mask = vec![false; cols];
+            topn_block_mask(&scores, pat, &mut mask);
+            for (v, keep) in row.iter_mut().zip(&mask) {
+                if !keep {
+                    *v = 0.0;
+                }
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let pat = NmPattern::new(2, 8);
+        let w = sparse_matrix(16, 64, pat, 1);
+        let p = pack(&w, pat).unwrap();
+        assert_eq!(p.unpack(), w);
+        assert_eq!(p.values.len(), 16 * (64 / 8) * 2);
+    }
+
+    #[test]
+    fn pack_rejects_violations() {
+        let w = Matrix::from_vec(1, 8, vec![1., 1., 1., 0., 0., 0., 0., 0.]);
+        assert!(pack(&w, NmPattern::new(2, 8)).is_err());
+        assert!(pack(&w, NmPattern::new(3, 8)).is_ok());
+    }
+
+    #[test]
+    fn spmm_matches_dense_gemm() {
+        let pat = NmPattern::new(2, 4);
+        let w = sparse_matrix(24, 32, pat, 2);
+        let p = pack(&w, pat).unwrap();
+        let mut rng = Rng::seed_from_u64(3);
+        let x = Matrix::from_vec(5, 32, (0..160).map(|_| rng.range_f32(-1.0, 1.0)).collect());
+        let dense = matmul(&x, &w);
+        let mut sparse = Matrix::zeros(5, 24);
+        p.spmm_into(&x, &mut sparse);
+        for (a, b) in dense.data.iter().zip(&sparse.data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn spmm_accumulates() {
+        let pat = NmPattern::new(1, 4);
+        let w = sparse_matrix(4, 8, pat, 4);
+        let p = pack(&w, pat).unwrap();
+        let x = Matrix::from_vec(1, 8, vec![1.0; 8]);
+        let mut out = Matrix::zeros(1, 4);
+        p.spmm_into(&x, &mut out);
+        let first = out.clone();
+        p.spmm_into(&x, &mut out);
+        for (a, b) in out.data.iter().zip(&first.data) {
+            assert!((a - 2.0 * b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn metadata_bits_match_formula() {
+        // Fig 4 arithmetic: 2:4 → 2 bits/index × 2 slots per block.
+        let pat = NmPattern::new(2, 4);
+        let w = sparse_matrix(1, 8, pat, 5);
+        let p = pack(&w, pat).unwrap();
+        assert_eq!(p.index_bits_total(), 4 * 2); // 2 blocks × 2 slots × 2 bits
+        assert_eq!(p.value_bits_total(4), 4 * 4);
+    }
+
+    #[test]
+    fn underfull_blocks_pad_with_zero() {
+        let w = Matrix::from_vec(1, 8, vec![0., 0., 0., 0., 5., 0., 0., 0.]);
+        let p = pack(&w, NmPattern::new(2, 4)).unwrap();
+        assert_eq!(p.nnz(), 1);
+        assert_eq!(p.unpack(), w);
+        let x = Matrix::from_vec(1, 8, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let mut out = Matrix::zeros(1, 1);
+        p.spmm_into(&x, &mut out);
+        assert_eq!(out.data[0], 25.0);
+    }
+}

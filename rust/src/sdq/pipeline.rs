@@ -1,0 +1,287 @@
+//! End-to-end compression pipeline (Fig. 7): applies a full
+//! [`CompressionConfig`] to a weight matrix, producing an executable
+//! [`CompressedLayer`] plus a quality/size report.
+//!
+//! The compressed layer carries everything the inference engine needs:
+//! the dequantized weight view(s) for fake-quant evaluation, optional
+//! packed N:M forms for the structured-sparse compute path, and the
+//! activation formats each path expects (§5.1: `A_o` int8 / `A_i` fp4).
+
+
+use super::calib::LayerStats;
+use super::config::{CompressionConfig, QuantAlgo, Stages};
+use super::gptq::gptq_fake_quant;
+use super::decompose::decompose;
+use super::packed::{pack, PackedNm};
+use super::quantize::{fake_quant, VsQuantCfg};
+use super::sparsify::sparsify;
+use crate::formats::NumFormat;
+use crate::tensor::Matrix;
+use crate::Result;
+
+/// Density threshold below which the packed SpMM path beats dense GEMM
+/// on CPU (gather overhead vs. skipped MACs). Tuned in benches/hotpath.
+pub const PACK_DENSITY_THRESHOLD: f64 = 0.3;
+
+/// How a compressed layer executes its GEMM.
+#[derive(Clone, Debug)]
+pub enum ExecPath {
+    /// Single GEMM against one (possibly fake-quantized, possibly
+    /// sparsified) weight view.
+    Dense {
+        w: Matrix,
+        /// Quantize activations to this format before the GEMM
+        /// (dual quantization); `None` keeps activations fp16/fp32.
+        act_fmt: Option<NumFormat>,
+        /// Packed form when the weight is structured-sparse enough.
+        packed: Option<PackedNm>,
+    },
+    /// SDQ two-path execution: `Y = Q_o(X)·W_oᵀ + Q_i(X)·W_iᵀ` (Fig. 8).
+    Decomposed {
+        outlier_w: Matrix,
+        outlier_packed: Option<PackedNm>,
+        outlier_act: NumFormat,
+        inlier_w: Matrix,
+        inlier_packed: Option<PackedNm>,
+        inlier_act: NumFormat,
+    },
+}
+
+/// Per-layer compression report.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub name: String,
+    pub config: String,
+    /// Fraction of non-zero weights kept.
+    pub density: f64,
+    /// Relative Frobenius error of the executable weight view vs. the
+    /// original dense weights.
+    pub rel_err: f64,
+    /// Average bits per (original) weight element incl. metadata (§3.3).
+    pub bits_per_weight: f64,
+    /// Effective compute-throughput multiplier (§3.1–3.2).
+    pub effective_throughput: f64,
+}
+
+/// A compressed, executable linear layer.
+#[derive(Clone, Debug)]
+pub struct CompressedLayer {
+    pub path: ExecPath,
+    pub report: LayerReport,
+    /// Q-vector size used for dynamic activation quantization.
+    pub qvec: usize,
+}
+
+/// Compress one `[out, in]` weight matrix per `cfg`.
+///
+/// `stats` carries calibration data for this layer (required by Wanda /
+/// SparseGPT / the product decomposition metric).
+pub fn compress_layer(
+    name: &str,
+    w: &Matrix,
+    cfg: &CompressionConfig,
+    stats: Option<&LayerStats>,
+) -> Result<CompressedLayer> {
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let fp16 = |m: &Matrix| {
+        let mut out = m.clone();
+        for v in &mut out.data {
+            *v = NumFormat::Fp16.quantize(*v);
+        }
+        out
+    };
+
+    let (path, rel_err, density) = match &cfg.stages {
+        Stages::Dense => {
+            let wq = fp16(w);
+            let rel = wq.rel_frob_dist(w);
+            (ExecPath::Dense { w: wq, act_fmt: None, packed: None }, rel, 1.0)
+        }
+        Stages::SparsifyOnly(sp) => {
+            let mut ws = w.clone();
+            sparsify(&mut ws, *sp, stats)?;
+            let ws = fp16(&ws);
+            let rel = ws.rel_frob_dist(w);
+            let density = 1.0 - ws.zero_fraction();
+            let packed = (sp.pattern.density() <= PACK_DENSITY_THRESHOLD)
+                .then(|| pack(&ws, sp.pattern))
+                .transpose()?;
+            (ExecPath::Dense { w: ws, act_fmt: None, packed }, rel, density)
+        }
+        Stages::QuantOnly { weight_fmt, act_fmt, algo } => {
+            let wq = match algo {
+                QuantAlgo::VsQuant => fake_quant(
+                    w,
+                    VsQuantCfg { fmt: *weight_fmt, qvec: cfg.qvec, scale_fmt: cfg.scale_fmt },
+                ),
+                QuantAlgo::Gptq => {
+                    let gram = stats
+                        .and_then(|st| st.finalized_gram())
+                        .ok_or_else(|| anyhow::anyhow!("GPTQ requires Gram calibration"))?;
+                    let mut wq = w.clone();
+                    gptq_fake_quant(&mut wq, &gram, *weight_fmt, cfg.qvec, cfg.scale_fmt)?;
+                    wq
+                }
+            };
+            let rel = wq.rel_frob_dist(w);
+            (ExecPath::Dense { w: wq, act_fmt: *act_fmt, packed: None }, rel, 1.0)
+        }
+        Stages::Sdq { sparsify: sp, decompose: dc } => {
+            let mut ws = w.clone();
+            if let Some(sp) = sp {
+                sparsify(&mut ws, *sp, stats)?;
+            }
+            let parts = decompose(&ws, dc, stats, cfg.qvec)?;
+            let out_q = fake_quant(
+                &parts.outliers,
+                VsQuantCfg { fmt: dc.outlier_fmt, qvec: cfg.qvec, scale_fmt: cfg.scale_fmt },
+            );
+            let in_q = fake_quant(
+                &parts.inliers,
+                VsQuantCfg { fmt: dc.inlier_fmt, qvec: cfg.qvec, scale_fmt: cfg.scale_fmt },
+            );
+            // Quality accounting against the original dense weights.
+            let mut sum = out_q.clone();
+            for (s, i) in sum.data.iter_mut().zip(&in_q.data) {
+                *s += *i;
+            }
+            let rel = sum.rel_frob_dist(w);
+            let density = 1.0 - ws.zero_fraction();
+            let outlier_packed =
+                (dc.outlier_pattern.density() <= PACK_DENSITY_THRESHOLD)
+                    .then(|| pack(&out_q, dc.outlier_pattern))
+                    .transpose()?;
+            let inlier_packed = (dc.inlier_pattern.density() <= PACK_DENSITY_THRESHOLD)
+                .then(|| pack(&in_q, dc.inlier_pattern))
+                .transpose()?;
+            (
+                ExecPath::Decomposed {
+                    outlier_w: out_q,
+                    outlier_packed,
+                    outlier_act: dc.outlier_fmt,
+                    inlier_w: in_q,
+                    inlier_packed,
+                    inlier_act: dc.inlier_fmt,
+                },
+                rel,
+                density,
+            )
+        }
+    };
+
+    let report = LayerReport {
+        name: name.to_string(),
+        config: cfg.to_string(),
+        density,
+        rel_err,
+        bits_per_weight: crate::perfmodel::bits_per_weight(cfg),
+        effective_throughput: cfg.effective_throughput(),
+    };
+    Ok(CompressedLayer { path, report, qvec: cfg.qvec })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sdq::calib::CalibStats;
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed_from_u64(seed);
+        Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+    }
+
+    fn calib(d: usize, seed: u64) -> CalibStats {
+        let mut st = CalibStats::new(true);
+        st.observe("l", &rand_matrix(128, d, seed));
+        st
+    }
+
+    #[test]
+    fn dense_is_nearly_lossless() {
+        let w = rand_matrix(8, 32, 1);
+        let c = compress_layer("l", &w, &"Dense-WA16".parse().unwrap(), None).unwrap();
+        assert!(c.report.rel_err < 1e-3);
+        assert_eq!(c.report.effective_throughput, 1.0);
+    }
+
+    #[test]
+    fn sdq_full_stack_runs_and_partitions() {
+        let w = rand_matrix(16, 64, 2);
+        let st = calib(64, 3);
+        let cfg: CompressionConfig = "SDQ-W7:8-1:8int8-6:8fp4".parse().unwrap();
+        let c = compress_layer("l", &w, &cfg, st.get("l")).unwrap();
+        match &c.path {
+            ExecPath::Decomposed { outlier_w, inlier_w, outlier_packed, inlier_packed, .. } => {
+                // outlier path is 1:8 → packed; inlier 6:8 → dense
+                assert!(outlier_packed.is_some());
+                assert!(inlier_packed.is_none());
+                // disjoint support
+                for (o, i) in outlier_w.data.iter().zip(&inlier_w.data) {
+                    assert!(*o == 0.0 || *i == 0.0);
+                }
+            }
+            _ => panic!("expected decomposed path"),
+        }
+        assert!((c.report.density - 7.0 / 8.0).abs() < 0.02);
+        assert!(c.report.rel_err < 0.2);
+    }
+
+    #[test]
+    fn error_ordering_across_methods() {
+        // SDQ must beat plain 4-bit dual quant on reconstruction error for
+        // outlier-heavy weights.
+        let mut w = rand_matrix(32, 128, 4);
+        let mut rng = Rng::seed_from_u64(5);
+        for _ in 0..120 {
+            let i = rng.below(w.data.len());
+            w.data[i] = rng.range_f32(4.0, 8.0) * if rng.bool(0.5) { 1.0 } else { -1.0 };
+        }
+        let st = calib(128, 6);
+        let q4 = compress_layer("l", &w, &"Q-VSQuant-WAfp4".parse().unwrap(), None).unwrap();
+        let sdq = compress_layer(
+            "l",
+            &w,
+            &"SDQ-8:8-1:8int8-7:8fp4".parse().unwrap(),
+            st.get("l"),
+        )
+        .unwrap();
+        assert!(
+            sdq.report.rel_err < q4.report.rel_err,
+            "SDQ ({}) must beat fp4 dual-quant ({}) on outlier-heavy weights",
+            sdq.report.rel_err,
+            q4.report.rel_err
+        );
+    }
+
+    #[test]
+    fn sparsify_only_reports_density() {
+        let w = rand_matrix(8, 64, 7);
+        let st = calib(64, 8);
+        let c = compress_layer("l", &w, &"S-Wanda-4:8".parse().unwrap(), st.get("l")).unwrap();
+        assert!((c.report.density - 0.5).abs() < 0.02);
+        match &c.path {
+            // 4:8 density (0.5) is above PACK_DENSITY_THRESHOLD (0.3):
+            // dense GEMM beats the gather SpMM there (hotpath bench).
+            ExecPath::Dense { packed, .. } => assert!(packed.is_none()),
+            _ => panic!(),
+        }
+        // 2:8 is below the threshold -> packed path.
+        let c = compress_layer("l", &w, &"S-Wanda-2:8".parse().unwrap(), st.get("l")).unwrap();
+        match &c.path {
+            ExecPath::Dense { packed, .. } => assert!(packed.is_some()),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn quant_only_sets_act_fmt() {
+        let w = rand_matrix(4, 32, 9);
+        let c =
+            compress_layer("l", &w, &"Q-VSQuant-WAint8".parse().unwrap(), None).unwrap();
+        match &c.path {
+            ExecPath::Dense { act_fmt, .. } => assert_eq!(*act_fmt, Some(NumFormat::Int(8))),
+            _ => panic!(),
+        }
+    }
+}

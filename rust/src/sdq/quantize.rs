@@ -1,0 +1,335 @@
+//! Stage 3 — VS-Quant per-vector scaled quantization (Dai et al., 2021).
+//!
+//! Two-level scaling, exactly as VS-Quant:
+//!
+//! * a **per-Q-vector scale factor** `s_v`, itself quantized to a low-bit
+//!   format (`fp8-e4m3` by default; `ufp8-e6m2` in the Fig. 11 ablation),
+//! * a **per-output-channel fp32 scale** `s_c` that normalizes the
+//!   per-vector ratios into the scale format's sweet spot.
+//!
+//! `quantize_tensor` produces a [`QuantizedTensor`] holding grid codes
+//! plus both scale levels (what packed storage and the Pallas kernel
+//! consume); `fake_quant` is the dequantized view used for model-quality
+//! evaluation (standard PTQ methodology). Activations are quantized
+//! dynamically per token vector with fp32 scales ([`fake_quant_dynamic`]).
+
+use crate::util::par::par_chunks_mut;
+
+use crate::formats::NumFormat;
+use crate::tensor::Matrix;
+
+/// VS-Quant configuration for one tensor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VsQuantCfg {
+    /// Value format (int4/int8/fp4/fp8…).
+    pub fmt: NumFormat,
+    /// Q-vector size: elements sharing one scale factor.
+    pub qvec: usize,
+    /// Scale-factor format (Fig. 11: fp8-e4m3 vs ufp8-e6m2).
+    pub scale_fmt: NumFormat,
+}
+
+/// A VS-Quant-quantized tensor: codes on the format grid plus two-level
+/// scales. `value ≈ code · vec_scale · chan_scale`.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub cfg: VsQuantCfg,
+    pub rows: usize,
+    pub cols: usize,
+    /// Grid codes (stored as f32 for convenience; each is representable
+    /// in `cfg.fmt`).
+    pub codes: Vec<f32>,
+    /// Quantized per-vector scale ratios, `rows × ceil(cols/qvec)`.
+    pub vec_scales: Vec<f32>,
+    /// Per-row (output-channel) fp32 second-level scales.
+    pub chan_scales: Vec<f32>,
+}
+
+impl QuantizedTensor {
+    /// Number of Q-vectors per row.
+    pub fn qvecs_per_row(&self) -> usize {
+        self.cols.div_ceil(self.cfg.qvec)
+    }
+
+    /// Effective scale for (row, qvec index).
+    #[inline]
+    pub fn scale(&self, r: usize, q: usize) -> f32 {
+        self.vec_scales[r * self.qvecs_per_row() + q] * self.chan_scales[r]
+    }
+
+    /// Dequantize back to a dense matrix.
+    pub fn dequantize(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        let qn = self.qvecs_per_row();
+        for r in 0..self.rows {
+            let row = out.row_mut(r);
+            for q in 0..qn {
+                let s = self.vec_scales[r * qn + q] * self.chan_scales[r];
+                let lo = q * self.cfg.qvec;
+                let hi = ((q + 1) * self.cfg.qvec).min(self.cols);
+                for i in lo..hi {
+                    row[i] = self.codes[r * self.cols + i] * s;
+                }
+            }
+        }
+        out
+    }
+
+    /// Mean-squared error against the original.
+    pub fn mse(&self, orig: &Matrix) -> f64 {
+        let deq = self.dequantize();
+        deq.data
+            .iter()
+            .zip(&orig.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / orig.data.len().max(1) as f64
+    }
+}
+
+/// Quantize `w` (`[out, in]`, Q-vectors along the input dimension) with
+/// two-level VS-Quant scaling.
+pub fn quantize_tensor(w: &Matrix, cfg: VsQuantCfg) -> QuantizedTensor {
+    assert!(cfg.qvec > 0);
+    let qn = w.cols.div_ceil(cfg.qvec);
+    let mut codes = vec![0.0f32; w.rows * w.cols];
+    let mut vec_scales = vec![0.0f32; w.rows * qn];
+    let mut chan_scales = vec![1.0f32; w.rows];
+
+    // Row-parallel: compute per-row (scales row, channel scale) into a
+    // side vector, codes directly into their chunk.
+    let side: Vec<(Vec<f32>, f32)> = crate::util::par::par_map(w.rows, |r| {
+        let row = w.row(r);
+        {
+            // Raw (ideal) per-vector scales.
+            let mut raw = vec![0.0f32; qn];
+            for (q, blk) in row.chunks(cfg.qvec).enumerate() {
+                let max_abs = blk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                raw[q] = max_abs / cfg.fmt.max_value();
+            }
+            // Second level: per-channel fp32 scale = max raw scale, so the
+            // quantized ratios live in (0, 1] where the scale format has
+            // full relative precision.
+            let s_c = raw.iter().fold(0.0f32, |m, v| m.max(*v));
+            let chan = if s_c > 0.0 { s_c } else { 1.0 };
+            let mut srow = vec![0.0f32; qn];
+            for (q, r_raw) in raw.iter().enumerate() {
+                let ratio = r_raw / chan;
+                srow[q] = if ratio > 0.0 { cfg.scale_fmt.quantize(ratio) } else { 0.0 };
+            }
+            (srow, chan)
+        }
+    });
+    for (r, (srow, chan)) in side.iter().enumerate() {
+        vec_scales[r * qn..(r + 1) * qn].copy_from_slice(srow);
+        chan_scales[r] = *chan;
+    }
+    par_chunks_mut(&mut codes, w.cols, |r, crow| {
+        let row = w.row(r);
+        for q in 0..qn {
+            let s = vec_scales[r * qn + q] * chan_scales[r];
+            if s == 0.0 {
+                // all-zero vector (or ratio underflow): codes stay 0
+                continue;
+            }
+            let lo = q * cfg.qvec;
+            let hi = ((q + 1) * cfg.qvec).min(w.cols);
+            for i in lo..hi {
+                crow[i] = cfg.fmt.quantize(row[i] / s);
+            }
+        }
+    });
+
+    QuantizedTensor { cfg, rows: w.rows, cols: w.cols, codes, vec_scales, chan_scales }
+}
+
+/// Quantize→dequantize round trip (the PTQ evaluation view).
+pub fn fake_quant(w: &Matrix, cfg: VsQuantCfg) -> Matrix {
+    quantize_tensor(w, cfg).dequantize()
+}
+
+/// Dynamic activation quantization: per-Q-vector fp32 max-abs scales
+/// (computed on the fly by hardware; no stored metadata). Rounds onto
+/// `fmt`'s grid and back.
+pub fn fake_quant_dynamic(x: &Matrix, fmt: NumFormat, qvec: usize) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    par_chunks_mut(&mut out.data, x.cols, |r, orow| {
+        let xrow = x.row(r);
+        for (q, blk) in xrow.chunks(qvec).enumerate() {
+            let max_abs = blk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            if max_abs == 0.0 {
+                continue;
+            }
+            let s = max_abs / fmt.max_value();
+            let lo = q * qvec;
+            for (i, v) in blk.iter().enumerate() {
+                orow[lo + i] = fmt.quantize(v / s) * s;
+            }
+        }
+    });
+    out
+}
+
+/// In-place variant of [`fake_quant_dynamic`] for the eval hot path.
+pub fn fake_quant_dynamic_inplace(x: &mut Matrix, fmt: NumFormat, qvec: usize) {
+    let cols = x.cols;
+    par_chunks_mut(&mut x.data, cols, |_r, xrow| {
+        for blk in xrow.chunks_mut(qvec) {
+            let max_abs = blk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            if max_abs == 0.0 {
+                continue;
+            }
+            let s = max_abs / fmt.max_value();
+            for v in blk.iter_mut() {
+                *v = fmt.quantize(*v / s) * s;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg(fmt: NumFormat) -> VsQuantCfg {
+        VsQuantCfg { fmt, qvec: 16, scale_fmt: NumFormat::Fp8E4M3 }
+    }
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed_from_u64(seed);
+        Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.range_f32(-3.0, 3.0)).collect())
+    }
+
+    #[test]
+    fn int8_roundtrip_is_tight() {
+        let w = rand_matrix(8, 64, 1);
+        let q = quantize_tensor(&w, cfg(NumFormat::Int(8)));
+        let rel = q.dequantize().rel_frob_dist(&w);
+        assert!(rel < 0.01, "int8 rel err {rel}");
+    }
+
+    #[test]
+    fn fp4_roundtrip_is_loose_but_bounded() {
+        let w = rand_matrix(8, 64, 2);
+        let q = quantize_tensor(&w, cfg(NumFormat::Fp4E2M1));
+        let rel = q.dequantize().rel_frob_dist(&w);
+        assert!(rel > 0.01 && rel < 0.25, "fp4 rel err {rel}");
+    }
+
+    #[test]
+    fn error_ordering_matches_bit_width() {
+        // Heavy-tailed weights (the LLM regime): fp4's non-uniform grid
+        // beats int4's uniform grid, and int8 beats both (§6.2's
+        // int4-vs-fp4 ordering).
+        let mut rng = Rng::seed_from_u64(3);
+        let w = Matrix::from_vec(
+            16,
+            128,
+            (0..16 * 128).map(|_| rng.normal().powi(3)).collect(),
+        );
+        let e8 = quantize_tensor(&w, cfg(NumFormat::Int(8))).mse(&w);
+        let e4 = quantize_tensor(&w, cfg(NumFormat::Int(4))).mse(&w);
+        let f4 = quantize_tensor(&w, cfg(NumFormat::Fp4E2M1)).mse(&w);
+        assert!(e8 < f4 && f4 < e4, "int8 {e8} < fp4 {f4} < int4 {e4}");
+    }
+
+    #[test]
+    fn codes_live_on_the_grid() {
+        let w = rand_matrix(4, 32, 4);
+        let q = quantize_tensor(&w, cfg(NumFormat::Fp4E2M1));
+        for c in &q.codes {
+            assert_eq!(NumFormat::Fp4E2M1.quantize(*c), *c, "code {c} off-grid");
+        }
+    }
+
+    #[test]
+    fn scale_ratios_live_on_scale_grid() {
+        let w = rand_matrix(4, 64, 5);
+        let q = quantize_tensor(&w, cfg(NumFormat::Int(8)));
+        for s in &q.vec_scales {
+            assert_eq!(NumFormat::Fp8E4M3.quantize(*s), *s);
+            assert!(*s <= 1.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_tensor_roundtrips_to_zero() {
+        let w = Matrix::zeros(3, 32);
+        let q = quantize_tensor(&w, cfg(NumFormat::Int(4)));
+        assert!(q.dequantize().data.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn outlier_inflates_vector_error_only_locally() {
+        // Outlier in vector 0 must not hurt vector 1's precision.
+        let mut data = vec![0.5f32; 32];
+        data[0] = 100.0;
+        let w = Matrix::from_vec(1, 32, data);
+        let q = quantize_tensor(&w, cfg(NumFormat::Int(4)));
+        let deq = q.dequantize();
+        // vector 1 (cols 16..32) must round-trip tightly
+        for i in 16..32 {
+            assert!((deq.data[i] - 0.5).abs() < 0.06, "col {i}: {}", deq.data[i]);
+        }
+        // vector 0 inliers get crushed by the outlier-driven scale
+        assert!((deq.data[1] - 0.5).abs() > 0.2);
+    }
+
+    #[test]
+    fn e6m2_scales_hurt_more_than_e4m3() {
+        let w = rand_matrix(32, 256, 6);
+        let a = quantize_tensor(
+            &w,
+            VsQuantCfg { fmt: NumFormat::Fp4E2M1, qvec: 16, scale_fmt: NumFormat::Fp8E4M3 },
+        )
+        .mse(&w);
+        let b = quantize_tensor(
+            &w,
+            VsQuantCfg { fmt: NumFormat::Fp4E2M1, qvec: 16, scale_fmt: NumFormat::UFp8E6M2 },
+        )
+        .mse(&w);
+        assert!(b > a, "coarser scale mantissa must increase error: e4m3={a} e6m2={b}");
+    }
+
+    #[test]
+    fn dynamic_activation_quant_preserves_zero_and_sign() {
+        let x = Matrix::from_vec(2, 8, vec![0., 1., -1., 2., -2., 0.5, -0.5, 4., 0., 0., 0., 0., 0., 0., 0., 0.]);
+        let q = fake_quant_dynamic(&x, NumFormat::Int(8), 8);
+        assert_eq!(q.data[0], 0.0);
+        assert!(q.data[1] > 0.0 && q.data[2] < 0.0);
+        // all-zero row untouched
+        for i in 8..16 {
+            assert_eq!(q.data[i], 0.0);
+        }
+        // inplace variant agrees
+        let mut x2 = x.clone();
+        fake_quant_dynamic_inplace(&mut x2, NumFormat::Int(8), 8);
+        assert_eq!(x2.data, q.data);
+    }
+
+    #[test]
+    fn smaller_qvec_reduces_error() {
+        // Finer scale granularity ⇒ lower quantization error (§3.3).
+        let mut rng = Rng::seed_from_u64(7);
+        let w = Matrix::from_vec(
+            16,
+            256,
+            (0..4096).map(|_| rng.range_f32(-1.0, 1.0) * rng.range_f32(0.1, 4.0)).collect(),
+        );
+        let e16 = quantize_tensor(
+            &w,
+            VsQuantCfg { fmt: NumFormat::Int(4), qvec: 16, scale_fmt: NumFormat::Fp8E4M3 },
+        )
+        .mse(&w);
+        let e64 = quantize_tensor(
+            &w,
+            VsQuantCfg { fmt: NumFormat::Int(4), qvec: 64, scale_fmt: NumFormat::Fp8E4M3 },
+        )
+        .mse(&w);
+        assert!(e16 < e64, "qvec16 ({e16}) must beat qvec64 ({e64})");
+    }
+}

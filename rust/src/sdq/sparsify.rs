@@ -1,0 +1,359 @@
+//! Stage 1 — N:M structured sparsification.
+//!
+//! Three pruners, mirroring the paper's §5 Stage 1:
+//!
+//! * **Magnitude** — keep the largest |w| per M-block (Han et al., 2015).
+//! * **Wanda** — keep the largest |w|·‖X_j‖₂ per M-block (Sun et al.,
+//!   2023); needs calibration column norms.
+//! * **SparseGPT** — OBS pruning with Hessian-aware mask selection *and*
+//!   weight update to compensate the pruning error (Frantar & Alistarh,
+//!   2023, Alg. 1); needs the calibration Gram matrix.
+//!
+//! All pruners operate on `[out_features, in_features]` weights with the
+//! N:M constraint along the input (reduction) dimension.
+
+use anyhow::{anyhow, bail};
+
+use crate::util::par::par_chunks_mut;
+
+use super::calib::LayerStats;
+use super::config::{SparsifyCfg, SparsifyMethod};
+use super::nm::{topn_block_mask, NmPattern};
+use crate::tensor::Matrix;
+use crate::Result;
+
+/// SparseGPT lazy-update block size (columns). Must be a multiple of
+/// every supported M; 128 covers M ∈ {4, 8, 16}.
+const SPARSEGPT_BLOCK: usize = 128;
+
+/// Relative Hessian dampening (SparseGPT's `percdamp`).
+const PERC_DAMP: f64 = 0.01;
+
+/// Prune `w` in place to `cfg.pattern`.
+///
+/// `stats` supplies calibration data: column norms for Wanda, Gram matrix
+/// for SparseGPT. Magnitude needs none.
+pub fn sparsify(w: &mut Matrix, cfg: SparsifyCfg, stats: Option<&LayerStats>) -> Result<()> {
+    if cfg.pattern.is_dense() {
+        return Ok(());
+    }
+    match cfg.method {
+        SparsifyMethod::Magnitude => {
+            mask_prune(w, cfg.pattern, |row, _| row.iter().map(|v| v.abs()).collect());
+            Ok(())
+        }
+        SparsifyMethod::Wanda => {
+            let st = stats.ok_or_else(|| anyhow!("Wanda requires calibration stats"))?;
+            if st.in_features != w.cols {
+                bail!("calibration width {} != weight width {}", st.in_features, w.cols);
+            }
+            let norms = st.col_norms();
+            mask_prune(w, cfg.pattern, |row, _| {
+                row.iter().zip(&norms).map(|(v, n)| v.abs() * n.max(1e-12)).collect()
+            });
+            Ok(())
+        }
+        SparsifyMethod::SparseGpt => {
+            let st = stats.ok_or_else(|| anyhow!("SparseGPT requires calibration stats"))?;
+            let gram = st
+                .finalized_gram()
+                .ok_or_else(|| anyhow!("SparseGPT requires Gram collection (with_gram)"))?;
+            sparsegpt_prune(w, &gram, cfg.pattern)
+        }
+    }
+}
+
+/// Generic mask-based pruning: compute per-row scores, keep block-top-N.
+fn mask_prune<F>(w: &mut Matrix, pat: NmPattern, score_fn: F)
+where
+    F: Fn(&[f32], usize) -> Vec<f32> + Sync,
+{
+    let cols = w.cols;
+    par_chunks_mut(&mut w.data, cols, |r, row| {
+        let scores = score_fn(row, r);
+        let mut mask = vec![false; cols];
+        topn_block_mask(&scores, pat, &mut mask);
+        for (v, keep) in row.iter_mut().zip(&mask) {
+            if !keep {
+                *v = 0.0;
+            }
+        }
+    });
+}
+
+/// SparseGPT: blocked OBS pruning with error compensation.
+///
+/// Follows Algorithm 1 of the paper: `U = chol(H⁻¹)` (upper), process
+/// columns left→right in lazy-update blocks; inside a block, choose the
+/// N:M mask per M-column group by the saliency `w²/U_cc²`, zero the
+/// pruned weights, and fold the error `w/U_cc` into all not-yet-processed
+/// columns.
+fn sparsegpt_prune(w: &mut Matrix, gram: &super::linalg::SquareMat, pat: NmPattern) -> Result<()> {
+    let d = w.cols;
+    let rows = w.rows;
+    assert_eq!(gram.d, d);
+    if d % pat.m != 0 {
+        bail!("in_features {d} not a multiple of M={}", pat.m);
+    }
+    let mut h = gram.clone();
+
+    // Dead input columns: never activated ⇒ weight is free to prune.
+    for i in 0..d {
+        if h.at(i, i) == 0.0 {
+            *h.at_mut(i, i) = 1.0;
+            for r in 0..rows {
+                *w.at_mut(r, i) = 0.0;
+            }
+        }
+    }
+    h.add_diag(PERC_DAMP * h.diag_mean());
+    let hinv = h.spd_inverse().ok_or_else(|| anyhow!("Hessian not SPD after dampening"))?;
+    let u = hinv.cholesky_upper().ok_or_else(|| anyhow!("H⁻¹ not SPD"))?;
+
+    let bs = SPARSEGPT_BLOCK.max(pat.m);
+    debug_assert_eq!(bs % pat.m, 0);
+
+    // Work row-parallel: each output row prunes independently given the
+    // shared U factor (the per-row masks differ, the updates are row-local).
+    par_chunks_mut(&mut w.data, d, |_r, row| {
+        let mut err = vec![0.0f64; bs];
+        let mut i1 = 0;
+        while i1 < d {
+            let i2 = (i1 + bs).min(d);
+            let count = i2 - i1;
+            err[..count].fill(0.0);
+            let mut mask = vec![true; count];
+            for j in i1..i2 {
+                let jj = j - i1;
+                if jj % pat.m == 0 {
+                    // Select the N:M mask for columns j..j+M by saliency.
+                    let m_end = (jj + pat.m).min(count);
+                    let mut scores: Vec<(f64, usize)> = (jj..m_end)
+                        .map(|c| {
+                            let ucc = u.at(i1 + c, i1 + c);
+                            let wv = row[i1 + c] as f64;
+                            (wv * wv / (ucc * ucc), c)
+                        })
+                        .collect();
+                    // Prune the smallest (M-N) saliencies.
+                    scores.sort_by(|a, b| {
+                        a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal)
+                    });
+                    let prune_count = (m_end - jj).saturating_sub(pat.n);
+                    for c in jj..m_end {
+                        mask[c] = true;
+                    }
+                    for &(_, c) in scores.iter().take(prune_count) {
+                        mask[c] = false;
+                    }
+                }
+                let e = if mask[jj] {
+                    0.0
+                } else {
+                    let ujj = u.at(j, j);
+                    let e = row[j] as f64 / ujj;
+                    row[j] = 0.0;
+                    e
+                };
+                err[jj] = e;
+                if e != 0.0 {
+                    // Fold the pruning error into the rest of this block.
+                    for k in j + 1..i2 {
+                        row[k] -= (e * u.at(j, k)) as f32;
+                    }
+                }
+            }
+            // Lazy update of all later columns: W[r, i2..] -= err · U[i1..i2, i2..]
+            for (jj, &e) in err[..count].iter().enumerate() {
+                if e == 0.0 {
+                    continue;
+                }
+                let j = i1 + jj;
+                for k in i2..d {
+                    row[k] -= (e * u.at(j, k)) as f32;
+                }
+            }
+            i1 = i2;
+        }
+    });
+    Ok(())
+}
+
+/// Pruning-quality diagnostic: relative output error `‖(W−Ŵ)X‖/‖WX‖`
+/// proxied through the Gram matrix: `tr(ΔW H ΔWᵀ) / tr(W H Wᵀ)`.
+pub fn output_error_proxy(
+    orig: &Matrix,
+    pruned: &Matrix,
+    gram: &super::linalg::SquareMat,
+) -> f64 {
+    assert_eq!(orig.rows, pruned.rows);
+    assert_eq!(orig.cols, pruned.cols);
+    let d = orig.cols;
+    let quad = |w: &Matrix, dw: bool| -> f64 {
+        let mut acc = 0.0;
+        for r in 0..w.rows {
+            let row_a = orig.row(r);
+            let row_b = pruned.row(r);
+            // v = ΔW row or W row
+            let v: Vec<f64> = (0..d)
+                .map(|i| {
+                    if dw {
+                        (row_a[i] - row_b[i]) as f64
+                    } else {
+                        row_a[i] as f64
+                    }
+                })
+                .collect();
+            for i in 0..d {
+                if v[i] == 0.0 {
+                    continue;
+                }
+                let gi = &gram.data[i * d..(i + 1) * d];
+                let mut s = 0.0;
+                for j in 0..d {
+                    s += gi[j] * v[j];
+                }
+                acc += v[i] * s;
+            }
+        }
+        acc
+    };
+    let num = quad(orig, true);
+    let den = quad(orig, false).max(1e-30);
+    (num / den).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sdq::calib::CalibStats;
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed_from_u64(seed);
+        Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+    }
+
+    fn calib(rows: usize, d: usize, seed: u64, gram: bool) -> CalibStats {
+        let mut st = CalibStats::new(gram);
+        st.observe("l", &rand_matrix(rows, d, seed));
+        st
+    }
+
+    #[test]
+    fn magnitude_respects_pattern() {
+        let mut w = rand_matrix(8, 32, 1);
+        let pat = NmPattern::new(2, 8);
+        sparsify(
+            &mut w,
+            SparsifyCfg { method: SparsifyMethod::Magnitude, pattern: pat },
+            None,
+        )
+        .unwrap();
+        assert!(pat.check(&w));
+        // keeps exactly N per block here (random weights, no zeros)
+        assert!((w.zero_fraction() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn magnitude_keeps_largest() {
+        let mut w = Matrix::from_vec(1, 4, vec![0.1, -5.0, 0.2, 3.0]);
+        sparsify(
+            &mut w,
+            SparsifyCfg { method: SparsifyMethod::Magnitude, pattern: NmPattern::new(2, 4) },
+            None,
+        )
+        .unwrap();
+        assert_eq!(w.data, vec![0.0, -5.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn wanda_uses_activation_norms() {
+        // Column 0 weight is small but its activation norm is huge.
+        let mut w = Matrix::from_vec(1, 4, vec![0.1, 0.5, 0.4, 0.3]);
+        let mut st = CalibStats::new(false);
+        st.observe("l", &Matrix::from_vec(1, 4, vec![100.0, 0.1, 0.1, 0.1]));
+        let cfg = SparsifyCfg { method: SparsifyMethod::Wanda, pattern: NmPattern::new(1, 4) };
+        sparsify(&mut w, cfg, st.get("l")).unwrap();
+        assert_eq!(w.data, vec![0.1, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn wanda_requires_stats() {
+        let mut w = rand_matrix(2, 8, 3);
+        let cfg = SparsifyCfg { method: SparsifyMethod::Wanda, pattern: NmPattern::new(4, 8) };
+        assert!(sparsify(&mut w, cfg, None).is_err());
+    }
+
+    #[test]
+    fn sparsegpt_respects_pattern_and_beats_magnitude() {
+        let d = 64;
+        let mut rng = Rng::seed_from_u64(7);
+        // Correlated activations make the Hessian non-trivial.
+        let mut x = Matrix::zeros(256, d);
+        for t in 0..x.rows {
+            let base: f32 = rng.range_f32(-1.0, 1.0);
+            for j in 0..d {
+                *x.at_mut(t, j) = base * 0.5 + rng.range_f32(-1.0, 1.0);
+            }
+        }
+        let mut st = CalibStats::new(true);
+        st.observe("l", &x);
+        let orig = rand_matrix(16, d, 8);
+        let pat = NmPattern::new(4, 8);
+
+        let mut w_sgpt = orig.clone();
+        sparsify(
+            &mut w_sgpt,
+            SparsifyCfg { method: SparsifyMethod::SparseGpt, pattern: pat },
+            st.get("l"),
+        )
+        .unwrap();
+        assert!(pat.check(&w_sgpt), "sparsegpt output must satisfy N:M");
+
+        let mut w_mag = orig.clone();
+        sparsify(
+            &mut w_mag,
+            SparsifyCfg { method: SparsifyMethod::Magnitude, pattern: pat },
+            None,
+        )
+        .unwrap();
+
+        let gram = st.get("l").unwrap().finalized_gram().unwrap();
+        let e_sgpt = output_error_proxy(&orig, &w_sgpt, &gram);
+        let e_mag = output_error_proxy(&orig, &w_mag, &gram);
+        assert!(
+            e_sgpt < e_mag,
+            "SparseGPT ({e_sgpt:.4}) should beat magnitude ({e_mag:.4}) on output error"
+        );
+    }
+
+    #[test]
+    fn sparsegpt_zero_fraction() {
+        let d = 32;
+        let mut w = rand_matrix(4, d, 11);
+        let st = calib(64, d, 12, true);
+        sparsify(
+            &mut w,
+            SparsifyCfg { method: SparsifyMethod::SparseGpt, pattern: NmPattern::new(2, 8) },
+            st.get("l"),
+        )
+        .unwrap();
+        // At least 6/8 of entries pruned (updates never resurrect zeros in
+        // pruned positions within a processed block).
+        assert!(w.zero_fraction() >= 0.75 - 1e-9);
+    }
+
+    #[test]
+    fn dense_pattern_is_noop() {
+        let orig = rand_matrix(4, 16, 5);
+        let mut w = orig.clone();
+        sparsify(
+            &mut w,
+            SparsifyCfg { method: SparsifyMethod::Magnitude, pattern: NmPattern::new(8, 8) },
+            None,
+        )
+        .unwrap();
+        assert_eq!(w, orig);
+    }
+}

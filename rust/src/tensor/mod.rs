@@ -1,0 +1,160 @@
+//! Dense tensor substrate.
+//!
+//! A deliberately small, fast, row-major `f32` matrix type plus the GEMM
+//! kernels the rest of the crate builds on. Everything in the eval and
+//! compression paths ultimately reduces to [`Matrix`] operations, so this
+//! module is the CPU hot path (see `benches/hotpath.rs`).
+
+mod matmul;
+
+pub use matmul::{matmul, matmul_bias_into, matmul_into};
+
+
+/// Row-major 2-D `f32` matrix: `rows x cols`, index `[r * cols + c]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from an existing buffer; `data.len()` must equal `rows*cols`.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "matrix shape/buffer mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Element access (debug-checked).
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Mutable element access (debug-checked).
+    #[inline(always)]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Immutable view of row `r`.
+    #[inline(always)]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable view of row `r`.
+    #[inline(always)]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the matrix holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Fraction of exactly-zero entries (sparsity diagnostics).
+    pub fn zero_fraction(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let z = self.data.iter().filter(|v| **v == 0.0).count();
+        z as f64 / self.data.len() as f64
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute element.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    /// Relative Frobenius distance `||a-b||_F / ||a||_F` (0 when both empty).
+    pub fn rel_frob_dist(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let num: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt();
+        let den = self.frob_norm();
+        if den == 0.0 {
+            num
+        } else {
+            num / den
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shape_and_access() {
+        let mut m = Matrix::zeros(3, 4);
+        assert_eq!(m.len(), 12);
+        *m.at_mut(2, 3) = 5.0;
+        assert_eq!(m.at(2, 3), 5.0);
+        assert_eq!(m.row(2), &[0.0, 0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.at(0, 1), 4.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn zero_fraction_counts() {
+        let m = Matrix::from_vec(1, 4, vec![0., 1., 0., 2.]);
+        assert_eq!(m.zero_fraction(), 0.5);
+    }
+
+    #[test]
+    fn rel_frob_dist_zero_for_equal() {
+        let m = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        assert_eq!(m.rel_frob_dist(&m), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        let _ = Matrix::from_vec(2, 2, vec![1.0; 5]);
+    }
+}

@@ -1,0 +1,172 @@
+//! Micro/macro benchmark harness substrate (no external `criterion`).
+//!
+//! Benches under `benches/` are `harness = false` binaries that call
+//! [`bench`] / [`Table`] to produce warm-up-adjusted medians with spread,
+//! and aligned tables matching the paper's rows.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+
+    /// Throughput given work items per iteration.
+    pub fn per_second(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: warm up, then sample until `min_runtime_ms` or
+/// `max_iters` is reached. Returns the median (robust to scheduler noise).
+pub fn bench<F: FnMut()>(name: &str, min_runtime_ms: u64, mut f: F) -> Measurement {
+    // Warm-up: one untimed call.
+    f();
+    let budget = std::time::Duration::from_millis(min_runtime_ms);
+    let start = Instant::now();
+    let mut samples: Vec<f64> = Vec::new();
+    while start.elapsed() < budget || samples.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    Measurement {
+        name: name.to_string(),
+        median_ns: median,
+        min_ns: samples[0],
+        max_ns: *samples.last().unwrap(),
+        iters: samples.len(),
+    }
+}
+
+/// Print a measurement in a criterion-like line.
+pub fn report(m: &Measurement) {
+    println!(
+        "{:<44} {:>12.3} ms  (min {:.3}, max {:.3}, n={})",
+        m.name,
+        m.median_ms(),
+        m.min_ns / 1e6,
+        m.max_ns / 1e6,
+        m.iters
+    );
+}
+
+/// Aligned text table builder for paper-style outputs.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!("{:<width$}  ", c, width = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Also emit as JSON (machine-readable record for EXPERIMENTS.md).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::Obj(
+                    self.headers
+                        .iter()
+                        .zip(r)
+                        .map(|(h, c)| (h.clone(), Json::Str(c.clone())))
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::obj(vec![("title", Json::from(self.title.clone())), ("rows", Json::Arr(rows))])
+    }
+
+    /// Write the JSON record under `target/bench-results/`.
+    pub fn save_json(&self, file_stem: &str) {
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let _ = std::fs::write(dir.join(format!("{file_stem}.json")), self.to_json().to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("spin", 5, || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(i);
+            }
+            std::hint::black_box(s);
+        });
+        assert!(m.median_ns > 0.0);
+        assert!(m.iters >= 3);
+        assert!(m.min_ns <= m.median_ns && m.median_ns <= m.max_ns);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new("demo", &["config", "ppl"]);
+        t.row(vec!["Dense-WA16".into(), "10.86".into()]);
+        t.print();
+        let j = t.to_json();
+        assert!(j.to_string().contains("Dense-WA16"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,121 @@
+//! Flag-parsing substrate for the `sdq` binary (no external `clap`).
+//!
+//! Supports `command --flag value --switch positional` style invocations
+//! with typed accessors, defaults, and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, flags, and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn parse() -> Self {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit iterator (testable).
+    pub fn from_iter<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut it = iter.into_iter().peekable();
+        let mut args = Args::default();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.command = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--flag=value`, `--flag value`, or boolean `--switch`
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::from_iter(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = parse("serve pos1 --model artifacts/m.bin --batch 8 --verbose");
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.get("model"), Some("artifacts/m.bin"));
+        assert_eq!(a.get_usize("batch", 1).unwrap(), 8);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_style() {
+        let a = parse("eval --config=SDQ-W7:8-1:8int8-6:8fp4");
+        assert_eq!(a.get("config"), Some("SDQ-W7:8-1:8int8-6:8fp4"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_f64("missing", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_switch() {
+        let a = parse("cmd --fast --out x.json");
+        assert!(a.has("fast"));
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+}

@@ -1,0 +1,18 @@
+//! In-tree substrates replacing external crates (this workspace builds
+//! fully offline):
+//!
+//! * [`rng`] — deterministic xoshiro256** PRNG (replaces `rand`).
+//! * [`par`] — scoped-thread data parallelism (replaces `rayon`).
+//! * [`json`] — JSON parse/serialize (replaces `serde_json`).
+//! * [`bench`] — benchmark harness + paper-style tables (replaces
+//!   `criterion`).
+//! * [`prop`] — tiny property-based testing driver (replaces `proptest`).
+//! * [`cli`] — flag parsing for the `sdq` binary (replaces `clap`).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod prop;
+pub mod rng;
+pub mod testdir;

@@ -1,0 +1,125 @@
+//! Scoped-thread data parallelism substrate (no external `rayon`).
+//!
+//! The crate's hot loops are all "independent work per output chunk", so
+//! a simple fork-join over `std::thread::scope` covers them. Work is
+//! split into one contiguous span per worker; the closure receives the
+//! chunk index so callers can recover absolute positions.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads (cached).
+pub fn num_threads() -> usize {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let n = N.load(Ordering::Relaxed);
+    if n != 0 {
+        return n;
+    }
+    let n = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
+    N.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Parallel iteration over mutable equal-size chunks of `data`:
+/// `f(chunk_index, chunk)` for each `chunk_size`-long chunk (last chunk
+/// may be short). Chunks are distributed contiguously over workers.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk_size: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_size > 0);
+    let n_chunks = data.len().div_ceil(chunk_size);
+    let workers = num_threads().min(n_chunks.max(1));
+    if workers <= 1 || n_chunks <= 1 {
+        for (i, c) in data.chunks_mut(chunk_size).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    // Split the chunk range evenly across workers.
+    let per = n_chunks.div_ceil(workers);
+    let mut spans: Vec<(usize, &mut [T])> = Vec::with_capacity(workers);
+    let mut rest = data;
+    let mut chunk0 = 0usize;
+    while !rest.is_empty() {
+        let take = (per * chunk_size).min(rest.len());
+        let (head, tail) = rest.split_at_mut(take);
+        spans.push((chunk0, head));
+        chunk0 += per;
+        rest = tail;
+    }
+    std::thread::scope(|s| {
+        for (c0, span) in spans {
+            let f = &f;
+            s.spawn(move || {
+                for (i, c) in span.chunks_mut(chunk_size).enumerate() {
+                    f(c0 + i, c);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over an index range: returns `f(0..n)` results in order.
+pub fn par_map<R: Send, F>(n: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    par_chunks_mut(&mut out, n.div_ceil(workers), |ci, chunk| {
+        let base = ci * n.div_ceil(workers);
+        for (j, slot) in chunk.iter_mut().enumerate() {
+            *slot = Some(f(base + j));
+        }
+    });
+    out.into_iter().map(|o| o.expect("filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything() {
+        let mut v = vec![0u32; 1003];
+        par_chunks_mut(&mut v, 10, |ci, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = (ci * 10 + j) as u32;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i as u32);
+        }
+    }
+
+    #[test]
+    fn single_chunk() {
+        let mut v = vec![1u8; 5];
+        par_chunks_mut(&mut v, 100, |ci, c| {
+            assert_eq!(ci, 0);
+            for x in c {
+                *x = 2;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn par_map_ordered() {
+        let out = par_map(257, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let mut v: Vec<u8> = vec![];
+        par_chunks_mut(&mut v, 4, |_, _| panic!("no chunks expected"));
+        let out: Vec<u8> = par_map(0, |_| 1u8);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,94 @@
+//! Tiny property-based testing driver (no external `proptest`).
+//!
+//! [`check`] runs a property over `n` deterministically-seeded random
+//! cases; on failure it reports the case index and seed so the case
+//! reproduces exactly. Generators are plain closures over
+//! [`crate::util::rng::Rng`].
+
+use super::rng::Rng;
+
+/// Derive a decorrelated seed for a case index.
+#[inline]
+pub fn seed_for_case(case: u64) -> u64 {
+    case.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(0x517cc1b727220a95)
+}
+
+/// Run `prop(rng)` for `cases` seeded cases; panic with the failing seed.
+///
+/// The property receives a fresh deterministic RNG per case. Use the RNG
+/// for all randomness so a failure reproduces from the printed seed.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = seed_for_case(case);
+        let mut rng = Rng::seed_from_u64(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Random dimension that is a multiple of `mult` within `[lo, hi]`.
+pub fn dim_multiple(rng: &mut Rng, mult: usize, lo: usize, hi: usize) -> usize {
+    let lo_m = lo.div_ceil(mult);
+    let hi_m = hi / mult;
+    assert!(hi_m >= lo_m, "no multiple of {mult} in [{lo}, {hi}]");
+    mult * (lo_m + rng.below(hi_m - lo_m + 1))
+}
+
+/// Assert two slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 20, |rng| {
+            let v = rng.below(10);
+            if v < 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn check_reports_failures() {
+        check("fails", 5, |rng| {
+            if rng.below(2) == 0 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn dim_multiple_respects_bounds() {
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..100 {
+            let d = dim_multiple(&mut rng, 8, 16, 128);
+            assert!(d % 8 == 0 && (16..=128).contains(&d));
+        }
+    }
+
+    #[test]
+    fn assert_close_works() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.00001], 1e-3).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+}

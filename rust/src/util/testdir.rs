@@ -1,0 +1,61 @@
+//! Unique temporary directories for tests (replaces `tempfile`).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A temp directory removed on drop.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create a fresh directory under the system temp dir, tagged with
+    /// the pid and a process-unique counter.
+    pub fn new(tag: &str) -> Self {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "sdq-test-{}-{}-{}",
+            tag,
+            std::process::id(),
+            n
+        ));
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        TempDir { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_and_cleans_up() {
+        let p;
+        {
+            let d = TempDir::new("selftest");
+            p = d.path().to_path_buf();
+            std::fs::write(d.path().join("x"), b"1").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn unique_paths() {
+        let a = TempDir::new("u");
+        let b = TempDir::new("u");
+        assert_ne!(a.path(), b.path());
+    }
+}
