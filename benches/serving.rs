@@ -1,52 +1,168 @@
-//! Serving benchmark: coordinator throughput + latency, dense vs SDQ
-//! compressed model, across batch widths — the end-to-end L3 numbers.
+//! Serving benchmark: ragged-**batched** decode (one fused GEMM per
+//! layer per round across all active sequences) vs the **per-sequence**
+//! baseline (one batch-1 forward per sequence), dense vs SDQ
+//! compressed, across batch widths — the end-to-end L3 numbers.
+//!
+//! Emits `BENCH_serving.json` (cwd) plus the usual
+//! `target/bench-results/serving.json` record so the perf trajectory is
+//! tracked across PRs. Falls back to a synthetic model when `make
+//! artifacts` hasn't been run, so the A/B comparison is always
+//! available.
 
 use sdq::coordinator::{batcher::BatchPolicy, Engine, Request};
-use sdq::data::Split;
 use sdq::harness;
+use sdq::model::{Arch, Block, Linear, Model, ModelConfig, NamedLinear};
+use sdq::sdq::calib::CalibStats;
+use sdq::sdq::config::CompressionConfig;
+use sdq::tensor::Matrix;
 use sdq::util::bench::Table;
+use sdq::util::rng::Rng;
+
+/// Synthetic GPT big enough that decode is weight-stream bound
+/// (the regime batching is supposed to win in).
+fn synth_model() -> Model {
+    let cfg = ModelConfig {
+        name: "synthetic-gpt".into(),
+        arch: Arch::Gpt,
+        d_model: 128,
+        n_layer: 4,
+        n_head: 8,
+        d_ff: 512,
+        vocab: 256,
+        max_seq: 128,
+        eps: 1e-5,
+        rope_theta: 10000.0,
+    };
+    let mut rng = Rng::seed_from_u64(42);
+    let mut m = |r: usize, c: usize| {
+        let s = 1.0 / (c as f32).sqrt();
+        Matrix::from_vec(r, c, (0..r * c).map(|_| rng.range_f32(-s, s)).collect())
+    };
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let blocks = (0..cfg.n_layer)
+        .map(|i| {
+            let p = |s: &str| format!("block{i}.{s}");
+            let mut nl = |name: &str, key: &str, r: usize, c: usize| NamedLinear {
+                name: p(name),
+                stats_key: p(key),
+                lin: Linear::Plain(m(r, c)),
+            };
+            Block {
+                ln1_g: vec![1.0; d],
+                ln1_b: Some(vec![0.0; d]),
+                q: nl("attn.q", "attn.in", d, d),
+                k: nl("attn.k", "attn.in", d, d),
+                v: nl("attn.v", "attn.in", d, d),
+                o: nl("attn.o", "attn.o.in", d, d),
+                ln2_g: vec![1.0; d],
+                ln2_b: Some(vec![0.0; d]),
+                ff1: nl("mlp.ff1", "mlp.in", f, d),
+                ff2: nl("mlp.ff2", "mlp.ff2.in", d, f),
+                ff3: None,
+            }
+        })
+        .collect();
+    Model {
+        tok_emb: m(cfg.vocab, d),
+        pos_emb: Some(m(cfg.max_seq, d)),
+        blocks,
+        lnf_g: vec![1.0; d],
+        lnf_b: Some(vec![0.0; d]),
+        cfg,
+    }
+}
+
+/// Calibration stats from a forward pass over random tokens (fallback
+/// path — no corpus on disk).
+fn synth_calib(model: &Model) -> CalibStats {
+    let mut stats = CalibStats::new(false);
+    let mut rng = Rng::seed_from_u64(7);
+    let seq = model.cfg.max_seq / 2;
+    let tokens: Vec<u8> = (0..4 * seq).map(|_| rng.below(256) as u8).collect();
+    model.forward(&tokens, 4, seq, Some(&mut stats));
+    stats
+}
 
 fn main() {
-    if !harness::artifacts_ready() {
-        return;
-    }
-    let mname = "gpt-micro";
-    let base = harness::load_model(mname).expect("model");
-    let ds = harness::load_dataset().expect("corpus");
-    let test = ds.split(Split::Test);
+    let artifacts = harness::artifacts_ready();
+    let (mname, base) = if artifacts {
+        ("gpt-micro".to_string(), harness::load_model("gpt-micro").expect("model"))
+    } else {
+        eprintln!("benchmarking on a synthetic model instead");
+        ("synthetic-gpt".to_string(), synth_model())
+    };
+    let ds = if artifacts { Some(harness::load_dataset().expect("corpus")) } else { None };
 
     let mut table = Table::new(
-        &format!("Serving: coordinator throughput/latency — {mname}"),
-        &["Config", "max_active", "req", "tok/s", "ttft p50 ms", "ttft p99 ms", "total mean ms"],
+        &format!("Serving: batched vs per-sequence decode — {mname}"),
+        &[
+            "Config",
+            "max_active",
+            "req",
+            "batched tok/s",
+            "per-seq tok/s",
+            "speedup",
+            "occupancy",
+            "kv peak KiB",
+        ],
     );
+    let mut prompt_rng = Rng::seed_from_u64(99);
     for cfg_str in ["Dense-WA16", "Q-VSQuant-WAint8", "SDQ-W7:8-1:8int8-6:8fp4"] {
-        let cfg = cfg_str.parse().unwrap();
+        let cfg: CompressionConfig = cfg_str.parse().unwrap();
         let mut model = base.clone();
-        let calib = harness::calibrate(&model, &ds, 1024, harness::needs_gram(&cfg));
+        let calib = match &ds {
+            Some(ds) => harness::calibrate(&model, ds, 1024, harness::needs_gram(&cfg)),
+            None => synth_calib(&model),
+        };
         model.compress(&cfg, &calib).unwrap();
         for max_active in [1usize, 4, 8] {
             let n_req = 16;
+            let max_new = 24;
+            // Same prompts for both modes — the A/B must only vary the
+            // decode strategy.
             let reqs: Vec<Request> = (0..n_req)
                 .map(|i| {
-                    let start = (i * 1013) % (test.len() - 33);
-                    Request::new(i as u64, test[start..start + 32].to_vec(), 24)
+                    let prompt: Vec<u8> = match &ds {
+                        Some(ds) => {
+                            let test = ds.split(sdq::data::Split::Test);
+                            let start = (i * 1013) % (test.len() - 33);
+                            test[start..start + 32].to_vec()
+                        }
+                        None => (0..32).map(|_| prompt_rng.below(256) as u8).collect(),
+                    };
+                    Request::new(i as u64, prompt, max_new)
                 })
                 .collect();
-            let policy = BatchPolicy { max_active, ..Default::default() };
-            let (resps, metrics) = Engine::run_batch(model.clone(), policy, reqs);
-            assert_eq!(resps.len(), n_req);
+            let run = |batched: bool, reqs: Vec<Request>| {
+                let policy =
+                    BatchPolicy { max_active, batched_decode: batched, ..Default::default() };
+                let (resps, metrics) = Engine::run_batch(model.clone(), policy, reqs);
+                assert_eq!(resps.len(), n_req);
+                metrics
+            };
+            let batched = run(true, reqs.clone());
+            let per_seq = run(false, reqs);
+            let speedup =
+                batched.decode_tokens_per_second() / per_seq.decode_tokens_per_second();
             table.row(vec![
                 cfg_str.to_string(),
                 max_active.to_string(),
                 n_req.to_string(),
-                format!("{:.1}", metrics.tokens_per_second()),
-                format!("{:.1}", metrics.ttft.quantile(0.5).as_secs_f64() * 1e3),
-                format!("{:.1}", metrics.ttft.quantile(0.99).as_secs_f64() * 1e3),
-                format!("{:.1}", metrics.total_latency.mean().as_secs_f64() * 1e3),
+                format!("{:.1}", batched.decode_tokens_per_second()),
+                format!("{:.1}", per_seq.decode_tokens_per_second()),
+                format!("{speedup:.2}x"),
+                format!("{:.2}", batched.decode_occupancy(max_active)),
+                format!("{:.1}", batched.kv_bytes_peak as f64 / 1024.0),
             ]);
-            eprintln!("  {cfg_str} active={max_active}: {}", metrics.summary());
+            eprintln!(
+                "  {cfg_str} active={max_active}: batched {} | per-seq decode {:.1} tok/s",
+                batched.summary(),
+                per_seq.decode_tokens_per_second()
+            );
         }
     }
     table.print();
     table.save_json("serving");
+    // Cross-PR trajectory record at the repo root.
+    let _ = std::fs::write("BENCH_serving.json", table.to_json().to_string());
 }

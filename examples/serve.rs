@@ -46,6 +46,15 @@ fn main() -> sdq::Result<()> {
         );
     }
     println!("\nnative engine: {}", metrics.summary());
+    println!(
+        "decode batches: width mean {:.2} / max {} → occupancy {:.0}% of {} slots, \
+         KV peak {:.1} KiB (chunked, actual residency)",
+        metrics.mean_decode_width(),
+        metrics.decode_width_max,
+        metrics.decode_occupancy(policy.max_active) * 100.0,
+        policy.max_active,
+        metrics.kv_bytes_peak as f64 / 1024.0,
+    );
 
     // PJRT batch-scoring path: the AOT SDQ forward (fixed [4, 64] shape).
     let art_name = format!("model_fwd_sdq_{mname}");

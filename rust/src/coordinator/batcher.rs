@@ -2,9 +2,13 @@
 //!
 //! Continuous batching with a KV-memory budget: new requests are
 //! admitted into the active set whenever (a) an active slot is free and
-//! (b) the projected KV-cache bytes stay under the budget. Waiting
-//! requests queue FIFO. The policy mirrors vLLM's admission control at
-//! the granularity this engine needs.
+//! (b) *actual* KV residency plus this request's projected growth stays
+//! under the budget. The projection is per request (prompt length plus
+//! decode budget, chunk-aligned), not a fixed worst-case constant —
+//! caches grow on demand, so short requests no longer reserve
+//! `max_seq × d_model` phantom bytes. Waiting requests queue FIFO. The
+//! policy mirrors vLLM's admission control at the granularity this
+//! engine needs.
 
 use std::collections::VecDeque;
 
@@ -15,11 +19,17 @@ use super::request::{InFlight, Request};
 pub struct BatchPolicy {
     /// Max concurrently-active sequences (decode round width).
     pub max_active: usize,
-    /// KV-cache memory budget in bytes across active sequences.
+    /// KV-cache memory budget in bytes across active sequences
+    /// (actual residency + projected growth of admitted requests).
     pub kv_budget_bytes: usize,
     /// Max prompts prefilled per scheduling round (prefill burst limit —
     /// keeps decode latency bounded while the queue drains).
     pub max_prefill_per_round: usize,
+    /// Decode all active sequences in one fused ragged batch per round
+    /// (`Model::decode_step`). `false` falls back to the per-sequence
+    /// baseline (one batch-1 `forward_cached` per sequence) — kept as an
+    /// A/B lever for `benches/serving.rs`.
+    pub batched_decode: bool,
 }
 
 impl Default for BatchPolicy {
@@ -28,6 +38,7 @@ impl Default for BatchPolicy {
             max_active: 8,
             kv_budget_bytes: 512 << 20,
             max_prefill_per_round: 4,
+            batched_decode: true,
         }
     }
 }
@@ -52,28 +63,33 @@ impl Batcher {
     }
 
     /// Admit up to the policy limits given the current active set size
-    /// and KV usage. `kv_bytes_per_seq` is the per-sequence cache cost
-    /// (fixed-size caches in this engine).
+    /// and the KV bytes already charged against the budget (each active
+    /// sequence's actual residency or reserved projection, whichever is
+    /// larger). `kv_cost` projects the eventual KV residency of a
+    /// waiting request (prompt + decode budget, chunk-aligned);
+    /// admission stops at the first request whose projection would
+    /// break the budget (FIFO — no starvation of large requests by
+    /// skipping ahead).
     pub fn admit(
         &mut self,
         policy: &BatchPolicy,
         active: usize,
         kv_in_use: usize,
-        kv_bytes_per_seq: usize,
+        kv_cost: impl Fn(&Request) -> usize,
     ) -> Vec<InFlight> {
         let mut out = Vec::new();
         let mut kv = kv_in_use;
-        while out.len() < policy.max_prefill_per_round
-            && active + out.len() < policy.max_active
-            && kv + kv_bytes_per_seq <= policy.kv_budget_bytes
+        while out.len() < policy.max_prefill_per_round && active + out.len() < policy.max_active
         {
-            match self.waiting.pop_front() {
-                Some(f) => {
-                    kv += kv_bytes_per_seq;
-                    out.push(f);
-                }
+            let cost = match self.waiting.front() {
+                Some(f) => kv_cost(&f.req),
                 None => break,
+            };
+            if kv + cost > policy.kv_budget_bytes {
+                break;
             }
+            kv += cost;
+            out.push(self.waiting.pop_front().expect("peeked"));
         }
         out
     }
@@ -93,7 +109,7 @@ mod tests {
         for i in 0..5 {
             b.enqueue(req(i));
         }
-        let admitted = b.admit(&BatchPolicy::default(), 0, 0, 1);
+        let admitted = b.admit(&BatchPolicy::default(), 0, 0, |_| 1);
         let ids: Vec<u64> = admitted.iter().map(|f| f.req.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3]); // max_prefill_per_round = 4
         assert_eq!(b.waiting(), 1);
@@ -106,7 +122,7 @@ mod tests {
             b.enqueue(req(i));
         }
         let policy = BatchPolicy { max_active: 3, ..Default::default() };
-        let admitted = b.admit(&policy, 2, 0, 1);
+        let admitted = b.admit(&policy, 2, 0, |_| 1);
         assert_eq!(admitted.len(), 1);
     }
 
@@ -117,14 +133,30 @@ mod tests {
             b.enqueue(req(i));
         }
         let policy = BatchPolicy { kv_budget_bytes: 100, ..Default::default() };
-        // 60 bytes in use, 30 per seq → only one more fits.
-        let admitted = b.admit(&policy, 0, 60, 30);
+        // 60 bytes in use, 30 projected per request → only one more fits.
+        let admitted = b.admit(&policy, 0, 60, |_| 30);
         assert_eq!(admitted.len(), 1);
+    }
+
+    #[test]
+    fn budget_uses_per_request_projection() {
+        let mut b = Batcher::new();
+        // Alternating decode budgets → alternating projections.
+        for i in 0..4 {
+            b.enqueue(Request::new(i, vec![1u8; 4], if i % 2 == 0 { 8 } else { 64 }));
+        }
+        let policy = BatchPolicy { kv_budget_bytes: 100, ..Default::default() };
+        // Costs: 20, 70, 20, 70 → FIFO admits 20 + 70 = 90, then stops:
+        // the third request's 20 would push residency to 110 > 100.
+        let admitted =
+            b.admit(&policy, 0, 0, |r| if r.max_new_tokens == 8 { 20 } else { 70 });
+        assert_eq!(admitted.len(), 2);
+        assert_eq!(b.waiting(), 2);
     }
 
     #[test]
     fn empty_queue() {
         let mut b = Batcher::new();
-        assert!(b.admit(&BatchPolicy::default(), 0, 0, 1).is_empty());
+        assert!(b.admit(&BatchPolicy::default(), 0, 0, |_| 1).is_empty());
     }
 }

@@ -66,10 +66,24 @@ pub struct Metrics {
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
     pub decode_rounds: u64,
+    /// Decode GEMM invocations (fused batches; in per-sequence fallback
+    /// mode every sequence counts as its own width-1 batch).
+    pub decode_batches: u64,
+    /// Σ sequences over decode batches — i.e. the total decode GEMM row
+    /// width. `decode_batched_tokens / decode_batches` is the mean
+    /// activation width each weight stream was amortized over.
+    pub decode_batched_tokens: u64,
+    /// Widest decode batch seen.
+    pub decode_width_max: u64,
+    /// Peak KV-cache residency across all active sequences (actual
+    /// allocated bytes, chunked — not worst-case reservations).
+    pub kv_bytes_peak: usize,
     pub ttft: Histogram,
     pub total_latency: Histogram,
     /// Wall time the engine spent serving (for throughput).
     pub serve_time: Duration,
+    /// Wall time spent inside decode batches (for decode throughput).
+    pub decode_time: Duration,
 }
 
 impl Metrics {
@@ -81,13 +95,51 @@ impl Metrics {
         self.tokens_generated as f64 / self.serve_time.as_secs_f64()
     }
 
+    /// Decode-phase throughput (tokens decoded per second of decode
+    /// wall time; excludes prefill).
+    pub fn decode_tokens_per_second(&self) -> f64 {
+        if self.decode_time.is_zero() {
+            return f64::NAN;
+        }
+        self.decode_batched_tokens as f64 / self.decode_time.as_secs_f64()
+    }
+
+    /// Record one decode GEMM batch of `width` sequences.
+    pub fn record_decode_batch(&mut self, width: usize) {
+        self.decode_batches += 1;
+        self.decode_batched_tokens += width as u64;
+        self.decode_width_max = self.decode_width_max.max(width as u64);
+    }
+
+    /// Mean decode GEMM row width (weight-stream amortization factor).
+    pub fn mean_decode_width(&self) -> f64 {
+        if self.decode_batches == 0 {
+            return f64::NAN;
+        }
+        self.decode_batched_tokens as f64 / self.decode_batches as f64
+    }
+
+    /// Decode-batch occupancy: mean batch width as a fraction of the
+    /// policy's `max_active` slots.
+    pub fn decode_occupancy(&self, max_active: usize) -> f64 {
+        if max_active == 0 {
+            return f64::NAN;
+        }
+        self.mean_decode_width() / max_active as f64
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "requests={} tokens={} tput={:.1} tok/s ttft_mean={:.1}ms ttft_p99={:.1}ms \
-             total_mean={:.1}ms",
+            "requests={} tokens={} tput={:.1} tok/s decode={:.1} tok/s \
+             width_mean={:.2} width_max={} kv_peak={:.1}KiB ttft_mean={:.1}ms \
+             ttft_p99={:.1}ms total_mean={:.1}ms",
             self.requests_completed,
             self.tokens_generated,
             self.tokens_per_second(),
+            self.decode_tokens_per_second(),
+            self.mean_decode_width(),
+            self.decode_width_max,
+            self.kv_bytes_peak as f64 / 1024.0,
             self.ttft.mean().as_secs_f64() * 1e3,
             self.ttft.quantile(0.99).as_secs_f64() * 1e3,
             self.total_latency.mean().as_secs_f64() * 1e3,
@@ -124,5 +176,21 @@ mod tests {
         m.serve_time = Duration::from_secs(2);
         assert!((m.tokens_per_second() - 50.0).abs() < 1e-9);
         assert!(m.summary().contains("tokens=100"));
+    }
+
+    #[test]
+    fn decode_width_stats() {
+        let mut m = Metrics::default();
+        assert!(m.mean_decode_width().is_nan());
+        m.record_decode_batch(4);
+        m.record_decode_batch(8);
+        m.record_decode_batch(6);
+        assert_eq!(m.decode_batches, 3);
+        assert_eq!(m.decode_batched_tokens, 18);
+        assert_eq!(m.decode_width_max, 8);
+        assert!((m.mean_decode_width() - 6.0).abs() < 1e-9);
+        assert!((m.decode_occupancy(8) - 0.75).abs() < 1e-9);
+        m.decode_time = Duration::from_secs(2);
+        assert!((m.decode_tokens_per_second() - 9.0).abs() < 1e-9);
     }
 }

@@ -1,17 +1,27 @@
 //! Continuous-batching scheduler.
 //!
 //! Each scheduling **round**: admit + prefill a bounded burst of waiting
-//! requests, then decode one token for every active sequence. Decode
-//! parallelism is across sequences (each sequence's single-token GEMMs
-//! are too small to parallelize internally); prefill parallelism is
-//! inside the GEMMs (prompt rows). Completed sequences retire at the end
-//! of the round.
+//! requests, then decode one token for every active sequence in a
+//! **single ragged batch** ([`Model::decode_step`]): the last token of
+//! each sequence is stacked into one `[n_active, d]` activation matrix
+//! so every linear layer streams its (compressed) weights once per
+//! round instead of once per sequence — the memory-bound regime where
+//! SDQ's compressed formats pay off. Attention stays per-sequence
+//! (heterogeneous KV prefixes, parallel over `(seq, head)`). A
+//! per-sequence fallback (`BatchPolicy::batched_decode = false`) keeps
+//! the old path alive as the benchmark baseline. Completed sequences
+//! retire at the end of the round.
+//!
+//! Admission budgets against *actual* KV residency ([`KvCache::bytes`])
+//! plus each waiting request's projected growth — caches are chunked
+//! and grow on demand, so the budget reflects real memory, not
+//! worst-case reservations.
 
 use std::time::Instant;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
-use super::request::{InFlight, Response};
+use super::request::{InFlight, Request, Response};
 use crate::model::generate::KvCache;
 use crate::model::Model;
 use crate::util::par::par_chunks_mut;
@@ -38,20 +48,44 @@ impl<'m> Scheduler<'m> {
         !self.active.is_empty() || batcher.waiting() > 0
     }
 
-    /// KV bytes a single sequence costs in this engine (fixed-size cache).
-    pub fn kv_bytes_per_seq(&self) -> usize {
-        self.model.cfg.n_layer * self.model.cfg.max_seq * self.model.cfg.d_model * 4 * 2
+    /// Actual KV bytes resident across the active set.
+    pub fn kv_bytes_in_use(&self) -> usize {
+        self.active.iter().filter_map(|f| f.cache.as_ref()).map(|c| c.bytes()).sum()
+    }
+
+    /// KV bytes charged against the admission budget: each active
+    /// sequence is charged the larger of its actual residency and its
+    /// admission-time projection, so caches growing *after* admission
+    /// can never push the active set past `kv_budget_bytes`.
+    pub fn kv_bytes_reserved(&self) -> usize {
+        self.active
+            .iter()
+            .map(|f| {
+                let actual = f.cache.as_ref().map(|c| c.bytes()).unwrap_or(0);
+                actual.max(f.kv_projected)
+            })
+            .sum()
+    }
+
+    /// Projected eventual KV residency of a request: its (clamped)
+    /// prompt plus full decode budget, chunk-aligned.
+    pub fn projected_kv_bytes(&self, req: &Request) -> usize {
+        let cfg = &self.model.cfg;
+        let prompt = req.prompt.len().min(cfg.max_seq - 1);
+        let tokens = (prompt + req.max_new_tokens).min(cfg.max_seq);
+        KvCache::bytes_for_tokens(cfg, tokens)
     }
 
     /// One scheduling round. Returns completed responses.
     pub fn round(&mut self, batcher: &mut Batcher) -> Vec<Response> {
         let t0 = Instant::now();
         // ---- admission + prefill ----
-        let kv_per = self.kv_bytes_per_seq();
-        let kv_in_use = self.active.len() * kv_per;
-        let mut admitted =
-            batcher.admit(&self.policy, self.active.len(), kv_in_use, kv_per);
+        let kv_reserved = self.kv_bytes_reserved();
+        let mut admitted = batcher.admit(&self.policy, self.active.len(), kv_reserved, |r| {
+            self.projected_kv_bytes(r)
+        });
         for f in &mut admitted {
+            f.kv_projected = self.projected_kv_bytes(&f.req);
             f.started = Some(Instant::now());
             let mut cache = KvCache::new(self.model);
             // Clamp over-long prompts to leave ≥1 slot for generation.
@@ -66,23 +100,69 @@ impl<'m> Scheduler<'m> {
         }
         self.active.append(&mut admitted);
 
-        // ---- decode one token for all active (parallel across seqs) ----
+        // ---- decode one token for all active sequences ----
         let model = self.model;
-        par_chunks_mut(&mut self.active, 1, |_i, slot| {
-            let f = &mut slot[0];
-            if f.remaining() == 0 {
-                return;
+        let td = Instant::now();
+        if self.policy.batched_decode {
+            // One fused GEMM per layer per round across the whole
+            // ragged batch.
+            let decode_idx: Vec<usize> = self
+                .active
+                .iter()
+                .enumerate()
+                .filter(|(_, f)| f.decodable())
+                .map(|(i, _)| i)
+                .collect();
+            if !decode_idx.is_empty() {
+                let last: Vec<u8> = decode_idx
+                    .iter()
+                    .map(|&i| *self.active[i].generated.last().expect("has first token"))
+                    .collect();
+                let logits = {
+                    // Disjoint &mut borrows of each selected sequence's
+                    // cache (indices are ascending).
+                    let mut caches: Vec<&mut KvCache> = Vec::with_capacity(decode_idx.len());
+                    let mut rest: &mut [InFlight] = &mut self.active;
+                    let mut base = 0usize;
+                    for &i in &decode_idx {
+                        let (head, tail) =
+                            std::mem::take(&mut rest).split_at_mut(i - base + 1);
+                        caches.push(head[i - base].cache.as_mut().expect("prefilled"));
+                        rest = tail;
+                        base = i + 1;
+                    }
+                    model.decode_step(&last, &mut caches)
+                };
+                for (row, &i) in decode_idx.iter().enumerate() {
+                    let f = &mut self.active[i];
+                    let tok = model.sample_row(&logits, row, f.req.temperature, &mut f.rng);
+                    f.generated.push(tok);
+                }
+                self.metrics.record_decode_batch(decode_idx.len());
             }
-            let cache = f.cache.as_mut().expect("prefilled");
-            if cache.remaining() == 0 {
-                return;
+        } else {
+            // Per-sequence baseline: one batch-1 forward per sequence,
+            // parallel across sequences (each GEMM re-streams weights).
+            let width = self.active.iter().filter(|f| f.decodable()).count();
+            par_chunks_mut(&mut self.active, 1, |_i, slot| {
+                let f = &mut slot[0];
+                if !f.decodable() {
+                    return;
+                }
+                let cache = f.cache.as_mut().expect("prefilled");
+                let last = *f.generated.last().expect("has first token");
+                let logits = model.forward_cached(&[last], cache);
+                let tok = model.sample(&logits, f.req.temperature, &mut f.rng);
+                f.generated.push(tok);
+            });
+            for _ in 0..width {
+                self.metrics.record_decode_batch(1);
             }
-            let last = *f.generated.last().expect("has first token");
-            let logits = model.forward_cached(&[last], cache);
-            let tok = model.sample(&logits, f.req.temperature, &mut f.rng);
-            f.generated.push(tok);
-        });
+        }
+        self.metrics.decode_time += td.elapsed();
         self.metrics.decode_rounds += 1;
+        let resident = self.kv_bytes_in_use();
+        self.metrics.kv_bytes_peak = self.metrics.kv_bytes_peak.max(resident);
 
         // ---- retire completed ----
         let mut done = Vec::new();
@@ -165,7 +245,7 @@ mod tests {
         let _ = sched.round(&mut batcher);
         assert!(sched.active() <= 2);
         let all = sched.run_to_completion(&mut batcher);
-        assert_eq!(all.len() + 0, 4);
+        assert_eq!(all.len(), 4);
     }
 
     #[test]
@@ -177,5 +257,90 @@ mod tests {
         let resp = sched.run_to_completion(&mut batcher);
         assert_eq!(resp.len(), 1);
         assert!(!resp[0].tokens.is_empty());
+    }
+
+    #[test]
+    fn per_seq_fallback_matches_batched() {
+        // The A/B lever must not change tokens: greedy output is
+        // bit-identical between the fused ragged batch and the
+        // per-sequence baseline.
+        let model = tiny_model(Arch::Llama, 5);
+        let run = |batched: bool| {
+            let policy = BatchPolicy { batched_decode: batched, ..Default::default() };
+            let mut sched = Scheduler::new(&model, policy);
+            let mut batcher = Batcher::new();
+            for i in 0..5u64 {
+                let plen = 1 + (i as usize * 2) % 7;
+                batcher.enqueue(Request::new(i, vec![(65 + i) as u8; plen], 3 + i as usize));
+            }
+            let mut resp = sched.run_to_completion(&mut batcher);
+            resp.sort_by_key(|r| r.id);
+            resp.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn decode_width_metrics() {
+        let model = tiny_model(Arch::Gpt, 6);
+        let mut sched = Scheduler::new(&model, BatchPolicy::default());
+        let mut batcher = Batcher::new();
+        for i in 0..6 {
+            batcher.enqueue(Request::new(i, vec![65u8; 4], 5));
+        }
+        sched.run_to_completion(&mut batcher);
+        let m = &sched.metrics;
+        assert!(m.decode_batches > 0);
+        // Round 1 admits 4 (prefill burst limit) and decodes width 4;
+        // round 2 admits the remaining 2 and decodes width 6.
+        assert_eq!(m.decode_width_max, 6);
+        assert!(m.mean_decode_width() > 1.0);
+        assert!(m.kv_bytes_peak > 0);
+        assert!(!m.decode_time.is_zero());
+    }
+
+    #[test]
+    fn admission_budgets_on_projected_kv() {
+        let model = tiny_model(Arch::Gpt, 7);
+        // Budget fits exactly two projected caches (prompt 4 + 8 new).
+        let one = KvCache::bytes_for_tokens(&model.cfg, 4 + 8);
+        let policy = BatchPolicy { kv_budget_bytes: 2 * one, ..Default::default() };
+        let mut sched = Scheduler::new(&model, policy);
+        let mut batcher = Batcher::new();
+        for i in 0..4 {
+            batcher.enqueue(Request::new(i, vec![65u8; 4], 8));
+        }
+        let _ = sched.round(&mut batcher);
+        assert_eq!(sched.active(), 2, "projected KV budget must cap admission");
+        // Everything still completes once the first wave retires.
+        let all = sched.run_to_completion(&mut batcher);
+        assert_eq!(all.len(), 4);
+    }
+
+    #[test]
+    fn budget_holds_across_cache_growth() {
+        // Requests whose caches grow over several chunks after
+        // admission: the reserved-projection accounting must keep both
+        // the active count and the *actual* residency under budget in
+        // every round, not just at admission time.
+        let model = tiny_model(Arch::Gpt, 8);
+        let one = KvCache::bytes_for_tokens(&model.cfg, 4 + 40);
+        let policy = BatchPolicy { kv_budget_bytes: 2 * one, ..Default::default() };
+        let mut sched = Scheduler::new(&model, policy);
+        let mut batcher = Batcher::new();
+        for i in 0..4 {
+            batcher.enqueue(Request::new(i, vec![65u8; 4], 40));
+        }
+        let mut rounds = 0;
+        while sched.has_work(&batcher) && rounds < 200 {
+            let _ = sched.round(&mut batcher);
+            rounds += 1;
+            assert!(sched.active() <= 2, "admission exceeded the projection budget");
+            assert!(
+                sched.kv_bytes_in_use() <= policy.kv_budget_bytes,
+                "actual KV residency broke the budget"
+            );
+        }
+        assert_eq!(sched.metrics.requests_completed, 4);
     }
 }

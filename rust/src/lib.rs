@@ -17,6 +17,23 @@
 //! Python never runs on the request path: the [`runtime`] module loads
 //! the AOT artifacts via PJRT and the coordinator serves from Rust.
 //!
+//! ## Serving architecture: ragged-batched decode
+//!
+//! The decode hot path is **batched across sequences**, not across
+//! time: each scheduler round stacks the last token of every active
+//! sequence into one `[n_active, d]` activation matrix and runs a
+//! *single* `forward_into` per linear layer per transformer block
+//! ([`model::Model::decode_step`]), so every (compressed) weight matrix
+//! streams from memory once per round instead of once per sequence —
+//! the regime where SDQ's compressed formats actually pay off.
+//! Attention stays per-sequence (ragged KV prefix lengths, parallel
+//! over `(sequence, head)`) and *borrows* each sequence's KV prefix in
+//! place. KV caches ([`model::generate::KvCache`]) are chunked and grow
+//! on demand: `bytes()` is actual residency, and the coordinator's
+//! admission control ([`coordinator::batcher::Batcher::admit`]) budgets
+//! against that residency plus each request's projected growth rather
+//! than a `max_seq × d_model` worst case.
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -24,6 +41,18 @@
 //! // Parse the paper's own configuration naming scheme:
 //! let cfg: CompressionConfig = "SDQ-W7:8-1:8int8-6:8fp4".parse().unwrap();
 //! assert_eq!(cfg.effective_throughput(), 4.0);
+//! ```
+//!
+//! Serve a batch through the coordinator (greedy decode is
+//! bit-identical to per-request [`model::Model::generate`]):
+//!
+//! ```no_run
+//! use sdq::coordinator::{batcher::BatchPolicy, Engine, Request};
+//! # let model = sdq::model::testutil::tiny_model(sdq::model::Arch::Gpt, 1);
+//! let reqs: Vec<Request> =
+//!     (0..8).map(|i| Request::new(i, vec![65u8; 16], 32)).collect();
+//! let (_responses, metrics) = Engine::run_batch(model, BatchPolicy::default(), reqs);
+//! println!("{} — occupancy {:.2}", metrics.summary(), metrics.decode_occupancy(8));
 //! ```
 
 pub mod artifacts;

@@ -5,13 +5,26 @@ use super::ops::*;
 use super::{Arch, Model};
 use crate::data::embed;
 use crate::sdq::calib::CalibStats;
-use crate::tensor::{matmul, Matrix};
+use crate::tensor::{dot, matmul, matmul_nn, Matrix};
 
 /// Observe activations into the calibration collector, if any.
 fn obs(calib: &mut Option<&mut CalibStats>, key: &str, x: &Matrix) {
     if let Some(c) = calib {
         c.observe(key, x);
     }
+}
+
+/// Borrowed per-sequence KV view for incremental attention: `n_new`
+/// query rows starting at `q_row0` attend to this sequence's
+/// `past + n_new` cached K/V rows (flat `[kv_len * d]`, K pre-RoPE).
+/// Heterogeneous `past` lengths across a batch are the point — this is
+/// the unit of raggedness in [`Model::attention_kv`].
+pub(crate) struct SeqKv<'a> {
+    pub q_row0: usize,
+    pub n_new: usize,
+    pub past: usize,
+    pub k: &'a [f32],
+    pub v: &'a [f32],
 }
 
 impl Model {
@@ -149,13 +162,87 @@ impl Model {
                     *s *= scale;
                 }
                 causal_softmax(&mut scores, past);
-                let oh = matmul(&scores, &vh.transpose());
+                // score·V without the per-head transpose allocation.
+                let oh = matmul_nn(&scores, &vh);
                 (b, hd, oh)
             });
         for (b, hd, oh) in results {
             for r in 0..seq {
                 out.row_mut(b * seq + r)[hd * dh..(hd + 1) * dh]
                     .copy_from_slice(oh.row(r));
+            }
+        }
+        out
+    }
+
+    /// Multi-head attention for the KV-cached decode paths, **ragged**
+    /// over sequences: each sequence attends to its own prefix length.
+    /// Parallel over `(sequence, head)` pairs. K/V are *borrowed*
+    /// straight from the caches (no per-step copies); K is cached
+    /// pre-RoPE, so rotation is applied here from absolute positions.
+    /// The score·V product accumulates directly into the output head
+    /// slice — the transpose is folded into the loop.
+    pub(crate) fn attention_kv(&self, q: &Matrix, seqs: &[SeqKv]) -> Matrix {
+        let d = self.cfg.d_model;
+        let dh = self.cfg.head_dim();
+        let nh = self.cfg.n_head;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let rope = self.cfg.arch == Arch::Llama;
+        let theta = self.cfg.rope_theta;
+        let results: Vec<Matrix> = crate::util::par::par_map(seqs.len() * nh, |sh| {
+            let s = &seqs[sh / nh];
+            let hd = sh % nh;
+            let kv_len = s.past + s.n_new;
+            debug_assert_eq!(s.k.len(), kv_len * d, "K prefix length mismatch");
+            debug_assert_eq!(s.v.len(), kv_len * d, "V prefix length mismatch");
+            let col0 = hd * dh;
+            // RoPE'd K head panel, built once per (seq, head) task and
+            // reused across this sequence's query rows. GPT (no RoPE)
+            // skips the copy entirely and dots against the cache rows.
+            let kh: Option<Matrix> = if rope {
+                let mut kh = Matrix::zeros(kv_len, dh);
+                for r in 0..kv_len {
+                    kh.row_mut(r).copy_from_slice(&s.k[r * d + col0..r * d + col0 + dh]);
+                }
+                rope_inplace(&mut kh, 0, theta);
+                Some(kh)
+            } else {
+                None
+            };
+            let mut oh = Matrix::zeros(s.n_new, dh);
+            let mut scores = vec![0.0f32; kv_len];
+            let mut qh = vec![0.0f32; dh];
+            for qi in 0..s.n_new {
+                qh.copy_from_slice(&q.row(s.q_row0 + qi)[col0..col0 + dh]);
+                if rope {
+                    rope_row_inplace(&mut qh, s.past + qi, theta);
+                }
+                // Causal limit: this token sees the prefix plus itself.
+                let limit = s.past + qi + 1;
+                for (r, sc) in scores[..limit].iter_mut().enumerate() {
+                    let krow = match &kh {
+                        Some(m) => m.row(r),
+                        None => &s.k[r * d + col0..r * d + col0 + dh],
+                    };
+                    *sc = dot(&qh, krow) * scale;
+                }
+                softmax_slice(&mut scores[..limit]);
+                let orow = oh.row_mut(qi);
+                for (r, &w) in scores[..limit].iter().enumerate() {
+                    let vrow = &s.v[r * d + col0..r * d + col0 + dh];
+                    for (o, vv) in orow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
+            }
+            oh
+        });
+        let mut out = Matrix::zeros(q.rows, d);
+        for (sh, oh) in results.iter().enumerate() {
+            let s = &seqs[sh / nh];
+            let hd = sh % nh;
+            for qi in 0..s.n_new {
+                out.row_mut(s.q_row0 + qi)[hd * dh..(hd + 1) * dh].copy_from_slice(oh.row(qi));
             }
         }
         out

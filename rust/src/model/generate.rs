@@ -1,32 +1,59 @@
 //! KV-cached incremental decoding (the serving path).
+//!
+//! Two entry points share one attention substrate
+//! ([`Model::attention_kv`], which borrows K/V straight from the cache —
+//! no per-token copies):
+//!
+//! * [`Model::forward_cached`] — one sequence, any number of new tokens
+//!   (prefill and single-stream decode);
+//! * [`Model::decode_step`] — the ragged-batched decode hot path: one
+//!   fused GEMM per linear layer per round across every active
+//!   sequence, then per-sequence attention against heterogeneous KV
+//!   prefixes.
+//!
+//! Both produce bit-identical logits per sequence: the GEMM kernels,
+//! activation quantizers and norms are all row-independent, so stacking
+//! activations only changes *when* weights stream, not what each row
+//! computes.
 
 use crate::util::rng::Rng;
 
+use super::forward::SeqKv;
 use super::ops::*;
-use super::{Arch, Model};
+use super::{Arch, Model, ModelConfig};
 use crate::data::embed;
 use crate::tensor::{matmul, Matrix};
 
-/// Per-request KV cache: one K and one V buffer per layer, `[len, d]`
-/// prefix valid. K is stored pre-RoPE; rotation is applied at attention
-/// time from absolute positions (keeps cache layout format-agnostic).
+/// Tokens per KV-cache allocation chunk. Caches grow on demand in
+/// `KV_CHUNK_TOKENS`-token steps instead of reserving `max_seq` rows up
+/// front, so thousands of short requests only pay for the prefix they
+/// actually hold and [`KvCache::bytes`] reports true residency.
+pub const KV_CHUNK_TOKENS: usize = 16;
+
+/// Per-request KV cache: one flat K and one flat V buffer per layer
+/// (`len` rows of `d` floats valid), grown chunk-on-demand. K is stored
+/// pre-RoPE; rotation is applied at attention time from absolute
+/// positions (keeps the cache layout format-agnostic).
 #[derive(Clone, Debug)]
 pub struct KvCache {
-    pub k: Vec<Matrix>,
-    pub v: Vec<Matrix>,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Committed token count. Rows staged beyond `len` exist only while
+    /// a forward step is in flight (each layer appends before attention,
+    /// the step commits at the end).
     pub len: usize,
     max_seq: usize,
+    d: usize,
 }
 
 impl KvCache {
     pub fn new(model: &Model) -> Self {
-        let d = model.cfg.d_model;
-        let ms = model.cfg.max_seq;
         KvCache {
-            k: (0..model.cfg.n_layer).map(|_| Matrix::zeros(ms, d)).collect(),
-            v: (0..model.cfg.n_layer).map(|_| Matrix::zeros(ms, d)).collect(),
+            k: vec![Vec::new(); model.cfg.n_layer],
+            v: vec![Vec::new(); model.cfg.n_layer],
             len: 0,
-            max_seq: ms,
+            max_seq: model.cfg.max_seq,
+            d: model.cfg.d_model,
         }
     }
 
@@ -35,15 +62,63 @@ impl KvCache {
         self.max_seq - self.len
     }
 
-    /// Approximate resident bytes (for the coordinator's memory manager).
+    /// Actual resident bytes — allocated chunks only, **not** a
+    /// `max_seq` worst case. The coordinator's admission control budgets
+    /// against this.
     pub fn bytes(&self) -> usize {
-        self.k.iter().map(|m| m.len() * 4).sum::<usize>() * 2
+        self.k.iter().chain(self.v.iter()).map(|b| b.capacity() * 4).sum()
+    }
+
+    /// Bytes a cache will have resident once it holds `tokens` tokens —
+    /// the coordinator's projected-growth estimate. Mirrors the actual
+    /// growth policy (chunk-quantized geometric doubling), so a cache's
+    /// [`Self::bytes`] never exceeds the projection for its final
+    /// length.
+    pub fn bytes_for_tokens(cfg: &ModelConfig, tokens: usize) -> usize {
+        let chunks = tokens.div_ceil(KV_CHUNK_TOKENS).max(1).next_power_of_two();
+        cfg.n_layer * 2 * chunks * KV_CHUNK_TOKENS * cfg.d_model * 4
+    }
+
+    /// Valid K rows for layer `li`, flat `[rows * d]` (committed plus
+    /// any rows staged by the in-flight step). Borrow this — never copy.
+    pub fn k_rows(&self, li: usize) -> &[f32] {
+        &self.k[li]
+    }
+
+    /// Valid V rows for layer `li` (see [`Self::k_rows`]).
+    pub fn v_rows(&self, li: usize) -> &[f32] {
+        &self.v[li]
+    }
+
+    /// Stage one K/V row for layer `li`, growing chunk-wise.
+    fn append_row(&mut self, li: usize, k_row: &[f32], v_row: &[f32]) {
+        Self::push_chunked(&mut self.k[li], k_row, self.d);
+        Self::push_chunked(&mut self.v[li], v_row, self.d);
+    }
+
+    fn push_chunked(buf: &mut Vec<f32>, row: &[f32], d: usize) {
+        debug_assert_eq!(row.len(), d);
+        if buf.len() + d > buf.capacity() {
+            // Geometric growth rounded to whole chunks: amortized O(1)
+            // copying (a fixed chunk increment would memcpy the whole
+            // buffer at every boundary) while `bytes()` stays
+            // chunk-quantized.
+            let chunk = KV_CHUNK_TOKENS * d;
+            let want = (buf.capacity() * 2).max(buf.len() + d);
+            let aligned = want.div_ceil(chunk) * chunk;
+            buf.reserve_exact(aligned - buf.len());
+        }
+        buf.extend_from_slice(row);
     }
 }
 
 impl Model {
-    /// Process `tokens` (batch = 1) on top of `cache`, appending to it.
-    /// Returns logits `[tokens.len(), vocab]`.
+    /// Process `tokens` (one sequence) on top of `cache`, appending to
+    /// it. Returns logits `[tokens.len(), vocab]`.
+    ///
+    /// This is the one-sequence special case of [`Self::decode_step`]'s
+    /// machinery (same attention substrate, same cache layout) that also
+    /// handles multi-token prefill.
     pub fn forward_cached(&self, tokens: &[u8], cache: &mut KvCache) -> Matrix {
         let n = tokens.len();
         let past = cache.len;
@@ -67,23 +142,20 @@ impl Model {
             blk.q.lin.forward_into(&h, &mut q);
             blk.k.lin.forward_into(&h, &mut k_new);
             blk.v.lin.forward_into(&h, &mut v_new);
-            // Append to cache.
             for i in 0..n {
-                cache.k[li].row_mut(past + i).copy_from_slice(k_new.row(i));
-                cache.v[li].row_mut(past + i).copy_from_slice(v_new.row(i));
+                cache.append_row(li, k_new.row(i), v_new.row(i));
             }
-            let kv_len = past + n;
-            let k_full = Matrix::from_vec(
-                kv_len,
-                d,
-                cache.k[li].data[..kv_len * d].to_vec(),
-            );
-            let v_full = Matrix::from_vec(
-                kv_len,
-                d,
-                cache.v[li].data[..kv_len * d].to_vec(),
-            );
-            let attn = self.attention(&q, &k_full, &v_full, 1, n, past);
+            // Attention borrows the cache prefix in place.
+            let attn = {
+                let seq = [SeqKv {
+                    q_row0: 0,
+                    n_new: n,
+                    past,
+                    k: cache.k_rows(li),
+                    v: cache.v_rows(li),
+                }];
+                self.attention_kv(&q, &seq)
+            };
             let mut o_out = Matrix::zeros(n, d);
             blk.o.lin.forward_into(&attn, &mut o_out);
             add_inplace(&mut x, &o_out);
@@ -114,9 +186,99 @@ impl Model {
         matmul(&x, &self.tok_emb)
     }
 
-    /// Greedy / temperature sampling from the last row of `logits`.
-    pub fn sample(&self, logits: &Matrix, temperature: f32, rng: &mut Rng) -> u8 {
-        let row = logits.row(logits.rows - 1);
+    /// Ragged-batched decode: advance **every** active sequence by one
+    /// token in a single fused pass. `last_tokens[i]` is sequence `i`'s
+    /// most recent token and `caches[i]` its KV cache — heterogeneous
+    /// prefix lengths are expected. Each linear layer runs **one**
+    /// `forward_into` over the stacked `[n_active, d]` activations, so
+    /// the (compressed) weight stream is amortized across the whole
+    /// batch instead of re-read once per sequence; attention then runs
+    /// per `(sequence, head)` against each sequence's own prefix.
+    ///
+    /// Returns next-token logits `[n_active, vocab]` (row `i` for
+    /// sequence `i`), bit-identical to what `forward_cached(&[tok], c)`
+    /// would produce sequence by sequence.
+    pub fn decode_step(&self, last_tokens: &[u8], caches: &mut [&mut KvCache]) -> Matrix {
+        let n = last_tokens.len();
+        assert_eq!(n, caches.len(), "one cache per sequence");
+        assert!(n > 0, "decode_step needs at least one sequence");
+        for c in caches.iter() {
+            assert!(c.len < self.cfg.max_seq, "KV cache overflow");
+        }
+        let d = self.cfg.d_model;
+        let mut x = embed(last_tokens, &self.tok_emb);
+        if let Some(pe) = &self.pos_emb {
+            for (i, c) in caches.iter().enumerate() {
+                let row = x.row_mut(i);
+                for (v, p) in row.iter_mut().zip(pe.row(c.len)) {
+                    *v += *p;
+                }
+            }
+        }
+        for (li, blk) in self.blocks.iter().enumerate() {
+            let mut h = x.clone();
+            self.norm1(blk, &mut h);
+            let mut q = Matrix::zeros(n, d);
+            let mut k_new = Matrix::zeros(n, d);
+            let mut v_new = Matrix::zeros(n, d);
+            blk.q.lin.forward_into(&h, &mut q);
+            blk.k.lin.forward_into(&h, &mut k_new);
+            blk.v.lin.forward_into(&h, &mut v_new);
+            for (i, c) in caches.iter_mut().enumerate() {
+                c.append_row(li, k_new.row(i), v_new.row(i));
+            }
+            // Ragged attention: parallel over (sequence, head), each
+            // sequence against its own borrowed prefix.
+            let attn = {
+                let seqs: Vec<SeqKv> = caches
+                    .iter()
+                    .enumerate()
+                    .map(|(i, c)| SeqKv {
+                        q_row0: i,
+                        n_new: 1,
+                        past: c.len,
+                        k: c.k_rows(li),
+                        v: c.v_rows(li),
+                    })
+                    .collect();
+                self.attention_kv(&q, &seqs)
+            };
+            let mut o_out = Matrix::zeros(n, d);
+            blk.o.lin.forward_into(&attn, &mut o_out);
+            add_inplace(&mut x, &o_out);
+
+            let mut h = x.clone();
+            self.norm2(blk, &mut h);
+            let mut a = Matrix::zeros(n, self.cfg.d_ff);
+            blk.ff1.lin.forward_into(&h, &mut a);
+            match self.cfg.arch {
+                Arch::Gpt => map_inplace(&mut a, gelu),
+                Arch::Llama => {
+                    let ff3 = blk.ff3.as_ref().expect("llama gate");
+                    let mut g = Matrix::zeros(h.rows, self.cfg.d_ff);
+                    ff3.lin.forward_into(&h, &mut g);
+                    map_inplace(&mut a, silu);
+                    mul_inplace(&mut a, &g);
+                }
+            }
+            let mut m_out = Matrix::zeros(n, d);
+            blk.ff2.lin.forward_into(&a, &mut m_out);
+            add_inplace(&mut x, &m_out);
+        }
+        for c in caches.iter_mut() {
+            c.len += 1;
+        }
+        match self.cfg.arch {
+            Arch::Gpt => layernorm(&mut x, &self.lnf_g, self.lnf_b.as_deref(), self.cfg.eps),
+            Arch::Llama => rmsnorm(&mut x, &self.lnf_g, self.cfg.eps),
+        }
+        matmul(&x, &self.tok_emb)
+    }
+
+    /// Greedy / temperature sampling from row `row` of `logits` (the
+    /// batched decode path samples one row per sequence).
+    pub fn sample_row(&self, logits: &Matrix, row: usize, temperature: f32, rng: &mut Rng) -> u8 {
+        let row = logits.row(row);
         if temperature <= 0.0 {
             // Greedy.
             let mut best = 0;
@@ -140,6 +302,11 @@ impl Model {
             }
         }
         255
+    }
+
+    /// Greedy / temperature sampling from the last row of `logits`.
+    pub fn sample(&self, logits: &Matrix, temperature: f32, rng: &mut Rng) -> u8 {
+        self.sample_row(logits, logits.rows - 1, temperature, rng)
     }
 
     /// Generate `max_new` tokens after `prompt` (batch = 1).
@@ -191,6 +358,54 @@ mod tests {
     }
 
     #[test]
+    fn decode_step_matches_forward_cached() {
+        for arch in [Arch::Gpt, Arch::Llama] {
+            let m = tiny_model(arch, 11);
+            let prompt: Vec<u8> = (1..9).collect();
+            let mut c_ref = KvCache::new(&m);
+            let mut c_bat = KvCache::new(&m);
+            let l0 = m.forward_cached(&prompt, &mut c_ref);
+            m.forward_cached(&prompt, &mut c_bat);
+            let mut rng = Rng::seed_from_u64(0);
+            let mut t = m.sample(&l0, 0.0, &mut rng);
+            for _ in 0..4 {
+                let a = m.forward_cached(&[t], &mut c_ref);
+                let b = m.decode_step(&[t], &mut [&mut c_bat]);
+                assert_eq!(a.row(0), b.row(0), "{arch:?}: decode_step diverged");
+                t = m.sample(&a, 0.0, &mut rng);
+            }
+            assert_eq!(c_ref.len, c_bat.len);
+        }
+    }
+
+    #[test]
+    fn batched_ragged_decode_matches_sequential() {
+        let m = tiny_model(Arch::Llama, 12);
+        // Three sequences with ragged prefix lengths.
+        let prompts: [&[u8]; 3] = [b"abcdef", b"xy", b"hello world"];
+        let want: Vec<Vec<u8>> = prompts.iter().map(|p| m.generate(p, 5, 0.0, 0)).collect();
+        // Batched: prefill each, then lockstep decode_step rounds.
+        let mut caches: Vec<KvCache> = prompts.iter().map(|_| KvCache::new(&m)).collect();
+        let mut rng = Rng::seed_from_u64(0);
+        let mut last = Vec::new();
+        for (p, c) in prompts.iter().zip(&mut caches) {
+            let logits = m.forward_cached(p, c);
+            last.push(m.sample(&logits, 0.0, &mut rng));
+        }
+        let mut outs: Vec<Vec<u8>> = last.iter().map(|t| vec![*t]).collect();
+        for _ in 0..4 {
+            let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            let logits = m.decode_step(&last, &mut refs);
+            for i in 0..prompts.len() {
+                let t = m.sample_row(&logits, i, 0.0, &mut rng);
+                outs[i].push(t);
+                last[i] = t;
+            }
+        }
+        assert_eq!(outs, want, "greedy batched decode must be bit-identical");
+    }
+
+    #[test]
     fn greedy_generation_is_deterministic() {
         let m = tiny_model(Arch::Gpt, 8);
         let a = m.generate(b"hello ", 10, 0.0, 1);
@@ -212,8 +427,25 @@ mod tests {
         let m = tiny_model(Arch::Gpt, 10);
         let mut cache = KvCache::new(&m);
         assert_eq!(cache.remaining(), 64);
+        assert_eq!(cache.bytes(), 0, "empty cache must hold no memory");
         m.forward_cached(&[1, 2, 3], &mut cache);
         assert_eq!(cache.len, 3);
-        assert!(cache.bytes() > 0);
+        // 3 tokens round up to one chunk per K/V buffer per layer — far
+        // below the old eager max_seq × d reservation.
+        let full = m.cfg.n_layer * 2 * m.cfg.max_seq * m.cfg.d_model * 4;
+        assert!(cache.bytes() >= KvCache::bytes_for_tokens(&m.cfg, 3));
+        assert!(cache.bytes() <= full / 2, "{} should be well under {full}", cache.bytes());
+    }
+
+    #[test]
+    fn cache_grows_chunkwise() {
+        let m = tiny_model(Arch::Llama, 13);
+        let mut cache = KvCache::new(&m);
+        let prompt = vec![7u8; KV_CHUNK_TOKENS];
+        m.forward_cached(&prompt, &mut cache);
+        let one_chunk = cache.bytes();
+        m.forward_cached(&[1], &mut cache); // crosses into chunk 2
+        assert!(cache.bytes() > one_chunk, "17th token must grow the cache");
+        assert!(cache.bytes() >= KvCache::bytes_for_tokens(&m.cfg, KV_CHUNK_TOKENS + 1));
     }
 }

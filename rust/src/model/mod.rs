@@ -11,7 +11,13 @@
 //! or a compressed [`CompressedLayer`] executing the paper's fake-quant /
 //! decomposed two-path GEMM (§5.1). The engine supports full-sequence
 //! forward (perplexity eval + calibration capture) and KV-cached
-//! incremental decode (serving).
+//! incremental decode (serving) in two flavours: per-sequence
+//! [`Model::forward_cached`] and the ragged-batched
+//! [`Model::decode_step`], which stacks the last token of every active
+//! sequence so each linear layer streams its (compressed) weights once
+//! per round instead of once per sequence. KV caches
+//! ([`generate::KvCache`]) grow chunk-on-demand rather than reserving
+//! `max_seq × d_model` eagerly.
 
 pub mod forward;
 pub mod generate;

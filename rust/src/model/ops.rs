@@ -76,24 +76,14 @@ pub fn add_inplace(a: &mut Matrix, b: &Matrix) {
 
 /// Row-wise in-place softmax with optional causal masking offset:
 /// row `i` may only attend to columns `0..=i + past` (KV-cache decode
-/// passes `past = cached_len`).
+/// passes `past = cached_len`). Delegates each row's live prefix to
+/// [`softmax_slice`], so the full-sequence and KV-cached decode paths
+/// share one numerical implementation *structurally*.
 pub fn causal_softmax(scores: &mut Matrix, past: usize) {
     for r in 0..scores.rows {
         let limit = (r + past + 1).min(scores.cols);
         let row = scores.row_mut(r);
-        for v in row[limit..].iter_mut() {
-            *v = f32::NEG_INFINITY;
-        }
-        let max = row[..limit].iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
-        let mut sum = 0.0;
-        for v in row[..limit].iter_mut() {
-            *v = (*v - max).exp();
-            sum += *v;
-        }
-        let inv = 1.0 / sum.max(1e-30);
-        for v in row[..limit].iter_mut() {
-            *v *= inv;
-        }
+        softmax_slice(&mut row[..limit]);
         for v in row[limit..].iter_mut() {
             *v = 0.0;
         }
@@ -103,18 +93,44 @@ pub fn causal_softmax(scores: &mut Matrix, past: usize) {
 /// Rotary position embedding applied in place to a `[S, dh]` per-head
 /// slice whose rows correspond to absolute positions `pos0..pos0+S`.
 pub fn rope_inplace(x: &mut Matrix, pos0: usize, theta_base: f32) {
-    let dh = x.cols;
-    assert_eq!(dh % 2, 0, "head dim must be even for RoPE");
+    assert_eq!(x.cols % 2, 0, "head dim must be even for RoPE");
     for r in 0..x.rows {
-        let pos = (pos0 + r) as f32;
-        let row = x.row_mut(r);
-        for i in 0..dh / 2 {
-            let theta = pos / theta_base.powf(2.0 * i as f32 / dh as f32);
-            let (sin, cos) = theta.sin_cos();
-            let (a, b) = (row[2 * i], row[2 * i + 1]);
-            row[2 * i] = a * cos - b * sin;
-            row[2 * i + 1] = a * sin + b * cos;
-        }
+        rope_row_inplace(x.row_mut(r), pos0 + r, theta_base);
+    }
+}
+
+/// RoPE for a single `[dh]` head row at absolute position `pos` (the
+/// ragged-decode attention path rotates rows one at a time, straight off
+/// the borrowed KV prefix).
+#[inline]
+pub fn rope_row_inplace(row: &mut [f32], pos: usize, theta_base: f32) {
+    let dh = row.len();
+    debug_assert_eq!(dh % 2, 0, "head dim must be even for RoPE");
+    let posf = pos as f32;
+    for i in 0..dh / 2 {
+        let theta = posf / theta_base.powf(2.0 * i as f32 / dh as f32);
+        let (sin, cos) = theta.sin_cos();
+        let (a, b) = (row[2 * i], row[2 * i + 1]);
+        row[2 * i] = a * cos - b * sin;
+        row[2 * i + 1] = a * sin + b * cos;
+    }
+}
+
+/// In-place softmax over an attention score slice — the shared kernel
+/// behind [`causal_softmax`] (full-sequence path) and the KV-cached
+/// decode paths, which express the causal mask by bounding the slice at
+/// the causal limit. One implementation → batched and full-sequence
+/// attention agree bit-for-bit.
+pub fn softmax_slice(row: &mut [f32]) {
+    let max = row.iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum.max(1e-30);
+    for v in row.iter_mut() {
+        *v *= inv;
     }
 }
 
@@ -189,6 +205,18 @@ mod tests {
         let n0: f32 = base.row(1).iter().map(|v| v * v).sum();
         let n1: f32 = x.row(1).iter().map(|v| v * v).sum();
         assert!((n0 - n1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn softmax_slice_matches_causal_row() {
+        let mut m = Matrix::from_vec(1, 5, vec![0.3, -1.0, 2.0, 0.1, 9.0]);
+        causal_softmax(&mut m, 2); // row 0 sees cols 0..=2
+        let mut s = [0.3f32, -1.0, 2.0];
+        softmax_slice(&mut s);
+        for (a, b) in m.row(0)[..3].iter().zip(&s) {
+            assert_eq!(a, b, "bitwise equality expected");
+        }
+        assert_eq!(m.at(0, 3), 0.0);
     }
 
     #[test]

@@ -21,6 +21,12 @@ const KB: usize = 256;
 /// bandwidth by TB× (§Perf iteration 1 — see EXPERIMENTS.md).
 const TB: usize = 16;
 
+/// Output-column block for the column-parallel path taken by small row
+/// counts (ragged decode batches): with fewer than `TB` rows the row
+/// tiling above degenerates to a single tile on one core, so the output
+/// columns (W rows) are split across workers instead.
+const CB: usize = 64;
+
 /// `c = a · wᵀ` into a fresh matrix. `a: [m, k]`, `w: [n, k]` → `c: [m, n]`.
 pub fn matmul(a: &Matrix, w: &Matrix) -> Matrix {
     let mut c = Matrix::zeros(a.rows, w.rows);
@@ -35,6 +41,44 @@ pub fn matmul_into(a: &Matrix, w: &Matrix, c: &mut Matrix) {
     assert_eq!(c.cols, w.rows);
     let k = a.cols;
     let n = w.rows;
+    // Ragged decode batches: a handful of activation rows against a wide
+    // W. One row tile would leave all but one core idle, so parallelize
+    // over output-column blocks instead. Numerics are identical to the
+    // row-tiled path: every output element is the same Σ over K-blocks
+    // of dot(a_blk, w_blk). Single rows (`a.rows == 1`) stay sequential:
+    // the per-sequence decode baseline parallelizes across sequences and
+    // must not nest thread scopes.
+    if a.rows > 1 && a.rows < TB && n >= 2 * CB && crate::util::par::num_threads() > 1 {
+        let rows = a.rows;
+        let nb = n.div_ceil(CB);
+        let parts: Vec<Vec<f32>> = crate::util::par::par_map(nb, |bi| {
+            let o0 = bi * CB;
+            let o1 = (o0 + CB).min(n);
+            let mut part = vec![0.0f32; rows * (o1 - o0)];
+            let mut k0 = 0;
+            while k0 < k {
+                let kend = (k0 + KB).min(k);
+                for o in o0..o1 {
+                    let w_blk = &w.data[o * k + k0..o * k + kend];
+                    for t in 0..rows {
+                        let a_blk = &a.data[t * k + k0..t * k + kend];
+                        part[t * (o1 - o0) + (o - o0)] += dot(a_blk, w_blk);
+                    }
+                }
+                k0 = kend;
+            }
+            part
+        });
+        for (bi, part) in parts.iter().enumerate() {
+            let o0 = bi * CB;
+            let o1 = (o0 + CB).min(n);
+            let bw = o1 - o0;
+            for t in 0..rows {
+                c.data[t * n + o0..t * n + o1].copy_from_slice(&part[t * bw..(t + 1) * bw]);
+            }
+        }
+        return;
+    }
     // Parallelize over TB-row tiles of the output. Within a tile, each W
     // row is loaded once from cache and dotted against all TB activation
     // rows (register/L1 reuse); K-blocked so the A slices stay hot.
@@ -64,6 +108,43 @@ pub fn matmul_bias_into(a: &Matrix, w: &Matrix, bias: &[f32], c: &mut Matrix) {
     for r in 0..c.rows {
         for (c_el, b) in c.row_mut(r).iter_mut().zip(bias) {
             *c_el += *b;
+        }
+    }
+}
+
+/// `c = a · b` with **no** transpose: `a: [m, k]`, `b: [k, n]` → `c: [m, n]`.
+///
+/// The attention score·V product is exactly this shape (scores
+/// `[seq, kv]` times V `[kv, dh]`), so this kernel lets attention drop
+/// the per-head `v.transpose()` allocation it previously needed to feed
+/// [`matmul`]'s `A · Wᵀ` convention.
+pub fn matmul_nn(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_nn_into(a, b, &mut c);
+    c
+}
+
+/// [`matmul_nn`] into a caller-provided buffer (fully overwritten).
+///
+/// Row-major axpy formulation: each B row streams once per A row and
+/// accumulates into the C row with unit stride (autovectorizes). Rows of
+/// A that are exactly zero (masked attention scores) are skipped.
+pub fn matmul_nn_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "inner dimensions must match");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    let n = b.cols;
+    c.data.fill(0.0);
+    for t in 0..a.rows {
+        let crow = &mut c.data[t * n..(t + 1) * n];
+        for (r, &av) in a.row(t).iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[r * n..(r + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
         }
     }
 }
@@ -144,6 +225,67 @@ mod tests {
         let r = naive(&a, &w);
         for (x, y) in c.data.iter().zip(&r.data) {
             assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn small_batch_column_path_matches_naive() {
+        // 4 rows × wide W triggers the column-parallel path (when
+        // threads > 1); numerics must match the row-tiled path exactly.
+        let mut seed = 3u64;
+        let mut next = move || {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((seed >> 33) as f32 / 2.0f32.powi(31)) - 0.5
+        };
+        let a = Matrix::from_vec(4, 300, (0..4 * 300).map(|_| next()).collect());
+        let w = Matrix::from_vec(200, 300, (0..200 * 300).map(|_| next()).collect());
+        let c = matmul(&a, &w);
+        let r = naive(&a, &w);
+        for (x, y) in c.data.iter().zip(&r.data) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    fn naive_nn(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for t in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for r in 0..a.cols {
+                    s += a.at(t, r) * b.at(r, j);
+                }
+                *c.at_mut(t, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_nn_matches_naive() {
+        let mut seed = 9u64;
+        let mut next = move || {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((seed >> 33) as f32 / 2.0f32.powi(31)) - 0.5
+        };
+        let a = Matrix::from_vec(5, 17, (0..5 * 17).map(|_| next()).collect());
+        let b = Matrix::from_vec(17, 9, (0..17 * 9).map(|_| next()).collect());
+        let c = matmul_nn(&a, &b);
+        let r = naive_nn(&a, &b);
+        for (x, y) in c.data.iter().zip(&r.data) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_nn_equals_transposed_matmul() {
+        // The identity the attention rewrite relies on:
+        // matmul_nn(s, v) == matmul(s, v.transpose()).
+        let s = Matrix::from_vec(2, 3, vec![0.5, 0.0, 0.5, 1.0, 0.0, 0.0]);
+        let v = Matrix::from_vec(3, 4, (0..12).map(|i| i as f32 * 0.25).collect());
+        let a = matmul_nn(&s, &v);
+        let b = matmul(&s, &v.transpose());
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-6);
         }
     }
 

@@ -7,7 +7,7 @@
 
 mod matmul;
 
-pub use matmul::{matmul, matmul_bias_into, matmul_into};
+pub use matmul::{dot, matmul, matmul_bias_into, matmul_into, matmul_nn, matmul_nn_into};
 
 
 /// Row-major 2-D `f32` matrix: `rows x cols`, index `[r * cols + c]`.

@@ -313,6 +313,43 @@ fn prop_json_roundtrip_random_values() {
 }
 
 #[test]
+fn prop_decode_step_n1_matches_forward_cached() {
+    // decode_step with a single sequence is exactly forward_cached —
+    // bit-for-bit, including cache length and chunked residency.
+    use sdq::model::generate::KvCache;
+    check("decode_step n=1 == forward_cached", 6, |rng| {
+        let arch = [sdq::model::Arch::Gpt, sdq::model::Arch::Llama][rng.below(2)];
+        let model = sdq::model::testutil::tiny_model(arch, rng.next_u64());
+        let plen = 1 + rng.below(12);
+        let prompt: Vec<u8> = (0..plen).map(|_| rng.below(256) as u8).collect();
+        let mut c_ref = KvCache::new(&model);
+        let mut c_bat = KvCache::new(&model);
+        model.forward_cached(&prompt, &mut c_ref);
+        model.forward_cached(&prompt, &mut c_bat);
+        let mut t = rng.below(256) as u8;
+        for _ in 0..3 {
+            let a = model.forward_cached(&[t], &mut c_ref);
+            let b = model.decode_step(&[t], &mut [&mut c_bat]);
+            if a.row(0) != b.row(0) {
+                return Err("decode_step logits diverged from forward_cached".into());
+            }
+            t = rng.below(256) as u8;
+        }
+        if c_ref.len != c_bat.len {
+            return Err(format!("cache length diverged: {} vs {}", c_ref.len, c_bat.len));
+        }
+        if c_ref.bytes() != c_bat.bytes() {
+            return Err(format!(
+                "chunked residency diverged: {} vs {}",
+                c_ref.bytes(),
+                c_bat.bytes()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_model_cached_decode_matches_full() {
     use sdq::model::generate::KvCache;
     check("kv cache == full", 4, |rng| {
