@@ -1,13 +1,20 @@
-//! Serving benchmark: ragged-**batched** decode (one fused GEMM per
-//! layer per round across all active sequences) vs the **per-sequence**
-//! baseline (one batch-1 forward per sequence), dense vs SDQ
+//! Serving benchmark: the **paged** engine (shared KV block pool,
+//! prefix sharing, batched multi-prompt prefill, one fused GEMM per
+//! layer per decode round) vs the **per-sequence** baseline (private
+//! chunked caches, one batch-1 forward per sequence), dense vs SDQ
 //! compressed, across batch widths — the end-to-end L3 numbers.
+//! Requests share a common prompt prefix, so the pool's prefix-share
+//! hit-rate, utilization and eviction counters are exercised and
+//! reported. Greedy outputs are asserted bit-identical across the two
+//! engines on every row.
 //!
 //! Emits `BENCH_serving.json` (cwd) plus the usual
 //! `target/bench-results/serving.json` record so the perf trajectory is
 //! tracked across PRs. Falls back to a synthetic model when `make
 //! artifacts` hasn't been run, so the A/B comparison is always
-//! available.
+//! available. `--smoke` runs one config at one width with a few short
+//! requests — the CI guard that keeps this bench compiling *and*
+//! running.
 
 use sdq::coordinator::{batcher::BatchPolicy, Engine, Request};
 use sdq::harness;
@@ -84,6 +91,7 @@ fn synth_calib(model: &Model) -> CalibStats {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let artifacts = harness::artifacts_ready();
     let (mname, base) = if artifacts {
         ("gpt-micro".to_string(), harness::load_model("gpt-micro").expect("model"))
@@ -94,7 +102,7 @@ fn main() {
     let ds = if artifacts { Some(harness::load_dataset().expect("corpus")) } else { None };
 
     let mut table = Table::new(
-        &format!("Serving: batched vs per-sequence decode — {mname}"),
+        &format!("Serving: paged+batched vs per-sequence decode — {mname}"),
         &[
             "Config",
             "max_active",
@@ -104,10 +112,27 @@ fn main() {
             "speedup",
             "occupancy",
             "kv peak KiB",
+            "pool util",
+            "prefix hit",
+            "evict",
         ],
     );
+    let configs: &[&str] = if smoke {
+        &["SDQ-W7:8-1:8int8-6:8fp4"]
+    } else {
+        &["Dense-WA16", "Q-VSQuant-WAint8", "SDQ-W7:8-1:8int8-6:8fp4"]
+    };
+    let widths: &[usize] = if smoke { &[4] } else { &[1, 4, 8] };
+    let (n_req, max_new, plen) = if smoke { (6, 8, 24) } else { (16, 24, 32) };
     let mut prompt_rng = Rng::seed_from_u64(99);
-    for cfg_str in ["Dense-WA16", "Q-VSQuant-WAint8", "SDQ-W7:8-1:8int8-6:8fp4"] {
+    // All requests share a 16-token prompt prefix (one KV block): the
+    // realistic system-prompt shape that paged sharing exploits —
+    // later admission waves attach it instead of recomputing.
+    let shared_prefix: Vec<u8> = match &ds {
+        Some(ds) => ds.split(sdq::data::Split::Test)[..16].to_vec(),
+        None => (0..16).map(|_| prompt_rng.below(256) as u8).collect(),
+    };
+    for cfg_str in configs {
         let cfg: CompressionConfig = cfg_str.parse().unwrap();
         let mut model = base.clone();
         let calib = match &ds {
@@ -115,33 +140,41 @@ fn main() {
             None => synth_calib(&model),
         };
         model.compress(&cfg, &calib).unwrap();
-        for max_active in [1usize, 4, 8] {
-            let n_req = 16;
-            let max_new = 24;
+        for &max_active in widths {
             // Same prompts for both modes — the A/B must only vary the
-            // decode strategy.
+            // serving engine.
             let reqs: Vec<Request> = (0..n_req)
                 .map(|i| {
-                    let prompt: Vec<u8> = match &ds {
+                    let mut prompt = shared_prefix.clone();
+                    let tail: Vec<u8> = match &ds {
                         Some(ds) => {
                             let test = ds.split(sdq::data::Split::Test);
-                            let start = (i * 1013) % (test.len() - 33);
-                            test[start..start + 32].to_vec()
+                            let start = (i * 1013) % (test.len() - plen - 1);
+                            test[start..start + plen - 16].to_vec()
                         }
-                        None => (0..32).map(|_| prompt_rng.below(256) as u8).collect(),
+                        None => {
+                            (0..plen - 16).map(|_| prompt_rng.below(256) as u8).collect()
+                        }
                     };
+                    prompt.extend_from_slice(&tail);
                     Request::new(i as u64, prompt, max_new)
                 })
                 .collect();
             let run = |batched: bool, reqs: Vec<Request>| {
                 let policy =
                     BatchPolicy { max_active, batched_decode: batched, ..Default::default() };
-                let (resps, metrics) = Engine::run_batch(model.clone(), policy, reqs);
+                let (mut resps, metrics) = Engine::run_batch(model.clone(), policy, reqs);
                 assert_eq!(resps.len(), n_req);
-                metrics
+                resps.sort_by_key(|r| r.id);
+                (resps, metrics)
             };
-            let batched = run(true, reqs.clone());
-            let per_seq = run(false, reqs);
+            let (paged_out, batched) = run(true, reqs.clone());
+            let (legacy_out, per_seq) = run(false, reqs);
+            // Live equivalence guard: paged + fused must not change a
+            // single greedy token vs the chunked per-sequence baseline.
+            for (a, b) in paged_out.iter().zip(&legacy_out) {
+                assert_eq!(a.tokens, b.tokens, "req {}: engines diverged", a.id);
+            }
             let speedup =
                 batched.decode_tokens_per_second() / per_seq.decode_tokens_per_second();
             table.row(vec![
@@ -153,6 +186,9 @@ fn main() {
                 format!("{speedup:.2}x"),
                 format!("{:.2}", batched.decode_occupancy(max_active)),
                 format!("{:.1}", batched.kv_bytes_peak as f64 / 1024.0),
+                format!("{:.3}", batched.pool_utilization_peak),
+                format!("{:.2}", batched.prefix_hit_rate()),
+                batched.kv_evictions.to_string(),
             ]);
             eprintln!(
                 "  {cfg_str} active={max_active}: batched {} | per-seq decode {:.1} tok/s",

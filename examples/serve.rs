@@ -48,12 +48,21 @@ fn main() -> sdq::Result<()> {
     println!("\nnative engine: {}", metrics.summary());
     println!(
         "decode batches: width mean {:.2} / max {} → occupancy {:.0}% of {} slots, \
-         KV peak {:.1} KiB (chunked, actual residency)",
+         KV peak {:.1} KiB (paged pool, referenced + cached blocks)",
         metrics.mean_decode_width(),
         metrics.decode_width_max,
         metrics.decode_occupancy(policy.max_active) * 100.0,
         policy.max_active,
         metrics.kv_bytes_peak as f64 / 1024.0,
+    );
+    println!(
+        "paged KV: prefill width mean {:.2}, pool util peak {:.2}, \
+         prefix hit-rate {:.2}, evictions {}, COW copies {}",
+        metrics.mean_prefill_width(),
+        metrics.pool_utilization_peak,
+        metrics.prefix_hit_rate(),
+        metrics.kv_evictions,
+        metrics.kv_cow_copies,
     );
 
     // PJRT batch-scoring path: the AOT SDQ forward (fixed [4, 64] shape).

@@ -1,14 +1,15 @@
 //! Admission queue + batch-formation policy.
 //!
-//! Continuous batching with a KV-memory budget: new requests are
-//! admitted into the active set whenever (a) an active slot is free and
-//! (b) *actual* KV residency plus this request's projected growth stays
-//! under the budget. The projection is per request (prompt length plus
-//! decode budget, chunk-aligned), not a fixed worst-case constant —
-//! caches grow on demand, so short requests no longer reserve
-//! `max_seq × d_model` phantom bytes. Waiting requests queue FIFO. The
-//! policy mirrors vLLM's admission control at the granularity this
-//! engine needs.
+//! Continuous batching with a KV-memory budget. The admission rule is
+//! unit-agnostic: the scheduler passes the units already charged, a
+//! budget, and a per-request cost projection. In **paged** mode
+//! (default) the units are pool *blocks* — each active sequence is
+//! charged its worst-case final footprint, so growth after admission
+//! can never exhaust the [`crate::kv::BlockPool`]. In the legacy
+//! per-sequence mode the units are bytes of chunked-cache residency
+//! plus projected growth, exactly as in PR 1. Waiting requests queue
+//! FIFO. The policy mirrors vLLM's admission control at the granularity
+//! this engine needs.
 
 use std::collections::VecDeque;
 
@@ -19,17 +20,24 @@ use super::request::{InFlight, Request};
 pub struct BatchPolicy {
     /// Max concurrently-active sequences (decode round width).
     pub max_active: usize,
-    /// KV-cache memory budget in bytes across active sequences
-    /// (actual residency + projected growth of admitted requests).
+    /// KV memory budget in bytes across active sequences. Paged mode
+    /// converts this to a block budget for the shared pool; legacy mode
+    /// budgets actual residency + projected growth against it directly.
     pub kv_budget_bytes: usize,
     /// Max prompts prefilled per scheduling round (prefill burst limit —
     /// keeps decode latency bounded while the queue drains).
     pub max_prefill_per_round: usize,
-    /// Decode all active sequences in one fused ragged batch per round
-    /// (`Model::decode_step`). `false` falls back to the per-sequence
-    /// baseline (one batch-1 `forward_cached` per sequence) — kept as an
-    /// A/B lever for `benches/serving.rs`.
+    /// `true` (default): paged serving — KV in the shared block pool
+    /// with prefix sharing, batched multi-prompt prefill, and one fused
+    /// ragged decode batch per round. `false` falls back to the
+    /// per-sequence chunked-cache baseline (one batch-1 forward per
+    /// sequence, weights re-streamed each time) — kept as the A/B lever
+    /// for `benches/serving.rs`.
     pub batched_decode: bool,
+    /// Within paged mode: pack every prompt admitted in a round into
+    /// one fused ragged prefill (`false` prefills them one at a time —
+    /// the prefill A/B lever).
+    pub batched_prefill: bool,
 }
 
 impl Default for BatchPolicy {
@@ -39,6 +47,7 @@ impl Default for BatchPolicy {
             kv_budget_bytes: 512 << 20,
             max_prefill_per_round: 4,
             batched_decode: true,
+            batched_prefill: true,
         }
     }
 }
@@ -62,19 +71,25 @@ impl Batcher {
         self.waiting.len()
     }
 
-    /// Admit up to the policy limits given the current active set size
-    /// and the KV bytes already charged against the budget (each active
-    /// sequence's actual residency or reserved projection, whichever is
-    /// larger). `kv_cost` projects the eventual KV residency of a
-    /// waiting request (prompt + decode budget, chunk-aligned);
-    /// admission stops at the first request whose projection would
-    /// break the budget (FIFO — no starvation of large requests by
-    /// skipping ahead).
+    /// Pop the head of the queue unconditionally (the scheduler's
+    /// forced-admission path: an over-budget request still runs alone
+    /// rather than livelocking the queue).
+    pub fn pop_front(&mut self) -> Option<InFlight> {
+        self.waiting.pop_front()
+    }
+
+    /// Admit up to the policy limits given the current active set size,
+    /// the KV units already charged against `kv_budget`, and a cost
+    /// projection per waiting request (blocks in paged mode, bytes in
+    /// legacy mode — see module docs). Admission stops at the first
+    /// request whose projection would break the budget (FIFO — no
+    /// starvation of large requests by skipping ahead).
     pub fn admit(
         &mut self,
         policy: &BatchPolicy,
         active: usize,
         kv_in_use: usize,
+        kv_budget: usize,
         kv_cost: impl Fn(&Request) -> usize,
     ) -> Vec<InFlight> {
         let mut out = Vec::new();
@@ -85,7 +100,7 @@ impl Batcher {
                 Some(f) => kv_cost(&f.req),
                 None => break,
             };
-            if kv + cost > policy.kv_budget_bytes {
+            if kv + cost > kv_budget {
                 break;
             }
             kv += cost;
@@ -109,7 +124,7 @@ mod tests {
         for i in 0..5 {
             b.enqueue(req(i));
         }
-        let admitted = b.admit(&BatchPolicy::default(), 0, 0, |_| 1);
+        let admitted = b.admit(&BatchPolicy::default(), 0, 0, usize::MAX, |_| 1);
         let ids: Vec<u64> = admitted.iter().map(|f| f.req.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3]); // max_prefill_per_round = 4
         assert_eq!(b.waiting(), 1);
@@ -122,7 +137,7 @@ mod tests {
             b.enqueue(req(i));
         }
         let policy = BatchPolicy { max_active: 3, ..Default::default() };
-        let admitted = b.admit(&policy, 2, 0, |_| 1);
+        let admitted = b.admit(&policy, 2, 0, usize::MAX, |_| 1);
         assert_eq!(admitted.len(), 1);
     }
 
@@ -132,9 +147,8 @@ mod tests {
         for i in 0..5 {
             b.enqueue(req(i));
         }
-        let policy = BatchPolicy { kv_budget_bytes: 100, ..Default::default() };
-        // 60 bytes in use, 30 projected per request → only one more fits.
-        let admitted = b.admit(&policy, 0, 60, |_| 30);
+        // 60 units in use of 100, 30 projected per request → one fits.
+        let admitted = b.admit(&BatchPolicy::default(), 0, 60, 100, |_| 30);
         assert_eq!(admitted.len(), 1);
     }
 
@@ -145,11 +159,15 @@ mod tests {
         for i in 0..4 {
             b.enqueue(Request::new(i, vec![1u8; 4], if i % 2 == 0 { 8 } else { 64 }));
         }
-        let policy = BatchPolicy { kv_budget_bytes: 100, ..Default::default() };
         // Costs: 20, 70, 20, 70 → FIFO admits 20 + 70 = 90, then stops:
         // the third request's 20 would push residency to 110 > 100.
-        let admitted =
-            b.admit(&policy, 0, 0, |r| if r.max_new_tokens == 8 { 20 } else { 70 });
+        let admitted = b.admit(
+            &BatchPolicy::default(),
+            0,
+            0,
+            100,
+            |r| if r.max_new_tokens == 8 { 20 } else { 70 },
+        );
         assert_eq!(admitted.len(), 2);
         assert_eq!(b.waiting(), 2);
     }
@@ -157,6 +175,17 @@ mod tests {
     #[test]
     fn empty_queue() {
         let mut b = Batcher::new();
-        assert!(b.admit(&BatchPolicy::default(), 0, 0, |_| 1).is_empty());
+        assert!(b.admit(&BatchPolicy::default(), 0, 0, usize::MAX, |_| 1).is_empty());
+        assert!(b.pop_front().is_none());
+    }
+
+    #[test]
+    fn pop_front_bypasses_budget() {
+        let mut b = Batcher::new();
+        b.enqueue(req(9));
+        // Zero budget admits nothing…
+        assert!(b.admit(&BatchPolicy::default(), 0, 0, 0, |_| 1).is_empty());
+        // …but the forced path still drains the queue head.
+        assert_eq!(b.pop_front().unwrap().req.id, 9);
     }
 }

@@ -75,9 +75,31 @@ pub struct Metrics {
     pub decode_batched_tokens: u64,
     /// Widest decode batch seen.
     pub decode_width_max: u64,
-    /// Peak KV-cache residency across all active sequences (actual
-    /// allocated bytes, chunked — not worst-case reservations).
+    /// Fused prefill invocations (a batch of N admitted prompts through
+    /// one ragged forward counts once; the per-prompt baseline counts
+    /// each prompt as its own width-1 batch).
+    pub prefill_batches: u64,
+    /// Σ prompts over prefill batches (mean width =
+    /// `prefill_batched_seqs / prefill_batches`).
+    pub prefill_batched_seqs: u64,
+    /// Widest prefill batch seen.
+    pub prefill_width_max: u64,
+    /// Peak KV residency (paged: pool blocks referenced + cached;
+    /// legacy: chunked caches' actual allocated bytes).
     pub kv_bytes_peak: usize,
+    /// Peak pool residency as a fraction of the block budget.
+    pub pool_utilization_peak: f64,
+    /// Prompt tokens served straight from cached prefix blocks.
+    pub prefix_shared_tokens: u64,
+    /// Total prompt tokens that went through prefix matching.
+    pub prefix_prompt_tokens: u64,
+    /// Cached KV blocks evicted (LRU) to make room or trim to budget.
+    pub kv_evictions: u64,
+    /// Copy-on-write block copies (forked tables diverging).
+    pub kv_cow_copies: u64,
+    /// Duplicate blocks merged at freeze time (identical concurrent
+    /// streams).
+    pub kv_dedup_merges: u64,
     pub ttft: Histogram,
     pub total_latency: Histogram,
     /// Wall time the engine spent serving (for throughput).
@@ -119,6 +141,42 @@ impl Metrics {
         self.decode_batched_tokens as f64 / self.decode_batches as f64
     }
 
+    /// Record one fused prefill batch of `width` prompts.
+    pub fn record_prefill_batch(&mut self, width: usize) {
+        self.prefill_batches += 1;
+        self.prefill_batched_seqs += width as u64;
+        self.prefill_width_max = self.prefill_width_max.max(width as u64);
+    }
+
+    /// Mean prompts per prefill forward (admission-burst amortization).
+    pub fn mean_prefill_width(&self) -> f64 {
+        if self.prefill_batches == 0 {
+            return f64::NAN;
+        }
+        self.prefill_batched_seqs as f64 / self.prefill_batches as f64
+    }
+
+    /// Fraction of prompt tokens served from cached prefix blocks.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_prompt_tokens == 0 {
+            return f64::NAN;
+        }
+        self.prefix_shared_tokens as f64 / self.prefix_prompt_tokens as f64
+    }
+
+    /// Fold the pool's cumulative counters and current utilization into
+    /// the serving metrics (called once per scheduling round).
+    pub fn sync_pool(&mut self, stats: &crate::kv::PoolStats, utilization: f64) {
+        self.prefix_shared_tokens = stats.shared_tokens;
+        self.prefix_prompt_tokens = stats.prompt_tokens;
+        self.kv_evictions = stats.evictions;
+        self.kv_cow_copies = stats.cow_copies;
+        self.kv_dedup_merges = stats.dedup_merges;
+        if utilization.is_finite() {
+            self.pool_utilization_peak = self.pool_utilization_peak.max(utilization);
+        }
+    }
+
     /// Decode-batch occupancy: mean batch width as a fraction of the
     /// policy's `max_active` slots.
     pub fn decode_occupancy(&self, max_active: usize) -> f64 {
@@ -131,15 +189,20 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} tokens={} tput={:.1} tok/s decode={:.1} tok/s \
-             width_mean={:.2} width_max={} kv_peak={:.1}KiB ttft_mean={:.1}ms \
-             ttft_p99={:.1}ms total_mean={:.1}ms",
+             width_mean={:.2} width_max={} prefill_width_mean={:.2} \
+             kv_peak={:.1}KiB pool_util_peak={:.2} prefix_hit={:.2} \
+             evictions={} ttft_mean={:.1}ms ttft_p99={:.1}ms total_mean={:.1}ms",
             self.requests_completed,
             self.tokens_generated,
             self.tokens_per_second(),
             self.decode_tokens_per_second(),
             self.mean_decode_width(),
             self.decode_width_max,
+            self.mean_prefill_width(),
             self.kv_bytes_peak as f64 / 1024.0,
+            self.pool_utilization_peak,
+            self.prefix_hit_rate(),
+            self.kv_evictions,
             self.ttft.mean().as_secs_f64() * 1e3,
             self.ttft.quantile(0.99).as_secs_f64() * 1e3,
             self.total_latency.mean().as_secs_f64() * 1e3,
@@ -176,6 +239,33 @@ mod tests {
         m.serve_time = Duration::from_secs(2);
         assert!((m.tokens_per_second() - 50.0).abs() < 1e-9);
         assert!(m.summary().contains("tokens=100"));
+    }
+
+    #[test]
+    fn prefill_and_pool_stats() {
+        let mut m = Metrics::default();
+        assert!(m.mean_prefill_width().is_nan());
+        assert!(m.prefix_hit_rate().is_nan());
+        m.record_prefill_batch(4);
+        m.record_prefill_batch(2);
+        assert_eq!(m.prefill_batches, 2);
+        assert_eq!(m.prefill_width_max, 4);
+        assert!((m.mean_prefill_width() - 3.0).abs() < 1e-9);
+        let stats = crate::kv::PoolStats {
+            shared_tokens: 16,
+            prompt_tokens: 64,
+            evictions: 3,
+            cow_copies: 1,
+            dedup_merges: 2,
+        };
+        m.sync_pool(&stats, 0.5);
+        m.sync_pool(&stats, 0.25);
+        assert!((m.prefix_hit_rate() - 0.25).abs() < 1e-9);
+        assert_eq!(m.kv_evictions, 3);
+        assert_eq!(m.kv_cow_copies, 1);
+        assert_eq!(m.kv_dedup_merges, 2);
+        assert!((m.pool_utilization_peak - 0.5).abs() < 1e-9, "peak must not regress");
+        assert!(m.summary().contains("prefix_hit=0.25"));
     }
 
     #[test]

@@ -1,16 +1,20 @@
 //! L3 serving coordinator.
 //!
-//! A vLLM-router-style inference front end over the compressed model:
-//! request queue → admission → continuous-batching scheduler → per-token
-//! decode rounds → responses with latency metrics. Python is never on
-//! this path; the model weights come from `artifacts/` and the compute
-//! is either the native Rust engine ([`crate::model`]) or the AOT
-//! PJRT executable ([`crate::runtime`]).
+//! A vLLM-style inference front end over the compressed model:
+//! request queue → block-budget admission → prefix attach + batched
+//! multi-prompt prefill → fused ragged decode rounds → responses with
+//! latency metrics. KV memory lives in the shared
+//! [`crate::kv::BlockPool`] (prefix sharing, copy-on-write, LRU
+//! eviction); the legacy per-sequence chunked-cache path survives as
+//! the benchmark baseline (`BatchPolicy::batched_decode = false`).
+//! Python is never on this path; the model weights come from
+//! `artifacts/` and the compute is either the native Rust engine
+//! ([`crate::model`]) or the AOT PJRT executable ([`crate::runtime`]).
 //!
 //! * [`request`] — request/response types.
 //! * [`batcher`] — admission queue and batch formation policy.
-//! * [`scheduler`] — the continuous-batching decode loop.
-//! * [`metrics`] — counters + latency histograms.
+//! * [`scheduler`] — the continuous-batching prefill/decode loop.
+//! * [`metrics`] — counters + latency histograms + pool stats.
 //! * [`engine`] — ties them together behind a thread-safe handle.
 
 pub mod batcher;

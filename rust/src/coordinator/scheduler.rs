@@ -1,29 +1,42 @@
-//! Continuous-batching scheduler.
+//! Continuous-batching scheduler over the shared KV block pool.
 //!
-//! Each scheduling **round**: admit + prefill a bounded burst of waiting
-//! requests, then decode one token for every active sequence in a
-//! **single ragged batch** ([`Model::decode_step`]): the last token of
-//! each sequence is stacked into one `[n_active, d]` activation matrix
-//! so every linear layer streams its (compressed) weights once per
-//! round instead of once per sequence — the memory-bound regime where
-//! SDQ's compressed formats pay off. Attention stays per-sequence
-//! (heterogeneous KV prefixes, parallel over `(seq, head)`). A
-//! per-sequence fallback (`BatchPolicy::batched_decode = false`) keeps
-//! the old path alive as the benchmark baseline. Completed sequences
-//! retire at the end of the round.
+//! Each scheduling **round** in the default paged mode:
 //!
-//! Admission budgets against *actual* KV residency ([`KvCache::bytes`])
-//! plus each waiting request's projected growth — caches are chunked
-//! and grow on demand, so the budget reflects real memory, not
-//! worst-case reservations.
+//! 1. **Admit** a bounded burst of waiting requests against the pool's
+//!    block budget: every active sequence is charged its worst-case
+//!    final footprint in blocks, so admitted work can always grow to
+//!    completion without exhausting the [`BlockPool`]. A request larger
+//!    than the whole budget is force-admitted when the engine is idle
+//!    (the pool's hard cap fits one `max_seq` sequence) — no livelock.
+//! 2. **Batched prefill**: every admitted prompt first attaches any
+//!    cached prefix blocks ([`BlockPool::attach_prefix`] — shared
+//!    prompt prefixes are *not recomputed*), then all prompt suffixes
+//!    run through **one** fused ragged forward
+//!    ([`Model::forward_paged`]): one GEMM per linear layer for the
+//!    whole admission burst, amortizing the (compressed) weight streams
+//!    at admission exactly as PR 1's fused decode amortizes them per
+//!    round. `BatchPolicy::batched_prefill = false` prefills one prompt
+//!    at a time as the A/B baseline.
+//! 3. **Fused decode**: one token for every active sequence in a single
+//!    ragged batch (same `forward_paged`, one-token slices).
+//! 4. **Retire** completed sequences, releasing their blocks — frozen
+//!    prefix blocks stay cached in the pool for future prompt hits
+//!    until LRU eviction reclaims them.
+//!
+//! `BatchPolicy::batched_decode = false` switches the whole scheduler
+//! to the legacy per-sequence baseline (private chunked [`KvCache`]s,
+//! one batch-1 forward per sequence, byte-budget admission) — the
+//! benchmark's comparison arm and a live equivalence check: greedy
+//! outputs are bit-identical across both modes.
 
 use std::time::Instant;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::request::{InFlight, Request, Response};
+use crate::kv::{BlockPool, BlockTable};
 use crate::model::generate::KvCache;
-use crate::model::Model;
+use crate::model::{Model, ModelConfig};
 use crate::util::par::par_chunks_mut;
 
 /// Scheduler over a (possibly compressed) model.
@@ -31,16 +44,23 @@ pub struct Scheduler<'m> {
     model: &'m Model,
     pub policy: BatchPolicy,
     active: Vec<InFlight>,
+    pool: BlockPool,
     pub metrics: Metrics,
 }
 
 impl<'m> Scheduler<'m> {
     pub fn new(model: &'m Model, policy: BatchPolicy) -> Self {
-        Scheduler { model, policy, active: Vec::new(), metrics: Metrics::default() }
+        let pool = BlockPool::new(&model.cfg, policy.kv_budget_bytes);
+        Scheduler { model, policy, active: Vec::new(), pool, metrics: Metrics::default() }
     }
 
     pub fn active(&self) -> usize {
         self.active.len()
+    }
+
+    /// The shared KV block pool (paged mode's memory substrate).
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
     }
 
     /// Whether any work remains (active or waiting).
@@ -48,15 +68,16 @@ impl<'m> Scheduler<'m> {
         !self.active.is_empty() || batcher.waiting() > 0
     }
 
-    /// Actual KV bytes resident across the active set.
+    /// Actual KV bytes resident: pool residency (paged) plus chunked
+    /// caches (legacy mode).
     pub fn kv_bytes_in_use(&self) -> usize {
-        self.active.iter().filter_map(|f| f.cache.as_ref()).map(|c| c.bytes()).sum()
+        self.pool.bytes_in_use()
+            + self.active.iter().filter_map(|f| f.cache.as_ref()).map(|c| c.bytes()).sum::<usize>()
     }
 
-    /// KV bytes charged against the admission budget: each active
-    /// sequence is charged the larger of its actual residency and its
-    /// admission-time projection, so caches growing *after* admission
-    /// can never push the active set past `kv_budget_bytes`.
+    /// Legacy mode: KV bytes charged against the admission budget —
+    /// each active sequence's actual residency or admission-time
+    /// projection, whichever is larger.
     pub fn kv_bytes_reserved(&self) -> usize {
         self.active
             .iter()
@@ -67,8 +88,8 @@ impl<'m> Scheduler<'m> {
             .sum()
     }
 
-    /// Projected eventual KV residency of a request: its (clamped)
-    /// prompt plus full decode budget, chunk-aligned.
+    /// Legacy mode: projected eventual KV residency of a request — its
+    /// (clamped) prompt plus full decode budget, chunk-aligned.
     pub fn projected_kv_bytes(&self, req: &Request) -> usize {
         let cfg = &self.model.cfg;
         let prompt = req.prompt.len().min(cfg.max_seq - 1);
@@ -76,14 +97,182 @@ impl<'m> Scheduler<'m> {
         KvCache::bytes_for_tokens(cfg, tokens)
     }
 
+    /// Paged mode: worst-case final footprint of a waiting request in
+    /// pool blocks (clamped prompt + full decode budget).
+    fn blocks_for_request(pool: &BlockPool, cfg: &ModelConfig, req: &Request) -> usize {
+        let prompt = req.prompt.len().min(cfg.max_seq - 1);
+        pool.blocks_for_tokens((prompt + req.max_new_tokens).min(cfg.max_seq))
+    }
+
+    /// Paged mode: blocks an active sequence is charged — its
+    /// worst-case final footprint, so growth can never exhaust the pool.
+    fn blocks_reserved(&self, f: &InFlight) -> usize {
+        let len = f.table.as_ref().map(|t| t.len()).unwrap_or(0);
+        self.pool.blocks_for_tokens((len + f.remaining()).min(self.model.cfg.max_seq))
+    }
+
     /// One scheduling round. Returns completed responses.
     pub fn round(&mut self, batcher: &mut Batcher) -> Vec<Response> {
+        if self.policy.batched_decode {
+            self.round_paged(batcher)
+        } else {
+            self.round_legacy(batcher)
+        }
+    }
+
+    // ---- paged serving (default) ----
+
+    fn round_paged(&mut self, batcher: &mut Batcher) -> Vec<Response> {
         let t0 = Instant::now();
-        // ---- admission + prefill ----
+        let model = self.model;
+
+        // ---- admission against pool free blocks ----
+        let reserved: usize = self.active.iter().map(|f| self.blocks_reserved(f)).sum();
+        let mut admitted = {
+            let pool = &self.pool;
+            let cfg = &model.cfg;
+            batcher.admit(&self.policy, self.active.len(), reserved, pool.budget_blocks(), |r| {
+                Self::blocks_for_request(pool, cfg, r)
+            })
+        };
+        if admitted.is_empty() && self.active.is_empty() {
+            // Over-budget head-of-queue: run it alone — the pool's hard
+            // cap guarantees one max_seq sequence always fits.
+            if let Some(f) = batcher.pop_front() {
+                admitted.push(f);
+            }
+        }
+
+        // ---- prefix attach + batched prefill ----
+        if !admitted.is_empty() {
+            let max_seq = model.cfg.max_seq;
+            let mut tables: Vec<BlockTable> = Vec::with_capacity(admitted.len());
+            let mut suffixes: Vec<Vec<u8>> = Vec::with_capacity(admitted.len());
+            for f in &mut admitted {
+                f.started = Some(Instant::now());
+                // Clamp over-long prompts to leave ≥1 slot for generation.
+                let keep = f.req.prompt.len().min(max_seq - 1);
+                let prompt = &f.req.prompt[f.req.prompt.len() - keep..];
+                let mut tb = BlockTable::new(max_seq);
+                let shared = self.pool.attach_prefix(&mut tb, prompt);
+                suffixes.push(prompt[shared..].to_vec());
+                tables.push(tb);
+            }
+            if self.policy.batched_prefill {
+                // One fused ragged forward per layer over every prompt
+                // admitted this round.
+                let logits = {
+                    let tok_slices: Vec<&[u8]> = suffixes.iter().map(|s| s.as_slice()).collect();
+                    let mut tb_refs: Vec<&mut BlockTable> = tables.iter_mut().collect();
+                    model.forward_paged(&tok_slices, &mut self.pool, &mut tb_refs)
+                };
+                for (i, f) in admitted.iter_mut().enumerate() {
+                    let tok = model.sample_row(&logits, i, f.req.temperature, &mut f.rng);
+                    f.generated.push(tok);
+                    f.first_token = Some(Instant::now());
+                }
+                self.metrics.record_prefill_batch(admitted.len());
+            } else {
+                // Per-prompt prefill baseline (A/B lever): same paged
+                // machinery, weights re-streamed per prompt.
+                for (i, f) in admitted.iter_mut().enumerate() {
+                    let logits = model.forward_paged(
+                        &[suffixes[i].as_slice()],
+                        &mut self.pool,
+                        &mut [&mut tables[i]],
+                    );
+                    let tok = model.sample_row(&logits, 0, f.req.temperature, &mut f.rng);
+                    f.generated.push(tok);
+                    f.first_token = Some(Instant::now());
+                    self.metrics.record_prefill_batch(1);
+                }
+            }
+            self.metrics.prefill_tokens += suffixes.iter().map(|s| s.len() as u64).sum::<u64>();
+            for (f, tb) in admitted.iter_mut().zip(tables) {
+                f.table = Some(tb);
+            }
+            self.active.append(&mut admitted);
+        }
+
+        // ---- one fused decode batch across all active sequences ----
+        let td = Instant::now();
+        let decode_idx: Vec<usize> = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.decodable())
+            .map(|(i, _)| i)
+            .collect();
+        if !decode_idx.is_empty() {
+            let last: Vec<u8> = decode_idx
+                .iter()
+                .map(|&i| *self.active[i].generated.last().expect("has first token"))
+                .collect();
+            let logits = {
+                // Disjoint &mut borrows of each selected sequence's
+                // block table (indices are ascending).
+                let mut tbs: Vec<&mut BlockTable> = Vec::with_capacity(decode_idx.len());
+                let mut rest: &mut [InFlight] = &mut self.active;
+                let mut base = 0usize;
+                for &i in &decode_idx {
+                    let (head, tail) = std::mem::take(&mut rest).split_at_mut(i - base + 1);
+                    tbs.push(head[i - base].table.as_mut().expect("prefilled"));
+                    rest = tail;
+                    base = i + 1;
+                }
+                let tok_slices: Vec<&[u8]> = last.iter().map(std::slice::from_ref).collect();
+                model.forward_paged(&tok_slices, &mut self.pool, &mut tbs)
+            };
+            for (row, &i) in decode_idx.iter().enumerate() {
+                let f = &mut self.active[i];
+                let tok = model.sample_row(&logits, row, f.req.temperature, &mut f.rng);
+                f.generated.push(tok);
+            }
+            self.metrics.record_decode_batch(decode_idx.len());
+        }
+        self.metrics.decode_time += td.elapsed();
+        self.metrics.decode_rounds += 1;
+        let resident = self.kv_bytes_in_use();
+        self.metrics.kv_bytes_peak = self.metrics.kv_bytes_peak.max(resident);
+        self.metrics.sync_pool(&self.pool.stats, self.pool.utilization());
+
+        // ---- retire completed ----
+        let mut done = Vec::new();
+        let mut still = Vec::with_capacity(self.active.len());
+        for mut f in self.active.drain(..) {
+            let out_of_kv = f.table.as_ref().map(|t| t.remaining() == 0).unwrap_or(false);
+            if f.remaining() == 0 || out_of_kv {
+                if let Some(tb) = f.table.take() {
+                    self.pool.release(tb);
+                }
+                let resp = f.finish();
+                self.metrics.requests_completed += 1;
+                self.metrics.tokens_generated += resp.tokens.len() as u64;
+                self.metrics.ttft.record(resp.timing.ttft);
+                self.metrics.total_latency.record(resp.timing.total);
+                done.push(resp);
+            } else {
+                still.push(f);
+            }
+        }
+        self.active = still;
+        self.metrics.serve_time += t0.elapsed();
+        done
+    }
+
+    // ---- legacy per-sequence baseline (batched_decode = false) ----
+
+    fn round_legacy(&mut self, batcher: &mut Batcher) -> Vec<Response> {
+        let t0 = Instant::now();
+        // ---- admission + per-request prefill ----
         let kv_reserved = self.kv_bytes_reserved();
-        let mut admitted = batcher.admit(&self.policy, self.active.len(), kv_reserved, |r| {
-            self.projected_kv_bytes(r)
-        });
+        let mut admitted = batcher.admit(
+            &self.policy,
+            self.active.len(),
+            kv_reserved,
+            self.policy.kv_budget_bytes,
+            |r| self.projected_kv_bytes(r),
+        );
         for f in &mut admitted {
             f.kv_projected = self.projected_kv_bytes(&f.req);
             f.started = Some(Instant::now());
@@ -97,67 +286,29 @@ impl<'m> Scheduler<'m> {
             f.generated.push(tok);
             f.first_token = Some(Instant::now());
             f.cache = Some(cache);
+            self.metrics.record_prefill_batch(1);
         }
         self.active.append(&mut admitted);
 
-        // ---- decode one token for all active sequences ----
+        // ---- decode one token per sequence, parallel across sequences
+        // (each batch-1 GEMM re-streams the weights — the baseline the
+        // fused path is measured against) ----
         let model = self.model;
         let td = Instant::now();
-        if self.policy.batched_decode {
-            // One fused GEMM per layer per round across the whole
-            // ragged batch.
-            let decode_idx: Vec<usize> = self
-                .active
-                .iter()
-                .enumerate()
-                .filter(|(_, f)| f.decodable())
-                .map(|(i, _)| i)
-                .collect();
-            if !decode_idx.is_empty() {
-                let last: Vec<u8> = decode_idx
-                    .iter()
-                    .map(|&i| *self.active[i].generated.last().expect("has first token"))
-                    .collect();
-                let logits = {
-                    // Disjoint &mut borrows of each selected sequence's
-                    // cache (indices are ascending).
-                    let mut caches: Vec<&mut KvCache> = Vec::with_capacity(decode_idx.len());
-                    let mut rest: &mut [InFlight] = &mut self.active;
-                    let mut base = 0usize;
-                    for &i in &decode_idx {
-                        let (head, tail) =
-                            std::mem::take(&mut rest).split_at_mut(i - base + 1);
-                        caches.push(head[i - base].cache.as_mut().expect("prefilled"));
-                        rest = tail;
-                        base = i + 1;
-                    }
-                    model.decode_step(&last, &mut caches)
-                };
-                for (row, &i) in decode_idx.iter().enumerate() {
-                    let f = &mut self.active[i];
-                    let tok = model.sample_row(&logits, row, f.req.temperature, &mut f.rng);
-                    f.generated.push(tok);
-                }
-                self.metrics.record_decode_batch(decode_idx.len());
+        let width = self.active.iter().filter(|f| f.decodable()).count();
+        par_chunks_mut(&mut self.active, 1, |_i, slot| {
+            let f = &mut slot[0];
+            if !f.decodable() {
+                return;
             }
-        } else {
-            // Per-sequence baseline: one batch-1 forward per sequence,
-            // parallel across sequences (each GEMM re-streams weights).
-            let width = self.active.iter().filter(|f| f.decodable()).count();
-            par_chunks_mut(&mut self.active, 1, |_i, slot| {
-                let f = &mut slot[0];
-                if !f.decodable() {
-                    return;
-                }
-                let cache = f.cache.as_mut().expect("prefilled");
-                let last = *f.generated.last().expect("has first token");
-                let logits = model.forward_cached(&[last], cache);
-                let tok = model.sample(&logits, f.req.temperature, &mut f.rng);
-                f.generated.push(tok);
-            });
-            for _ in 0..width {
-                self.metrics.record_decode_batch(1);
-            }
+            let cache = f.cache.as_mut().expect("prefilled");
+            let last = *f.generated.last().expect("has first token");
+            let logits = model.forward_cached(&[last], cache);
+            let tok = model.sample(&logits, f.req.temperature, &mut f.rng);
+            f.generated.push(tok);
+        });
+        for _ in 0..width {
+            self.metrics.record_decode_batch(1);
         }
         self.metrics.decode_time += td.elapsed();
         self.metrics.decode_rounds += 1;
@@ -168,8 +319,7 @@ impl<'m> Scheduler<'m> {
         let mut done = Vec::new();
         let mut still = Vec::with_capacity(self.active.len());
         for f in self.active.drain(..) {
-            let out_of_cache =
-                f.cache.as_ref().map(|c| c.remaining() == 0).unwrap_or(false);
+            let out_of_cache = f.cache.as_ref().map(|c| c.remaining() == 0).unwrap_or(false);
             if f.remaining() == 0 || out_of_cache {
                 let resp = f.finish();
                 self.metrics.requests_completed += 1;
@@ -200,6 +350,7 @@ impl<'m> Scheduler<'m> {
 mod tests {
     use super::*;
     use crate::coordinator::request::Request;
+    use crate::kv::KV_BLOCK_TOKENS;
     use crate::model::testutil::tiny_model;
     use crate::model::Arch;
 
@@ -262,8 +413,8 @@ mod tests {
     #[test]
     fn per_seq_fallback_matches_batched() {
         // The A/B lever must not change tokens: greedy output is
-        // bit-identical between the fused ragged batch and the
-        // per-sequence baseline.
+        // bit-identical between the paged fused engine and the legacy
+        // per-sequence chunked-cache baseline.
         let model = tiny_model(Arch::Llama, 5);
         let run = |batched: bool| {
             let policy = BatchPolicy { batched_decode: batched, ..Default::default() };
@@ -272,6 +423,25 @@ mod tests {
             for i in 0..5u64 {
                 let plen = 1 + (i as usize * 2) % 7;
                 batcher.enqueue(Request::new(i, vec![(65 + i) as u8; plen], 3 + i as usize));
+            }
+            let mut resp = sched.run_to_completion(&mut batcher);
+            resp.sort_by_key(|r| r.id);
+            resp.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn per_prompt_prefill_matches_batched_prefill() {
+        // The prefill A/B lever must not change tokens either.
+        let model = tiny_model(Arch::Gpt, 14);
+        let run = |batched_prefill: bool| {
+            let policy = BatchPolicy { batched_prefill, ..Default::default() };
+            let mut sched = Scheduler::new(&model, policy);
+            let mut batcher = Batcher::new();
+            for i in 0..6u64 {
+                let plen = 2 + (i as usize * 3) % 9;
+                batcher.enqueue(Request::new(i, vec![(70 + i) as u8; plen], 4));
             }
             let mut resp = sched.run_to_completion(&mut batcher);
             resp.sort_by_key(|r| r.id);
@@ -297,15 +467,22 @@ mod tests {
         assert!(m.mean_decode_width() > 1.0);
         assert!(m.kv_bytes_peak > 0);
         assert!(!m.decode_time.is_zero());
+        // Prefill fused per admission burst: widths 4 then 2.
+        assert_eq!(m.prefill_batches, 2);
+        assert_eq!(m.prefill_width_max, 4);
+        assert!((m.mean_prefill_width() - 3.0).abs() < 1e-9);
     }
 
     #[test]
     fn admission_budgets_on_projected_kv() {
         let model = tiny_model(Arch::Gpt, 7);
-        // Budget fits exactly two projected caches (prompt 4 + 8 new).
+        // Budget fits exactly two projected caches (prompt 4 + 8 new →
+        // one pool block each; one block and one chunk are the same
+        // bytes at matching granularity).
         let one = KvCache::bytes_for_tokens(&model.cfg, 4 + 8);
         let policy = BatchPolicy { kv_budget_bytes: 2 * one, ..Default::default() };
         let mut sched = Scheduler::new(&model, policy);
+        assert_eq!(sched.pool().budget_blocks(), 2);
         let mut batcher = Batcher::new();
         for i in 0..4 {
             batcher.enqueue(Request::new(i, vec![65u8; 4], 8));
@@ -319,10 +496,10 @@ mod tests {
 
     #[test]
     fn budget_holds_across_cache_growth() {
-        // Requests whose caches grow over several chunks after
-        // admission: the reserved-projection accounting must keep both
-        // the active count and the *actual* residency under budget in
-        // every round, not just at admission time.
+        // Requests whose KV grows over several blocks after admission:
+        // worst-case block reservations must keep both the active count
+        // and the actual residency under budget in every round, not
+        // just at admission time.
         let model = tiny_model(Arch::Gpt, 8);
         let one = KvCache::bytes_for_tokens(&model.cfg, 4 + 40);
         let policy = BatchPolicy { kv_budget_bytes: 2 * one, ..Default::default() };
@@ -335,12 +512,62 @@ mod tests {
         while sched.has_work(&batcher) && rounds < 200 {
             let _ = sched.round(&mut batcher);
             rounds += 1;
-            assert!(sched.active() <= 2, "admission exceeded the projection budget");
+            assert!(sched.active() <= 2, "admission exceeded the block budget");
             assert!(
                 sched.kv_bytes_in_use() <= policy.kv_budget_bytes,
                 "actual KV residency broke the budget"
             );
         }
         assert_eq!(sched.metrics.requests_completed, 4);
+    }
+
+    #[test]
+    fn oversized_request_is_force_admitted() {
+        // A request whose projection exceeds the whole budget must
+        // still run (alone) instead of livelocking the queue.
+        let model = tiny_model(Arch::Gpt, 15);
+        let policy = BatchPolicy {
+            kv_budget_bytes: 1, // less than one block
+            ..Default::default()
+        };
+        let mut sched = Scheduler::new(&model, policy);
+        let mut batcher = Batcher::new();
+        batcher.enqueue(Request::new(0, vec![65u8; 40], 10));
+        batcher.enqueue(Request::new(1, vec![66u8; 40], 10));
+        let all = sched.run_to_completion(&mut batcher);
+        assert_eq!(all.len(), 2, "oversized requests must drain one at a time");
+        for r in &all {
+            assert_eq!(r.tokens.len(), 10);
+        }
+    }
+
+    #[test]
+    fn sequential_shared_prefix_hits_cache() {
+        // Request B arrives after request A completed; their prompts
+        // share a full block of prefix → B attaches A's cached block
+        // instead of recomputing it, and the answer is unchanged.
+        let model = tiny_model(Arch::Llama, 16);
+        let bt = KV_BLOCK_TOKENS;
+        let mut prefix: Vec<u8> = (0..bt as u8).map(|j| 100 + j).collect();
+        let mut prompt_a = prefix.clone();
+        prompt_a.extend_from_slice(b"AAAA");
+        let mut prompt_b = std::mem::take(&mut prefix);
+        prompt_b.extend_from_slice(b"BBBB");
+        let want_b = model.generate(&prompt_b, 5, 0.0, 1);
+
+        let mut sched = Scheduler::new(&model, BatchPolicy::default());
+        let mut batcher = Batcher::new();
+        batcher.enqueue(Request::new(0, prompt_a, 5));
+        sched.run_to_completion(&mut batcher);
+        let single_peak = sched.metrics.kv_bytes_peak;
+        batcher.enqueue(Request::new(1, prompt_b, 5));
+        let resp = sched.run_to_completion(&mut batcher);
+        assert_eq!(resp[0].tokens, want_b, "shared prefix must not change output");
+        assert_eq!(sched.metrics.prefix_shared_tokens, bt as u64);
+        assert!(sched.metrics.prefix_hit_rate() > 0.0);
+        assert!(
+            sched.metrics.kv_bytes_peak < 2 * single_peak,
+            "sharing must keep peak residency under 2× a single request"
+        );
     }
 }

@@ -1,0 +1,71 @@
+//! Paged KV-cache subsystem: a shared, block-granular memory substrate
+//! for the serving engine (vLLM-style).
+//!
+//! PR 1 gave every request a private chunked `KvCache`; identical prompt
+//! prefixes were duplicated and admission had to reject work even when
+//! most resident bytes were redundant. This module replaces that
+//! per-consumer monolith with one decomposed, shared resource:
+//!
+//! * [`BlockPool`] — a pool of fixed-size KV **blocks**
+//!   ([`KV_BLOCK_TOKENS`] tokens × all layers × K+V). Blocks are
+//!   ref-counted and, once full, **content-addressed**: a frozen block is
+//!   keyed by `(parent block, parent generation, its token bytes)`, so
+//!   two sequences with the same prompt prefix resolve to the *same*
+//!   physical blocks. Keys chain through parents, which makes the
+//!   address exact (no hash collisions — lookups compare the actual
+//!   token bytes) and position-aware for free.
+//! * [`BlockTable`] — a sequence's indirection layer: the ordered list
+//!   of block ids its tokens live in, plus its committed length and
+//!   token history (the source of freeze keys).
+//!
+//! **Prefix sharing.** At admission, [`BlockPool::attach_prefix`] walks a
+//! prompt block-by-block down the content index; every hit attaches the
+//! cached block (refcount +1) instead of recomputing its KV, and prefill
+//! starts at the first miss. Sharing is capped at `prompt_len − 1`
+//! tokens so at least one position is always prefilled (its logits seed
+//! sampling). Identical prompts admitted in the *same* round converge at
+//! commit time instead: freezing a block whose key is already indexed
+//! rewrites the table to the canonical block and frees the duplicate.
+//!
+//! **Copy-on-write.** Only full (frozen) blocks are shared between
+//! tables — with one exception: [`BlockPool::fork`] clones a table and
+//! bumps refcounts including the partial tail. The first append through
+//! either fork then triggers a private copy of the tail block
+//! ([`BlockPool::prepare_tokens`]), so divergence after a shared prefix
+//! never perturbs the sibling.
+//!
+//! **Eviction.** Releasing a finished sequence decrements refcounts;
+//! frozen blocks that drop to zero stay resident *and indexed* (future
+//! prompts can still hit them) until the pool needs the space: block
+//! allocation takes a free slot first, grows up to the hard cap second,
+//! and evicts the least-recently-used unreferenced cached block last.
+//! Generation counters make eviction safe for chained keys: reusing a
+//! slot bumps its generation, so stale child keys (which embed the
+//! parent's generation) can never match again.
+//!
+//! **Budgets.** The pool converts the coordinator's byte budget into
+//! `budget_blocks` for admission; a hard allocation cap of
+//! `max(budget_blocks, blocks(max_seq))` guarantees a forced single
+//! admission can always run to completion (no livelock on a budget
+//! smaller than one request). [`BlockPool::bytes_in_use`] is logical
+//! residency — referenced plus cached blocks — the number the
+//! prefix-sharing acceptance test bounds.
+//!
+//! The model reads K/V through tables with [`BlockPool::layer_view`]:
+//! per layer, per sequence, a list of borrowed per-block row slices
+//! (gather-free — attention walks segments in place, exactly like the
+//! contiguous borrow it used before).
+
+pub mod pool;
+pub mod table;
+
+pub use pool::{BlockPool, PoolStats};
+pub use table::BlockTable;
+
+/// Tokens per KV block. Matches the chunked cache's grow quantum so the
+/// paged and chunked paths have comparable allocation granularity; a
+/// power of two keeps `pos / block` and `pos % block` cheap.
+pub const KV_BLOCK_TOKENS: usize = 16;
+
+/// Sentinel parent id for the first block of a sequence.
+pub(crate) const NO_PARENT: usize = usize::MAX;

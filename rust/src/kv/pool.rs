@@ -1,0 +1,658 @@
+//! The shared KV block pool: allocation, content-addressed prefix
+//! sharing, copy-on-write, and LRU eviction (see module docs in
+//! [`super`]).
+
+use std::collections::HashMap;
+
+use super::table::BlockTable;
+use super::NO_PARENT;
+use crate::model::ModelConfig;
+
+/// Content address of a frozen (full) block: the parent block pins the
+/// entire prefix before this block (parent ids are themselves deduped,
+/// and the generation counter invalidates the key if the parent slot is
+/// ever reused), and `tokens` are this block's own token bytes. Exact —
+/// equality compares real bytes, so there are no collision corruptions.
+#[derive(Clone, Debug, Hash, PartialEq, Eq)]
+struct BlockKey {
+    parent: usize,
+    parent_gen: u64,
+    tokens: Vec<u8>,
+}
+
+/// One fixed-size KV block: `block_tokens` rows of K and V for **every**
+/// layer (layer-major: `k[li * block_tokens * d + row * d ..][..d]`).
+/// Holding all layers in one refcounted unit is what makes a block the
+/// unit of prefix sharing — a token range's KV is shared or not as a
+/// whole.
+#[derive(Debug)]
+struct Block {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Tables currently referencing this block. 0 ⇒ free-listed (if
+    /// unkeyed) or cached awaiting reuse/eviction (if keyed).
+    refs: u32,
+    /// Bumped every time the slot is (re)allocated; embedded in child
+    /// keys so stale chains can never match after reuse.
+    gen: u64,
+    /// Set when the block is frozen into the content index.
+    key: Option<BlockKey>,
+    /// LRU stamp among cached (refs == 0) blocks.
+    last_used: u64,
+}
+
+/// Pool counters the coordinator surfaces as serving metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Prompt tokens served straight from cached blocks at admission.
+    pub shared_tokens: u64,
+    /// Total prompt tokens seen by `attach_prefix`.
+    pub prompt_tokens: u64,
+    /// Cached blocks evicted to make room or trim to budget.
+    pub evictions: u64,
+    /// Copy-on-write block copies (forked tables diverging).
+    pub cow_copies: u64,
+    /// Duplicate blocks merged at freeze time (identical prompts
+    /// admitted in the same round).
+    pub dedup_merges: u64,
+}
+
+impl PoolStats {
+    /// Fraction of prompt tokens that hit the prefix cache.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prompt_tokens == 0 {
+            return f64::NAN;
+        }
+        self.shared_tokens as f64 / self.prompt_tokens as f64
+    }
+}
+
+/// Shared, ref-counted KV block pool (see [`super`] for the full
+/// design).
+#[derive(Debug)]
+pub struct BlockPool {
+    block_tokens: usize,
+    d: usize,
+    n_layer: usize,
+    /// Admission budget in blocks (derived from the byte budget).
+    budget_blocks: usize,
+    /// Hard allocation cap: ≥ one `max_seq` sequence so a forced single
+    /// admission can always complete.
+    max_blocks: usize,
+    blocks: Vec<Block>,
+    free: Vec<usize>,
+    index: HashMap<BlockKey, usize>,
+    tick: u64,
+    pub stats: PoolStats,
+}
+
+impl BlockPool {
+    /// Pool for `cfg` under `budget_bytes`, with the default
+    /// [`super::KV_BLOCK_TOKENS`] block size.
+    pub fn new(cfg: &ModelConfig, budget_bytes: usize) -> Self {
+        Self::with_block_tokens(cfg, budget_bytes, super::KV_BLOCK_TOKENS)
+    }
+
+    pub fn with_block_tokens(cfg: &ModelConfig, budget_bytes: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0);
+        let block_bytes = 2 * cfg.n_layer * block_tokens * cfg.d_model * 4;
+        let budget_blocks = (budget_bytes / block_bytes).max(1);
+        let one_seq = cfg.max_seq.div_ceil(block_tokens);
+        BlockPool {
+            block_tokens,
+            d: cfg.d_model,
+            n_layer: cfg.n_layer,
+            budget_blocks,
+            max_blocks: budget_blocks.max(one_seq),
+            blocks: Vec::new(),
+            free: Vec::new(),
+            index: HashMap::new(),
+            tick: 0,
+            stats: PoolStats::default(),
+        }
+    }
+
+    // ---- geometry & accounting ----
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Bytes of one block (K + V, all layers, fp32).
+    pub fn block_bytes(&self) -> usize {
+        2 * self.n_layer * self.block_tokens * self.d * 4
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Admission budget in blocks.
+    pub fn budget_blocks(&self) -> usize {
+        self.budget_blocks
+    }
+
+    /// Blocks currently resident: referenced by tables **or** cached for
+    /// prefix reuse. Free-listed slots don't count.
+    pub fn blocks_in_use(&self) -> usize {
+        self.blocks.len() - self.free.len()
+    }
+
+    /// Logical KV residency in bytes (referenced + cached blocks).
+    pub fn bytes_in_use(&self) -> usize {
+        self.blocks_in_use() * self.block_bytes()
+    }
+
+    /// Residency as a fraction of the admission budget.
+    pub fn utilization(&self) -> f64 {
+        self.blocks_in_use() as f64 / self.budget_blocks as f64
+    }
+
+    /// Cached blocks reclaimable on demand (frozen, unreferenced).
+    pub fn evictable_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| b.refs == 0 && b.key.is_some()).count()
+    }
+
+    // ---- allocation ----
+
+    /// Claim a block slot: free list first, grow while under the
+    /// admission budget second, evict the LRU cached block third, and —
+    /// as the forced-admission safety valve — grow up to the hard cap
+    /// last. Panics if every block is referenced; admission control must
+    /// make that unreachable.
+    fn alloc_block(&mut self) -> usize {
+        let id = if let Some(id) = self.free.pop() {
+            id
+        } else if self.blocks.len() < self.budget_blocks {
+            self.grow_one()
+        } else if let Some(id) = self.evict_one() {
+            id
+        } else if self.blocks.len() < self.max_blocks {
+            self.grow_one()
+        } else {
+            panic!(
+                "BlockPool exhausted ({} blocks, all referenced) — admission \
+                 control must reserve growth before it happens",
+                self.max_blocks
+            );
+        };
+        let b = &mut self.blocks[id];
+        debug_assert_eq!(b.refs, 0);
+        debug_assert!(b.key.is_none());
+        b.refs = 1;
+        b.gen += 1;
+        id
+    }
+
+    fn grow_one(&mut self) -> usize {
+        let n = self.block_tokens * self.d * self.n_layer;
+        self.blocks.push(Block {
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            refs: 0,
+            gen: 0,
+            key: None,
+            last_used: 0,
+        });
+        self.blocks.len() - 1
+    }
+
+    /// Drop the least-recently-used cached block from the content index
+    /// and return its (refs == 0, unkeyed) slot. `None` when nothing is
+    /// evictable.
+    ///
+    /// Linear scan by design: eviction only runs once the pool is at
+    /// its block budget, and a scan keeps every other path free of
+    /// LRU-list bookkeeping. Swap in an intrusive list if profiles ever
+    /// show retirement-time trims on the hot path.
+    fn evict_one(&mut self) -> Option<usize> {
+        let id = self
+            .blocks
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.refs == 0 && b.key.is_some())
+            .min_by_key(|(_, b)| b.last_used)
+            .map(|(i, _)| i)?;
+        let key = self.blocks[id].key.take().expect("evictable blocks are keyed");
+        // The index may point at a different (canonical) block for this
+        // key only if we never indexed this one — but unindexed blocks
+        // carry no key, so the entry is ours.
+        self.index.remove(&key);
+        self.stats.evictions += 1;
+        Some(id)
+    }
+
+    // ---- the sequence lifecycle ----
+
+    /// Walk `prompt` down the content index and attach every leading
+    /// full block already resident, bumping refcounts instead of
+    /// recomputing KV. Returns the shared token count (always a block
+    /// multiple, and < `prompt.len()` so at least one token is left to
+    /// prefill). The table must be fresh.
+    pub fn attach_prefix(&mut self, table: &mut BlockTable, prompt: &[u8]) -> usize {
+        assert!(table.len == 0 && table.blocks.is_empty(), "attach needs a fresh table");
+        let bt = self.block_tokens;
+        // Never share the whole prompt: the last token must be prefilled
+        // to produce the logits that seed sampling.
+        let max_share = (prompt.len().saturating_sub(1) / bt) * bt;
+        let mut shared = 0;
+        let (mut parent, mut parent_gen) = (NO_PARENT, 0u64);
+        while shared < max_share {
+            let key =
+                BlockKey { parent, parent_gen, tokens: prompt[shared..shared + bt].to_vec() };
+            match self.index.get(&key) {
+                Some(&id) => {
+                    self.blocks[id].refs += 1;
+                    table.blocks.push(id);
+                    table.tokens.extend_from_slice(&key.tokens);
+                    shared += bt;
+                    parent = id;
+                    parent_gen = self.blocks[id].gen;
+                }
+                None => break,
+            }
+        }
+        table.len = shared;
+        self.stats.shared_tokens += shared as u64;
+        self.stats.prompt_tokens += prompt.len() as u64;
+        shared
+    }
+
+    /// Make room for `n_new` tokens after `table.len`: allocate every
+    /// block the new rows will land in and copy-on-write a shared
+    /// partial tail (forked tables). Called once per forward step, so
+    /// the per-layer write loop never allocates or re-checks ownership.
+    pub fn prepare_tokens(&mut self, table: &mut BlockTable, n_new: usize) {
+        let bt = self.block_tokens;
+        for pos in table.len..table.len + n_new {
+            let bi = pos / bt;
+            if bi == table.blocks.len() {
+                let id = self.alloc_block();
+                table.blocks.push(id);
+            } else if self.blocks[table.blocks[bi]].refs > 1 {
+                // Copy-on-write: give this table a private copy of the
+                // shared tail before the first new row lands in it.
+                let src = table.blocks[bi];
+                let dst = self.alloc_block();
+                let rows = table.len - bi * bt;
+                debug_assert!(rows <= bt);
+                self.copy_rows(src, dst, rows);
+                self.blocks[src].refs -= 1;
+                table.blocks[bi] = dst;
+                self.stats.cow_copies += 1;
+            }
+        }
+    }
+
+    /// Copy the first `rows` committed rows of every layer from block
+    /// `src` to block `dst`.
+    fn copy_rows(&mut self, src: usize, dst: usize, rows: usize) {
+        debug_assert_ne!(src, dst);
+        let (d, bt) = (self.d, self.block_tokens);
+        let (lo, hi, src_is_lo) = if src < dst { (src, dst, true) } else { (dst, src, false) };
+        let (head, tail) = self.blocks.split_at_mut(hi);
+        let (a, b) = (&mut head[lo], &mut tail[0]);
+        let (from, to) = if src_is_lo { (a, b) } else { (b, a) };
+        for li in 0..self.n_layer {
+            let base = li * bt * d;
+            to.k[base..base + rows * d].copy_from_slice(&from.k[base..base + rows * d]);
+            to.v[base..base + rows * d].copy_from_slice(&from.v[base..base + rows * d]);
+        }
+    }
+
+    /// Stage the K/V row for layer `li` at absolute position `pos`
+    /// (which [`Self::prepare_tokens`] must already have made room for).
+    pub fn write_row(&mut self, table: &BlockTable, li: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let (d, bt) = (self.d, self.block_tokens);
+        debug_assert_eq!(k.len(), d);
+        debug_assert_eq!(v.len(), d);
+        let id = table.blocks[pos / bt];
+        let b = &mut self.blocks[id];
+        debug_assert_eq!(b.refs, 1, "staged writes require exclusive ownership");
+        let base = li * bt * d + (pos % bt) * d;
+        b.k[base..base + d].copy_from_slice(k);
+        b.v[base..base + d].copy_from_slice(v);
+    }
+
+    /// Commit `toks` (the tokens whose rows were just written), freezing
+    /// every block that became full into the content index. Freezing a
+    /// key that is already indexed merges onto the canonical block and
+    /// frees ours — identical prompts admitted in the same round
+    /// converge here.
+    pub fn commit(&mut self, table: &mut BlockTable, toks: &[u8]) {
+        let bt = self.block_tokens;
+        table.tokens.extend_from_slice(toks);
+        let old_len = table.len;
+        table.len += toks.len();
+        debug_assert_eq!(table.tokens.len(), table.len);
+        for bi in old_len / bt..table.len / bt {
+            self.freeze_block(table, bi);
+        }
+    }
+
+    fn freeze_block(&mut self, table: &mut BlockTable, bi: usize) {
+        let bt = self.block_tokens;
+        let id = table.blocks[bi];
+        if self.blocks[id].key.is_some() {
+            return; // already frozen (shared via fork, committed twice)
+        }
+        let (parent, parent_gen) = if bi == 0 {
+            (NO_PARENT, 0)
+        } else {
+            let p = table.blocks[bi - 1];
+            (p, self.blocks[p].gen)
+        };
+        let key =
+            BlockKey { parent, parent_gen, tokens: table.tokens[bi * bt..(bi + 1) * bt].to_vec() };
+        match self.index.get(&key) {
+            None => {
+                self.index.insert(key.clone(), id);
+                self.blocks[id].key = Some(key);
+            }
+            Some(&canonical) => {
+                // Same parent chain + same tokens ⇒ bit-identical KV
+                // content; fold onto the canonical block.
+                debug_assert_ne!(canonical, id);
+                self.blocks[canonical].refs += 1;
+                table.blocks[bi] = canonical;
+                let b = &mut self.blocks[id];
+                b.refs -= 1;
+                if b.refs == 0 {
+                    self.free.push(id);
+                }
+                self.stats.dedup_merges += 1;
+            }
+        }
+    }
+
+    /// Clone a table, sharing all its blocks (refcount +1 each,
+    /// including a partial tail — the copy-on-write case).
+    pub fn fork(&mut self, table: &BlockTable) -> BlockTable {
+        for &id in &table.blocks {
+            self.blocks[id].refs += 1;
+        }
+        table.clone()
+    }
+
+    /// Return a finished sequence's blocks. Frozen blocks that drop to
+    /// zero references stay cached (and indexed) for future prefix hits;
+    /// unkeyed partials go straight to the free list. Afterwards,
+    /// residency is trimmed back under the admission budget by evicting
+    /// LRU cached blocks.
+    pub fn release(&mut self, table: BlockTable) {
+        for &id in table.blocks.iter().rev() {
+            let b = &mut self.blocks[id];
+            debug_assert!(b.refs > 0);
+            b.refs -= 1;
+            if b.refs == 0 {
+                self.tick += 1;
+                b.last_used = self.tick;
+                if b.key.is_none() {
+                    self.free.push(id);
+                }
+            }
+        }
+        while self.blocks_in_use() > self.budget_blocks {
+            match self.evict_one() {
+                Some(id) => self.free.push(id),
+                None => break,
+            }
+        }
+    }
+
+    /// Borrowed K/V row segments for layer `li`, covering the first
+    /// `upto` tokens of the sequence — one `(rows × d)` slice per block,
+    /// gather-free. `upto` may exceed `table.len` by the rows staged in
+    /// the current forward step.
+    pub fn layer_view<'a>(
+        &'a self,
+        table: &BlockTable,
+        li: usize,
+        upto: usize,
+    ) -> (Vec<&'a [f32]>, Vec<&'a [f32]>) {
+        let (d, bt) = (self.d, self.block_tokens);
+        let nb = upto.div_ceil(bt);
+        debug_assert!(nb <= table.blocks.len(), "view past prepared blocks");
+        let mut ks = Vec::with_capacity(nb);
+        let mut vs = Vec::with_capacity(nb);
+        for bi in 0..nb {
+            let rows = (upto - bi * bt).min(bt);
+            let b = &self.blocks[table.blocks[bi]];
+            let base = li * bt * d;
+            ks.push(&b.k[base..base + rows * d]);
+            vs.push(&b.v[base..base + rows * d]);
+        }
+        (ks, vs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Arch;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "pool-test".into(),
+            arch: Arch::Gpt,
+            d_model: 8,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 16,
+            vocab: 256,
+            max_seq: 64,
+            eps: 1e-5,
+            rope_theta: 10000.0,
+        }
+    }
+
+    /// Pool with a 4-token block (small enough to cross boundaries fast)
+    /// and room for `budget` blocks.
+    fn pool(budget: usize) -> BlockPool {
+        let c = cfg();
+        let bb = 2 * c.n_layer * 4 * c.d_model * 4;
+        BlockPool::with_block_tokens(&c, budget * bb, 4)
+    }
+
+    /// Drive a table through `toks` as the model would: prepare, write
+    /// one distinctive row per (layer, pos), commit.
+    fn run_tokens(p: &mut BlockPool, t: &mut BlockTable, toks: &[u8]) {
+        p.prepare_tokens(t, toks.len());
+        let d = 8;
+        for (j, tok) in toks.iter().enumerate() {
+            let pos = t.len() + j;
+            for li in 0..2 {
+                let row = vec![(*tok as f32) + li as f32 * 0.5; d];
+                let vrow = vec![-((*tok as f32) + li as f32 * 0.5); d];
+                p.write_row(t, li, pos, &row, &vrow);
+            }
+        }
+        p.commit(t, toks);
+    }
+
+    #[test]
+    fn alloc_write_view_roundtrip() {
+        let mut p = pool(8);
+        let mut t = BlockTable::new(64);
+        run_tokens(&mut p, &mut t, &[1, 2, 3, 4, 5]); // 2 blocks (4 + 1)
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.block_ids().len(), 2);
+        assert_eq!(p.blocks_in_use(), 2);
+        assert_eq!(p.bytes_in_use(), 2 * p.block_bytes());
+        let (ks, vs) = p.layer_view(&t, 1, 5);
+        assert_eq!(ks.len(), 2);
+        assert_eq!(ks[0].len(), 4 * 8);
+        assert_eq!(ks[1].len(), 8);
+        // row for token 5 (pos 4) in layer 1 carries value 5.5
+        assert_eq!(ks[1][0], 5.5);
+        assert_eq!(vs[1][0], -5.5);
+        p.release(t);
+        // block 0 was frozen (full) → cached; block 1 partial → freed
+        assert_eq!(p.blocks_in_use(), 1);
+        assert_eq!(p.evictable_blocks(), 1);
+    }
+
+    #[test]
+    fn prefix_attach_shares_blocks() {
+        let mut p = pool(16);
+        let prompt: Vec<u8> = (10..20).collect(); // 10 tokens → 2 full blocks
+        let mut a = BlockTable::new(64);
+        assert_eq!(p.attach_prefix(&mut a, &prompt), 0, "cold cache");
+        run_tokens(&mut p, &mut a, &prompt);
+        let a_blocks = a.block_ids().to_vec();
+        p.release(a);
+        // Same prompt again: both full blocks hit.
+        let mut b = BlockTable::new(64);
+        let shared = p.attach_prefix(&mut b, &prompt);
+        assert_eq!(shared, 8);
+        assert_eq!(&b.block_ids()[..2], &a_blocks[..2]);
+        assert!((p.stats.prefix_hit_rate() - 8.0 / 20.0).abs() < 1e-12);
+        // Residency: 2 shared + nothing new yet.
+        let before = p.bytes_in_use();
+        run_tokens(&mut p, &mut b, &prompt[8..]);
+        assert_eq!(p.bytes_in_use(), before + p.block_bytes(), "only the tail is new");
+        p.release(b);
+    }
+
+    #[test]
+    fn whole_prompt_never_fully_shared() {
+        let mut p = pool(8);
+        let prompt: Vec<u8> = (1..9).collect(); // exactly 2 blocks
+        let mut a = BlockTable::new(64);
+        p.attach_prefix(&mut a, &prompt);
+        run_tokens(&mut p, &mut a, &prompt);
+        p.release(a);
+        let mut b = BlockTable::new(64);
+        // Only block 0 may attach: the last token must be prefilled.
+        assert_eq!(p.attach_prefix(&mut b, &prompt), 4);
+        p.release(b);
+    }
+
+    #[test]
+    fn divergent_prompts_share_until_divergence() {
+        let mut p = pool(16);
+        let a_toks: Vec<u8> = vec![7, 7, 7, 7, 1, 2, 3, 4, 9];
+        let b_toks: Vec<u8> = vec![7, 7, 7, 7, 5, 6, 7, 8, 9];
+        let mut a = BlockTable::new(64);
+        p.attach_prefix(&mut a, &a_toks);
+        run_tokens(&mut p, &mut a, &a_toks);
+        p.release(a);
+        let mut b = BlockTable::new(64);
+        let shared = p.attach_prefix(&mut b, &b_toks);
+        assert_eq!(shared, 4, "share exactly the common first block");
+        run_tokens(&mut p, &mut b, &b_toks[4..]);
+        // b's second block differs from a's in content ⇒ distinct id.
+        p.release(b);
+    }
+
+    #[test]
+    fn cow_on_forked_tail() {
+        let mut p = pool(8);
+        let mut a = BlockTable::new(64);
+        run_tokens(&mut p, &mut a, &[1, 2, 3, 4, 5, 6]); // tail block holds 2 rows
+        let tail = *a.block_ids().last().unwrap();
+        let mut b = p.fork(&a);
+        assert_eq!(p.blocks_in_use(), 2, "fork allocates nothing");
+        run_tokens(&mut p, &mut b, &[42]);
+        assert_eq!(p.stats.cow_copies, 1);
+        let b_tail = b.block_ids()[1];
+        assert_ne!(b_tail, tail, "fork diverged onto a private tail copy");
+        // a's rows survive intact; b carries the copied prefix + new row.
+        let (ka, _) = p.layer_view(&a, 0, 6);
+        assert_eq!(ka[1][8], 6.0); // pos 5 = token 6, layer 0
+        let (kb, _) = p.layer_view(&b, 0, 7);
+        assert_eq!(kb[1][8], 6.0, "COW copied committed rows");
+        assert_eq!(kb[1][16], 42.0, "new row landed in the copy");
+        p.release(a);
+        p.release(b);
+    }
+
+    #[test]
+    fn identical_streams_dedup_at_freeze() {
+        let mut p = pool(8);
+        let toks: Vec<u8> = (1..6).collect();
+        let mut a = BlockTable::new(64);
+        let mut b = BlockTable::new(64);
+        // Neither is frozen when the other starts (same admission round).
+        p.attach_prefix(&mut a, &toks);
+        p.attach_prefix(&mut b, &toks);
+        run_tokens(&mut p, &mut a, &toks);
+        run_tokens(&mut p, &mut b, &toks);
+        assert_eq!(p.stats.dedup_merges, 1);
+        assert_eq!(a.block_ids()[0], b.block_ids()[0], "full blocks converged");
+        assert_ne!(a.block_ids()[1], b.block_ids()[1], "partial tails stay private");
+        assert_eq!(p.blocks_in_use(), 3);
+        p.release(a);
+        p.release(b);
+    }
+
+    #[test]
+    fn lru_eviction_and_stale_chain_safety() {
+        let mut p = pool(4); // tight: 4 blocks
+        let prompt: Vec<u8> = (50..59).collect(); // 9 tokens → 2 full + tail
+        let mut a = BlockTable::new(64);
+        p.attach_prefix(&mut a, &prompt);
+        run_tokens(&mut p, &mut a, &prompt);
+        p.release(a); // 2 cached blocks remain
+        assert_eq!(p.evictable_blocks(), 2);
+        // A new 12-token sequence needs 3 blocks: 1 free + grow to cap +
+        // evict the LRU cached block.
+        let other: Vec<u8> = (100..112).collect();
+        let mut b = BlockTable::new(64);
+        assert_eq!(p.attach_prefix(&mut b, &other), 0);
+        run_tokens(&mut p, &mut b, &other);
+        assert!(p.stats.evictions >= 1, "tight pool must evict");
+        p.release(b);
+        // The evicted parent chain must never serve a stale hit.
+        let mut c = BlockTable::new(64);
+        let shared = p.attach_prefix(&mut c, &prompt);
+        let bt = p.block_tokens();
+        // Either the chain root survived (shared ≥ 1 block) or nothing
+        // matches — but a partial/stale chain can only match a prefix of
+        // what was cached, never wrong content.
+        assert!(shared % bt == 0 && shared <= 8);
+        if shared > 0 {
+            // Attached blocks must carry the right K rows for layer 0.
+            let (ks, _) = p.layer_view(&c, 0, shared);
+            for (bi, seg) in ks.iter().enumerate() {
+                for r in 0..bt {
+                    assert_eq!(seg[r * 8], prompt[bi * bt + r] as f32, "stale KV served");
+                }
+            }
+        }
+        p.release(c);
+    }
+
+    #[test]
+    fn release_trims_to_budget() {
+        let mut p = pool(2);
+        let mut a = BlockTable::new(64);
+        run_tokens(&mut p, &mut a, &(0..8).collect::<Vec<u8>>()); // 2 full blocks
+        assert_eq!(p.blocks_in_use(), 2);
+        p.release(a);
+        // Both froze; in_use (2) ≤ budget (2) → stay cached.
+        assert_eq!(p.blocks_in_use(), 2);
+        let mut b = BlockTable::new(64);
+        run_tokens(&mut p, &mut b, &[99, 98, 97, 96, 95]); // needs 2 blocks → evicts
+        assert!(p.stats.evictions >= 1);
+        p.release(b);
+        assert!(p.blocks_in_use() <= 2, "release trims residency to the budget");
+    }
+
+    #[test]
+    #[should_panic(expected = "BlockPool exhausted")]
+    fn exhaustion_panics_loudly() {
+        let c = cfg();
+        // Budget of 1 block but max_seq forces the cap to 64/4 = 16 with
+        // bt=4; hold every block with live tables to truly exhaust.
+        let bb = 2 * c.n_layer * 4 * c.d_model * 4;
+        let mut p = BlockPool::with_block_tokens(&c, bb, 4);
+        let mut tables = Vec::new();
+        for i in 0..17u8 {
+            let mut t = BlockTable::new(64);
+            run_tokens(&mut p, &mut t, &[i, i, i, i]);
+            tables.push(t);
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Per-sequence block table: the indirection from token positions to
+//! pool blocks.
+
+/// A sequence's view into the [`super::BlockPool`]: ordered block ids,
+/// committed token count, and the token history that seeds freeze keys.
+///
+/// Tables are created empty, optionally seeded by
+/// [`super::BlockPool::attach_prefix`] (prompt-prefix sharing), grown by
+/// `prepare_tokens`/`write_row`, and advanced by `commit`. Always return
+/// a table to the pool with [`super::BlockPool::release`] — dropping it
+/// leaks refcounts.
+#[derive(Clone, Debug)]
+pub struct BlockTable {
+    /// Pool block ids, one per `KV_BLOCK_TOKENS` span of the sequence.
+    pub(crate) blocks: Vec<usize>,
+    /// Committed token count (rows past this exist only while a forward
+    /// step is in flight, mirroring the chunked cache's staging rule).
+    pub(crate) len: usize,
+    /// Full token history (prompt + generated) — the byte source for
+    /// content-addressing full blocks at commit time.
+    pub(crate) tokens: Vec<u8>,
+    /// Capacity in tokens (the model's `max_seq`).
+    max_tokens: usize,
+}
+
+impl BlockTable {
+    pub fn new(max_tokens: usize) -> Self {
+        BlockTable { blocks: Vec::new(), len: 0, tokens: Vec::new(), max_tokens }
+    }
+
+    /// Committed token count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Remaining capacity in tokens.
+    pub fn remaining(&self) -> usize {
+        self.max_tokens - self.len
+    }
+
+    /// Pool block ids backing this sequence (shared prefixes show up as
+    /// identical leading ids across tables).
+    pub fn block_ids(&self) -> &[usize] {
+        &self.blocks
+    }
+
+    /// Token history (prompt + committed generations).
+    pub fn tokens(&self) -> &[u8] {
+        &self.tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_table_is_empty() {
+        let t = BlockTable::new(64);
+        assert!(t.is_empty());
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.remaining(), 64);
+        assert!(t.block_ids().is_empty());
+        assert!(t.tokens().is_empty());
+    }
+}

@@ -17,22 +17,28 @@
 //! Python never runs on the request path: the [`runtime`] module loads
 //! the AOT artifacts via PJRT and the coordinator serves from Rust.
 //!
-//! ## Serving architecture: ragged-batched decode
+//! ## Serving architecture: paged KV + ragged batching
 //!
-//! The decode hot path is **batched across sequences**, not across
-//! time: each scheduler round stacks the last token of every active
-//! sequence into one `[n_active, d]` activation matrix and runs a
-//! *single* `forward_into` per linear layer per transformer block
-//! ([`model::Model::decode_step`]), so every (compressed) weight matrix
-//! streams from memory once per round instead of once per sequence —
-//! the regime where SDQ's compressed formats actually pay off.
-//! Attention stays per-sequence (ragged KV prefix lengths, parallel
-//! over `(sequence, head)`) and *borrows* each sequence's KV prefix in
-//! place. KV caches ([`model::generate::KvCache`]) are chunked and grow
-//! on demand: `bytes()` is actual residency, and the coordinator's
-//! admission control ([`coordinator::batcher::Batcher::admit`]) budgets
-//! against that residency plus each request's projected growth rather
-//! than a `max_seq × d_model` worst case.
+//! Both serving phases are **batched across sequences**, not across
+//! time. Each scheduler round packs every prompt admitted that round
+//! into one fused ragged prefill and stacks the last token of every
+//! active sequence into one `[n_active, d]` decode batch
+//! ([`model::Model::forward_paged`]), so every (compressed) weight
+//! matrix streams from memory once per round instead of once per
+//! sequence — the regime where SDQ's compressed formats actually pay
+//! off. Attention stays per-sequence (ragged KV prefix lengths,
+//! parallel over `(sequence, head)`) and *borrows* each sequence's KV
+//! in place.
+//!
+//! KV memory is a shared, decomposed resource ([`kv::BlockPool`]):
+//! fixed-size ref-counted blocks addressed by content, so identical
+//! prompt prefixes resolve to the same physical blocks
+//! (`attach_prefix`), finished sequences leave their blocks cached for
+//! future hits until LRU eviction reclaims them, and forked sequences
+//! copy-on-write at divergence. The coordinator admits against pool
+//! free blocks ([`coordinator::scheduler::Scheduler`]), and the chunked
+//! per-request [`model::generate::KvCache`] survives as the
+//! per-sequence baseline the serving benchmark A/Bs against.
 //!
 //! ## Quick tour
 //!
@@ -61,6 +67,7 @@ pub mod data;
 pub mod eval;
 pub mod formats;
 pub mod harness;
+pub mod kv;
 pub mod model;
 pub mod perfmodel;
 pub mod runtime;

@@ -16,15 +16,40 @@ fn obs(calib: &mut Option<&mut CalibStats>, key: &str, x: &Matrix) {
 
 /// Borrowed per-sequence KV view for incremental attention: `n_new`
 /// query rows starting at `q_row0` attend to this sequence's
-/// `past + n_new` cached K/V rows (flat `[kv_len * d]`, K pre-RoPE).
-/// Heterogeneous `past` lengths across a batch are the point — this is
-/// the unit of raggedness in [`Model::attention_kv`].
+/// `past + n_new` cached K/V rows (K pre-RoPE). Heterogeneous `past`
+/// lengths across a batch are the point — this is the unit of
+/// raggedness in [`Model::attention_kv`].
+///
+/// K/V rows arrive as **segments**: contiguous `[rows * d]` slices of
+/// `seg_tokens` rows each (the last may be short). The chunked
+/// [`super::generate::KvCache`] contributes one flat segment; the paged
+/// [`crate::kv::BlockPool`] contributes one segment per block — either
+/// way attention walks rows in place, gather-free.
 pub(crate) struct SeqKv<'a> {
     pub q_row0: usize,
     pub n_new: usize,
     pub past: usize,
-    pub k: &'a [f32],
-    pub v: &'a [f32],
+    pub k: Vec<&'a [f32]>,
+    pub v: Vec<&'a [f32]>,
+    /// Rows per segment (row `r` lives in segment `r / seg_tokens` at
+    /// row offset `r % seg_tokens`). Single-segment callers pass the
+    /// total row count.
+    pub seg_tokens: usize,
+}
+
+/// Row `r`'s `[col0, col0 + dh)` head slice out of segmented K or V
+/// storage (`d` floats per row, `st` rows per segment).
+#[inline]
+fn seg_head<'a>(
+    segs: &[&'a [f32]],
+    st: usize,
+    d: usize,
+    col0: usize,
+    dh: usize,
+    r: usize,
+) -> &'a [f32] {
+    let o = (r % st) * d + col0;
+    &segs[r / st][o..o + dh]
 }
 
 impl Model {
@@ -178,10 +203,12 @@ impl Model {
     /// Multi-head attention for the KV-cached decode paths, **ragged**
     /// over sequences: each sequence attends to its own prefix length.
     /// Parallel over `(sequence, head)` pairs. K/V are *borrowed*
-    /// straight from the caches (no per-step copies); K is cached
-    /// pre-RoPE, so rotation is applied here from absolute positions.
-    /// The score·V product accumulates directly into the output head
-    /// slice — the transpose is folded into the loop.
+    /// straight from the cache segments (no per-step copies — the
+    /// chunked cache hands over one flat segment, the paged pool one
+    /// segment per block); K is cached pre-RoPE, so rotation is applied
+    /// here from absolute positions. The score·V product accumulates
+    /// directly into the output head slice — the transpose is folded
+    /// into the loop.
     pub(crate) fn attention_kv(&self, q: &Matrix, seqs: &[SeqKv]) -> Matrix {
         let d = self.cfg.d_model;
         let dh = self.cfg.head_dim();
@@ -193,8 +220,18 @@ impl Model {
             let s = &seqs[sh / nh];
             let hd = sh % nh;
             let kv_len = s.past + s.n_new;
-            debug_assert_eq!(s.k.len(), kv_len * d, "K prefix length mismatch");
-            debug_assert_eq!(s.v.len(), kv_len * d, "V prefix length mismatch");
+            let st = s.seg_tokens;
+            debug_assert!(st > 0, "segment size must be positive");
+            debug_assert_eq!(
+                s.k.iter().map(|b| b.len()).sum::<usize>(),
+                kv_len * d,
+                "K prefix length mismatch"
+            );
+            debug_assert_eq!(
+                s.v.iter().map(|b| b.len()).sum::<usize>(),
+                kv_len * d,
+                "V prefix length mismatch"
+            );
             let col0 = hd * dh;
             // RoPE'd K head panel, built once per (seq, head) task and
             // reused across this sequence's query rows. GPT (no RoPE)
@@ -202,7 +239,7 @@ impl Model {
             let kh: Option<Matrix> = if rope {
                 let mut kh = Matrix::zeros(kv_len, dh);
                 for r in 0..kv_len {
-                    kh.row_mut(r).copy_from_slice(&s.k[r * d + col0..r * d + col0 + dh]);
+                    kh.row_mut(r).copy_from_slice(seg_head(&s.k, st, d, col0, dh, r));
                 }
                 rope_inplace(&mut kh, 0, theta);
                 Some(kh)
@@ -222,14 +259,14 @@ impl Model {
                 for (r, sc) in scores[..limit].iter_mut().enumerate() {
                     let krow = match &kh {
                         Some(m) => m.row(r),
-                        None => &s.k[r * d + col0..r * d + col0 + dh],
+                        None => seg_head(&s.k, st, d, col0, dh, r),
                     };
                     *sc = dot(&qh, krow) * scale;
                 }
                 softmax_slice(&mut scores[..limit]);
                 let orow = oh.row_mut(qi);
                 for (r, &w) in scores[..limit].iter().enumerate() {
-                    let vrow = &s.v[r * d + col0..r * d + col0 + dh];
+                    let vrow = seg_head(&s.v, st, d, col0, dh, r);
                     for (o, vv) in orow.iter_mut().zip(vrow) {
                         *o += w * vv;
                     }

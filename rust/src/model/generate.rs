@@ -145,14 +145,16 @@ impl Model {
             for i in 0..n {
                 cache.append_row(li, k_new.row(i), v_new.row(i));
             }
-            // Attention borrows the cache prefix in place.
+            // Attention borrows the cache prefix in place (one flat
+            // segment — the paged pool passes one segment per block).
             let attn = {
                 let seq = [SeqKv {
                     q_row0: 0,
                     n_new: n,
                     past,
-                    k: cache.k_rows(li),
-                    v: cache.v_rows(li),
+                    k: vec![cache.k_rows(li)],
+                    v: vec![cache.v_rows(li)],
+                    seg_tokens: past + n,
                 }];
                 self.attention_kv(&q, &seq)
             };
@@ -237,8 +239,9 @@ impl Model {
                         q_row0: i,
                         n_new: 1,
                         past: c.len,
-                        k: c.k_rows(li),
-                        v: c.v_rows(li),
+                        k: vec![c.k_rows(li)],
+                        v: vec![c.v_rows(li)],
+                        seg_tokens: c.len + 1,
                     })
                     .collect();
                 self.attention_kv(&q, &seqs)

@@ -11,17 +11,27 @@
 //! or a compressed [`CompressedLayer`] executing the paper's fake-quant /
 //! decomposed two-path GEMM (§5.1). The engine supports full-sequence
 //! forward (perplexity eval + calibration capture) and KV-cached
-//! incremental decode (serving) in two flavours: per-sequence
-//! [`Model::forward_cached`] and the ragged-batched
-//! [`Model::decode_step`], which stacks the last token of every active
-//! sequence so each linear layer streams its (compressed) weights once
-//! per round instead of once per sequence. KV caches
-//! ([`generate::KvCache`]) grow chunk-on-demand rather than reserving
-//! `max_seq × d_model` eagerly.
+//! incremental decode (serving) in three flavours sharing one ragged
+//! attention substrate:
+//!
+//! * [`Model::forward_cached`] — one sequence over a private chunked
+//!   [`generate::KvCache`] (grow-on-demand, the PR 1 baseline);
+//! * [`Model::decode_step`] — ragged-batched decode over chunked
+//!   caches: each linear layer streams its (compressed) weights once
+//!   per round across every active sequence;
+//! * [`Model::forward_paged`] — prefill *and* decode over the shared
+//!   [`crate::kv::BlockPool`]: `n_new ≥ 1` tokens per sequence through
+//!   per-sequence block tables, enabling batched multi-prompt prefill,
+//!   prompt-prefix sharing and copy-on-write.
+//!
+//! All three produce bit-identical logits per sequence — the kernels
+//! are row-independent, so batching changes *when* weights stream, not
+//! what each row computes.
 
 pub mod forward;
 pub mod generate;
 pub mod ops;
+pub mod paged;
 
 use anyhow::bail;
 

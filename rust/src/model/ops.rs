@@ -134,6 +134,19 @@ pub fn softmax_slice(row: &mut [f32]) {
     }
 }
 
+/// Copy the given rows of `x` into a fresh `[rows.len(), x.cols]`
+/// matrix. The paged prefill path uses this to project only each
+/// sequence's *last* position through the tied LM head instead of all
+/// prompt rows — row-independent GEMMs make the result bit-identical to
+/// projecting everything and selecting.
+pub fn gather_rows(x: &Matrix, rows: &[usize]) -> Matrix {
+    let mut out = Matrix::zeros(rows.len(), x.cols);
+    for (i, &r) in rows.iter().enumerate() {
+        out.row_mut(i).copy_from_slice(x.row(r));
+    }
+    out
+}
+
 /// Log-softmax cross-entropy over logits `[n, vocab]` against `targets`;
 /// returns summed negative log-likelihood in nats (divide by `n` then
 /// `exp` for perplexity).
@@ -233,6 +246,15 @@ mod tests {
         for i in 0..4 {
             assert!((a.at(5, i) - b.at(0, i)).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn gather_rows_copies() {
+        let x = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let g = gather_rows(&x, &[2, 0]);
+        assert_eq!(g.rows, 2);
+        assert_eq!(g.row(0), &[5., 6.]);
+        assert_eq!(g.row(1), &[1., 2.]);
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Paged forward pass: prefill **and** decode over the shared
+//! [`BlockPool`], ragged across sequences.
+//!
+//! [`Model::forward_paged`] is one function for both phases — each
+//! sequence contributes `n_new ≥ 1` new tokens on top of its
+//! [`BlockTable`], and every linear layer runs **one** fused GEMM over
+//! the stacked `[Σ n_new, d]` activations. With one-token slices it is
+//! the paged twin of [`Model::decode_step`]; with whole prompt suffixes
+//! it is **batched multi-prompt prefill**, amortizing the (compressed)
+//! weight streams across every prompt admitted in a scheduling round
+//! exactly as PR 1's fused decode amortizes them across sequences.
+//!
+//! Attention reads K/V *through the block tables*: per layer and
+//! sequence, [`BlockPool::layer_view`] hands back one borrowed row
+//! segment per block (gather-free) and the shared
+//! [`Model::attention_kv`] substrate walks them in place. Because every
+//! kernel on the path is row-independent, the logits are bit-identical
+//! to the chunked per-request cache path ([`Model::forward_cached`]) —
+//! the property tests pin this.
+
+use super::forward::SeqKv;
+use super::ops::*;
+use super::{Arch, Model};
+use crate::data::embed;
+use crate::kv::{BlockPool, BlockTable};
+use crate::tensor::{matmul, Matrix};
+
+impl Model {
+    /// Advance `n_seq` sequences by their `new_tokens[i]` (≥ 1 each) on
+    /// top of their block tables, through one fused ragged forward.
+    /// Returns the **last-position** logits per sequence,
+    /// `[n_seq, vocab]` (row `i` seeds sequence `i`'s next sample) —
+    /// bit-identical to what per-sequence [`Model::forward_cached`]
+    /// calls would produce.
+    ///
+    /// Tables must already hold any shared prefix
+    /// ([`BlockPool::attach_prefix`]); this call allocates (and, for
+    /// forked tables, copy-on-writes) the blocks the new rows land in,
+    /// then commits them — freezing newly-filled blocks into the pool's
+    /// prefix index.
+    pub fn forward_paged(
+        &self,
+        new_tokens: &[&[u8]],
+        pool: &mut BlockPool,
+        tables: &mut [&mut BlockTable],
+    ) -> Matrix {
+        let n_seq = new_tokens.len();
+        assert_eq!(n_seq, tables.len(), "one block table per sequence");
+        assert!(n_seq > 0, "forward_paged needs at least one sequence");
+        let d = self.cfg.d_model;
+        // Row layout: sequence i's new tokens occupy rows
+        // offs[i]..offs[i] + n_new_i of the stacked activations.
+        let mut offs = Vec::with_capacity(n_seq);
+        let mut flat: Vec<u8> = Vec::new();
+        for (toks, tb) in new_tokens.iter().zip(tables.iter()) {
+            assert!(!toks.is_empty(), "each sequence needs at least one new token");
+            assert!(tb.len() + toks.len() <= self.cfg.max_seq, "KV capacity overflow");
+            offs.push(flat.len());
+            flat.extend_from_slice(toks);
+        }
+        let total = flat.len();
+        // Allocate (and copy-on-write) every block the new rows will
+        // land in up front, so the layer loop only writes and reads.
+        for (toks, tb) in new_tokens.iter().zip(tables.iter_mut()) {
+            pool.prepare_tokens(tb, toks.len());
+        }
+        let pasts: Vec<usize> = tables.iter().map(|t| t.len()).collect();
+
+        let mut x = embed(&flat, &self.tok_emb);
+        if let Some(pe) = &self.pos_emb {
+            for (i, toks) in new_tokens.iter().enumerate() {
+                for j in 0..toks.len() {
+                    let row = x.row_mut(offs[i] + j);
+                    for (v, p) in row.iter_mut().zip(pe.row(pasts[i] + j)) {
+                        *v += *p;
+                    }
+                }
+            }
+        }
+        {
+            // Read-only table views for the layer loop (commit below
+            // needs the tables mutably again).
+            let tb_views: Vec<&BlockTable> = tables.iter().map(|t| &**t).collect();
+            for (li, blk) in self.blocks.iter().enumerate() {
+                let mut h = x.clone();
+                self.norm1(blk, &mut h);
+                let mut q = Matrix::zeros(total, d);
+                let mut k_new = Matrix::zeros(total, d);
+                let mut v_new = Matrix::zeros(total, d);
+                blk.q.lin.forward_into(&h, &mut q);
+                blk.k.lin.forward_into(&h, &mut k_new);
+                blk.v.lin.forward_into(&h, &mut v_new);
+                for (i, toks) in new_tokens.iter().enumerate() {
+                    for j in 0..toks.len() {
+                        pool.write_row(
+                            tb_views[i],
+                            li,
+                            pasts[i] + j,
+                            k_new.row(offs[i] + j),
+                            v_new.row(offs[i] + j),
+                        );
+                    }
+                }
+                // Ragged attention through the block tables: one
+                // borrowed segment per block, walked in place.
+                let attn = {
+                    let pool_ref: &BlockPool = pool;
+                    let seqs: Vec<SeqKv> = new_tokens
+                        .iter()
+                        .enumerate()
+                        .map(|(i, toks)| {
+                            let (k, v) =
+                                pool_ref.layer_view(tb_views[i], li, pasts[i] + toks.len());
+                            SeqKv {
+                                q_row0: offs[i],
+                                n_new: toks.len(),
+                                past: pasts[i],
+                                k,
+                                v,
+                                seg_tokens: pool_ref.block_tokens(),
+                            }
+                        })
+                        .collect();
+                    self.attention_kv(&q, &seqs)
+                };
+                let mut o_out = Matrix::zeros(total, d);
+                blk.o.lin.forward_into(&attn, &mut o_out);
+                add_inplace(&mut x, &o_out);
+
+                let mut h = x.clone();
+                self.norm2(blk, &mut h);
+                let mut a = Matrix::zeros(total, self.cfg.d_ff);
+                blk.ff1.lin.forward_into(&h, &mut a);
+                match self.cfg.arch {
+                    Arch::Gpt => map_inplace(&mut a, gelu),
+                    Arch::Llama => {
+                        let ff3 = blk.ff3.as_ref().expect("llama gate");
+                        let mut g = Matrix::zeros(h.rows, self.cfg.d_ff);
+                        ff3.lin.forward_into(&h, &mut g);
+                        map_inplace(&mut a, silu);
+                        mul_inplace(&mut a, &g);
+                    }
+                }
+                let mut m_out = Matrix::zeros(total, d);
+                blk.ff2.lin.forward_into(&a, &mut m_out);
+                add_inplace(&mut x, &m_out);
+            }
+        }
+        // Commit: advance lengths and freeze newly-filled blocks into
+        // the prefix index (identical concurrent streams converge here).
+        for (toks, tb) in new_tokens.iter().zip(tables.iter_mut()) {
+            pool.commit(tb, toks);
+        }
+        match self.cfg.arch {
+            Arch::Gpt => layernorm(&mut x, &self.lnf_g, self.lnf_b.as_deref(), self.cfg.eps),
+            Arch::Llama => rmsnorm(&mut x, &self.lnf_g, self.cfg.eps),
+        }
+        // Only each sequence's last position seeds sampling: project
+        // just those rows through the tied head. Row-independent GEMMs
+        // make this bit-identical to projecting all rows and selecting.
+        let last_rows: Vec<usize> =
+            new_tokens.iter().enumerate().map(|(i, t)| offs[i] + t.len() - 1).collect();
+        matmul(&gather_rows(&x, &last_rows), &self.tok_emb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::tiny_model;
+    use super::super::{Arch, Model};
+    use crate::kv::{BlockPool, BlockTable, KV_BLOCK_TOKENS};
+    use crate::model::generate::KvCache;
+
+    fn pool_for(m: &Model) -> BlockPool {
+        BlockPool::new(&m.cfg, 64 << 20)
+    }
+
+    #[test]
+    fn paged_prefill_matches_forward_cached() {
+        for arch in [Arch::Gpt, Arch::Llama] {
+            let m = tiny_model(arch, 31);
+            // Crosses two block boundaries (37 > 2 × KV_BLOCK_TOKENS).
+            let prompt: Vec<u8> = (3..40).collect();
+            assert!(prompt.len() > 2 * KV_BLOCK_TOKENS);
+            let mut cache = KvCache::new(&m);
+            let reference = m.forward_cached(&prompt, &mut cache);
+            let mut pool = pool_for(&m);
+            let mut tb = BlockTable::new(m.cfg.max_seq);
+            let logits = m.forward_paged(&[&prompt], &mut pool, &mut [&mut tb]);
+            assert_eq!(logits.rows, 1);
+            assert_eq!(
+                logits.row(0),
+                reference.row(reference.rows - 1),
+                "{arch:?}: paged prefill diverged"
+            );
+            assert_eq!(tb.len(), prompt.len());
+            assert_eq!(tb.block_ids().len(), prompt.len().div_ceil(KV_BLOCK_TOKENS));
+        }
+    }
+
+    #[test]
+    fn paged_decode_matches_decode_step() {
+        for arch in [Arch::Gpt, Arch::Llama] {
+            let m = tiny_model(arch, 33);
+            let prompt: Vec<u8> = (1..19).collect();
+            let mut cache = KvCache::new(&m);
+            m.forward_cached(&prompt, &mut cache);
+            let mut pool = pool_for(&m);
+            let mut tb = BlockTable::new(m.cfg.max_seq);
+            m.forward_paged(&[&prompt], &mut pool, &mut [&mut tb]);
+            let mut t = 7u8;
+            for step in 0..4 {
+                let a = m.decode_step(&[t], &mut [&mut cache]);
+                let b = m.forward_paged(&[&[t]], &mut pool, &mut [&mut tb]);
+                assert_eq!(a.row(0), b.row(0), "{arch:?} step {step}: paged decode diverged");
+                assert_eq!(cache.len, tb.len());
+                t = t.wrapping_mul(31).wrapping_add(step);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_multi_prompt_prefill_matches_single() {
+        let m = tiny_model(Arch::Llama, 34);
+        let prompts: [&[u8]; 3] = [b"abcdefghijklmnopqrst", b"xy", b"hello world"];
+        // Per-prompt reference rows, each on a fresh pool.
+        let singles: Vec<Vec<f32>> = prompts
+            .iter()
+            .map(|p| {
+                let mut pool = pool_for(&m);
+                let mut tb = BlockTable::new(m.cfg.max_seq);
+                let l = m.forward_paged(&[p], &mut pool, &mut [&mut tb]);
+                l.row(0).to_vec()
+            })
+            .collect();
+        // One fused ragged prefill over all three prompts.
+        let mut pool = pool_for(&m);
+        let mut tables: Vec<BlockTable> =
+            prompts.iter().map(|_| BlockTable::new(m.cfg.max_seq)).collect();
+        let mut refs: Vec<&mut BlockTable> = tables.iter_mut().collect();
+        let logits = m.forward_paged(&prompts, &mut pool, &mut refs);
+        assert_eq!(logits.rows, 3);
+        for (i, want) in singles.iter().enumerate() {
+            assert_eq!(logits.row(i), &want[..], "prompt {i}: fused prefill diverged");
+        }
+        for (tb, p) in tables.iter().zip(&prompts) {
+            assert_eq!(tb.len(), p.len());
+        }
+    }
+
+    #[test]
+    fn prefill_on_attached_prefix_matches_cold() {
+        // A sequence whose prompt prefix came from the cache must emit
+        // the same logits as one that computed everything itself.
+        for arch in [Arch::Gpt, Arch::Llama] {
+            let m = tiny_model(arch, 35);
+            let prompt: Vec<u8> = (40..80).collect(); // 40 tokens → 2 full blocks
+            let mut pool = pool_for(&m);
+            let mut a = BlockTable::new(m.cfg.max_seq);
+            let cold = m.forward_paged(&[&prompt], &mut pool, &mut [&mut a]);
+            pool.release(a);
+            let mut b = BlockTable::new(m.cfg.max_seq);
+            let shared = pool.attach_prefix(&mut b, &prompt);
+            assert_eq!(shared, 2 * KV_BLOCK_TOKENS, "{arch:?}: prefix must hit");
+            let warm = m.forward_paged(&[&prompt[shared..]], &mut pool, &mut [&mut b]);
+            assert_eq!(cold.row(0), warm.row(0), "{arch:?}: shared prefix perturbed logits");
+            pool.release(b);
+        }
+    }
+}

@@ -9,6 +9,9 @@
 //! * the **bits-per-weight accounting** (`perfmodel::bits`),
 //! * the **sparse compute path**: [`PackedNm::spmm_into`] skips all
 //!   pruned positions, the CPU analogue of the paper's sparse-TC SpMM.
+//!   Like the dense GEMM, it switches to a column-parallel schedule for
+//!   small ragged serving batches, so compressed layers ride the fused
+//!   decode/prefill path at full core occupancy.
 
 use anyhow::bail;
 use crate::util::par::par_chunks_mut;
@@ -62,34 +65,82 @@ impl PackedNm {
         out
     }
 
+    /// One output element's gather-dot: `Σ_s values[o, s] · x[col(o, s)]`.
+    /// 4 independent accumulators hide the FMA latency of the serial
+    /// gather chain (§Perf iteration 7). Shared by both parallel
+    /// schedules below so their numerics are identical.
+    #[inline]
+    fn row_dot(&self, o: usize, xrow: &[f32]) -> f32 {
+        let spr = self.slots_per_row();
+        let vals = &self.values[o * spr..(o + 1) * spr];
+        let cols = &self.abs_cols[o * spr..(o + 1) * spr];
+        let mut acc = [0.0f32; 4];
+        let q = spr / 4 * 4;
+        for i in (0..q).step_by(4) {
+            for l in 0..4 {
+                acc[l] += vals[i + l] * xrow[cols[i + l] as usize];
+            }
+        }
+        let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+        for i in q..spr {
+            s += vals[i] * xrow[cols[i] as usize];
+        }
+        s
+    }
+
     /// Structured-sparse GEMM: `out[t, o] += Σ_s values[o, s] · x[t, col(o, s)]`.
     ///
     /// `x: [tokens, cols]`, `out: [tokens, rows]`. This is the CPU
     /// analogue of the sparse tensor-core SpMM: work scales with N/M.
+    ///
+    /// Parallel schedule mirrors `tensor::matmul_into`: wide activations
+    /// parallelize over token rows; small ragged decode/prefill batches
+    /// (fewer rows than a row tile) parallelize over output-column
+    /// blocks instead, so compressed layers keep every core busy on the
+    /// fused serving path. Single rows stay sequential — the
+    /// per-sequence baseline parallelizes across sequences and must not
+    /// nest thread scopes.
     pub fn spmm_into(&self, x: &Matrix, out: &mut Matrix) {
         assert_eq!(x.cols, self.cols);
         assert_eq!(out.rows, x.rows);
         assert_eq!(out.cols, self.rows);
-        let spr = self.slots_per_row();
-        par_chunks_mut(&mut out.data, self.rows, |t, orow| {
-            let xrow = x.row(t);
-            for (o, o_el) in orow.iter_mut().enumerate() {
-                let vals = &self.values[o * spr..(o + 1) * spr];
-                let cols = &self.abs_cols[o * spr..(o + 1) * spr];
-                // 4 independent accumulators hide the FMA latency of the
-                // serial gather chain (§Perf iteration 7).
-                let mut acc = [0.0f32; 4];
-                let q = spr / 4 * 4;
-                for i in (0..q).step_by(4) {
-                    for l in 0..4 {
-                        acc[l] += vals[i + l] * xrow[cols[i + l] as usize];
+        let n = self.rows;
+        // Token-row tile / column-block sizes matching the dense GEMM's
+        // column-parallel crossover.
+        const TB: usize = 16;
+        const CB: usize = 64;
+        if x.rows > 1 && x.rows < TB && n >= 2 * CB && crate::util::par::num_threads() > 1 {
+            let rows = x.rows;
+            let nb = n.div_ceil(CB);
+            let parts: Vec<Vec<f32>> = crate::util::par::par_map(nb, |bi| {
+                let o0 = bi * CB;
+                let o1 = (o0 + CB).min(n);
+                let mut part = vec![0.0f32; rows * (o1 - o0)];
+                for t in 0..rows {
+                    let xrow = x.row(t);
+                    for o in o0..o1 {
+                        part[t * (o1 - o0) + (o - o0)] = self.row_dot(o, xrow);
                     }
                 }
-                let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
-                for i in q..spr {
-                    s += vals[i] * xrow[cols[i] as usize];
+                part
+            });
+            for (bi, part) in parts.iter().enumerate() {
+                let o0 = bi * CB;
+                let o1 = (o0 + CB).min(n);
+                let bw = o1 - o0;
+                for t in 0..rows {
+                    let orow = &mut out.data[t * n + o0..t * n + o1];
+                    for (c, p) in orow.iter_mut().zip(&part[t * bw..(t + 1) * bw]) {
+                        *c += *p;
+                    }
                 }
-                *o_el += s;
+            }
+            return;
+        }
+        par_chunks_mut(&mut out.data, n, |t, orow| {
+            let xrow = x.row(t);
+            for (o, o_el) in orow.iter_mut().enumerate() {
+                *o_el += self.row_dot(o, xrow);
             }
         });
     }
@@ -205,6 +256,26 @@ mod tests {
         p.spmm_into(&x, &mut sparse);
         for (a, b) in dense.data.iter().zip(&sparse.data) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn spmm_column_parallel_path_matches_dense() {
+        // 4 activation rows × ≥128 output rows triggers the
+        // column-parallel schedule (when threads > 1); numerics must
+        // match the row-parallel path and the dense GEMM.
+        let pat = NmPattern::new(2, 8);
+        let w = sparse_matrix(160, 64, pat, 6);
+        let p = pack(&w, pat).unwrap();
+        let mut rng = Rng::seed_from_u64(7);
+        let x =
+            Matrix::from_vec(4, 64, (0..4 * 64).map(|_| rng.range_f32(-1.0, 1.0)).collect());
+        let dense = matmul(&x, &w);
+        // Accumulation semantics must survive the parallel split too.
+        let mut sparse = Matrix::from_vec(4, 160, vec![1.0; 4 * 160]);
+        p.spmm_into(&x, &mut sparse);
+        for (a, b) in dense.data.iter().zip(&sparse.data) {
+            assert!((a + 1.0 - b).abs() < 1e-4, "{a} vs {b}");
         }
     }
 

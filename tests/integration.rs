@@ -174,6 +174,84 @@ fn batched_decode_matches_generate_compressed() {
     }
 }
 
+/// Paged-KV acceptance: two requests sharing a ≥1-block prompt prefix
+/// must (a) generate exactly what per-request `Model::generate` does,
+/// (b) resolve the shared prefix to the *same physical blocks* so pool
+/// residency stays strictly under 2× a single request's, and (c) go
+/// through **one** fused prefill forward when admitted together. Tiny
+/// in-memory models — no artifacts needed.
+#[test]
+fn prefix_sharing_bounds_residency_and_prefill_fuses() {
+    use sdq::coordinator::batcher::{BatchPolicy, Batcher};
+    use sdq::coordinator::scheduler::Scheduler;
+    use sdq::coordinator::Request;
+    use sdq::kv::KV_BLOCK_TOKENS;
+    use sdq::model::testutil::tiny_model;
+    use sdq::model::Arch;
+    for arch in [Arch::Gpt, Arch::Llama] {
+        let model = tiny_model(arch, 41);
+        let bt = KV_BLOCK_TOKENS;
+        // Common 1-block prefix, divergent tails.
+        let prefix: Vec<u8> = (0..bt as u8).map(|j| 200 - j).collect();
+        let mk = |tail: &[u8]| {
+            let mut p = prefix.clone();
+            p.extend_from_slice(tail);
+            p
+        };
+        let prompt_a = mk(b"alpha");
+        let prompt_b = mk(b"bravo");
+        let want_a = model.generate(&prompt_a, 6, 0.0, 0);
+        let want_b = model.generate(&prompt_b, 6, 0.0, 1);
+
+        // Baseline peak: request A served alone.
+        let single_peak = {
+            let mut sched = Scheduler::new(&model, BatchPolicy::default());
+            let mut batcher = Batcher::new();
+            batcher.enqueue(Request::new(0, prompt_a.clone(), 6));
+            sched.run_to_completion(&mut batcher);
+            sched.metrics.kv_bytes_peak
+        };
+        assert!(single_peak > 0);
+
+        // Both requests admitted in one round: one fused prefill
+        // forward, shared first block, bounded residency.
+        let mut sched = Scheduler::new(&model, BatchPolicy::default());
+        let mut batcher = Batcher::new();
+        batcher.enqueue(Request::new(0, prompt_a.clone(), 6));
+        batcher.enqueue(Request::new(1, prompt_b.clone(), 6));
+        let mut resp = sched.run_to_completion(&mut batcher);
+        resp.sort_by_key(|r| r.id);
+        assert_eq!(resp[0].tokens, want_a, "{arch:?}: shared prefix changed request A");
+        assert_eq!(resp[1].tokens, want_b, "{arch:?}: shared prefix changed request B");
+        let m = &sched.metrics;
+        assert_eq!(m.prefill_batches, 1, "{arch:?}: admission burst must prefill fused");
+        assert_eq!(m.prefill_width_max, 2);
+        // Same-round identical prefixes converge at freeze time.
+        assert!(m.kv_dedup_merges >= 1, "{arch:?}: prefix blocks must merge");
+        assert!(
+            m.kv_bytes_peak < 2 * single_peak,
+            "{arch:?}: peak {} must be strictly under 2 × single {}",
+            m.kv_bytes_peak,
+            single_peak
+        );
+
+        // Sequential arrival exercises the attach path: B hits A's
+        // cached prefix block without recomputing it.
+        let mut sched = Scheduler::new(&model, BatchPolicy::default());
+        let mut batcher = Batcher::new();
+        batcher.enqueue(Request::new(0, prompt_a, 6));
+        sched.run_to_completion(&mut batcher);
+        batcher.enqueue(Request::new(1, prompt_b, 6));
+        let resp = sched.run_to_completion(&mut batcher);
+        assert_eq!(resp[0].tokens, want_b, "{arch:?}: attached prefix changed output");
+        assert_eq!(sched.metrics.prefix_shared_tokens, bt as u64, "{arch:?}");
+        assert!(
+            sched.metrics.kv_bytes_peak < 2 * single_peak,
+            "{arch:?}: sequential sharing must bound residency too"
+        );
+    }
+}
+
 /// The serving coordinator generates plausible text end-to-end from a
 /// compressed model.
 #[test]

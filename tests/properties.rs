@@ -350,6 +350,76 @@ fn prop_decode_step_n1_matches_forward_cached() {
 }
 
 #[test]
+fn prop_paged_pool_matches_chunked_cache() {
+    // Tentpole equivalence as a property: greedy prefill + decode
+    // through the shared block pool is **bit-identical** to the chunked
+    // per-request cache path, for random prompts, lengths and archs —
+    // including the committed length and block-aligned layout.
+    use sdq::kv::{BlockPool, BlockTable, KV_BLOCK_TOKENS};
+    use sdq::model::generate::KvCache;
+    check("paged == chunked", 6, |rng| {
+        let arch = [sdq::model::Arch::Gpt, sdq::model::Arch::Llama][rng.below(2)];
+        let model = sdq::model::testutil::tiny_model(arch, rng.next_u64());
+        let plen = 1 + rng.below(40);
+        let prompt: Vec<u8> = (0..plen).map(|_| rng.below(256) as u8).collect();
+        let steps = 1 + rng.below(5);
+        let mut cache = KvCache::new(&model);
+        let mut ref_logits = model.forward_cached(&prompt, &mut cache);
+        let mut pool = BlockPool::new(&model.cfg, 32 << 20);
+        let mut tb = BlockTable::new(model.cfg.max_seq);
+        let mut logits = model.forward_paged(&[&prompt], &mut pool, &mut [&mut tb]);
+        if logits.row(0) != ref_logits.row(ref_logits.rows - 1) {
+            return Err("paged prefill logits diverged from chunked".into());
+        }
+        let mut srng = sdq::util::rng::Rng::seed_from_u64(0);
+        for step in 0..steps {
+            let t = model.sample(&ref_logits, 0.0, &mut srng);
+            ref_logits = model.forward_cached(&[t], &mut cache);
+            logits = model.forward_paged(&[&[t]], &mut pool, &mut [&mut tb]);
+            if logits.row(0) != ref_logits.row(0) {
+                return Err(format!("paged decode diverged at step {step}"));
+            }
+        }
+        if tb.len() != cache.len {
+            return Err(format!("lengths diverged: {} vs {}", tb.len(), cache.len));
+        }
+        if tb.block_ids().len() != tb.len().div_ceil(KV_BLOCK_TOKENS) {
+            return Err("table holds the wrong number of blocks".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prefix_share_is_transparent() {
+    // Sharing a cached prompt prefix (any block-aligned split the cache
+    // can serve) never changes the prefill logits.
+    use sdq::kv::{BlockPool, BlockTable, KV_BLOCK_TOKENS};
+    check("prefix share transparent", 5, |rng| {
+        let arch = [sdq::model::Arch::Gpt, sdq::model::Arch::Llama][rng.below(2)];
+        let model = sdq::model::testutil::tiny_model(arch, rng.next_u64());
+        let plen = KV_BLOCK_TOKENS + 1 + rng.below(30);
+        let prompt: Vec<u8> = (0..plen).map(|_| rng.below(256) as u8).collect();
+        let mut pool = BlockPool::new(&model.cfg, 32 << 20);
+        let mut a = BlockTable::new(model.cfg.max_seq);
+        let cold = model.forward_paged(&[&prompt], &mut pool, &mut [&mut a]);
+        pool.release(a);
+        let mut b = BlockTable::new(model.cfg.max_seq);
+        let shared = pool.attach_prefix(&mut b, &prompt);
+        let expect = (prompt.len() - 1) / KV_BLOCK_TOKENS * KV_BLOCK_TOKENS;
+        if shared != expect {
+            return Err(format!("shared {shared}, want {expect}"));
+        }
+        let warm = model.forward_paged(&[&prompt[shared..]], &mut pool, &mut [&mut b]);
+        if warm.row(0) != cold.row(0) {
+            return Err("attached prefix perturbed the logits".into());
+        }
+        pool.release(b);
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_model_cached_decode_matches_full() {
     use sdq::model::generate::KvCache;
     check("kv cache == full", 4, |rng| {
