@@ -2,22 +2,31 @@
 //! prefix sharing, batched multi-prompt prefill, one fused GEMM per
 //! layer per decode round) vs the **per-sequence** baseline (private
 //! chunked caches, one batch-1 forward per sequence), dense vs SDQ
-//! compressed, across batch widths — the end-to-end L3 numbers.
-//! Requests share a common prompt prefix, so the pool's prefix-share
-//! hit-rate, utilization and eviction counters are exercised and
-//! reported. Greedy outputs are asserted bit-identical across the two
-//! engines on every row.
+//! compressed, across batch widths **and KV storage dtypes** — the
+//! end-to-end L3 numbers. Requests share a common prompt prefix, so the
+//! pool's prefix-share hit-rate, utilization and eviction counters are
+//! exercised and reported. Greedy outputs are asserted bit-identical
+//! between the f32-paged and per-sequence engines on every row; the
+//! quantized-KV rows (fp8-e4m3 / int8 blocks with per-block-per-layer
+//! scales) report their greedy-token divergence vs the f32 run and the
+//! compressed pool geometry — the same byte budget buys ~4× the blocks
+//! at int8, which the bench asserts (≥ 1.8× effective capacity).
 //!
 //! Emits `BENCH_serving.json` (cwd) plus the usual
 //! `target/bench-results/serving.json` record so the perf trajectory is
-//! tracked across PRs. Falls back to a synthetic model when `make
-//! artifacts` hasn't been run, so the A/B comparison is always
+//! tracked across PRs (and gated by CI's `bench-regression` job against
+//! `ci/bench_baseline.json`). Falls back to a synthetic model when
+//! `make artifacts` hasn't been run, so the A/B comparison is always
 //! available. `--smoke` runs one config at one width with a few short
 //! requests — the CI guard that keeps this bench compiling *and*
-//! running.
+//! running; in smoke mode the int8 row is additionally asserted to
+//! produce the exact f32 greedy tokens on the synthetic model.
 
-use sdq::coordinator::{batcher::BatchPolicy, Engine, Request};
+use sdq::coordinator::batcher::{BatchPolicy, Batcher};
+use sdq::coordinator::scheduler::Scheduler;
+use sdq::coordinator::Request;
 use sdq::harness;
+use sdq::kv::KvDtype;
 use sdq::model::{Arch, Block, Linear, Model, ModelConfig, NamedLinear};
 use sdq::sdq::calib::CalibStats;
 use sdq::sdq::config::CompressionConfig;
@@ -39,6 +48,7 @@ fn synth_model() -> Model {
         max_seq: 128,
         eps: 1e-5,
         rope_theta: 10000.0,
+        kv_dtype: KvDtype::F32,
     };
     let mut rng = Rng::seed_from_u64(42);
     let mut m = |r: usize, c: usize| {
@@ -102,9 +112,10 @@ fn main() {
     let ds = if artifacts { Some(harness::load_dataset().expect("corpus")) } else { None };
 
     let mut table = Table::new(
-        &format!("Serving: paged+batched vs per-sequence decode — {mname}"),
+        &format!("Serving: paged+batched vs per-sequence decode, KV dtype sweep — {mname}"),
         &[
             "Config",
+            "kv dtype",
             "max_active",
             "req",
             "batched tok/s",
@@ -112,9 +123,12 @@ fn main() {
             "speedup",
             "occupancy",
             "kv peak KiB",
+            "pool blocks",
+            "blk bytes",
             "pool util",
             "prefix hit",
             "evict",
+            "div vs f32",
         ],
     );
     let configs: &[&str] = if smoke {
@@ -160,41 +174,105 @@ fn main() {
                     Request::new(i as u64, prompt, max_new)
                 })
                 .collect();
-            let run = |batched: bool, reqs: Vec<Request>| {
-                let policy =
-                    BatchPolicy { max_active, batched_decode: batched, ..Default::default() };
-                let (mut resps, metrics) = Engine::run_batch(model.clone(), policy, reqs);
+            // Synchronous scheduler drive (not the threaded `Engine`):
+            // every request is enqueued before round one, so admission
+            // waves — and with them the pool's prefix-hit-rate and
+            // utilization counters — are exactly reproducible. The CI
+            // regression gate compares those numbers against a committed
+            // baseline, so they must not depend on submission timing.
+            let run = |batched: bool, dtype: KvDtype, reqs: Vec<Request>| {
+                let policy = BatchPolicy {
+                    max_active,
+                    batched_decode: batched,
+                    kv_dtype: Some(dtype),
+                    ..Default::default()
+                };
+                let mut sched = Scheduler::new(&model, policy);
+                let mut batcher = Batcher::new();
+                for r in reqs {
+                    batcher.enqueue(r);
+                }
+                let mut resps = sched.run_to_completion(&mut batcher);
                 assert_eq!(resps.len(), n_req);
                 resps.sort_by_key(|r| r.id);
-                (resps, metrics)
+                (resps, sched.metrics)
             };
-            let (paged_out, batched) = run(true, reqs.clone());
-            let (legacy_out, per_seq) = run(false, reqs);
-            // Live equivalence guard: paged + fused must not change a
-            // single greedy token vs the chunked per-sequence baseline.
-            for (a, b) in paged_out.iter().zip(&legacy_out) {
-                assert_eq!(a.tokens, b.tokens, "req {}: engines diverged", a.id);
+            let (legacy_out, per_seq) = run(false, KvDtype::F32, reqs.clone());
+            // KV dtype sweep: the f32 row is the exact reference; the
+            // quantized rows report compressed pool geometry and their
+            // greedy-token divergence against it.
+            let mut f32_tokens: Vec<Vec<u8>> = Vec::new();
+            let mut f32_blocks = 0usize;
+            for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+                let (paged_out, batched) = run(true, dtype, reqs.clone());
+                let divergence: usize = if dtype == KvDtype::F32 {
+                    // Live equivalence guard: paged + fused must not
+                    // change a single greedy token vs the chunked
+                    // per-sequence baseline.
+                    for (a, b) in paged_out.iter().zip(&legacy_out) {
+                        assert_eq!(a.tokens, b.tokens, "req {}: engines diverged", a.id);
+                    }
+                    f32_tokens = paged_out.iter().map(|r| r.tokens.clone()).collect();
+                    f32_blocks = batched.pool_budget_blocks;
+                    0
+                } else {
+                    paged_out
+                        .iter()
+                        .zip(&f32_tokens)
+                        .map(|(r, want)| {
+                            let same =
+                                r.tokens.iter().zip(want.iter()).filter(|(a, b)| a == b).count();
+                            r.tokens.len().max(want.len()) - same
+                        })
+                        .sum()
+                };
+                if dtype == KvDtype::Int8 {
+                    // Compressed storage is the point: the same byte
+                    // budget must buy substantially more blocks.
+                    assert!(
+                        batched.pool_budget_blocks as f64 >= 1.8 * f32_blocks as f64,
+                        "int8 pool must hold ≥1.8× the blocks of f32 at the same budget \
+                         ({} vs {})",
+                        batched.pool_budget_blocks,
+                        f32_blocks
+                    );
+                    if smoke {
+                        // CI acceptance: on the synthetic model the
+                        // int8-KV engine reproduces the f32 greedy
+                        // tokens exactly.
+                        assert_eq!(
+                            divergence, 0,
+                            "smoke: int8 KV diverged from f32 greedy outputs"
+                        );
+                    }
+                }
+                let speedup =
+                    batched.decode_tokens_per_second() / per_seq.decode_tokens_per_second();
+                table.row(vec![
+                    cfg_str.to_string(),
+                    dtype.tag().to_string(),
+                    max_active.to_string(),
+                    n_req.to_string(),
+                    format!("{:.1}", batched.decode_tokens_per_second()),
+                    format!("{:.1}", per_seq.decode_tokens_per_second()),
+                    format!("{speedup:.2}x"),
+                    format!("{:.2}", batched.decode_occupancy(max_active)),
+                    format!("{:.1}", batched.kv_bytes_peak as f64 / 1024.0),
+                    batched.pool_budget_blocks.to_string(),
+                    batched.pool_block_bytes.to_string(),
+                    format!("{:.3}", batched.pool_utilization_peak),
+                    format!("{:.2}", batched.prefix_hit_rate()),
+                    batched.kv_evictions.to_string(),
+                    divergence.to_string(),
+                ]);
+                eprintln!(
+                    "  {cfg_str} kv={} active={max_active}: batched {} | per-seq decode \
+                     {:.1} tok/s | div vs f32 = {divergence}",
+                    dtype.tag(),
+                    batched.summary(),
+                    per_seq.decode_tokens_per_second()
+                );
             }
-            let speedup =
-                batched.decode_tokens_per_second() / per_seq.decode_tokens_per_second();
-            table.row(vec![
-                cfg_str.to_string(),
-                max_active.to_string(),
-                n_req.to_string(),
-                format!("{:.1}", batched.decode_tokens_per_second()),
-                format!("{:.1}", per_seq.decode_tokens_per_second()),
-                format!("{speedup:.2}x"),
-                format!("{:.2}", batched.decode_occupancy(max_active)),
-                format!("{:.1}", batched.kv_bytes_peak as f64 / 1024.0),
-                format!("{:.3}", batched.pool_utilization_peak),
-                format!("{:.2}", batched.prefix_hit_rate()),
-                batched.kv_evictions.to_string(),
-            ]);
-            eprintln!(
-                "  {cfg_str} active={max_active}: batched {} | per-seq decode {:.1} tok/s",
-                batched.summary(),
-                per_seq.decode_tokens_per_second()
-            );
         }
     }
     table.print();

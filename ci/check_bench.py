@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare a fresh `BENCH_serving.json` against the
+committed `ci/bench_baseline.json`.
+
+Rows are matched on (Config, kv dtype, max_active). Two metrics are
+gated, both with a relative tolerance (default ±25%):
+
+* ``batched tok/s`` — one-sided: the current run must not fall more than
+  the tolerance *below* the baseline (getting faster never fails). A
+  baseline value of ``null`` means "not yet recorded on CI hardware";
+  such rows are reported but do not gate — refresh the baseline with
+  ``--update`` from a trusted run to arm the throughput gate.
+* ``prefix hit`` — two-sided: the prefix-cache hit rate is a
+  deterministic property of the workload, so drift in either direction
+  is a behavioral regression (an absolute floor of 0.02 absorbs
+  rounding of the printed rate).
+
+Exit status is non-zero on any failure, which fails the CI job.
+
+Usage:
+    python3 ci/check_bench.py [--current BENCH_serving.json]
+                              [--baseline ci/bench_baseline.json]
+                              [--tolerance 0.25]
+                              [--update]
+"""
+
+import argparse
+import json
+import sys
+
+KEY_FIELDS = ("Config", "kv dtype", "max_active")
+
+
+def row_key(row):
+    return tuple(str(row.get(k)) for k in KEY_FIELDS)
+
+
+def as_float(value):
+    """Parse a metric cell (string, number, or null) to float or None."""
+    if value is None:
+        return None
+    try:
+        return float(value)
+    except (TypeError, ValueError):
+        return None
+
+
+def load_rows(path):
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        raise SystemExit(f"{path}: expected a top-level 'rows' array")
+    return doc, rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="BENCH_serving.json")
+    ap.add_argument("--baseline", default="ci/bench_baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baseline from the current results instead of comparing",
+    )
+    args = ap.parse_args()
+
+    cur_doc, cur_rows = load_rows(args.current)
+    if args.update:
+        with open(args.baseline, "w") as f:
+            json.dump(cur_doc, f, indent=2, sort_keys=False)
+            f.write("\n")
+        print(f"baseline refreshed from {args.current} ({len(cur_rows)} rows)")
+        return 0
+
+    _, base_rows = load_rows(args.baseline)
+    current = {row_key(r): r for r in cur_rows}
+    tol = args.tolerance
+    failures = []
+    notes = []
+
+    for base in base_rows:
+        k = row_key(base)
+        label = " / ".join(k)
+        cur = current.get(k)
+        if cur is None:
+            failures.append(f"[{label}] row missing from current results")
+            continue
+
+        base_tput = as_float(base.get("batched tok/s"))
+        cur_tput = as_float(cur.get("batched tok/s"))
+        if base_tput is None:
+            notes.append(
+                f"[{label}] throughput baseline not yet recorded "
+                f"(current: {cur_tput}); run with --update on trusted hardware"
+            )
+        elif cur_tput is None:
+            failures.append(f"[{label}] current throughput missing/unparseable")
+        elif cur_tput < base_tput * (1.0 - tol):
+            failures.append(
+                f"[{label}] throughput regressed: {cur_tput:.1f} tok/s < "
+                f"{base_tput:.1f} × (1 − {tol:.2f})"
+            )
+        else:
+            notes.append(
+                f"[{label}] throughput ok: {cur_tput:.1f} tok/s "
+                f"(baseline {base_tput:.1f})"
+            )
+
+        base_hit = as_float(base.get("prefix hit"))
+        cur_hit = as_float(cur.get("prefix hit"))
+        if base_hit is not None:
+            allowed = max(tol * abs(base_hit), 0.02)
+            if cur_hit is None:
+                failures.append(f"[{label}] current prefix hit rate missing")
+            elif abs(cur_hit - base_hit) > allowed:
+                failures.append(
+                    f"[{label}] prefix hit rate drifted: {cur_hit} vs "
+                    f"baseline {base_hit} (±{allowed:.3f})"
+                )
+            else:
+                notes.append(
+                    f"[{label}] prefix hit ok: {cur_hit} (baseline {base_hit})"
+                )
+
+    for n in notes:
+        print("  " + n)
+    if failures:
+        print(f"\nbench regression gate FAILED ({len(failures)} problem(s)):")
+        for f_ in failures:
+            print("  " + f_)
+        return 1
+    print(f"\nbench regression gate passed ({len(base_rows)} baseline rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,7 +2,8 @@
 //! engine + the AOT PJRT scoring path side by side.
 //!
 //! Run: `cargo run --release --example serve -- [--model gpt-micro]
-//!       [--config SDQ-W7:8-1:8int8-6:8fp4] [--requests 16] [--max-new 32]`
+//!       [--config SDQ-W7:8-1:8int8-6:8fp4] [--requests 16] [--max-new 32]
+//!       [--kv-dtype f32|fp8-e4m3|int8]`
 
 use sdq::coordinator::{batcher::BatchPolicy, Engine, Request};
 use sdq::data::Split;
@@ -34,7 +35,19 @@ fn main() -> sdq::Result<()> {
                 .with_temperature(0.8)
         })
         .collect();
-    let policy = BatchPolicy { max_active: args.get_usize("max-active", 8)?, ..Default::default() };
+    // Quantized KV storage (fp8-e4m3 / int8) stores pool blocks at ~¼
+    // the bytes of f32 — same budget, ~4× the admission head-room. An
+    // absent flag inherits the model config's `kv_dtype` (policy `None`)
+    // rather than forcing f32.
+    let kv_dtype = match args.get("kv-dtype") {
+        Some(s) => Some(sdq::kv::KvDtype::parse(s)?),
+        None => None,
+    };
+    let policy = BatchPolicy {
+        max_active: args.get_usize("max-active", 8)?,
+        kv_dtype,
+        ..Default::default()
+    };
     let (resps, metrics) = Engine::run_batch(model, policy, reqs);
     for r in resps.iter().take(4) {
         println!(
@@ -56,8 +69,11 @@ fn main() -> sdq::Result<()> {
         metrics.kv_bytes_peak as f64 / 1024.0,
     );
     println!(
-        "paged KV: prefill width mean {:.2}, pool util peak {:.2}, \
-         prefix hit-rate {:.2}, evictions {}, COW copies {}",
+        "paged KV [{} blocks of {} B, dtype {}]: prefill width mean {:.2}, \
+         pool util peak {:.2}, prefix hit-rate {:.2}, evictions {}, COW copies {}",
+        metrics.pool_budget_blocks,
+        metrics.pool_block_bytes,
+        metrics.kv_dtype,
         metrics.mean_prefill_width(),
         metrics.pool_utilization_peak,
         metrics.prefix_hit_rate(),

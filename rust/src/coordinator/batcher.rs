@@ -38,6 +38,12 @@ pub struct BatchPolicy {
     /// one fused ragged prefill (`false` prefills them one at a time —
     /// the prefill A/B lever).
     pub batched_prefill: bool,
+    /// KV block storage dtype for the paged pool. `None` (default)
+    /// inherits the model's `ModelConfig::kv_dtype`; `Some` overrides it
+    /// per engine (the serving-time sweep lever). Quantized dtypes store
+    /// blocks at ~¼ the bytes, so the same `kv_budget_bytes` admits ~4×
+    /// the blocks.
+    pub kv_dtype: Option<crate::kv::KvDtype>,
 }
 
 impl Default for BatchPolicy {
@@ -48,6 +54,7 @@ impl Default for BatchPolicy {
             max_prefill_per_round: 4,
             batched_decode: true,
             batched_prefill: true,
+            kv_dtype: None,
         }
     }
 }

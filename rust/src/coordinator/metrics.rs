@@ -84,9 +84,19 @@ pub struct Metrics {
     pub prefill_batched_seqs: u64,
     /// Widest prefill batch seen.
     pub prefill_width_max: u64,
-    /// Peak KV residency (paged: pool blocks referenced + cached;
-    /// legacy: chunked caches' actual allocated bytes).
+    /// Peak KV residency in **actual compressed bytes** (paged: pool
+    /// blocks referenced + cached at the pool's storage dtype; legacy:
+    /// chunked caches' actual allocated fp32 bytes).
     pub kv_bytes_peak: usize,
+    /// Storage dtype tag of the paged pool (`"f32"`, `"fp8-e4m3"`,
+    /// `"int8"`); empty until a scheduler stamps it.
+    pub kv_dtype: String,
+    /// The pool's admission budget in blocks at its compressed block
+    /// size — the capacity the byte budget actually buys (int8 ≈ 4×
+    /// the f32 count at the same `kv_budget_bytes`).
+    pub pool_budget_blocks: usize,
+    /// Compressed bytes of one pool block (payload + scale metadata).
+    pub pool_block_bytes: usize,
     /// Peak pool residency as a fraction of the block budget.
     pub pool_utilization_peak: f64,
     /// Prompt tokens served straight from cached prefix blocks.
@@ -157,9 +167,12 @@ impl Metrics {
     }
 
     /// Fraction of prompt tokens served from cached prefix blocks.
+    /// `0.0` before any prompt was seen — deliberately not NaN, because
+    /// this rate is emitted into `BENCH_serving.json` and NaN is not
+    /// representable in JSON.
     pub fn prefix_hit_rate(&self) -> f64 {
         if self.prefix_prompt_tokens == 0 {
-            return f64::NAN;
+            return 0.0;
         }
         self.prefix_shared_tokens as f64 / self.prefix_prompt_tokens as f64
     }
@@ -245,7 +258,7 @@ mod tests {
     fn prefill_and_pool_stats() {
         let mut m = Metrics::default();
         assert!(m.mean_prefill_width().is_nan());
-        assert!(m.prefix_hit_rate().is_nan());
+        assert_eq!(m.prefix_hit_rate(), 0.0, "cold hit rate is 0.0, never NaN");
         m.record_prefill_batch(4);
         m.record_prefill_batch(2);
         assert_eq!(m.prefill_batches, 2);
@@ -282,5 +295,21 @@ mod tests {
         assert!((m.decode_occupancy(8) - 0.75).abs() < 1e-9);
         m.decode_time = Duration::from_secs(2);
         assert!((m.decode_tokens_per_second() - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cold_metrics_emit_parseable_json() {
+        // Regression: prefix_hit_rate used to be NaN before any prompt
+        // was seen, and `NaN` is not valid JSON — a fresh engine's
+        // metrics record must round-trip through the JSON writer/parser.
+        use crate::util::json::Json;
+        let m = Metrics::default();
+        let j = Json::obj(vec![
+            ("prefix_hit_rate", Json::Num(m.prefix_hit_rate())),
+            ("tokens_generated", Json::from(m.tokens_generated as usize)),
+        ]);
+        let text = j.to_string();
+        let parsed = Json::parse(&text).expect("cold metrics JSON must parse");
+        assert_eq!(parsed.get("prefix_hit_rate").and_then(|v| v.as_f64()), Some(0.0));
     }
 }

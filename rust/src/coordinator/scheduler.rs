@@ -50,8 +50,18 @@ pub struct Scheduler<'m> {
 
 impl<'m> Scheduler<'m> {
     pub fn new(model: &'m Model, policy: BatchPolicy) -> Self {
-        let pool = BlockPool::new(&model.cfg, policy.kv_budget_bytes);
-        Scheduler { model, policy, active: Vec::new(), pool, metrics: Metrics::default() }
+        // Policy override first, model default second — the pool's
+        // block geometry (and hence the admission budget) is fixed at
+        // engine construction.
+        let dtype = policy.kv_dtype.unwrap_or(model.cfg.kv_dtype);
+        let pool = BlockPool::with_dtype(&model.cfg, policy.kv_budget_bytes, dtype);
+        let metrics = Metrics {
+            kv_dtype: dtype.tag().to_string(),
+            pool_budget_blocks: pool.budget_blocks(),
+            pool_block_bytes: pool.block_bytes(),
+            ..Default::default()
+        };
+        Scheduler { model, policy, active: Vec::new(), pool, metrics }
     }
 
     pub fn active(&self) -> usize {
@@ -538,6 +548,74 @@ mod tests {
         assert_eq!(all.len(), 2, "oversized requests must drain one at a time");
         for r in &all {
             assert_eq!(r.tokens.len(), 10);
+        }
+    }
+
+    #[test]
+    fn quantized_pool_multiplies_admission_capacity() {
+        use crate::kv::KvDtype;
+        let model = tiny_model(Arch::Gpt, 17);
+        // Budget that fits exactly two projected f32 caches (see
+        // `admission_budgets_on_projected_kv`).
+        let one = KvCache::bytes_for_tokens(&model.cfg, 4 + 8);
+        let f32_sched =
+            Scheduler::new(&model, BatchPolicy { kv_budget_bytes: 2 * one, ..Default::default() });
+        let mut sched = Scheduler::new(
+            &model,
+            BatchPolicy {
+                kv_budget_bytes: 2 * one,
+                kv_dtype: Some(KvDtype::Int8),
+                ..Default::default()
+            },
+        );
+        // Same byte budget, ~4× the blocks: compressed storage is what
+        // admission actually accounts in.
+        assert!(sched.pool().block_bytes() * 3 < f32_sched.pool().block_bytes());
+        assert!(
+            sched.pool().budget_blocks() as f64 >= 1.8 * f32_sched.pool().budget_blocks() as f64,
+            "int8 budget must be ≥1.8× f32: {} vs {}",
+            sched.pool().budget_blocks(),
+            f32_sched.pool().budget_blocks()
+        );
+        assert_eq!(sched.metrics.kv_dtype, "int8");
+        assert_eq!(sched.metrics.pool_block_bytes, sched.pool().block_bytes());
+        // The f32 pool admitted these 4 requests two at a time; the
+        // int8 pool takes the whole prefill burst in round one.
+        let mut batcher = Batcher::new();
+        for i in 0..4 {
+            batcher.enqueue(Request::new(i, vec![65u8; 4], 8));
+        }
+        let _ = sched.round(&mut batcher);
+        assert_eq!(sched.active(), 4, "compressed blocks must widen admission");
+        let all = sched.run_to_completion(&mut batcher);
+        assert_eq!(all.len(), 4);
+    }
+
+    #[test]
+    fn quantized_kv_serves_deterministically() {
+        // Quantized KV changes logits within tolerance, not determinism:
+        // two identical runs must emit identical tokens.
+        use crate::kv::KvDtype;
+        let model = tiny_model(Arch::Llama, 18);
+        for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let run = || {
+                let policy = BatchPolicy { kv_dtype: Some(dtype), ..Default::default() };
+                let mut sched = Scheduler::new(&model, policy);
+                let mut batcher = Batcher::new();
+                for i in 0..4u64 {
+                    let plen = 3 + (i as usize * 5) % 11;
+                    batcher.enqueue(Request::new(i, vec![(65 + i) as u8; plen], 4 + i as usize));
+                }
+                let mut resp = sched.run_to_completion(&mut batcher);
+                resp.sort_by_key(|r| r.id);
+                resp.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+            };
+            let a = run();
+            assert_eq!(a, run(), "{dtype:?}: serving must be deterministic");
+            assert_eq!(a.len(), 4);
+            for (i, toks) in a.iter().enumerate() {
+                assert_eq!(toks.len(), 4 + i, "every request runs to its token budget");
+            }
         }
     }
 

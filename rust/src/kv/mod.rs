@@ -51,15 +51,44 @@
 //! residency — referenced plus cached blocks — the number the
 //! prefix-sharing acceptance test bounds.
 //!
-//! The model reads K/V through tables with [`BlockPool::layer_view`]:
-//! per layer, per sequence, a list of borrowed per-block row slices
+//! **Storage dtype & scale layout.** Every block stores its payload in
+//! one [`KvStore`](store::KvStore), selected by [`KvDtype`]:
+//!
+//! * `F32` — rows verbatim, layer-major: `k[li·bt·d + row·d ..][..d]`
+//!   (`bt` = [`KV_BLOCK_TOKENS`], `d` = `d_model`). Reads are zero-copy
+//!   borrows; this is the exact baseline and the default.
+//! * `Fp8E4M3` / `Int8` — one byte per element in the same layer-major
+//!   layout, plus **per-block, per-layer, per-side** scale metadata: a
+//!   single running max-abs (`amax`) for each of K and V per layer.
+//!   The effective scale is `amax / code_max` (448 for fp8-e4m3, 127
+//!   for int8) and a stored element decodes as `code · scale`. Rows are
+//!   quantized **as they are written** (`write_row`); when a new row
+//!   raises `amax`, the ≤ `bt` rows already in the slab are requantized
+//!   onto the new scale. Because rows always arrive in order, codes are
+//!   a pure function of the token chain — freeze-time dedup stays exact
+//!   (it keys on token bytes, never on floats).
+//!
+//! A quantized block is `2 · n_layer · (bt·d + 4)` bytes vs
+//! `2 · n_layer · bt·d · 4` for f32 — ~4× denser — and **every**
+//! byte-denominated number in the system (budget→block conversion,
+//! residency, peak metrics, admission reservations) uses this actual
+//! compressed size, so an int8 pool admits ~4× the blocks at the same
+//! byte budget.
+//!
+//! The model reads K/V through tables with [`BlockPool::layer_views`]:
+//! per layer, a list of borrowed per-block row slices per sequence
 //! (gather-free — attention walks segments in place, exactly like the
-//! contiguous borrow it used before).
+//! contiguous borrow it used before). F32 pools borrow straight from
+//! block storage; quantized pools dequantize into a caller-owned
+//! [`KvScratch`] arena first and borrow from there — the segment shapes
+//! are identical either way, so attention is dtype-blind.
 
 pub mod pool;
+pub mod store;
 pub mod table;
 
 pub use pool::{BlockPool, PoolStats};
+pub use store::{fp8_e4m3_decode, fp8_e4m3_encode, KvDtype, KvScratch};
 pub use table::BlockTable;
 
 /// Tokens per KV block. Matches the chunked cache's grow quantum so the

@@ -9,6 +9,12 @@
 /// `prepare_tokens`/`write_row`, and advanced by `commit`. Always return
 /// a table to the pool with [`super::BlockPool::release`] — dropping it
 /// leaks refcounts.
+///
+/// Tables are **storage-dtype agnostic**: they index blocks by id and
+/// address rows by token position, never by byte offset, so the same
+/// table drives an fp32 pool and a quantized (fp8/int8) pool
+/// identically — the pool's [`super::KvDtype`] decides what a block
+/// slot physically holds.
 #[derive(Clone, Debug)]
 pub struct BlockTable {
     /// Pool block ids, one per `KV_BLOCK_TOKENS` span of the sequence.

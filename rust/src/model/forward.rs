@@ -23,8 +23,12 @@ fn obs(calib: &mut Option<&mut CalibStats>, key: &str, x: &Matrix) {
 /// K/V rows arrive as **segments**: contiguous `[rows * d]` slices of
 /// `seg_tokens` rows each (the last may be short). The chunked
 /// [`super::generate::KvCache`] contributes one flat segment; the paged
-/// [`crate::kv::BlockPool`] contributes one segment per block — either
-/// way attention walks rows in place, gather-free.
+/// [`crate::kv::BlockPool`] contributes one segment per block — borrowed
+/// straight from fp32 block storage, or from the per-forward
+/// [`crate::kv::KvScratch`] arena when the pool stores blocks quantized
+/// (fp8/int8) and dequantizes on read. Either way the segment shapes are
+/// identical and attention walks rows in place, gather-free and
+/// dtype-blind.
 pub(crate) struct SeqKv<'a> {
     pub q_row0: usize,
     pub n_new: usize,

@@ -80,6 +80,10 @@ pub struct ModelConfig {
     pub max_seq: usize,
     pub eps: f32,
     pub rope_theta: f32,
+    /// KV-cache block storage dtype (f32 exact baseline, or fp8/int8
+    /// with per-block-per-layer scales). Serving policy may override
+    /// per-engine; this is the model-level default.
+    pub kv_dtype: crate::kv::KvDtype,
 }
 
 impl ModelConfig {
@@ -98,6 +102,10 @@ impl ModelConfig {
             eps: j.get("eps").and_then(|v| v.as_f64()).unwrap_or(1e-5) as f32,
             rope_theta: j.get("rope_theta").and_then(|v| v.as_f64()).unwrap_or(10000.0)
                 as f32,
+            kv_dtype: match j.get("kv_dtype").and_then(|v| v.as_str()) {
+                Some(s) => crate::kv::KvDtype::parse(s)?,
+                None => crate::kv::KvDtype::F32,
+            },
         })
     }
 
@@ -115,6 +123,7 @@ impl ModelConfig {
             ("max_seq", Json::from(self.max_seq)),
             ("eps", Json::Num(self.eps as f64)),
             ("rope_theta", Json::Num(self.rope_theta as f64)),
+            ("kv_dtype", Json::from(self.kv_dtype.tag())),
         ])
     }
 
@@ -421,6 +430,7 @@ pub mod testutil {
             max_seq: 64,
             eps: 1e-5,
             rope_theta: 10000.0,
+            kv_dtype: crate::kv::KvDtype::F32,
         };
         let mut rng = Rng::seed_from_u64(seed);
         let mut m = |r: usize, c: usize| {

@@ -10,19 +10,24 @@
 //! weight streams across every prompt admitted in a scheduling round
 //! exactly as PR 1's fused decode amortizes them across sequences.
 //!
-//! Attention reads K/V *through the block tables*: per layer and
-//! sequence, [`BlockPool::layer_view`] hands back one borrowed row
-//! segment per block (gather-free) and the shared
-//! [`Model::attention_kv`] substrate walks them in place. Because every
-//! kernel on the path is row-independent, the logits are bit-identical
-//! to the chunked per-request cache path ([`Model::forward_cached`]) —
-//! the property tests pin this.
+//! Attention reads K/V *through the block tables*: per layer,
+//! [`BlockPool::layer_views`] hands back one borrowed row segment per
+//! block per sequence (gather-free) and the shared
+//! [`Model::attention_kv`] substrate walks them in place. An f32 pool
+//! borrows storage directly; a quantized pool (fp8/int8 blocks with
+//! per-block-per-layer scales) dequantizes into a per-forward
+//! [`KvScratch`] arena first — the segment shapes are identical, so
+//! attention is dtype-blind. Because every kernel on the path is
+//! row-independent, an **f32** pool's logits are bit-identical to the
+//! chunked per-request cache path ([`Model::forward_cached`]) — the
+//! property tests pin this; quantized pools trade bounded KV error for
+//! ~4× pool capacity (tolerance-tested).
 
 use super::forward::SeqKv;
 use super::ops::*;
 use super::{Arch, Model};
 use crate::data::embed;
-use crate::kv::{BlockPool, BlockTable};
+use crate::kv::{BlockPool, BlockTable, KvScratch};
 use crate::tensor::{matmul, Matrix};
 
 impl Model {
@@ -79,8 +84,13 @@ impl Model {
         }
         {
             // Read-only table views for the layer loop (commit below
-            // needs the tables mutably again).
+            // needs the tables mutably again). The scratch arena backs
+            // dequantized K/V segments for quantized pools (f32 pools
+            // never touch it); one instance amortizes across layers.
             let tb_views: Vec<&BlockTable> = tables.iter().map(|t| &**t).collect();
+            let uptos: Vec<usize> =
+                new_tokens.iter().zip(&pasts).map(|(t, p)| p + t.len()).collect();
+            let mut scratch = KvScratch::new();
             for (li, blk) in self.blocks.iter().enumerate() {
                 let mut h = x.clone();
                 self.norm1(blk, &mut h);
@@ -102,23 +112,21 @@ impl Model {
                     }
                 }
                 // Ragged attention through the block tables: one
-                // borrowed segment per block, walked in place.
+                // borrowed segment per block, walked in place (from
+                // storage or, quantized, from the scratch arena).
                 let attn = {
                     let pool_ref: &BlockPool = pool;
-                    let seqs: Vec<SeqKv> = new_tokens
-                        .iter()
+                    let views = pool_ref.layer_views(&tb_views, li, &uptos, &mut scratch);
+                    let seqs: Vec<SeqKv> = views
+                        .into_iter()
                         .enumerate()
-                        .map(|(i, toks)| {
-                            let (k, v) =
-                                pool_ref.layer_view(tb_views[i], li, pasts[i] + toks.len());
-                            SeqKv {
-                                q_row0: offs[i],
-                                n_new: toks.len(),
-                                past: pasts[i],
-                                k,
-                                v,
-                                seg_tokens: pool_ref.block_tokens(),
-                            }
+                        .map(|(i, (k, v))| SeqKv {
+                            q_row0: offs[i],
+                            n_new: new_tokens[i].len(),
+                            past: pasts[i],
+                            k,
+                            v,
+                            seg_tokens: pool_ref.block_tokens(),
                         })
                         .collect();
                     self.attention_kv(&q, &seqs)
@@ -168,11 +176,44 @@ impl Model {
 mod tests {
     use super::super::testutil::tiny_model;
     use super::super::{Arch, Model};
-    use crate::kv::{BlockPool, BlockTable, KV_BLOCK_TOKENS};
+    use crate::kv::{BlockPool, BlockTable, KvDtype, KV_BLOCK_TOKENS};
     use crate::model::generate::KvCache;
 
     fn pool_for(m: &Model) -> BlockPool {
         BlockPool::new(&m.cfg, 64 << 20)
+    }
+
+    #[test]
+    fn paged_quantized_tracks_f32_logits() {
+        // Quantized KV perturbs logits within a bounded envelope; the
+        // f32 path stays the exact reference (pinned by the tests
+        // below). int8 (8-bit uniform grid) must track tighter than fp8
+        // (3-bit mantissa).
+        for arch in [Arch::Gpt, Arch::Llama] {
+            let m = tiny_model(arch, 36);
+            let prompt: Vec<u8> = (5..45).collect(); // crosses 2 block boundaries
+            let mut pf = pool_for(&m);
+            let mut tf = BlockTable::new(m.cfg.max_seq);
+            let reference = m.forward_paged(&[&prompt], &mut pf, &mut [&mut tf]);
+            let norm: f32 = reference.row(0).iter().map(|x| x * x).sum::<f32>().sqrt();
+            for (dtype, tol) in [(KvDtype::Int8, 0.15), (KvDtype::Fp8E4M3, 0.40)] {
+                let mut pq = BlockPool::with_dtype(&m.cfg, 64 << 20, dtype);
+                let mut tq = BlockTable::new(m.cfg.max_seq);
+                let logits = m.forward_paged(&[&prompt], &mut pq, &mut [&mut tq]);
+                let err: f32 = logits
+                    .row(0)
+                    .iter()
+                    .zip(reference.row(0))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f32>()
+                    .sqrt();
+                assert!(
+                    err <= tol * norm,
+                    "{arch:?}/{dtype:?}: rel logit error {} > {tol}",
+                    err / norm
+                );
+            }
+        }
     }
 
     #[test]

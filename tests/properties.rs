@@ -438,3 +438,209 @@ fn prop_model_cached_decode_matches_full() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_fp8_codec_matches_grid_quantizer() {
+    // The KV-store byte codec and the eval-path grid quantizer must
+    // agree everywhere: decode(encode(x)) == Fp8E4M3.quantize(x), and
+    // on-grid values are fixed points.
+    use sdq::kv::{fp8_e4m3_decode, fp8_e4m3_encode};
+    check("fp8 codec == grid", 25, |rng| {
+        for _ in 0..64 {
+            // Log-uniform magnitudes spanning subnormals to the clamp.
+            let mag = (2.0f32).powf(rng.range_f32(-12.0, 10.5));
+            let x = if rng.below(2) == 0 { mag } else { -mag };
+            let want = NumFormat::Fp8E4M3.quantize(x);
+            let got = fp8_e4m3_decode(fp8_e4m3_encode(x));
+            if got != want {
+                return Err(format!("x={x}: codec {got} vs grid {want}"));
+            }
+            if fp8_e4m3_decode(fp8_e4m3_encode(want)) != want {
+                return Err(format!("on-grid value {want} is not a fixed point"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Test-local KV pool geometry: 1 layer and a small block so cases
+/// cross block boundaries quickly.
+fn kv_test_cfg(d: usize) -> sdq::model::ModelConfig {
+    sdq::model::ModelConfig {
+        name: "kvq-prop".into(),
+        arch: sdq::model::Arch::Gpt,
+        d_model: d,
+        n_layer: 1,
+        n_head: 2,
+        d_ff: 2 * d,
+        vocab: 256,
+        max_seq: 64,
+        eps: 1e-5,
+        rope_theta: 10000.0,
+        kv_dtype: sdq::kv::KvDtype::F32,
+    }
+}
+
+#[test]
+fn prop_kv_quant_roundtrip_error_bounds() {
+    // fp8/int8 KV rows written through the pool round-trip within
+    // analytic error bounds of the per-block-per-layer scale scheme.
+    // Two regimes per case: rows sorted by descending max-abs (the
+    // block scale is fixed by the first row — single-shot rounding
+    // bounds hold exactly) and the raw random order (rescales compound
+    // a bounded number of requantizations).
+    use sdq::kv::{BlockPool, BlockTable, KvDtype, KvScratch};
+    check("kv quant roundtrip bounded", 12, |rng| {
+        let d = 8 * (1 + rng.below(3)); // 8 / 16 / 24
+        let cfg = kv_test_cfg(d);
+        let bt = 8usize;
+        let n = 2 + rng.below(20); // 2..=21 rows → up to 3 blocks
+        // Rows with per-row magnitude spread (the LLM KV regime).
+        let gen_rows = |rng: &mut Rng| -> Vec<Vec<f32>> {
+            (0..n)
+                .map(|_| {
+                    let s = (2.0f32).powf(rng.range_f32(-3.0, 3.0));
+                    (0..d).map(|_| rng.normal() * s).collect()
+                })
+                .collect()
+        };
+        let row_max = |r: &[f32]| r.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+        for (dtype, sorted) in [
+            (KvDtype::Int8, true),
+            (KvDtype::Int8, false),
+            (KvDtype::Fp8E4M3, true),
+            (KvDtype::Fp8E4M3, false),
+        ] {
+            let mut rows = gen_rows(rng);
+            if sorted {
+                rows.sort_by(|a, b| row_max(b).partial_cmp(&row_max(a)).unwrap());
+            }
+            let mut pool = BlockPool::with_params(&cfg, 8 << 20, bt, dtype);
+            let mut t = BlockTable::new(cfg.max_seq);
+            pool.prepare_tokens(&mut t, n);
+            for (pos, row) in rows.iter().enumerate() {
+                pool.write_row(&t, 0, pos, row, row);
+            }
+            let toks: Vec<u8> = (0..n as u8).collect();
+            pool.commit(&mut t, &toks);
+            let mut scr = KvScratch::new();
+            let (ks, _) = pool.layer_view(&t, 0, n, &mut scr);
+            for (pos, row) in rows.iter().enumerate() {
+                let (bi, r) = (pos / bt, pos % bt);
+                // Per-block scale anchor: max over the block's rows.
+                let lo = bi * bt;
+                let hi = ((bi + 1) * bt).min(n);
+                let amax = rows[lo..hi].iter().map(|r| row_max(r)).fold(0.0f32, f32::max);
+                for (c, want) in row.iter().enumerate() {
+                    let got = ks[bi][r * d + c];
+                    let err = (got - want).abs();
+                    let bound = match (dtype, sorted) {
+                        // Single-shot RNE: half a quantum of the int8
+                        // grid / half an ulp (≤ 2⁻⁴ relative) + the
+                        // subnormal floor for fp8.
+                        // (+ amax·1e-5 absorbs f32 arithmetic slop in
+                        // the normalize/denormalize multiplies.)
+                        (KvDtype::Int8, true) => amax * (1.0 / 254.0 + 1e-5) + 1e-6,
+                        (KvDtype::Fp8E4M3, true) => {
+                            want.abs() * 0.0625 + amax * 3e-6 + 1e-7
+                        }
+                        // Random order: every rescale requantizes prior
+                        // rows once; ≤ bt−1 rescales per block compound
+                        // additively (int8) / multiplicatively (fp8).
+                        (KvDtype::Int8, false) => {
+                            amax * ((bt as f32) / 254.0 + 1e-5) + 1e-6
+                        }
+                        (KvDtype::Fp8E4M3, false) => {
+                            want.abs() * (1.0625f32.powi(bt as i32) - 1.0) + amax * 1e-4
+                        }
+                        _ => unreachable!(),
+                    };
+                    if err > bound {
+                        return Err(format!(
+                            "{dtype:?} sorted={sorted} pos={pos} col={c}: \
+                             |{got} - {want}| = {err} > {bound} (amax {amax})"
+                        ));
+                    }
+                }
+            }
+            pool.release(t);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_paged_quantized_close_to_f32_and_deterministic() {
+    // Quantized-KV forward tracks the f32 reference within a bounded
+    // relative L2 envelope on the logits, and is exactly reproducible
+    // (same prompt, fresh pool ⇒ bit-identical logits).
+    use sdq::kv::{BlockPool, BlockTable, KvDtype};
+    check("paged quantized ≈ f32", 6, |rng| {
+        let arch = [sdq::model::Arch::Gpt, sdq::model::Arch::Llama][rng.below(2)];
+        let model = sdq::model::testutil::tiny_model(arch, rng.next_u64());
+        let plen = 4 + rng.below(40);
+        let prompt: Vec<u8> = (0..plen).map(|_| rng.below(256) as u8).collect();
+        let mut pf = BlockPool::new(&model.cfg, 32 << 20);
+        let mut tf = BlockTable::new(model.cfg.max_seq);
+        let reference = model.forward_paged(&[&prompt], &mut pf, &mut [&mut tf]);
+        let norm: f32 = reference.row(0).iter().map(|x| x * x).sum::<f32>().sqrt();
+        for (dtype, tol) in [(KvDtype::Int8, 0.15), (KvDtype::Fp8E4M3, 0.40)] {
+            let run = |m: &sdq::model::Model| {
+                let mut pool = BlockPool::with_dtype(&m.cfg, 32 << 20, dtype);
+                let mut tb = BlockTable::new(m.cfg.max_seq);
+                let l = m.forward_paged(&[&prompt], &mut pool, &mut [&mut tb]);
+                l.row(0).to_vec()
+            };
+            let a = run(&model);
+            if a != run(&model) {
+                return Err(format!("{dtype:?}: quantized forward is not deterministic"));
+            }
+            let err: f32 = a
+                .iter()
+                .zip(reference.row(0))
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f32>()
+                .sqrt();
+            if err > tol * norm {
+                return Err(format!(
+                    "{dtype:?} plen={plen}: rel logit err {} > {tol}",
+                    err / norm
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_f32_dtype_is_exactly_the_old_path() {
+    // The dtype generalization must leave the f32 pool bit-exact: an
+    // explicit F32 pool and a default pool produce identical logits to
+    // the chunked per-request cache, token for token.
+    use sdq::kv::{BlockPool, BlockTable, KvDtype};
+    use sdq::model::generate::KvCache;
+    check("f32 dtype bit-exact", 6, |rng| {
+        let arch = [sdq::model::Arch::Gpt, sdq::model::Arch::Llama][rng.below(2)];
+        let model = sdq::model::testutil::tiny_model(arch, rng.next_u64());
+        let plen = 1 + rng.below(36);
+        let prompt: Vec<u8> = (0..plen).map(|_| rng.below(256) as u8).collect();
+        let mut cache = KvCache::new(&model);
+        let mut ref_logits = model.forward_cached(&prompt, &mut cache);
+        let mut pool = BlockPool::with_dtype(&model.cfg, 32 << 20, KvDtype::F32);
+        let mut tb = BlockTable::new(model.cfg.max_seq);
+        let mut logits = model.forward_paged(&[&prompt], &mut pool, &mut [&mut tb]);
+        if logits.row(0) != ref_logits.row(ref_logits.rows - 1) {
+            return Err("explicit F32 pool diverged at prefill".into());
+        }
+        let mut t = rng.below(256) as u8;
+        for step in 0..4 {
+            ref_logits = model.forward_cached(&[t], &mut cache);
+            logits = model.forward_paged(&[&[t]], &mut pool, &mut [&mut tb]);
+            if logits.row(0) != ref_logits.row(0) {
+                return Err(format!("explicit F32 pool diverged at decode step {step}"));
+            }
+            t = t.wrapping_mul(167).wrapping_add(13);
+        }
+        Ok(())
+    });
+}
