@@ -12,6 +12,21 @@
 //! compressed pool geometry — the same byte budget buys ~4× the blocks
 //! at int8, which the bench asserts (≥ 1.8× effective capacity).
 //!
+//! A **speculative-decode sweep** rides on top: per config/width, two
+//! extra f32-pool rows serve the same requests with drafting on —
+//! `ngram` (self-lookup, zero extra weights) and `sdq-draft` (a draft
+//! model built from the same base weights at the same config: the
+//! acceptance *ceiling* arm — identical numerics mean every draft
+//! matches; rougher draft configs are `examples/serve.rs --draft-config`
+//! territory). Both rows are asserted **bit-identical** to the non-spec
+//! f32 greedy outputs; the sdq-draft row additionally asserts
+//! acceptance rate > 0 and **fewer decode rounds** than the identical
+//! non-spec run (structural guarantees — plain batching already puts
+//! tokens/round near the batch width, so round count is the metric a
+//! broken accept path can't fake). The n-gram row's acceptance depends
+//! on how repetitive the model's output is and is reported, not
+//! asserted.
+//!
 //! Emits `BENCH_serving.json` (cwd) plus the usual
 //! `target/bench-results/serving.json` record so the perf trajectory is
 //! tracked across PRs (and gated by CI's `bench-regression` job against
@@ -30,9 +45,13 @@ use sdq::kv::KvDtype;
 use sdq::model::{Arch, Block, Linear, Model, ModelConfig, NamedLinear};
 use sdq::sdq::calib::CalibStats;
 use sdq::sdq::config::CompressionConfig;
+use sdq::spec::{SdqDrafter, SpecPolicy};
 use sdq::tensor::Matrix;
 use sdq::util::bench::Table;
 use sdq::util::rng::Rng;
+
+/// Drafted tokens per sequence per round in the spec rows.
+const SPEC_K: usize = 3;
 
 /// Synthetic GPT big enough that decode is weight-stream bound
 /// (the regime batching is supposed to win in).
@@ -112,10 +131,14 @@ fn main() {
     let ds = if artifacts { Some(harness::load_dataset().expect("corpus")) } else { None };
 
     let mut table = Table::new(
-        &format!("Serving: paged+batched vs per-sequence decode, KV dtype sweep — {mname}"),
+        &format!(
+            "Serving: paged+batched vs per-sequence decode, KV dtype + speculative sweep — \
+             {mname}"
+        ),
         &[
             "Config",
             "kv dtype",
+            "spec",
             "max_active",
             "req",
             "batched tok/s",
@@ -129,6 +152,10 @@ fn main() {
             "prefix hit",
             "evict",
             "div vs f32",
+            "spec drafted",
+            "spec accepted",
+            "accept rate",
+            "tok/round",
         ],
     );
     let configs: &[&str] = if smoke {
@@ -180,14 +207,14 @@ fn main() {
             // utilization counters — are exactly reproducible. The CI
             // regression gate compares those numbers against a committed
             // baseline, so they must not depend on submission timing.
-            let run = |batched: bool, dtype: KvDtype, reqs: Vec<Request>| {
+            let run = |batched: bool, dtype: KvDtype, spec: Option<SpecPolicy>, reqs: Vec<Request>| {
                 let policy = BatchPolicy {
                     max_active,
                     batched_decode: batched,
                     kv_dtype: Some(dtype),
                     ..Default::default()
                 };
-                let mut sched = Scheduler::new(&model, policy);
+                let mut sched = Scheduler::with_spec(&model, policy, spec);
                 let mut batcher = Batcher::new();
                 for r in reqs {
                     batcher.enqueue(r);
@@ -197,14 +224,15 @@ fn main() {
                 resps.sort_by_key(|r| r.id);
                 (resps, sched.metrics)
             };
-            let (legacy_out, per_seq) = run(false, KvDtype::F32, reqs.clone());
+            let (legacy_out, per_seq) = run(false, KvDtype::F32, None, reqs.clone());
             // KV dtype sweep: the f32 row is the exact reference; the
             // quantized rows report compressed pool geometry and their
             // greedy-token divergence against it.
             let mut f32_tokens: Vec<Vec<u8>> = Vec::new();
             let mut f32_blocks = 0usize;
+            let mut f32_rounds = 0u64;
             for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
-                let (paged_out, batched) = run(true, dtype, reqs.clone());
+                let (paged_out, batched) = run(true, dtype, None, reqs.clone());
                 let divergence: usize = if dtype == KvDtype::F32 {
                     // Live equivalence guard: paged + fused must not
                     // change a single greedy token vs the chunked
@@ -214,6 +242,7 @@ fn main() {
                     }
                     f32_tokens = paged_out.iter().map(|r| r.tokens.clone()).collect();
                     f32_blocks = batched.pool_budget_blocks;
+                    f32_rounds = batched.decode_rounds;
                     0
                 } else {
                     paged_out
@@ -251,6 +280,7 @@ fn main() {
                 table.row(vec![
                     cfg_str.to_string(),
                     dtype.tag().to_string(),
+                    "off".to_string(),
                     max_active.to_string(),
                     n_req.to_string(),
                     format!("{:.1}", batched.decode_tokens_per_second()),
@@ -264,6 +294,10 @@ fn main() {
                     format!("{:.2}", batched.prefix_hit_rate()),
                     batched.kv_evictions.to_string(),
                     divergence.to_string(),
+                    "0".to_string(),
+                    "0".to_string(),
+                    "0.00".to_string(),
+                    format!("{:.2}", batched.tokens_per_round()),
                 ]);
                 eprintln!(
                     "  {cfg_str} kv={} active={max_active}: batched {} | per-seq decode \
@@ -271,6 +305,84 @@ fn main() {
                     dtype.tag(),
                     batched.summary(),
                     per_seq.decode_tokens_per_second()
+                );
+            }
+
+            // ---- speculative arms (f32 pool, same requests) ----
+            // `sdq-draft` here is the acceptance-ceiling arm: the draft
+            // is compressed from the same base at the same config, so
+            // its greedy proposals always match and acceptance is
+            // structural (asserted), not statistical. `ngram` reports
+            // whatever the workload's self-similarity buys.
+            for mode in ["ngram", "sdq-draft"] {
+                let spec = if mode == "ngram" {
+                    SpecPolicy::ngram(SPEC_K)
+                } else {
+                    let drafter =
+                        SdqDrafter::from_base(&base, &cfg, &calib).expect("draft compression");
+                    SpecPolicy::sdq(SPEC_K, drafter)
+                };
+                let (spec_out, sm) = run(true, KvDtype::F32, Some(spec), reqs.clone());
+                // Speculative greedy output must be bit-identical to the
+                // non-speculative f32 run on every request.
+                for (a, want) in spec_out.iter().zip(&f32_tokens) {
+                    assert_eq!(
+                        &a.tokens, want,
+                        "req {}: speculative ({mode}) output diverged from plain greedy",
+                        a.id
+                    );
+                }
+                if mode == "sdq-draft" {
+                    assert!(sm.spec_drafted > 0, "sdq-draft: drafter never fired");
+                    assert!(
+                        sm.spec_acceptance_rate() > 0.0,
+                        "sdq-draft: identical draft model must accept"
+                    );
+                    assert!(sm.tokens_per_round() > 1.0, "tokens/round must exceed 1");
+                    // The teeth: accepted drafts must actually shrink
+                    // the round count vs the identical non-spec run —
+                    // plain batching alone already puts tokens/round
+                    // near the batch width, so rounds are the metric a
+                    // broken accept path can't fake.
+                    assert!(
+                        sm.decode_rounds < f32_rounds,
+                        "sdq-draft: full acceptance must finish in fewer rounds \
+                         ({} vs non-spec {})",
+                        sm.decode_rounds,
+                        f32_rounds
+                    );
+                }
+                table.row(vec![
+                    cfg_str.to_string(),
+                    "f32".to_string(),
+                    mode.to_string(),
+                    max_active.to_string(),
+                    n_req.to_string(),
+                    format!("{:.1}", sm.decode_tokens_per_second()),
+                    format!("{:.1}", per_seq.decode_tokens_per_second()),
+                    format!(
+                        "{:.2}x",
+                        sm.decode_tokens_per_second() / per_seq.decode_tokens_per_second()
+                    ),
+                    format!("{:.2}", sm.decode_occupancy(max_active)),
+                    format!("{:.1}", sm.kv_bytes_peak as f64 / 1024.0),
+                    sm.pool_budget_blocks.to_string(),
+                    sm.pool_block_bytes.to_string(),
+                    format!("{:.3}", sm.pool_utilization_peak),
+                    format!("{:.2}", sm.prefix_hit_rate()),
+                    sm.kv_evictions.to_string(),
+                    "0".to_string(),
+                    sm.spec_drafted.to_string(),
+                    sm.spec_accepted.to_string(),
+                    format!("{:.2}", sm.spec_acceptance_rate()),
+                    format!("{:.2}", sm.tokens_per_round()),
+                ]);
+                eprintln!(
+                    "  {cfg_str} kv=f32 spec={mode} active={max_active}: {} | accept {:.2} | \
+                     {:.2} tok/round",
+                    sm.summary(),
+                    sm.spec_acceptance_rate(),
+                    sm.tokens_per_round()
                 );
             }
         }

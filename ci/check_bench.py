@@ -2,7 +2,9 @@
 """Bench-regression gate: compare a fresh `BENCH_serving.json` against the
 committed `ci/bench_baseline.json`.
 
-Rows are matched on (Config, kv dtype, max_active). Two metrics are
+Rows are matched on (Config, kv dtype, spec, max_active) — "spec" is
+the speculative-decode arm (off | ngram | sdq-draft), distinguishing
+rows that share a (Config, kv dtype, max_active) cell. Two metrics are
 gated, both with a relative tolerance (default ±25%):
 
 * ``batched tok/s`` — one-sided: the current run must not fall more than
@@ -28,11 +30,17 @@ import argparse
 import json
 import sys
 
-KEY_FIELDS = ("Config", "kv dtype", "max_active")
+# "spec" distinguishes the speculative-decode rows (off | ngram |
+# sdq-draft) that share a (Config, kv dtype, max_active) cell with the
+# plain row; legacy baselines without the field key as "off", so
+# pre-spec baselines keep matching current non-spec rows.
+KEY_FIELDS = ("Config", "kv dtype", "spec", "max_active")
 
 
 def row_key(row):
-    return tuple(str(row.get(k)) for k in KEY_FIELDS)
+    return tuple(
+        str(row.get(k, "off") if k == "spec" else row.get(k)) for k in KEY_FIELDS
+    )
 
 
 def as_float(value):

@@ -3,11 +3,27 @@
 //!
 //! Run: `cargo run --release --example serve -- [--model gpt-micro]
 //!       [--config SDQ-W7:8-1:8int8-6:8fp4] [--requests 16] [--max-new 32]
-//!       [--kv-dtype f32|fp8-e4m3|int8]`
+//!       [--kv-dtype f32|fp8-e4m3|int8]
+//!       [--spec off|ngram|sdq-draft] [--spec-k 4]
+//!       [--draft-config Q-VSQuant-WAint4]`
+//!
+//! Flags:
+//! * `--spec` — speculative decoding mode. `ngram` drafts from the
+//!   sequence's own bytes (zero extra weights); `sdq-draft` builds a
+//!   second, more aggressively compressed model from the same base
+//!   weights (see `--draft-config`) and lets it propose tokens the
+//!   serving model verifies in one fused pass. Speculation preserves
+//!   greedy output bit-for-bit, so `--spec` forces temperature 0 on
+//!   the demo requests (sampled requests never speculate).
+//! * `--spec-k` — drafted tokens per sequence per round (default 4).
+//! * `--draft-config` — compression config for the `sdq-draft` draft
+//!   model (default `Q-VSQuant-WAint4`, deliberately rougher than the
+//!   serving config: drafts are cheap, verification keeps them honest).
 
 use sdq::coordinator::{batcher::BatchPolicy, Engine, Request};
 use sdq::data::Split;
 use sdq::harness;
+use sdq::spec::{SdqDrafter, SpecPolicy};
 use sdq::util::cli::Args;
 
 fn main() -> sdq::Result<()> {
@@ -19,20 +35,51 @@ fn main() -> sdq::Result<()> {
     let cfg_str = args.get_or("config", "SDQ-W7:8-1:8int8-6:8fp4").to_string();
     let n_req = args.get_usize("requests", 16)?;
     let max_new = args.get_usize("max-new", 32)?;
+    let spec_mode = args.get_or("spec", "off").to_string();
+    let spec_k = args.get_usize("spec-k", 4)?;
+    // Fail on flag typos before the expensive load/calibrate/compress
+    // pipeline runs (the draft config parses here too).
+    if !matches!(spec_mode.as_str(), "off" | "ngram" | "sdq-draft") {
+        anyhow::bail!("unknown --spec mode: {spec_mode} (expected off | ngram | sdq-draft)");
+    }
+    let draft_cfg_str = args.get_or("draft-config", "Q-VSQuant-WAint4").to_string();
+    let draft_cfg: Option<sdq::sdq::config::CompressionConfig> = (spec_mode == "sdq-draft")
+        .then(|| draft_cfg_str.parse().map_err(|e: String| anyhow::anyhow!(e)))
+        .transpose()?;
 
     let cfg = cfg_str.parse().map_err(|e: String| anyhow::anyhow!(e))?;
     let mut model = harness::load_model(&mname)?;
+    // Pre-compression weights seed the drafter; only clone them when a
+    // draft model will actually be built.
+    let base = (spec_mode == "sdq-draft").then(|| model.clone());
     let ds = harness::load_dataset()?;
     let calib = harness::calibrate(&model, &ds, 1024, harness::needs_gram(&cfg));
     model.compress(&cfg, &calib)?;
-    println!("serving {mname} under {cfg_str}");
+    let spec = match spec_mode.as_str() {
+        "off" => None,
+        "ngram" => Some(SpecPolicy::ngram(spec_k)),
+        _ => {
+            let base = base.as_ref().expect("cloned for sdq-draft above");
+            let draft_cfg = draft_cfg.as_ref().expect("parsed for sdq-draft above");
+            let drafter = SdqDrafter::from_base(base, draft_cfg, &calib)?;
+            println!("drafting with a {draft_cfg_str} copy of {mname}");
+            Some(SpecPolicy::sdq(spec_k, drafter))
+        }
+    };
+    println!("serving {mname} under {cfg_str} (spec: {spec_mode})");
 
     let test = ds.split(Split::Test);
     let reqs: Vec<Request> = (0..n_req)
         .map(|i| {
             let start = (i * 709) % (test.len() - 65);
-            Request::new(i as u64, test[start..start + 32].to_vec(), max_new)
-                .with_temperature(0.8)
+            let r = Request::new(i as u64, test[start..start + 32].to_vec(), max_new);
+            // Speculation only applies to greedy requests; keep the
+            // sampled demo flavour when it is off.
+            if spec.is_some() {
+                r
+            } else {
+                r.with_temperature(0.8)
+            }
         })
         .collect();
     // Quantized KV storage (fp8-e4m3 / int8) stores pool blocks at ~¼
@@ -48,7 +95,7 @@ fn main() -> sdq::Result<()> {
         kv_dtype,
         ..Default::default()
     };
-    let (resps, metrics) = Engine::run_batch(model, policy, reqs);
+    let (resps, metrics) = Engine::run_batch_spec(model, policy, spec, reqs);
     for r in resps.iter().take(4) {
         println!(
             "[req {}] ttft {:>6.1}ms total {:>7.1}ms  {:.40}…",
@@ -80,6 +127,18 @@ fn main() -> sdq::Result<()> {
         metrics.kv_evictions,
         metrics.kv_cow_copies,
     );
+    if metrics.spec_drafter != "off" {
+        println!(
+            "speculative decode [{}, k={}]: drafted {}, accepted {} (rate {:.2}), \
+             {:.2} tokens/round",
+            metrics.spec_drafter,
+            spec_k,
+            metrics.spec_drafted,
+            metrics.spec_accepted,
+            metrics.spec_acceptance_rate(),
+            metrics.tokens_per_round(),
+        );
+    }
 
     // PJRT batch-scoring path: the AOT SDQ forward (fixed [4, 64] shape).
     let art_name = format!("model_fwd_sdq_{mname}");

@@ -16,6 +16,15 @@ use std::collections::VecDeque;
 use super::request::{InFlight, Request};
 
 /// Batching policy knobs.
+///
+/// `BatchPolicy` stays `Copy` — it is the value-type config surface the
+/// benches sweep. The speculative-decode policy
+/// ([`crate::spec::SpecPolicy`]) rides next to it instead of inside it,
+/// because a drafter may own a whole draft `Model`; pass it through
+/// [`Scheduler::with_spec`](super::scheduler::Scheduler::with_spec) or
+/// [`Engine::start_with_spec`](super::engine::Engine::start_with_spec).
+/// Speculation only applies in paged mode (`batched_decode = true`) —
+/// the legacy per-sequence baseline has no rollback story.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     /// Max concurrently-active sequences (decode round width).

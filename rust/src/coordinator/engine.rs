@@ -11,6 +11,7 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::request::{Request, Response};
 use super::scheduler::Scheduler;
 use crate::model::Model;
+use crate::spec::SpecPolicy;
 
 enum Msg {
     Submit(Request),
@@ -27,10 +28,21 @@ pub struct Engine {
 impl Engine {
     /// Start the engine on its own worker thread.
     pub fn start(model: Model, policy: BatchPolicy) -> Self {
+        Self::start_with_spec(model, policy, None)
+    }
+
+    /// Start the engine with an optional speculative-decode policy (the
+    /// drafter moves onto the worker thread with the model). Greedy
+    /// output is bit-identical with speculation on or off.
+    pub fn start_with_spec(
+        model: Model,
+        policy: BatchPolicy,
+        spec: Option<SpecPolicy>,
+    ) -> Self {
         let (tx, req_rx) = channel::<Msg>();
         let (resp_tx, rx) = channel::<Response>();
         let worker = std::thread::spawn(move || {
-            let mut sched = Scheduler::new(&model, policy);
+            let mut sched = Scheduler::with_spec(&model, policy, spec);
             let mut batcher = Batcher::new();
             let mut shutdown = false;
             loop {
@@ -83,8 +95,18 @@ impl Engine {
         policy: BatchPolicy,
         requests: Vec<Request>,
     ) -> (Vec<Response>, super::metrics::Metrics) {
+        Self::run_batch_spec(model, policy, None, requests)
+    }
+
+    /// [`Self::run_batch`] with a speculative-decode policy.
+    pub fn run_batch_spec(
+        model: Model,
+        policy: BatchPolicy,
+        spec: Option<SpecPolicy>,
+        requests: Vec<Request>,
+    ) -> (Vec<Response>, super::metrics::Metrics) {
         let n = requests.len();
-        let engine = Engine::start(model, policy);
+        let engine = Engine::start_with_spec(model, policy, spec);
         for r in requests {
             engine.submit(r);
         }
@@ -127,6 +149,29 @@ mod tests {
         let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
         ids.sort();
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn run_batch_spec_matches_plain_and_reports() {
+        use crate::spec::SpecPolicy;
+        let model = tiny_model(Arch::Gpt, 3);
+        let reqs = || -> Vec<Request> {
+            (0..4).map(|i| Request::new(i, vec![(65 + i) as u8; 4], 6)).collect()
+        };
+        let (mut plain, _) = Engine::run_batch(model.clone(), BatchPolicy::default(), reqs());
+        let (mut spec, metrics) = Engine::run_batch_spec(
+            model,
+            BatchPolicy::default(),
+            Some(SpecPolicy::ngram(3)),
+            reqs(),
+        );
+        plain.sort_by_key(|r| r.id);
+        spec.sort_by_key(|r| r.id);
+        let toks = |v: &[Response]| v.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>();
+        assert_eq!(toks(&spec), toks(&plain), "spec engine must not change output");
+        assert_eq!(metrics.spec_drafter, "ngram");
+        assert!(metrics.spec_acceptance_rate() >= 0.0);
+        assert!(metrics.tokens_per_round() >= 1.0);
     }
 
     #[test]

@@ -69,12 +69,29 @@ pub struct Metrics {
     /// Decode GEMM invocations (fused batches; in per-sequence fallback
     /// mode every sequence counts as its own width-1 batch).
     pub decode_batches: u64,
-    /// Σ sequences over decode batches — i.e. the total decode GEMM row
-    /// width. `decode_batched_tokens / decode_batches` is the mean
-    /// activation width each weight stream was amortized over.
+    /// Σ sequences over decode batches.
+    /// `decode_batched_tokens / decode_batches` is the mean number of
+    /// sequences each weight stream was amortized over. (A fused
+    /// speculative verify stages `k+1` activation rows per sequence, so
+    /// its GEMM row count exceeds this sequence count.)
     pub decode_batched_tokens: u64,
     /// Widest decode batch seen.
     pub decode_width_max: u64,
+    /// Tokens actually **emitted** by decode rounds. Equals
+    /// `decode_batched_tokens` in plain decode (one token per sequence
+    /// per batch); speculative rounds emit more than one token per
+    /// sequence, so this is the numerator decode throughput and
+    /// tokens-per-round use. [`Self::record_decode_batch`] adds the
+    /// batch width; the scheduler adds accepted speculative tokens on
+    /// top.
+    pub tokens_decoded: u64,
+    /// Draft tokens proposed to the speculative verify pass.
+    pub spec_drafted: u64,
+    /// Draft tokens accepted (greedy-exact prefix matches).
+    pub spec_accepted: u64,
+    /// Drafter tag (`"off"` when speculation is disabled; empty until a
+    /// scheduler stamps it).
+    pub spec_drafter: String,
     /// Fused prefill invocations (a batch of N admitted prompts through
     /// one ragged forward counts once; the per-prompt baseline counts
     /// each prompt as its own width-1 batch).
@@ -127,20 +144,60 @@ impl Metrics {
         self.tokens_generated as f64 / self.serve_time.as_secs_f64()
     }
 
-    /// Decode-phase throughput (tokens decoded per second of decode
-    /// wall time; excludes prefill).
+    /// Decode-phase throughput (tokens **emitted** per second of decode
+    /// wall time; excludes prefill). Speculative rounds emit more than
+    /// one token per sequence, which is exactly what this should
+    /// measure.
     pub fn decode_tokens_per_second(&self) -> f64 {
         if self.decode_time.is_zero() {
             return f64::NAN;
         }
-        self.decode_batched_tokens as f64 / self.decode_time.as_secs_f64()
+        self.tokens_decoded as f64 / self.decode_time.as_secs_f64()
     }
 
-    /// Record one decode GEMM batch of `width` sequences.
+    /// Record one decode GEMM batch of `width` sequences (each emitting
+    /// one token; speculative extras are added via
+    /// [`Self::record_spec`]).
     pub fn record_decode_batch(&mut self, width: usize) {
         self.decode_batches += 1;
         self.decode_batched_tokens += width as u64;
+        self.tokens_decoded += width as u64;
         self.decode_width_max = self.decode_width_max.max(width as u64);
+    }
+
+    /// Record one sequence's speculative verify outcome: `drafted`
+    /// proposed tokens of which `accepted` matched greedy-exactly.
+    /// `extra_emitted` is how many emitted tokens no decode batch has
+    /// counted yet: the fused verifier's accepted tokens ride a single
+    /// width-counted batch (pass `accepted`); the stepwise verifier
+    /// feeds every kept token through its own width-counted sub-batch
+    /// (pass `0`).
+    pub fn record_spec(&mut self, drafted: usize, accepted: usize, extra_emitted: usize) {
+        debug_assert!(accepted <= drafted && extra_emitted <= accepted);
+        self.spec_drafted += drafted as u64;
+        self.spec_accepted += accepted as u64;
+        self.tokens_decoded += extra_emitted as u64;
+    }
+
+    /// Fraction of drafted tokens the verify pass accepted. `0.0` when
+    /// nothing was drafted yet (speculation off or all abstained) —
+    /// deliberately not NaN, for the same JSON-validity reason as
+    /// [`Self::prefix_hit_rate`].
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_drafted as f64
+    }
+
+    /// Mean tokens emitted per decode round across the whole batch
+    /// (> batch width once speculation accepts drafts; `0.0` before any
+    /// round ran — never NaN).
+    pub fn tokens_per_round(&self) -> f64 {
+        if self.decode_rounds == 0 {
+            return 0.0;
+        }
+        self.tokens_decoded as f64 / self.decode_rounds as f64
     }
 
     /// Mean decode GEMM row width (weight-stream amortization factor).
@@ -204,7 +261,8 @@ impl Metrics {
             "requests={} tokens={} tput={:.1} tok/s decode={:.1} tok/s \
              width_mean={:.2} width_max={} prefill_width_mean={:.2} \
              kv_peak={:.1}KiB pool_util_peak={:.2} prefix_hit={:.2} \
-             evictions={} ttft_mean={:.1}ms ttft_p99={:.1}ms total_mean={:.1}ms",
+             evictions={} spec={} accept={:.2} tok/round={:.2} \
+             ttft_mean={:.1}ms ttft_p99={:.1}ms total_mean={:.1}ms",
             self.requests_completed,
             self.tokens_generated,
             self.tokens_per_second(),
@@ -216,6 +274,9 @@ impl Metrics {
             self.pool_utilization_peak,
             self.prefix_hit_rate(),
             self.kv_evictions,
+            if self.spec_drafter.is_empty() { "off" } else { self.spec_drafter.as_str() },
+            self.spec_acceptance_rate(),
+            self.tokens_per_round(),
             self.ttft.mean().as_secs_f64() * 1e3,
             self.ttft.quantile(0.99).as_secs_f64() * 1e3,
             self.total_latency.mean().as_secs_f64() * 1e3,
@@ -302,14 +363,46 @@ mod tests {
         // Regression: prefix_hit_rate used to be NaN before any prompt
         // was seen, and `NaN` is not valid JSON — a fresh engine's
         // metrics record must round-trip through the JSON writer/parser.
+        // The spec rates are the same class of bug: they must be 0.0
+        // (not NaN) while speculation is off or has never drafted.
         use crate::util::json::Json;
         let m = Metrics::default();
         let j = Json::obj(vec![
             ("prefix_hit_rate", Json::Num(m.prefix_hit_rate())),
+            ("spec_acceptance_rate", Json::Num(m.spec_acceptance_rate())),
+            ("tokens_per_round", Json::Num(m.tokens_per_round())),
             ("tokens_generated", Json::from(m.tokens_generated as usize)),
         ]);
         let text = j.to_string();
         let parsed = Json::parse(&text).expect("cold metrics JSON must parse");
         assert_eq!(parsed.get("prefix_hit_rate").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(parsed.get("spec_acceptance_rate").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(parsed.get("tokens_per_round").and_then(|v| v.as_f64()), Some(0.0));
+    }
+
+    #[test]
+    fn spec_counters_and_rates() {
+        let mut m = Metrics::default();
+        assert_eq!(m.spec_acceptance_rate(), 0.0, "cold rate is 0.0, never NaN");
+        assert_eq!(m.tokens_per_round(), 0.0);
+        // One fused round, width 3: one sequence accepted 2 of 3 drafts,
+        // one accepted 0 of 2, one didn't draft.
+        m.record_decode_batch(3);
+        m.decode_rounds += 1;
+        m.record_spec(3, 2, 2);
+        m.record_spec(2, 0, 0);
+        assert_eq!(m.spec_drafted, 5);
+        assert_eq!(m.spec_accepted, 2);
+        assert_eq!(m.tokens_decoded, 5, "3 batch tokens + 2 accepted extras");
+        assert!((m.spec_acceptance_rate() - 0.4).abs() < 1e-9);
+        assert!((m.tokens_per_round() - 5.0).abs() < 1e-9);
+        // Stepwise accounting: sub-batches carry the emitted tokens, so
+        // record_spec adds none.
+        m.record_decode_batch(2);
+        m.record_spec(2, 1, 0);
+        assert_eq!(m.tokens_decoded, 7);
+        m.decode_time = Duration::from_secs(7);
+        assert!((m.decode_tokens_per_second() - 1.0).abs() < 1e-9);
+        assert!(m.summary().contains("accept=0.43"));
     }
 }

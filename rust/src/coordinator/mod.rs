@@ -2,11 +2,13 @@
 //!
 //! A vLLM-style inference front end over the compressed model:
 //! request queue → block-budget admission → prefix attach + batched
-//! multi-prompt prefill → fused ragged decode rounds → responses with
-//! latency metrics. KV memory lives in the shared
-//! [`crate::kv::BlockPool`] (prefix sharing, copy-on-write, LRU
-//! eviction); the legacy per-sequence chunked-cache path survives as
-//! the benchmark baseline (`BatchPolicy::batched_decode = false`).
+//! multi-prompt prefill → fused ragged decode rounds (optionally
+//! **speculative**: draft → fused verify → accept/rollback, see
+//! [`crate::spec`]) → responses with latency metrics. KV memory lives
+//! in the shared [`crate::kv::BlockPool`] (prefix sharing,
+//! copy-on-write, LRU eviction, speculative rollback); the legacy
+//! per-sequence chunked-cache path survives as the benchmark baseline
+//! (`BatchPolicy::batched_decode = false`).
 //! Python is never on this path; the model weights come from
 //! `artifacts/` and the compute is either the native Rust engine
 //! ([`crate::model`]) or the AOT PJRT executable ([`crate::runtime`]).

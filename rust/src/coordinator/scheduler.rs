@@ -34,10 +34,31 @@ use std::time::Instant;
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::request::{InFlight, Request, Response};
-use crate::kv::{BlockPool, BlockTable};
+use crate::kv::{BlockPool, BlockTable, KvDtype};
 use crate::model::generate::KvCache;
 use crate::model::{Model, ModelConfig};
+use crate::spec::SpecPolicy;
 use crate::util::par::par_chunks_mut;
+
+/// Disjoint `&mut BlockTable` borrows of the selected (ascending)
+/// active sequences, handed to `body` — the split-borrow dance every
+/// fused paged call in a round shares.
+fn with_tables<R>(
+    active: &mut [InFlight],
+    idxs: &[usize],
+    body: impl FnOnce(&mut [&mut BlockTable]) -> R,
+) -> R {
+    let mut tbs: Vec<&mut BlockTable> = Vec::with_capacity(idxs.len());
+    let mut rest: &mut [InFlight] = active;
+    let mut base = 0usize;
+    for &i in idxs {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(i - base + 1);
+        tbs.push(head[i - base].table.as_mut().expect("prefilled"));
+        rest = tail;
+        base = i + 1;
+    }
+    body(&mut tbs)
+}
 
 /// Scheduler over a (possibly compressed) model.
 pub struct Scheduler<'m> {
@@ -45,11 +66,26 @@ pub struct Scheduler<'m> {
     pub policy: BatchPolicy,
     active: Vec<InFlight>,
     pool: BlockPool,
+    /// Speculative decode policy (paged mode only): draft → fused
+    /// verify → accept/rollback per round. `None` = plain decode.
+    spec: Option<SpecPolicy>,
     pub metrics: Metrics,
 }
 
 impl<'m> Scheduler<'m> {
     pub fn new(model: &'m Model, policy: BatchPolicy) -> Self {
+        Self::with_spec(model, policy, None)
+    }
+
+    /// Scheduler with an optional speculative-decode policy. Only the
+    /// paged mode speculates; the legacy per-sequence baseline has no
+    /// rollback story, so a policy handed to it is dropped here (and
+    /// metrics honestly report `spec = "off"` rather than a drafter
+    /// that never fires). Greedy output is bit-identical with
+    /// speculation on or off — only the number of forward rounds
+    /// changes.
+    pub fn with_spec(model: &'m Model, policy: BatchPolicy, spec: Option<SpecPolicy>) -> Self {
+        let spec = if policy.batched_decode { spec } else { None };
         // Policy override first, model default second — the pool's
         // block geometry (and hence the admission budget) is fixed at
         // engine construction.
@@ -57,11 +93,12 @@ impl<'m> Scheduler<'m> {
         let pool = BlockPool::with_dtype(&model.cfg, policy.kv_budget_bytes, dtype);
         let metrics = Metrics {
             kv_dtype: dtype.tag().to_string(),
+            spec_drafter: spec.as_ref().map(|s| s.name()).unwrap_or("off").to_string(),
             pool_budget_blocks: pool.budget_blocks(),
             pool_block_bytes: pool.block_bytes(),
             ..Default::default()
         };
-        Scheduler { model, policy, active: Vec::new(), pool, metrics }
+        Scheduler { model, policy, active: Vec::new(), pool, spec, metrics }
     }
 
     pub fn active(&self) -> usize {
@@ -205,6 +242,9 @@ impl<'m> Scheduler<'m> {
         }
 
         // ---- one fused decode batch across all active sequences ----
+        // With speculation on, each greedy sequence may first get up to
+        // `k` drafted tokens; the verify pass scores them all and keeps
+        // the longest greedy-exact prefix (abstentions plain-decode).
         let td = Instant::now();
         let decode_idx: Vec<usize> = self
             .active
@@ -218,27 +258,14 @@ impl<'m> Scheduler<'m> {
                 .iter()
                 .map(|&i| *self.active[i].generated.last().expect("has first token"))
                 .collect();
-            let logits = {
-                // Disjoint &mut borrows of each selected sequence's
-                // block table (indices are ascending).
-                let mut tbs: Vec<&mut BlockTable> = Vec::with_capacity(decode_idx.len());
-                let mut rest: &mut [InFlight] = &mut self.active;
-                let mut base = 0usize;
-                for &i in &decode_idx {
-                    let (head, tail) = std::mem::take(&mut rest).split_at_mut(i - base + 1);
-                    tbs.push(head[i - base].table.as_mut().expect("prefilled"));
-                    rest = tail;
-                    base = i + 1;
-                }
-                let tok_slices: Vec<&[u8]> = last.iter().map(std::slice::from_ref).collect();
-                model.forward_paged(&tok_slices, &mut self.pool, &mut tbs)
-            };
-            for (row, &i) in decode_idx.iter().enumerate() {
-                let f = &mut self.active[i];
-                let tok = model.sample_row(&logits, row, f.req.temperature, &mut f.rng);
-                f.generated.push(tok);
+            let drafts = self.draft_tokens(&decode_idx, &last);
+            if drafts.iter().all(|d| d.is_empty()) {
+                self.plain_decode(&decode_idx, &last);
+            } else if self.pool.dtype() == KvDtype::F32 {
+                self.spec_verify_fused(&decode_idx, &last, &drafts);
+            } else {
+                self.spec_verify_stepwise(&decode_idx, &last, &drafts);
             }
-            self.metrics.record_decode_batch(decode_idx.len());
         }
         self.metrics.decode_time += td.elapsed();
         self.metrics.decode_rounds += 1;
@@ -268,6 +295,179 @@ impl<'m> Scheduler<'m> {
         self.active = still;
         self.metrics.serve_time += t0.elapsed();
         done
+    }
+
+    // ---- decode-phase flavours (paged mode) ----
+
+    /// Propose draft tokens for every decodable sequence this round. An
+    /// empty per-sequence vec means plain decode for that sequence:
+    /// speculation off, drafter abstained, sampled (temperature > 0)
+    /// request — speculation must not touch an RNG stream — or no
+    /// decode-budget / KV-capacity head-room for even one draft.
+    fn draft_tokens(&mut self, decode_idx: &[usize], last: &[u8]) -> Vec<Vec<u8>> {
+        let Some(spec) = self.spec.as_mut() else {
+            return vec![Vec::new(); decode_idx.len()];
+        };
+        let active = &self.active;
+        decode_idx
+            .iter()
+            .zip(last)
+            .map(|(&i, &tok)| {
+                let f = &active[i];
+                let tb = f.table.as_ref().expect("prefilled");
+                // Emitted tokens ≤ k+1 must fit the decode budget, and
+                // the verify pass stages k+1 rows into the table.
+                let k_cap = spec
+                    .k
+                    .min(f.remaining().saturating_sub(1))
+                    .min(tb.remaining().saturating_sub(1));
+                if k_cap == 0 || f.req.temperature > 0.0 {
+                    return Vec::new();
+                }
+                let mut ctx = Vec::with_capacity(tb.len() + 1);
+                ctx.extend_from_slice(tb.tokens());
+                ctx.push(tok);
+                let mut d = spec.drafter.draft(&ctx, k_cap);
+                d.truncate(k_cap);
+                d
+            })
+            .collect()
+    }
+
+    /// One plain fused decode token for every selected sequence (the
+    /// non-speculative round, and the fallback when every drafter
+    /// abstained).
+    fn plain_decode(&mut self, decode_idx: &[usize], last: &[u8]) {
+        let model = self.model;
+        let logits = {
+            let pool = &mut self.pool;
+            let tok_slices: Vec<&[u8]> = last.iter().map(std::slice::from_ref).collect();
+            with_tables(&mut self.active, decode_idx, |tbs| {
+                model.forward_paged(&tok_slices, pool, tbs)
+            })
+        };
+        for (row, &i) in decode_idx.iter().enumerate() {
+            let f = &mut self.active[i];
+            let tok = model.sample_row(&logits, row, f.req.temperature, &mut f.rng);
+            f.generated.push(tok);
+        }
+        self.metrics.record_decode_batch(decode_idx.len());
+    }
+
+    /// Fused speculative verify (f32 pools): one ragged forward scores
+    /// every sequence's input token plus all its drafts (`n_new = k+1`)
+    /// and rejected tokens roll back by **truncating** the sequence's
+    /// block table to the accepted length. F32 rows are stored verbatim
+    /// and every kernel is row-independent, so (a) the fused logits are
+    /// bit-identical to stepping one token at a time and (b) the kept
+    /// rows are already byte-exact in place — truncation alone restores
+    /// exactly the state plain decode would have built, no snapshot or
+    /// replay needed. Quantized pools satisfy neither property (a
+    /// drafted row can grow the slab amax and re-scale the committed
+    /// codes the earlier positions read), so they verify stepwise
+    /// instead ([`Self::spec_verify_stepwise`]); the byte-exact
+    /// [`BlockPool::checkpoint`]/[`BlockPool::rollback`] pair remains
+    /// the kv-level primitive a quantized *fused* verifier would need.
+    fn spec_verify_fused(&mut self, decode_idx: &[usize], last: &[u8], drafts: &[Vec<u8>]) {
+        debug_assert_eq!(self.pool.dtype(), KvDtype::F32);
+        let model = self.model;
+        // Committed lengths before the verify pass — the truncation
+        // anchors for rejected drafts.
+        let lens: Vec<usize> = decode_idx
+            .iter()
+            .map(|&i| self.active[i].table.as_ref().expect("prefilled").len())
+            .collect();
+        let new_tokens: Vec<Vec<u8>> = last
+            .iter()
+            .zip(drafts)
+            .map(|(&t, d)| {
+                let mut v = Vec::with_capacity(1 + d.len());
+                v.push(t);
+                v.extend_from_slice(d);
+                v
+            })
+            .collect();
+        let (logits, offs) = {
+            let pool = &mut self.pool;
+            let tok_slices: Vec<&[u8]> = new_tokens.iter().map(|t| t.as_slice()).collect();
+            with_tables(&mut self.active, decode_idx, |tbs| {
+                model.forward_paged_spec(&tok_slices, pool, tbs)
+            })
+        };
+        for (j, &i) in decode_idx.iter().enumerate() {
+            let f = &mut self.active[i];
+            if drafts[j].is_empty() {
+                let tok = model.sample_row(&logits, offs[j], f.req.temperature, &mut f.rng);
+                f.generated.push(tok);
+                continue;
+            }
+            let (accepted, emitted) = crate::spec::accept_greedy(&logits, offs[j], &drafts[j]);
+            self.metrics.record_spec(drafts[j].len(), accepted, accepted);
+            if accepted < drafts[j].len() {
+                // Roll the rejected tokens back: keep the input token
+                // plus the accepted drafts, release everything after.
+                let tb = f.table.as_mut().expect("prefilled");
+                self.pool.truncate(tb, lens[j] + accepted + 1);
+            }
+            f.generated.extend_from_slice(&emitted);
+        }
+        self.metrics.record_decode_batch(decode_idx.len());
+    }
+
+    /// Stepwise speculative verify (quantized pools). A quantized slab
+    /// re-quantizes its committed codes when a later row in the same
+    /// block grows the running amax, so a fused multi-token verify
+    /// would read — and act on — different low-bit KV than plain
+    /// one-token decode, breaking bit-identity. Instead, each drafted
+    /// depth is one fused sub-batch across the sequences still
+    /// matching: a sequence's next draft is fed only after the model's
+    /// own greedy choice confirmed the previous one, every write lands
+    /// with exactly the incremental history, only kept tokens are ever
+    /// staged, and no rollback is needed. Bit-identical by
+    /// construction; keeps the multi-token-per-round win, gives up the
+    /// single-fused-GEMM win that f32 pools get.
+    fn spec_verify_stepwise(&mut self, decode_idx: &[usize], last: &[u8], drafts: &[Vec<u8>]) {
+        let model = self.model;
+        let mut emitted: Vec<Vec<u8>> = vec![Vec::new(); decode_idx.len()];
+        // Positions (into decode_idx) still advancing at this depth.
+        let mut cur: Vec<usize> = (0..decode_idx.len()).collect();
+        let mut step = 0usize;
+        while !cur.is_empty() {
+            let idxs: Vec<usize> = cur.iter().map(|&j| decode_idx[j]).collect();
+            let toks: Vec<u8> = cur
+                .iter()
+                .map(|&j| if step == 0 { last[j] } else { drafts[j][step - 1] })
+                .collect();
+            let logits = {
+                let pool = &mut self.pool;
+                let tok_slices: Vec<&[u8]> = toks.iter().map(std::slice::from_ref).collect();
+                with_tables(&mut self.active, &idxs, |tbs| {
+                    model.forward_paged(&tok_slices, pool, tbs)
+                })
+            };
+            let mut next = Vec::with_capacity(cur.len());
+            for (row, &j) in cur.iter().enumerate() {
+                let f = &mut self.active[decode_idx[j]];
+                let g = model.sample_row(&logits, row, f.req.temperature, &mut f.rng);
+                emitted[j].push(g);
+                // Feed the next draft only while the chain keeps
+                // matching the model's own greedy choice.
+                if step < drafts[j].len() && g == drafts[j][step] {
+                    next.push(j);
+                }
+            }
+            self.metrics.record_decode_batch(idxs.len());
+            cur = next;
+            step += 1;
+        }
+        for (j, &i) in decode_idx.iter().enumerate() {
+            if !drafts[j].is_empty() {
+                // Stepwise sub-batches already counted every emitted
+                // token, so no extras ride record_spec.
+                self.metrics.record_spec(drafts[j].len(), emitted[j].len() - 1, 0);
+            }
+            self.active[i].generated.extend_from_slice(&emitted[j]);
+        }
     }
 
     // ---- legacy per-sequence baseline (batched_decode = false) ----
@@ -617,6 +817,198 @@ mod tests {
                 assert_eq!(toks.len(), 4 + i, "every request runs to its token budget");
             }
         }
+    }
+
+    /// Tiny model rigged so every logit row is all-zeros (zeroed token
+    /// embeddings kill the tied head), making greedy decode emit token 0
+    /// forever — a deterministic worst-best-case for n-gram lookup:
+    /// every draft of zeros is accepted.
+    fn constant_output_model(seed: u64) -> Model {
+        let mut m = tiny_model(Arch::Gpt, seed);
+        m.tok_emb.data.fill(0.0);
+        m
+    }
+
+    #[test]
+    fn spec_ngram_matches_plain_greedy() {
+        // Bit-identity: speculative greedy output == plain greedy
+        // output, drafts accepted or not, across ragged lengths.
+        use crate::spec::SpecPolicy;
+        let model = tiny_model(Arch::Llama, 40);
+        let reqs = |n: u64| -> Vec<Request> {
+            (0..n)
+                .map(|i| {
+                    let plen = 2 + (i as usize * 3) % 9;
+                    Request::new(i, vec![(65 + i) as u8; plen], 4 + i as usize % 5)
+                })
+                .collect()
+        };
+        let run = |spec: Option<SpecPolicy>| {
+            let mut sched = Scheduler::with_spec(&model, BatchPolicy::default(), spec);
+            let mut batcher = Batcher::new();
+            for r in reqs(6) {
+                batcher.enqueue(r);
+            }
+            let mut resp = sched.run_to_completion(&mut batcher);
+            resp.sort_by_key(|r| r.id);
+            resp.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(run(Some(SpecPolicy::ngram(3))), run(None));
+    }
+
+    #[test]
+    fn spec_accepts_and_shrinks_rounds_on_repetitive_output() {
+        // The constant-output model loops immediately, so n-gram drafts
+        // are guaranteed to match: acceptance must be 1.0 and the whole
+        // generation must take far fewer decode rounds than tokens.
+        use crate::spec::SpecPolicy;
+        let model = constant_output_model(41);
+        let want = model.generate(&[9, 0, 0], 12, 0.0, 0);
+        assert!(want.iter().all(|t| *t == 0), "rigged model must emit zeros");
+        let mut sched =
+            Scheduler::with_spec(&model, BatchPolicy::default(), Some(SpecPolicy::ngram(4)));
+        let mut batcher = Batcher::new();
+        batcher.enqueue(Request::new(0, vec![9, 0, 0], 12));
+        let resp = sched.run_to_completion(&mut batcher);
+        assert_eq!(resp[0].tokens, want, "speculative output diverged");
+        let m = &sched.metrics;
+        assert_eq!(m.spec_drafter, "ngram");
+        assert!(m.spec_drafted > 0, "drafter never fired");
+        assert_eq!(m.spec_accepted, m.spec_drafted, "all zero-drafts must be accepted");
+        assert!((m.spec_acceptance_rate() - 1.0).abs() < 1e-12);
+        assert!(
+            m.decode_rounds < 11,
+            "12 tokens must take < 11 decode rounds with accepted drafts (got {})",
+            m.decode_rounds
+        );
+        assert!(m.tokens_per_round() > 1.0);
+    }
+
+    #[test]
+    fn spec_rollback_keeps_serving_consistent() {
+        // A deliberately wrong drafter: every draft gets rejected, so
+        // every round exercises the truncation rollback. Output must
+        // still be bit-identical to plain greedy, and the pool must
+        // stay consistent to the last block.
+        use crate::spec::{Drafter, SpecPolicy};
+        struct WrongDrafter;
+        impl Drafter for WrongDrafter {
+            fn name(&self) -> &'static str {
+                "wrong"
+            }
+            fn draft(&mut self, context: &[u8], k: usize) -> Vec<u8> {
+                // Propose the bit-flipped last byte, k times: almost
+                // surely not the greedy continuation.
+                vec![context.last().map(|b| b ^ 0xA5).unwrap_or(1); k]
+            }
+        }
+        for arch in [Arch::Gpt, Arch::Llama] {
+            let model = tiny_model(arch, 42);
+            let plain = {
+                let mut sched = Scheduler::new(&model, BatchPolicy::default());
+                let mut batcher = Batcher::new();
+                for i in 0..4u64 {
+                    batcher.enqueue(Request::new(i, vec![(70 + i) as u8; 3], 6));
+                }
+                let mut r = sched.run_to_completion(&mut batcher);
+                r.sort_by_key(|r| r.id);
+                r.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+            };
+            let policy = BatchPolicy::default();
+            let spec = SpecPolicy::new(3, Box::new(WrongDrafter));
+            let mut sched = Scheduler::with_spec(&model, policy, Some(spec));
+            let mut batcher = Batcher::new();
+            for i in 0..4u64 {
+                batcher.enqueue(Request::new(i, vec![(70 + i) as u8; 3], 6));
+            }
+            let mut resp = sched.run_to_completion(&mut batcher);
+            resp.sort_by_key(|r| r.id);
+            let got: Vec<_> = resp.into_iter().map(|r| r.tokens).collect();
+            assert_eq!(got, plain, "{arch:?}: rejected drafts perturbed the output");
+            sched.pool().assert_consistent();
+            assert_eq!(sched.pool().referenced_blocks(), 0, "{arch:?}: leaked blocks");
+            let m = &sched.metrics;
+            assert!(m.spec_drafted > 0);
+            assert!(
+                m.spec_accepted < m.spec_drafted,
+                "{arch:?}: the wrong drafter cannot be this right"
+            );
+        }
+    }
+
+    #[test]
+    fn spec_quantized_stepwise_matches_plain() {
+        // Quantized pools verify stepwise; output must equal the plain
+        // quantized run bit-for-bit — including with a drafter that is
+        // (deliberately) sometimes right: the constant-output model
+        // makes every n-gram draft right, a real model makes most wrong.
+        use crate::kv::KvDtype;
+        use crate::spec::SpecPolicy;
+        for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+            for (seed, constant) in [(43u64, false), (44, true)] {
+                let model =
+                    if constant { constant_output_model(seed) } else { tiny_model(Arch::Gpt, seed) };
+                let policy = BatchPolicy { kv_dtype: Some(dtype), ..Default::default() };
+                let run = |spec: Option<SpecPolicy>| {
+                    let mut sched = Scheduler::with_spec(&model, policy, spec);
+                    let mut batcher = Batcher::new();
+                    for i in 0..4u64 {
+                        let plen = 3 + (i as usize * 5) % 7;
+                        batcher.enqueue(Request::new(i, vec![(80 + i) as u8; plen], 5));
+                    }
+                    let mut resp = sched.run_to_completion(&mut batcher);
+                    resp.sort_by_key(|r| r.id);
+                    let toks: Vec<_> = resp.into_iter().map(|r| r.tokens).collect();
+                    (toks, sched.metrics.spec_accepted)
+                };
+                let (plain, _) = run(None);
+                let (spec, accepted) = run(Some(SpecPolicy::ngram(3)));
+                assert_eq!(spec, plain, "{dtype:?} constant={constant}: stepwise diverged");
+                if constant {
+                    assert!(accepted > 0, "{dtype:?}: constant model must accept drafts");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spec_sdq_drafter_full_acceptance_on_identical_model() {
+        // A draft model numerically identical to the target (f32 pool,
+        // no compression on either) always proposes the target's own
+        // greedy tokens → every draft is accepted and rounds shrink.
+        use crate::spec::{SdqDrafter, SpecPolicy};
+        let model = tiny_model(Arch::Llama, 45);
+        let want = model.generate(b"abcdef", 10, 0.0, 0);
+        let spec = SpecPolicy::sdq(3, SdqDrafter::new(model.clone()));
+        let mut sched = Scheduler::with_spec(&model, BatchPolicy::default(), Some(spec));
+        let mut batcher = Batcher::new();
+        batcher.enqueue(Request::new(0, b"abcdef".to_vec(), 10));
+        let resp = sched.run_to_completion(&mut batcher);
+        assert_eq!(resp[0].tokens, want);
+        let m = &sched.metrics;
+        assert_eq!(m.spec_drafter, "sdq-draft");
+        assert!(m.spec_drafted > 0);
+        assert_eq!(m.spec_accepted, m.spec_drafted, "identical draft model must fully accept");
+        assert!(m.decode_rounds < 9, "acceptance must shrink rounds (got {})", m.decode_rounds);
+    }
+
+    #[test]
+    fn spec_ignores_sampled_requests() {
+        // temperature > 0 sequences must keep their exact RNG streams:
+        // a spec engine and a plain engine give identical sampled
+        // output because sampled sequences never speculate.
+        use crate::spec::SpecPolicy;
+        let model = tiny_model(Arch::Gpt, 46);
+        let run = |spec: Option<SpecPolicy>| {
+            let mut sched = Scheduler::with_spec(&model, BatchPolicy::default(), spec);
+            let mut batcher = Batcher::new();
+            batcher.enqueue(Request::new(0, b"abc".to_vec(), 6).with_temperature(0.9));
+            batcher.enqueue(Request::new(1, b"xyz".to_vec(), 6)); // greedy rides along
+            let mut resp = sched.run_to_completion(&mut batcher);
+            resp.sort_by_key(|r| r.id);
+            resp.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(run(Some(SpecPolicy::ngram(3))), run(None));
     }
 
     #[test]

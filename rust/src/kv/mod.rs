@@ -83,11 +83,26 @@
 //! [`KvScratch`] arena first and borrow from there — the segment shapes
 //! are identical either way, so attention is dtype-blind.
 
+//! **Truncation & speculative rollback.** [`BlockPool::truncate`] cuts
+//! a sequence back to `n` committed tokens, releasing the dropped
+//! blocks with the same cached-vs-freed rules as retirement and making
+//! the new tail write-safe (copy-on-write if shared, un-frozen +
+//! generation-bumped if indexed, tainted if a quantized slab's scale
+//! history became impure). This is how the speculative decode engine
+//! ([`crate::spec`]) rolls back rejected drafts on f32 pools, where
+//! kept rows are verbatim and truncation alone is byte-exact. For
+//! state that truncation cannot restore exactly — quantized slabs whose
+//! amax the dropped rows inflated — [`BlockPool::checkpoint`] clones
+//! the partial tail block up front and [`BlockPool::rollback`]
+//! re-materializes it in a fresh slot, so replaying rows on top
+//! reproduces the **bit-exact** write history (and quantized codes) of
+//! plain decode.
+
 pub mod pool;
 pub mod store;
 pub mod table;
 
-pub use pool::{BlockPool, PoolStats};
+pub use pool::{BlockPool, PoolStats, SpecCheckpoint};
 pub use store::{fp8_e4m3_decode, fp8_e4m3_encode, KvDtype, KvScratch};
 pub use table::BlockTable;
 

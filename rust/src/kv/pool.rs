@@ -42,6 +42,15 @@ struct Block {
     key: Option<BlockKey>,
     /// LRU stamp among cached (refs == 0) blocks.
     last_used: u64,
+    /// Quantized-store purity flag: set when [`BlockPool::truncate`]
+    /// cuts a quantized block mid-slab. The kept codes may then sit on
+    /// a scale inflated by the truncated rows, so the block's bytes are
+    /// no longer a pure function of its token chain — it must never be
+    /// frozen into the content index (neither indexed nor dedup-merged),
+    /// or a future prefix hit / merge would swap in subtly different KV
+    /// mid-sequence. Cleared on slot reuse. Always `false` for f32
+    /// blocks (rows are stored verbatim; truncation keeps them exact).
+    tainted: bool,
 }
 
 /// Pool counters the coordinator surfaces as serving metrics.
@@ -69,6 +78,35 @@ impl PoolStats {
             return 0.0;
         }
         self.shared_tokens as f64 / self.prompt_tokens as f64
+    }
+}
+
+/// Pre-speculation snapshot of a sequence's mutable tail state, taken
+/// by [`BlockPool::checkpoint`] before a speculative verify forward and
+/// consumed by [`BlockPool::rollback`] when drafted tokens are
+/// rejected. Holds the committed length, the tokens of the partial tail
+/// block, and a byte-exact clone of that block's store (codes *and*
+/// quantization scales) — `None` when the checkpoint lands on a block
+/// boundary, because fully-committed blocks are never written again.
+#[derive(Debug)]
+pub struct SpecCheckpoint {
+    len: usize,
+    tail_tokens: Vec<u8>,
+    tail_store: Option<KvStore>,
+    /// Purity taint of the tail block at checkpoint time — re-applied
+    /// on rollback so an impure quantized slab stays out of the dedup
+    /// index across a speculate/rollback cycle.
+    tail_tainted: bool,
+}
+
+impl SpecCheckpoint {
+    /// Committed token count the rollback restores to.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
     }
 }
 
@@ -194,6 +232,12 @@ impl BlockPool {
         self.blocks.iter().filter(|b| b.refs == 0 && b.key.is_some()).count()
     }
 
+    /// Entries in the content (prefix) index — frozen blocks a future
+    /// prompt can attach.
+    pub fn index_len(&self) -> usize {
+        self.index.len()
+    }
+
     // ---- allocation ----
 
     /// Claim a block slot: free list first, grow while under the
@@ -223,6 +267,7 @@ impl BlockPool {
         debug_assert_eq!(b.store.dtype(), self.dtype, "pool blocks share one dtype");
         b.refs = 1;
         b.gen += 1;
+        b.tainted = false;
         b.store.reset();
         id
     }
@@ -234,6 +279,7 @@ impl BlockPool {
             gen: 0,
             key: None,
             last_used: 0,
+            tainted: false,
         });
         self.blocks.len() - 1
     }
@@ -313,16 +359,30 @@ impl BlockPool {
             } else if self.blocks[table.blocks[bi]].refs > 1 {
                 // Copy-on-write: give this table a private copy of the
                 // shared tail before the first new row lands in it.
-                let src = table.blocks[bi];
-                let dst = self.alloc_block();
                 let rows = table.len - bi * bt;
-                debug_assert!(rows <= bt);
-                self.copy_rows(src, dst, rows);
-                self.blocks[src].refs -= 1;
-                table.blocks[bi] = dst;
-                self.stats.cow_copies += 1;
+                self.cow_block(table, bi, rows);
             }
         }
+    }
+
+    /// Swap `table`'s (shared) block `bi` for a private copy of its
+    /// first `rows` committed rows — the copy-on-write move
+    /// [`Self::prepare_tokens`] and [`Self::truncate`] share. The copy
+    /// inherits the source's purity taint (its amax history comes along
+    /// verbatim, so an impure slab stays impure — and un-indexable — in
+    /// the copy); `truncate` layers its own stricter taint rule on top.
+    /// Returns the private copy's id.
+    fn cow_block(&mut self, table: &mut BlockTable, bi: usize, rows: usize) -> usize {
+        let src = table.blocks[bi];
+        debug_assert!(self.blocks[src].refs > 1, "COW needs a shared source");
+        debug_assert!(rows <= self.block_tokens);
+        let dst = self.alloc_block();
+        self.copy_rows(src, dst, rows);
+        self.blocks[dst].tainted = self.blocks[src].tainted;
+        self.blocks[src].refs -= 1;
+        table.blocks[bi] = dst;
+        self.stats.cow_copies += 1;
+        dst
     }
 
     /// Copy the first `rows` committed rows of every layer from block
@@ -373,6 +433,14 @@ impl BlockPool {
         if self.blocks[id].key.is_some() {
             return; // already frozen (shared via fork, committed twice)
         }
+        if self.blocks[id].tainted {
+            // A truncated quantized slab: its bytes are no longer a pure
+            // function of the token chain, so it can neither be indexed
+            // (a hit would serve impure codes) nor merged onto a
+            // canonical block (the swap would change KV mid-sequence).
+            // It stays a private, unkeyed block until released.
+            return;
+        }
         let (parent, parent_gen) = if bi == 0 {
             (NO_PARENT, 0)
         } else {
@@ -413,6 +481,22 @@ impl BlockPool {
         table.clone()
     }
 
+    /// Drop one reference to block `id` (the shared tail of `release`,
+    /// `truncate` and `rollback`): frozen blocks that hit zero stay
+    /// cached for prefix hits, unkeyed ones go to the free list.
+    fn release_block(&mut self, id: usize) {
+        let b = &mut self.blocks[id];
+        debug_assert!(b.refs > 0);
+        b.refs -= 1;
+        if b.refs == 0 {
+            self.tick += 1;
+            b.last_used = self.tick;
+            if b.key.is_none() {
+                self.free.push(id);
+            }
+        }
+    }
+
     /// Return a finished sequence's blocks. Frozen blocks that drop to
     /// zero references stay cached (and indexed) for future prefix hits;
     /// unkeyed partials go straight to the free list. Afterwards,
@@ -420,16 +504,7 @@ impl BlockPool {
     /// LRU cached blocks.
     pub fn release(&mut self, table: BlockTable) {
         for &id in table.blocks.iter().rev() {
-            let b = &mut self.blocks[id];
-            debug_assert!(b.refs > 0);
-            b.refs -= 1;
-            if b.refs == 0 {
-                self.tick += 1;
-                b.last_used = self.tick;
-                if b.key.is_none() {
-                    self.free.push(id);
-                }
-            }
+            self.release_block(id);
         }
         while self.blocks_in_use() > self.budget_blocks {
             match self.evict_one() {
@@ -437,6 +512,156 @@ impl BlockPool {
                 None => break,
             }
         }
+    }
+
+    /// Truncate a sequence to its first `new_len` committed tokens —
+    /// the rollback primitive speculative decode and preemption build
+    /// on. Blocks past the cut are released exactly like
+    /// [`Self::release`] does (frozen → cached for prefix hits, unkeyed
+    /// → free list), so refcounts and byte accounting stay exact under
+    /// prefix sharing.
+    ///
+    /// When the cut lands mid-block, the new tail must take future
+    /// writes, so it is made exclusively owned and unkeyed:
+    ///
+    /// * a **shared** tail (forked tables, or a full block attached via
+    ///   the prefix index) is copy-on-write copied — only the kept rows
+    ///   — onto a private block, leaving every sibling untouched;
+    /// * a **frozen** private tail is un-frozen: its key leaves the
+    ///   content index and its generation is bumped so child keys (which
+    ///   embed the parent generation) can never match a chain whose tail
+    ///   rows are about to be rewritten;
+    /// * a **quantized** tail is additionally marked tainted: its kept
+    ///   codes may sit on a scale the truncated rows inflated, so the
+    ///   slab is no longer a pure function of the token chain and must
+    ///   never enter the content index (see
+    ///   [`Self::checkpoint`]/[`Self::rollback`] for the bit-exact
+    ///   snapshot alternative when that impurity is unacceptable —
+    ///   f32 tails stay exact under plain truncation, which is why the
+    ///   speculative engine's fused path needs nothing more).
+    pub fn truncate(&mut self, table: &mut BlockTable, new_len: usize) {
+        assert!(new_len <= table.len, "truncate cannot extend a sequence");
+        if new_len == table.len {
+            return;
+        }
+        let bt = self.block_tokens;
+        let keep = new_len.div_ceil(bt);
+        let dropped: Vec<usize> = table.blocks[keep..].to_vec();
+        for &id in dropped.iter().rev() {
+            self.release_block(id);
+        }
+        table.truncate_to(keep, new_len);
+        if new_len % bt != 0 {
+            let bi = keep - 1;
+            let id = table.blocks[bi];
+            let rows = new_len - bi * bt;
+            if self.blocks[id].refs > 1 {
+                // Shared tail → private copy of the kept rows.
+                let dst = self.cow_block(table, bi, rows);
+                if self.dtype != KvDtype::F32 {
+                    // The copied amax covers the source's full slab, not
+                    // just the kept rows — impure history.
+                    self.blocks[dst].tainted = true;
+                }
+            } else {
+                if let Some(key) = self.blocks[id].key.take() {
+                    self.index.remove(&key);
+                    // Children key on (id, gen); the rows past the cut
+                    // will be rewritten, so invalidate every chain
+                    // through this block.
+                    self.blocks[id].gen += 1;
+                }
+                if self.dtype != KvDtype::F32 {
+                    self.blocks[id].tainted = true;
+                }
+            }
+        }
+    }
+
+    /// Bit-exact snapshot of the one piece of a sequence's state a
+    /// speculative verify pass can dirty: the partial tail block (later
+    /// rows land in it, and quantized slabs requantize committed rows
+    /// when a new row grows the running amax). Fully-committed blocks
+    /// before the tail are never written again, so they need no copy.
+    pub fn checkpoint(&self, table: &BlockTable) -> SpecCheckpoint {
+        let bt = self.block_tokens;
+        let part = table.len % bt;
+        let tail = (part != 0).then(|| &self.blocks[table.blocks[table.len / bt]]);
+        SpecCheckpoint {
+            len: table.len,
+            tail_tokens: table.tokens[table.len - part..].to_vec(),
+            tail_store: tail.map(|b| b.store.clone()),
+            tail_tainted: tail.is_some_and(|b| b.tainted),
+        }
+    }
+
+    /// Restore a table to its pre-speculation [`Self::checkpoint`]:
+    /// truncate down to the last full pre-checkpoint block (releasing
+    /// everything the verify pass allocated, froze, deduped or
+    /// copy-on-wrote — [`Self::truncate`] keeps the refcounts exact),
+    /// then re-materialize the partial tail from the snapshot in a
+    /// fresh slot. Because the snapshot is a byte-exact clone (codes
+    /// *and* scales), replaying the kept rows afterwards reproduces the
+    /// exact write history — and therefore the exact quantized codes —
+    /// that plain non-speculative decode would have produced.
+    pub fn rollback(&mut self, table: &mut BlockTable, cp: SpecCheckpoint) {
+        let bt = self.block_tokens;
+        assert!(cp.len <= table.len, "rollback target is ahead of the table");
+        self.truncate(table, (cp.len / bt) * bt);
+        if let Some(store) = cp.tail_store {
+            debug_assert_eq!(store.dtype(), self.dtype, "checkpoint dtype mismatch");
+            let id = self.alloc_block();
+            self.blocks[id].store = store;
+            // The snapshot carries the tail's purity history with it: a
+            // slab that was already tainted (impure scale history from
+            // an earlier mid-block truncate) must stay tainted.
+            self.blocks[id].tainted = cp.tail_tainted;
+            table.blocks.push(id);
+            table.tokens.extend_from_slice(&cp.tail_tokens);
+            table.len = cp.len;
+        }
+    }
+
+    // ---- invariant checking (tests + debug assertions) ----
+
+    /// Blocks currently referenced by at least one table.
+    pub fn referenced_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| b.refs > 0).count()
+    }
+
+    /// Walk every structural invariant of the pool and panic on the
+    /// first violation: the free list holds exactly the unreferenced,
+    /// unkeyed blocks (no leaks, no double frees), every keyed block is
+    /// canonical in the content index, and byte accounting is exact.
+    /// O(blocks) — test/debug use, not the serving hot path.
+    pub fn assert_consistent(&self) {
+        let free: std::collections::HashSet<usize> = self.free.iter().copied().collect();
+        assert_eq!(free.len(), self.free.len(), "free list holds duplicate slots");
+        let mut keyed = 0usize;
+        for (id, b) in self.blocks.iter().enumerate() {
+            if free.contains(&id) {
+                assert_eq!(b.refs, 0, "block {id}: free-listed but referenced");
+                assert!(b.key.is_none(), "block {id}: free-listed but keyed");
+            } else if b.refs == 0 && b.key.is_none() {
+                panic!("block {id} leaked: unreferenced, unkeyed, not free-listed");
+            }
+            if let Some(k) = &b.key {
+                keyed += 1;
+                assert!(!b.tainted, "block {id}: tainted blocks must never be keyed");
+                assert_eq!(
+                    self.index.get(k),
+                    Some(&id),
+                    "block {id}: key not canonical in the content index"
+                );
+            }
+        }
+        assert_eq!(keyed, self.index.len(), "content index size != keyed blocks");
+        // Cross-check the derived residency (blocks minus free list)
+        // against an independent census: every non-free block must be
+        // referenced or cached-keyed, and their count is what every
+        // byte-denominated number in the system scales from.
+        let census = self.blocks.iter().filter(|b| b.refs > 0 || b.key.is_some()).count();
+        assert_eq!(census, self.blocks_in_use(), "block residency census drifted");
     }
 
     /// Borrowed K/V row segments for layer `li` of one table — the
@@ -844,6 +1069,243 @@ mod tests {
         assert!(p.stats.evictions >= 1);
         p.release(b);
         assert!(p.blocks_in_use() <= 2, "release trims residency to the budget");
+    }
+
+    #[test]
+    fn truncate_releases_blocks_and_keeps_rows() {
+        let mut p = pool(8);
+        let mut t = BlockTable::new(64);
+        run_tokens(&mut p, &mut t, &(1..11).collect::<Vec<u8>>()); // 3 blocks (4+4+2)
+        assert_eq!(p.blocks_in_use(), 3);
+        p.truncate(&mut t, 6); // cut mid-block-2: drop the partial tail + rows 7..10
+        p.assert_consistent();
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.tokens(), &(1..7).collect::<Vec<u8>>()[..]);
+        assert_eq!(t.block_ids().len(), 2);
+        // Block 1 was frozen (full) and is now the partial tail: it must
+        // have left the content index so future writes can't corrupt it.
+        assert_eq!(p.index_len(), 1, "only block 0 stays indexed");
+        // Kept rows intact; the table can grow again from the cut.
+        let mut scr = KvScratch::new();
+        {
+            let (ks, _) = p.layer_view(&t, 0, 6, &mut scr);
+            assert_eq!(ks[1][0], 5.0);
+            assert_eq!(ks[1][8], 6.0);
+        }
+        run_tokens(&mut p, &mut t, &[77, 78, 79]);
+        assert_eq!(t.len(), 9);
+        let (ks, _) = p.layer_view(&t, 0, 9, &mut scr);
+        assert_eq!(ks[1][16], 77.0, "regrowth lands right after the cut");
+        p.release(t);
+        p.assert_consistent();
+        assert_eq!(p.referenced_blocks(), 0);
+    }
+
+    #[test]
+    fn truncate_unfrozen_tail_never_serves_stale_chains() {
+        let mut p = pool(8);
+        let prompt: Vec<u8> = (1..9).collect(); // exactly 2 full blocks
+        let mut t = BlockTable::new(64);
+        run_tokens(&mut p, &mut t, &prompt);
+        // Cut into block 1, rewrite a divergent tail, release.
+        p.truncate(&mut t, 6);
+        run_tokens(&mut p, &mut t, &[90, 91]);
+        p.release(t);
+        p.assert_consistent();
+        // The original 8-token chain must not fully hit: block 1's
+        // generation was bumped at truncation, so even a re-frozen slot
+        // can't satisfy the old (parent, gen) chain with stale content.
+        let mut probe = BlockTable::new(64);
+        let shared = p.attach_prefix(&mut probe, &(1..10).collect::<Vec<u8>>());
+        assert!(shared <= 4, "stale chain served after truncate: shared {shared}");
+        if shared == 4 {
+            let mut scr = KvScratch::new();
+            let (ks, _) = p.layer_view(&probe, 0, 4, &mut scr);
+            assert_eq!(ks[0][0], 1.0, "block 0 content must be the real prefix");
+        }
+        p.release(probe);
+        // The rewritten chain (1..7, 90, 91) is the one that may hit.
+        let mut probe2 = BlockTable::new(64);
+        let rewritten: Vec<u8> = vec![1, 2, 3, 4, 5, 6, 90, 91, 99];
+        let shared2 = p.attach_prefix(&mut probe2, &rewritten);
+        assert_eq!(shared2, 8, "the post-truncate chain is the cached one");
+        p.release(probe2);
+        p.assert_consistent();
+    }
+
+    #[test]
+    fn truncate_cows_shared_tail() {
+        for dtype in [KvDtype::F32, KvDtype::Int8] {
+            let mut p = pool_dt(8, dtype);
+            let mut a = BlockTable::new(64);
+            run_tokens(&mut p, &mut a, &[1, 2, 3, 4, 5, 6]); // partial tail: 2 rows
+            let tail = a.block_ids()[1];
+            let mut b = p.fork(&a);
+            // Truncating the fork mid-tail must not touch the sibling.
+            p.truncate(&mut b, 5);
+            p.assert_consistent();
+            assert_ne!(b.block_ids()[1], tail, "fork must COW the shared tail");
+            assert_eq!(p.stats.cow_copies, 1);
+            let mut scr = KvScratch::new();
+            let tol = if dtype == KvDtype::F32 { 0.0 } else { 6.0 * 0.02 };
+            {
+                let (ka, _) = p.layer_view(&a, 0, 6, &mut scr);
+                assert!((ka[1][8] - 6.0).abs() <= tol, "sibling row was perturbed");
+            }
+            let (kb, _) = p.layer_view(&b, 0, 5, &mut scr);
+            assert!((kb[1][0] - 5.0).abs() <= tol, "kept row lost in the COW copy");
+            p.release(a);
+            p.release(b);
+            p.assert_consistent();
+            assert_eq!(p.referenced_blocks(), 0);
+        }
+    }
+
+    #[test]
+    fn truncated_quantized_tail_is_never_indexed() {
+        // After a mid-slab cut, a quantized block's codes may sit on a
+        // scale the dropped rows inflated — it must never freeze into
+        // the content index, while the equivalent f32 block (verbatim
+        // rows, still pure) may.
+        for (dtype, expect_hit) in [(KvDtype::F32, true), (KvDtype::Int8, false)] {
+            let mut p = pool_dt(8, dtype);
+            let mut t = BlockTable::new(64);
+            run_tokens(&mut p, &mut t, &[1, 2, 3, 200, 201]); // large rows inflate amax
+            p.truncate(&mut t, 2);
+            run_tokens(&mut p, &mut t, &[3, 4]); // block 0 full again: 1,2,3,4
+            p.release(t);
+            p.assert_consistent();
+            let mut probe = BlockTable::new(64);
+            let shared = p.attach_prefix(&mut probe, &[1, 2, 3, 4, 9]);
+            assert_eq!(
+                shared > 0,
+                expect_hit,
+                "{dtype:?}: tainted slab must stay out of the index"
+            );
+            p.release(probe);
+        }
+    }
+
+    #[test]
+    fn checkpoint_rollback_restores_exact_state() {
+        // Speculate 3 rows past a checkpoint, roll back, replay a
+        // different continuation: the final decoded KV must be
+        // bit-identical to a control table (in its own pool, so
+        // freeze-time dedup can't alias the comparison) that never
+        // speculated — at every dtype, despite the speculative rows
+        // having inflated the quantized tail's running amax.
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let mut p = pool_dt(16, dtype);
+            let mut ctrl_p = pool_dt(16, dtype);
+            let mut spec_t = BlockTable::new(64);
+            let mut ctrl_t = BlockTable::new(64);
+            run_tokens(&mut p, &mut spec_t, &[1, 2, 3, 4, 5, 6]);
+            let cp = p.checkpoint(&spec_t);
+            assert_eq!(cp.len(), 6);
+            // Speculative rows: big values that inflate quantized scales.
+            run_tokens(&mut p, &mut spec_t, &[120, 121, 122]);
+            p.rollback(&mut spec_t, cp);
+            p.assert_consistent();
+            assert_eq!(spec_t.len(), 6);
+            assert_eq!(spec_t.tokens(), &[1, 2, 3, 4, 5, 6]);
+            // Replay the accepted continuation on both tables.
+            run_tokens(&mut p, &mut spec_t, &[7, 8, 9]);
+            run_tokens(&mut ctrl_p, &mut ctrl_t, &[1, 2, 3, 4, 5, 6]);
+            run_tokens(&mut ctrl_p, &mut ctrl_t, &[7, 8, 9]);
+            let mut scr_a = KvScratch::new();
+            let mut scr_b = KvScratch::new();
+            for li in 0..2 {
+                let (ks, vs) = p.layer_view(&spec_t, li, 9, &mut scr_a);
+                let (kc, vc) = ctrl_p.layer_view(&ctrl_t, li, 9, &mut scr_b);
+                for (seg, (a, c)) in ks.iter().zip(&kc).enumerate() {
+                    assert_eq!(a, c, "{dtype:?} layer {li} K seg {seg}: rollback drifted");
+                }
+                for (seg, (a, c)) in vs.iter().zip(&vc).enumerate() {
+                    assert_eq!(a, c, "{dtype:?} layer {li} V seg {seg}: rollback drifted");
+                }
+            }
+            p.release(spec_t);
+            ctrl_p.release(ctrl_t);
+            p.assert_consistent();
+            ctrl_p.assert_consistent();
+            assert_eq!(p.referenced_blocks(), 0);
+        }
+    }
+
+    #[test]
+    fn rollback_under_fork_leaves_sibling_intact() {
+        let mut p = pool_dt(8, KvDtype::Int8);
+        let mut a = BlockTable::new(64);
+        run_tokens(&mut p, &mut a, &[1, 2, 3, 4, 5, 6]);
+        let mut b = p.fork(&a);
+        let cp = p.checkpoint(&b);
+        // The verify pass COWs the shared tail, then gets rolled back.
+        run_tokens(&mut p, &mut b, &[100, 101, 102, 103]);
+        assert_eq!(p.stats.cow_copies, 1);
+        p.rollback(&mut b, cp);
+        p.assert_consistent();
+        assert_eq!(b.len(), 6);
+        let mut scr = KvScratch::new();
+        {
+            let (ka, _) = p.layer_view(&a, 0, 6, &mut scr);
+            assert!((ka[1][8] - 6.0).abs() <= 6.0 * 0.02, "sibling perturbed by rollback");
+        }
+        // Both forks keep serving and release cleanly.
+        run_tokens(&mut p, &mut b, &[7]);
+        p.release(a);
+        p.release(b);
+        p.assert_consistent();
+        assert_eq!(p.referenced_blocks(), 0);
+    }
+
+    #[test]
+    fn taint_survives_rollback_and_cow() {
+        // An impure quantized slab (mid-block truncate with inflated
+        // amax) must stay out of the dedup index across BOTH a
+        // checkpoint/rollback cycle and a fork-triggered COW — the
+        // snapshot and the copy carry the purity history with them.
+        let mut p = pool_dt(8, KvDtype::Int8);
+        let mut t = BlockTable::new(64);
+        run_tokens(&mut p, &mut t, &[1, 2, 200, 201]); // big rows inflate amax
+        p.truncate(&mut t, 2); // tail (block 0) now tainted
+        // Cycle 1: speculate + rollback re-installs the tainted slab.
+        let cp = p.checkpoint(&t);
+        run_tokens(&mut p, &mut t, &[90, 91]);
+        p.rollback(&mut t, cp);
+        // Cycle 2: fork → extend COWs the (shared, tainted) tail.
+        let mut f = p.fork(&t);
+        run_tokens(&mut p, &mut f, &[3, 4]); // fills f's copy: tokens 1,2,3,4
+        p.assert_consistent();
+        run_tokens(&mut p, &mut t, &[3, 4]); // fills t's tail too
+        p.assert_consistent();
+        p.release(t);
+        p.release(f);
+        // Neither full block may have entered the index: a fresh prompt
+        // with the same token chain must miss.
+        let mut probe = BlockTable::new(64);
+        assert_eq!(
+            p.attach_prefix(&mut probe, &[1, 2, 3, 4, 9]),
+            0,
+            "impure slab leaked into the prefix index via rollback or COW"
+        );
+        p.release(probe);
+        p.assert_consistent();
+    }
+
+    #[test]
+    fn rollback_on_block_boundary_needs_no_tail() {
+        let mut p = pool(8);
+        let mut t = BlockTable::new(64);
+        run_tokens(&mut p, &mut t, &(1..9).collect::<Vec<u8>>()); // exactly 2 blocks
+        let cp = p.checkpoint(&t);
+        run_tokens(&mut p, &mut t, &[50, 51]);
+        assert_eq!(t.block_ids().len(), 3);
+        p.rollback(&mut t, cp);
+        p.assert_consistent();
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.block_ids().len(), 2);
+        p.release(t);
+        p.assert_consistent();
     }
 
     #[test]

@@ -145,7 +145,10 @@ fn dec(dtype: KvDtype, scale: f32, b: u8) -> f32 {
 
 /// One block's K/V payload for all layers (layer-major slabs of
 /// `block_tokens × d`, exactly like the fp32 layout it generalizes).
-#[derive(Debug)]
+/// `Clone` is the speculative-decode checkpoint primitive: a clone of a
+/// partial tail block (codes *and* scales) is a bit-exact snapshot that
+/// [`super::BlockPool::rollback`] can re-install after rejected drafts.
+#[derive(Clone, Debug)]
 pub(crate) enum KvStore {
     F32 {
         k: Vec<f32>,

@@ -58,6 +58,19 @@ impl BlockTable {
     pub fn tokens(&self) -> &[u8] {
         &self.tokens
     }
+
+    /// Table-side bookkeeping of a truncation: cut the block list to
+    /// `keep_blocks` ids and the committed history to `new_len` tokens.
+    /// The pool owns the refcount side — only
+    /// [`super::BlockPool::truncate`] (which releases the dropped
+    /// blocks first) may call this; a bare call would leak references.
+    pub(crate) fn truncate_to(&mut self, keep_blocks: usize, new_len: usize) {
+        debug_assert!(keep_blocks <= self.blocks.len());
+        debug_assert!(new_len <= self.len);
+        self.blocks.truncate(keep_blocks);
+        self.tokens.truncate(new_len);
+        self.len = new_len;
+    }
 }
 
 #[cfg(test)]

@@ -30,6 +30,13 @@
 //! parallel over `(sequence, head)`) and *borrows* each sequence's KV
 //! in place.
 //!
+//! Decode can additionally run **speculatively** ([`spec`]): an n-gram
+//! or aggressively-SDQ-compressed drafter proposes `k` tokens per
+//! sequence per round, one fused verify pass scores all of them, the
+//! longest greedy-exact prefix is kept (speculative output is
+//! bit-identical to plain greedy decode), and rejected tokens roll back
+//! by truncating the sequence's block table.
+//!
 //! KV memory is a shared, decomposed resource ([`kv::BlockPool`]):
 //! fixed-size ref-counted blocks addressed by content, so identical
 //! prompt prefixes resolve to the same physical blocks
@@ -72,6 +79,7 @@ pub mod model;
 pub mod perfmodel;
 pub mod runtime;
 pub mod sdq;
+pub mod spec;
 pub mod tensor;
 pub mod util;
 

@@ -112,6 +112,24 @@ impl KvCache {
     }
 }
 
+/// The greedy token for row `row` of `logits`: first-index argmax
+/// (strict `>`, ties keep the lowest token id). This is **the** greedy
+/// rule — [`Model::sample_row`] at temperature 0, the drafters, and the
+/// speculative acceptance engine all share it, so "greedy-exact match"
+/// means one thing everywhere.
+pub fn greedy_row(logits: &Matrix, row: usize) -> u8 {
+    let row = logits.row(row);
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, v) in row.iter().enumerate() {
+        if *v > bv {
+            bv = *v;
+            best = i;
+        }
+    }
+    best as u8
+}
+
 impl Model {
     /// Process `tokens` (one sequence) on top of `cache`, appending to
     /// it. Returns logits `[tokens.len(), vocab]`.
@@ -281,19 +299,10 @@ impl Model {
     /// Greedy / temperature sampling from row `row` of `logits` (the
     /// batched decode path samples one row per sequence).
     pub fn sample_row(&self, logits: &Matrix, row: usize, temperature: f32, rng: &mut Rng) -> u8 {
-        let row = logits.row(row);
         if temperature <= 0.0 {
-            // Greedy.
-            let mut best = 0;
-            let mut bv = f32::NEG_INFINITY;
-            for (i, v) in row.iter().enumerate() {
-                if *v > bv {
-                    bv = *v;
-                    best = i;
-                }
-            }
-            return best as u8;
+            return greedy_row(logits, row);
         }
+        let row = logits.row(row);
         let max = row.iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
         let probs: Vec<f32> = row.iter().map(|v| ((v - max) / temperature).exp()).collect();
         let sum: f32 = probs.iter().sum();

@@ -49,6 +49,43 @@ impl Model {
         pool: &mut BlockPool,
         tables: &mut [&mut BlockTable],
     ) -> Matrix {
+        let (x, offs) = self.paged_core(new_tokens, pool, tables);
+        // Only each sequence's last position seeds sampling: project
+        // just those rows through the tied head. Row-independent GEMMs
+        // make this bit-identical to projecting all rows and selecting.
+        let last_rows: Vec<usize> =
+            new_tokens.iter().enumerate().map(|(i, t)| offs[i] + t.len() - 1).collect();
+        matmul(&gather_rows(&x, &last_rows), &self.tok_emb)
+    }
+
+    /// The speculative-verify flavour of [`Self::forward_paged`]: same
+    /// fused ragged forward, but it returns logits for **every** new
+    /// position (`[Σ n_new, vocab]`; sequence `i`'s rows start at
+    /// `offs[i]`). The acceptance engine needs all positions — each
+    /// drafted token is judged against the greedy choice at the
+    /// position before it. Row-independence makes every returned row
+    /// bit-identical to what a last-position-only call would produce
+    /// for that prefix.
+    pub fn forward_paged_spec(
+        &self,
+        new_tokens: &[&[u8]],
+        pool: &mut BlockPool,
+        tables: &mut [&mut BlockTable],
+    ) -> (Matrix, Vec<usize>) {
+        let (x, offs) = self.paged_core(new_tokens, pool, tables);
+        (matmul(&x, &self.tok_emb), offs)
+    }
+
+    /// Shared body of the paged forwards: embed, run every block with
+    /// staged pool writes and ragged block-table attention, apply the
+    /// final norm. Returns the normed hidden states `[Σ n_new, d]` and
+    /// each sequence's starting row offset.
+    fn paged_core(
+        &self,
+        new_tokens: &[&[u8]],
+        pool: &mut BlockPool,
+        tables: &mut [&mut BlockTable],
+    ) -> (Matrix, Vec<usize>) {
         let n_seq = new_tokens.len();
         assert_eq!(n_seq, tables.len(), "one block table per sequence");
         assert!(n_seq > 0, "forward_paged needs at least one sequence");
@@ -163,12 +200,7 @@ impl Model {
             Arch::Gpt => layernorm(&mut x, &self.lnf_g, self.lnf_b.as_deref(), self.cfg.eps),
             Arch::Llama => rmsnorm(&mut x, &self.lnf_g, self.cfg.eps),
         }
-        // Only each sequence's last position seeds sampling: project
-        // just those rows through the tied head. Row-independent GEMMs
-        // make this bit-identical to projecting all rows and selecting.
-        let last_rows: Vec<usize> =
-            new_tokens.iter().enumerate().map(|(i, t)| offs[i] + t.len() - 1).collect();
-        matmul(&gather_rows(&x, &last_rows), &self.tok_emb)
+        (x, offs)
     }
 }
 
@@ -287,6 +319,60 @@ mod tests {
         for (tb, p) in tables.iter().zip(&prompts) {
             assert_eq!(tb.len(), p.len());
         }
+    }
+
+    #[test]
+    fn spec_forward_matches_stepwise_rows() {
+        // The fused multi-token verify forward must return, per
+        // position, exactly the logits a 1-token-at-a-time decode would
+        // have produced (f32 pool ⇒ bit-identical) — the property the
+        // truncate-based speculative rollback rests on.
+        for arch in [Arch::Gpt, Arch::Llama] {
+            let m = tiny_model(arch, 37);
+            let prompt: Vec<u8> = (5..25).collect(); // 20 tokens
+            let mut p1 = pool_for(&m);
+            let mut t1 = BlockTable::new(m.cfg.max_seq);
+            m.forward_paged(&[&prompt], &mut p1, &mut [&mut t1]);
+            let l_a = m.forward_paged(&[&[7u8]], &mut p1, &mut [&mut t1]);
+            let l_b = m.forward_paged(&[&[9u8]], &mut p1, &mut [&mut t1]);
+            let mut p2 = pool_for(&m);
+            let mut t2 = BlockTable::new(m.cfg.max_seq);
+            m.forward_paged(&[&prompt], &mut p2, &mut [&mut t2]);
+            let (logits, offs) = m.forward_paged_spec(&[&[7u8, 9]], &mut p2, &mut [&mut t2]);
+            assert_eq!(logits.rows, 2);
+            assert_eq!(offs, vec![0]);
+            assert_eq!(logits.row(0), l_a.row(0), "{arch:?}: verify position 0 diverged");
+            assert_eq!(logits.row(1), l_b.row(0), "{arch:?}: verify position 1 diverged");
+        }
+    }
+
+    #[test]
+    fn spec_forward_ragged_offsets() {
+        // Mixed draft lengths in one fused verify: offsets partition the
+        // stacked rows, and each sequence's rows match its solo run.
+        let m = tiny_model(Arch::Llama, 38);
+        let (pa, pb): (Vec<u8>, Vec<u8>) = ((1..9).collect(), (30..47).collect());
+        let solo = |prompt: &[u8], toks: &[u8]| {
+            let mut pool = pool_for(&m);
+            let mut tb = BlockTable::new(m.cfg.max_seq);
+            m.forward_paged(&[prompt], &mut pool, &mut [&mut tb]);
+            let (l, _) = m.forward_paged_spec(&[toks], &mut pool, &mut [&mut tb]);
+            l
+        };
+        let la = solo(&pa, &[3, 4, 5]);
+        let lb = solo(&pb, &[6]);
+        let mut pool = pool_for(&m);
+        let mut ta = BlockTable::new(m.cfg.max_seq);
+        let mut tb = BlockTable::new(m.cfg.max_seq);
+        m.forward_paged(&[&pa, &pb], &mut pool, &mut [&mut ta, &mut tb]);
+        let (l, offs) =
+            m.forward_paged_spec(&[&[3u8, 4, 5], &[6u8]], &mut pool, &mut [&mut ta, &mut tb]);
+        assert_eq!(offs, vec![0, 3]);
+        assert_eq!(l.rows, 4);
+        for r in 0..3 {
+            assert_eq!(l.row(r), la.row(r), "seq a row {r} diverged in the ragged batch");
+        }
+        assert_eq!(l.row(3), lb.row(0), "seq b diverged in the ragged batch");
     }
 
     #[test]

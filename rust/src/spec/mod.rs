@@ -1,0 +1,236 @@
+//! Speculative decoding: draft cheap, verify fused, roll back exact.
+//!
+//! SDQ's headline result — ~4× effective compute throughput from an
+//! aggressively compressed model at <1% quality loss — makes compressed
+//! models natural **drafters**: a cheap model proposes `k` tokens, the
+//! serving model scores all `k+1` positions in **one** fused
+//! [`Model::forward_paged_spec`](crate::model::Model::forward_paged_spec)
+//! call (`n_new = k+1` rides the same ragged paged attention as batched
+//! prefill), and the longest prefix of drafts that exactly matches the
+//! serving model's own greedy choices is kept. Every accepted draft
+//! turns one decode round into several emitted tokens, so compression
+//! converts directly into decode latency.
+//!
+//! # Drafter contract
+//!
+//! A [`Drafter`] proposes up to `k` continuation tokens for a context
+//! (the sequence's prompt + emitted bytes, including the not-yet-
+//! committed last token). The contract is deliberately loose:
+//!
+//! * drafts are **hints, never promises** — a drafter may return fewer
+//!   than `k` tokens or an empty vec to *abstain*, and the scheduler
+//!   falls back to plain one-token decode for that sequence that round;
+//! * drafters must be **side-effect free w.r.t. the serving state**:
+//!   they never touch the shared [`BlockPool`](crate::kv::BlockPool) —
+//!   all pool mutation happens in the verify pass, which is the only
+//!   thing rollback has to undo;
+//! * drafters may be arbitrarily wrong: correctness lives entirely in
+//!   the acceptance rule below, so a bad drafter costs throughput, not
+//!   output quality.
+//!
+//! Two implementations ship:
+//!
+//! * [`NGramDrafter`] — prompt/self-lookup over the sequence's own
+//!   emitted bytes (longest recent suffix match proposes what followed
+//!   it last time). Zero extra weights, zero forward passes; wins on
+//!   repetitive continuations (code, templated text, shared prompts).
+//! * [`SdqDrafter`] — a second, more aggressively SDQ-compressed
+//!   `Model` built through the existing [`crate::sdq::pipeline`],
+//!   sharing the byte-level tokenizer/vocab with the target. It decodes
+//!   `k` greedy tokens from a private, per-call KV cache (stateless
+//!   across rounds, so draft-side rollback is free by construction).
+//!
+//! # Acceptance rule (greedy-exact)
+//!
+//! Position `p` of the verify pass holds the serving model's logits
+//! *after* the first `p+1` fed tokens. [`accept_greedy`] walks those
+//! rows with the shared [`greedy_row`] argmax: a draft is accepted
+//! while it equals the model's own greedy choice at its position; the
+//! first mismatch position's greedy choice is emitted as the corrected
+//! token, and when **all** `k` drafts match, the `k+1`-th row yields a
+//! bonus token. Emitted tokens are therefore *exactly* the tokens plain
+//! greedy decode would have produced — speculative output is
+//! **bit-identical** to non-speculative output, the invariant the
+//! integration tests pin for every drafter × KV-dtype combination.
+//!
+//! # Rollback invariants
+//!
+//! The verify pass stages `k+1` rows into the sequence's
+//! [`BlockTable`](crate::kv::BlockTable); rejected rows must leave no
+//! trace. Rollback is **truncation**: the scheduler cuts the table back
+//! to the accepted length with
+//! [`BlockPool::truncate`](crate::kv::BlockPool::truncate). The
+//! invariants, in decreasing order of obviousness:
+//!
+//! 1. **Accounting** — truncation releases exactly the blocks the
+//!    verify pass acquired (allocs, COW copies, dedup merges included):
+//!    refcounts, `bytes_in_use` and the freeze-time dedup index stay
+//!    consistent under prefix sharing and forks (property-tested).
+//! 2. **Chain safety** — a truncated tail can never serve a stale
+//!    prefix chain: un-freezing bumps the block generation, which every
+//!    child key embeds.
+//! 3. **Write-history exactness** — the kept rows after rollback must
+//!    be byte-identical to what plain decode would hold. F32 pools get
+//!    this for free (rows are stored verbatim and later writes never
+//!    touch earlier rows), which is why truncation alone suffices on
+//!    the fused path. Quantized slabs do *not* (a later row can grow
+//!    the running `amax` and re-quantize committed codes), so the
+//!    scheduler never fuse-verifies them — and the kv layer's
+//!    byte-exact [`BlockPool::checkpoint`](crate::kv::BlockPool::checkpoint)
+//!    / [`BlockPool::rollback`](crate::kv::BlockPool::rollback) snapshot
+//!    pair remains the primitive any future quantized fused verifier
+//!    (or preemption snapshot) would build on.
+//!
+//! The same dtype subtlety decides *how* the scheduler verifies: with
+//! an **f32** pool every kernel is row-independent and writes never
+//! perturb earlier rows, so the fused `k+1`-position verify is
+//! bit-identical to stepping one token at a time. A **quantized** pool
+//! breaks that (a drafted row can grow the slab `amax` and re-scale the
+//! very rows the earlier verify positions read), so the scheduler
+//! verifies quantized pools stepwise — one fused sub-batch across
+//! sequences per drafted position, feeding each sequence's next draft
+//! only while it keeps matching. Stepwise verify writes only tokens it
+//! keeps, needs no rollback, and is bit-identical by construction; it
+//! keeps the multi-token-per-round scheduling win while giving up the
+//! single-fused-GEMM win that f32 pools get.
+
+pub mod ngram;
+pub mod sdq_draft;
+
+pub use ngram::NGramDrafter;
+pub use sdq_draft::SdqDrafter;
+
+use crate::model::generate::greedy_row;
+use crate::tensor::Matrix;
+
+/// A draft-token proposer (see the module docs for the full contract).
+/// `Send` because the engine moves the policy onto its worker thread.
+pub trait Drafter: Send {
+    /// Short tag for metrics / bench rows (e.g. `"ngram"`).
+    fn name(&self) -> &'static str;
+
+    /// Propose up to `k` tokens continuing `context` (the sequence's
+    /// prompt plus every emitted byte). Return fewer — or none — to
+    /// abstain; the scheduler then plain-decodes this round.
+    fn draft(&mut self, context: &[u8], k: usize) -> Vec<u8>;
+}
+
+/// Speculative decoding policy: how many tokens to draft per sequence
+/// per round, and who drafts them. Handed to
+/// [`Scheduler::with_spec`](crate::coordinator::scheduler::Scheduler::with_spec)
+/// / [`Engine::start_with_spec`](crate::coordinator::Engine::start_with_spec);
+/// the per-round draft length is additionally clamped to the sequence's
+/// remaining decode budget and KV capacity, and speculation only ever
+/// applies to greedy (temperature 0) requests — sampled requests fall
+/// back to plain decode, which keeps their RNG streams untouched.
+pub struct SpecPolicy {
+    /// Maximum drafted tokens per sequence per round (`k`). The verify
+    /// pass scores `k+1` positions.
+    pub k: usize,
+    /// The proposer.
+    pub drafter: Box<dyn Drafter>,
+}
+
+impl SpecPolicy {
+    pub fn new(k: usize, drafter: Box<dyn Drafter>) -> Self {
+        SpecPolicy { k, drafter }
+    }
+
+    /// N-gram self-lookup drafting with default match lengths.
+    pub fn ngram(k: usize) -> Self {
+        Self::new(k, Box::new(NGramDrafter::default()))
+    }
+
+    /// Draft-model speculation.
+    pub fn sdq(k: usize, drafter: SdqDrafter) -> Self {
+        Self::new(k, Box::new(drafter))
+    }
+
+    /// The drafter's metrics tag.
+    pub fn name(&self) -> &'static str {
+        self.drafter.name()
+    }
+}
+
+/// Longest greedy-exact acceptance over one sequence's verify rows.
+///
+/// `logits` rows `row0 .. row0 + draft.len() + 1` are the serving
+/// model's logits after each fed token (the committed input token, then
+/// each draft). Returns `(accepted, emitted)` where `accepted ≤
+/// draft.len()` is the matched prefix length and `emitted` (always
+/// `accepted + 1` tokens) is what the sequence outputs this round: the
+/// accepted drafts plus either the corrected token at the first
+/// mismatch or the bonus token after a fully-accepted draft. By
+/// construction `emitted` is the exact token stream plain greedy decode
+/// would produce.
+pub fn accept_greedy(logits: &Matrix, row0: usize, draft: &[u8]) -> (usize, Vec<u8>) {
+    let mut emitted = Vec::with_capacity(draft.len() + 1);
+    let mut accepted = 0;
+    for (p, want) in draft.iter().enumerate() {
+        let g = greedy_row(logits, row0 + p);
+        emitted.push(g);
+        if g != *want {
+            return (accepted, emitted);
+        }
+        accepted += 1;
+    }
+    emitted.push(greedy_row(logits, row0 + draft.len()));
+    (accepted, emitted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Logits matrix whose greedy choice at row `r` is `toks[r]`.
+    fn rigged(toks: &[u8]) -> Matrix {
+        let mut m = Matrix::zeros(toks.len(), 256);
+        for (r, t) in toks.iter().enumerate() {
+            m.row_mut(r)[*t as usize] = 1.0;
+        }
+        m
+    }
+
+    #[test]
+    fn accepts_longest_matching_prefix() {
+        // Model would emit 10, 11, 12, 99 — draft says 10, 11, 50.
+        let l = rigged(&[10, 11, 12, 99]);
+        let (acc, emitted) = accept_greedy(&l, 0, &[10, 11, 50]);
+        assert_eq!(acc, 2);
+        // Two accepted drafts + the corrected token at the mismatch.
+        assert_eq!(emitted, vec![10, 11, 12]);
+    }
+
+    #[test]
+    fn full_accept_emits_bonus_token() {
+        let l = rigged(&[10, 11, 12]);
+        let (acc, emitted) = accept_greedy(&l, 0, &[10, 11]);
+        assert_eq!(acc, 2);
+        assert_eq!(emitted, vec![10, 11, 12], "bonus token rides the last verify row");
+    }
+
+    #[test]
+    fn first_token_mismatch_still_emits_one() {
+        let l = rigged(&[42, 1]);
+        let (acc, emitted) = accept_greedy(&l, 0, &[7]);
+        assert_eq!(acc, 0);
+        assert_eq!(emitted, vec![42], "a fully-rejected draft degrades to plain decode");
+    }
+
+    #[test]
+    fn empty_draft_is_plain_decode() {
+        let l = rigged(&[3]);
+        let (acc, emitted) = accept_greedy(&l, 0, &[]);
+        assert_eq!(acc, 0);
+        assert_eq!(emitted, vec![3]);
+    }
+
+    #[test]
+    fn row_offset_selects_the_sequence() {
+        // Rows 0..2 belong to another sequence in the fused batch.
+        let l = rigged(&[1, 2, 30, 31, 32]);
+        let (acc, emitted) = accept_greedy(&l, 2, &[30, 31]);
+        assert_eq!(acc, 2);
+        assert_eq!(emitted, vec![30, 31, 32]);
+    }
+}

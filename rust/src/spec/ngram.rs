@@ -1,0 +1,117 @@
+//! N-gram prompt/self-lookup drafting (zero extra weights).
+//!
+//! The cheapest useful drafter: if the sequence's recent suffix has
+//! occurred earlier in its own bytes (prompt *or* generation), propose
+//! whatever followed that occurrence. Repetitive continuations —
+//! templated text, code, looping generations, shared system prompts —
+//! make this surprisingly effective, and a miss costs nothing: the
+//! drafter abstains and the round degrades to plain decode.
+
+use super::Drafter;
+
+/// Longest-suffix self-lookup drafter.
+///
+/// For each round it tries suffix lengths `max_match` down to
+/// `min_match`; the first length with an earlier occurrence in the
+/// context wins, preferring the **most recent** occurrence (recency
+/// tracks the current generation mode better than the first). The
+/// continuation after the match — clipped to the context end and the
+/// requested `k` — is the draft. Matches may overlap the suffix region;
+/// only the suffix itself is excluded. O(`max_match` · len) scan per
+/// call, fine at serving-context scale and free of any index to keep
+/// coherent across rollbacks.
+#[derive(Clone, Copy, Debug)]
+pub struct NGramDrafter {
+    /// Longest suffix n-gram tried first.
+    pub max_match: usize,
+    /// Shortest n-gram worth trusting (below this, abstain).
+    pub min_match: usize,
+}
+
+impl Default for NGramDrafter {
+    fn default() -> Self {
+        NGramDrafter { max_match: 4, min_match: 2 }
+    }
+}
+
+impl Drafter for NGramDrafter {
+    fn name(&self) -> &'static str {
+        "ngram"
+    }
+
+    fn draft(&mut self, context: &[u8], k: usize) -> Vec<u8> {
+        let len = context.len();
+        if k == 0 || self.min_match == 0 || len < self.min_match + 1 {
+            return Vec::new();
+        }
+        let hi = self.max_match.min(len - 1);
+        for n in (self.min_match..=hi).rev() {
+            let suffix = &context[len - n..];
+            // Most recent earlier occurrence; `i < len - n` excludes the
+            // suffix itself, and `i + n < len` means the continuation is
+            // never empty.
+            for i in (0..len - n).rev() {
+                if &context[i..i + n] == suffix {
+                    let start = i + n;
+                    return context[start..(start + k).min(len)].to_vec();
+                }
+            }
+        }
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn draft(ctx: &[u8], k: usize) -> Vec<u8> {
+        NGramDrafter::default().draft(ctx, k)
+    }
+
+    #[test]
+    fn abstains_without_a_match() {
+        assert!(draft(b"abcdefgh", 4).is_empty());
+        assert!(draft(b"", 4).is_empty());
+        assert!(draft(b"aa", 4).is_empty(), "context too short for suffix + prior");
+        assert!(draft(b"abab", 0).is_empty(), "k = 0 never drafts");
+    }
+
+    #[test]
+    fn proposes_continuation_of_repeated_motif() {
+        // Suffix "ab" matched earlier; what followed was "cdx".
+        let got = draft(b"abcdxzab", 3);
+        assert_eq!(got, b"cdx");
+    }
+
+    #[test]
+    fn prefers_longest_match() {
+        // Suffix "bcd" (len 3) matches at 1 → continuation "Z"; the
+        // shorter "cd" match later in the context must lose to it.
+        let ctx = b"abcdZqcdWbcd";
+        assert_eq!(draft(ctx, 2), b"Zq");
+    }
+
+    #[test]
+    fn prefers_most_recent_among_equal_lengths() {
+        // "ab" occurs at 0 (→ "X...") and 3 (→ "Y..."); recency wins.
+        let ctx = b"abXabYzab";
+        assert_eq!(draft(ctx, 1), b"Y");
+    }
+
+    #[test]
+    fn clips_at_context_end_and_k() {
+        // Overlapping self-match in a constant run: always ≥1 token.
+        let ctx = &[7u8, 0, 0, 0, 0];
+        let got = draft(ctx, 4);
+        assert!(!got.is_empty() && got.iter().all(|t| *t == 0), "{got:?}");
+        // k clips the continuation.
+        assert_eq!(draft(b"abQRSTab", 2), b"QR");
+    }
+
+    #[test]
+    fn min_match_zero_is_inert() {
+        let mut d = NGramDrafter { max_match: 4, min_match: 0 };
+        assert!(d.draft(b"ababab", 3).is_empty());
+    }
+}

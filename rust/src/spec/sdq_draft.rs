@@ -1,0 +1,134 @@
+//! Draft-model speculation: a second, more aggressively SDQ-compressed
+//! model proposes tokens for the serving model to verify.
+//!
+//! This is the paper's compression story turned into a latency story:
+//! the same `sdq::pipeline` that builds the serving model builds a
+//! *rougher* copy (lower-bit formats, harsher sparsity), which is cheap
+//! to decode and — because SDQ keeps the compressed model close to the
+//! dense one — agrees with the serving model's greedy choices often
+//! enough for long accepted prefixes. The drafter shares the byte-level
+//! tokenizer/vocab with the target by construction (both are built from
+//! the same base weights).
+
+use anyhow::ensure;
+
+use super::Drafter;
+use crate::model::generate::{greedy_row, KvCache};
+use crate::model::Model;
+use crate::sdq::calib::CalibStats;
+use crate::sdq::config::CompressionConfig;
+use crate::Result;
+
+/// Draft model wrapper.
+///
+/// Drafting is **stateless across rounds**: each call prefills a fresh
+/// private [`KvCache`] with the (window-clamped) context and greedily
+/// decodes up to `k` tokens. That re-prefill costs O(context) per round
+/// on the *draft* model — the price of never having to mirror the
+/// serving engine's rollbacks in a second KV store. A persistent
+/// draft-side cache with its own truncate is the obvious upgrade once
+/// profiles say the drafter dominates; the [`Drafter`] contract already
+/// permits it.
+pub struct SdqDrafter {
+    model: Model,
+}
+
+impl SdqDrafter {
+    /// Wrap an already-built draft model (must share the target's byte
+    /// vocab — every `Model` in this crate does).
+    pub fn new(model: Model) -> Self {
+        SdqDrafter { model }
+    }
+
+    /// Build the draft from the same base weights as the serving model,
+    /// compressed at `cfg` through the standard pipeline. A base that
+    /// was already compressed is first restored to its dense views, so
+    /// the draft config applies cleanly (and may be *more* aggressive
+    /// than the serving one — that is the point).
+    pub fn from_base(base: &Model, cfg: &CompressionConfig, calib: &CalibStats) -> Result<Self> {
+        ensure!(base.cfg.vocab == 256, "drafter assumes the shared byte vocab");
+        let mut m = base.clone();
+        m.decompress();
+        m.compress(cfg, calib)?;
+        Ok(SdqDrafter { model: m })
+    }
+
+    /// The draft model (for introspection / tests).
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+}
+
+impl Drafter for SdqDrafter {
+    fn name(&self) -> &'static str {
+        "sdq-draft"
+    }
+
+    fn draft(&mut self, context: &[u8], k: usize) -> Vec<u8> {
+        if k == 0 || context.is_empty() {
+            return Vec::new();
+        }
+        // Sliding window: keep the most recent tokens, leaving room to
+        // stage k drafted tokens in the draft model's own cache.
+        let max_seq = self.model.cfg.max_seq;
+        let keep = context.len().min(max_seq.saturating_sub(k));
+        if keep == 0 {
+            return Vec::new();
+        }
+        let ctx = &context[context.len() - keep..];
+        let mut cache = KvCache::new(&self.model);
+        let mut logits = self.model.forward_cached(ctx, &mut cache);
+        let mut out = Vec::with_capacity(k);
+        loop {
+            let t = greedy_row(&logits, logits.rows - 1);
+            out.push(t);
+            if out.len() == k || cache.remaining() == 0 {
+                return out;
+            }
+            logits = self.model.forward_cached(&[t], &mut cache);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_model;
+    use crate::model::Arch;
+
+    #[test]
+    fn drafts_k_greedy_tokens_of_its_own_model() {
+        let base = tiny_model(Arch::Llama, 51);
+        let mut d = SdqDrafter::new(base.clone());
+        let ctx = b"hello world".to_vec();
+        let got = d.draft(&ctx, 3);
+        // An uncompressed "draft" is the model itself: drafts must equal
+        // its plain greedy continuation.
+        let want = base.generate(&ctx, 3, 0.0, 0);
+        assert_eq!(got, want);
+        assert!(d.draft(&ctx, 0).is_empty());
+        assert!(d.draft(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn window_clamps_overlong_context() {
+        let base = tiny_model(Arch::Gpt, 52);
+        let mut d = SdqDrafter::new(base);
+        let ctx = vec![9u8; 200]; // far past max_seq = 64
+        let got = d.draft(&ctx, 4);
+        assert_eq!(got.len(), 4, "clamped context must still draft");
+    }
+
+    #[test]
+    fn compressed_draft_builds_from_compressed_base() {
+        use crate::sdq::calib::CalibStats;
+        let mut base = tiny_model(Arch::Gpt, 53);
+        let calib = CalibStats::new(false);
+        base.compress(&"Q-VSQuant-WAint8".parse().unwrap(), &calib).unwrap();
+        // from_base must cope with an already-compressed base model.
+        let mut d =
+            SdqDrafter::from_base(&base, &"Q-VSQuant-WAint4".parse().unwrap(), &calib).unwrap();
+        let got = d.draft(b"abcabcabc", 3);
+        assert_eq!(got.len(), 3);
+    }
+}

@@ -369,3 +369,89 @@ fn pjrt_model_forward_executes() {
     assert!(out[0].iter().all(|v| v.is_finite()));
     eprintln!("pjrt model_fwd_sdq executed: {} logits ✓", out[0].len());
 }
+
+/// Satellite: speculative greedy output is **bit-identical** to
+/// non-speculative greedy output for every drafter × KV-dtype combo,
+/// under the serving smoke compression config. Tiny in-memory models +
+/// a calibration forward — no artifacts needed, so this always runs.
+#[test]
+fn speculative_bit_identity_all_drafters_and_kv_dtypes() {
+    use sdq::coordinator::batcher::{BatchPolicy, Batcher};
+    use sdq::coordinator::scheduler::Scheduler;
+    use sdq::coordinator::Request;
+    use sdq::kv::{KvDtype, KV_BLOCK_TOKENS};
+    use sdq::model::testutil::tiny_model;
+    use sdq::model::Arch;
+    use sdq::sdq::calib::CalibStats;
+    use sdq::spec::{SdqDrafter, SpecPolicy};
+
+    let smoke_cfg: CompressionConfig = "SDQ-W7:8-1:8int8-6:8fp4".parse().unwrap();
+    let draft_cfg: CompressionConfig = "Q-VSQuant-WAint4".parse().unwrap();
+    for arch in [Arch::Gpt, Arch::Llama] {
+        let mut model = tiny_model(arch, 60);
+        // Real calibration stats (Wanda's |w|·‖x‖ needs activation norms).
+        let mut stats = CalibStats::new(false);
+        let calib_toks: Vec<u8> = (0..64u32).map(|i| (i * 7 + 13) as u8).collect();
+        model.forward(&calib_toks, 2, 32, Some(&mut stats));
+        let base = model.clone();
+        model.compress(&smoke_cfg, &stats).unwrap();
+
+        // Ragged lengths + a ≥1-block shared prefix, so speculation runs
+        // on top of prefix attach, COW and mixed-width rounds.
+        let prefix: Vec<u8> = (0..KV_BLOCK_TOKENS as u8).map(|j| 100 + j).collect();
+        let reqs = || -> Vec<Request> {
+            (0..5u64)
+                .map(|i| {
+                    let mut prompt = prefix.clone();
+                    prompt.extend((0..1 + (i as usize * 3) % 7).map(|j| (50 + 11 * i) as u8 + j as u8));
+                    Request::new(i, prompt, 3 + (i as usize) % 5)
+                })
+                .collect()
+        };
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let policy = BatchPolicy {
+                kv_dtype: Some(dtype),
+                max_active: 3,
+                max_prefill_per_round: 2,
+                ..Default::default()
+            };
+            let run = |spec: Option<SpecPolicy>| {
+                let mut sched = Scheduler::with_spec(&model, policy, spec);
+                let mut batcher = Batcher::new();
+                for r in reqs() {
+                    batcher.enqueue(r);
+                }
+                let mut resp = sched.run_to_completion(&mut batcher);
+                resp.sort_by_key(|r| r.id);
+                sched.pool().assert_consistent();
+                assert_eq!(sched.pool().referenced_blocks(), 0, "pool leaked blocks");
+                let m = sched.metrics.clone();
+                assert!(m.spec_accepted <= m.spec_drafted);
+                (resp.into_iter().map(|r| r.tokens).collect::<Vec<_>>(), m)
+            };
+            let (plain, pm) = run(None);
+            assert_eq!(pm.spec_drafter, "off");
+            assert_eq!(pm.spec_drafted, 0);
+            for drafter in ["ngram", "sdq-draft"] {
+                let spec = match drafter {
+                    "ngram" => SpecPolicy::ngram(3),
+                    _ => SpecPolicy::sdq(
+                        3,
+                        SdqDrafter::from_base(&base, &draft_cfg, &stats).unwrap(),
+                    ),
+                };
+                let (got, sm) = run(Some(spec));
+                assert_eq!(
+                    got, plain,
+                    "{arch:?} / {dtype:?} / {drafter}: speculative greedy output \
+                     diverged from non-speculative greedy output"
+                );
+                assert_eq!(sm.spec_drafter, drafter);
+                // The sdq drafter never abstains on non-empty contexts.
+                if drafter == "sdq-draft" {
+                    assert!(sm.spec_drafted > 0, "{arch:?}/{dtype:?}: sdq drafter never fired");
+                }
+            }
+        }
+    }
+}

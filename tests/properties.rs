@@ -644,3 +644,167 @@ fn prop_f32_dtype_is_exactly_the_old_path() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_truncate_fork_rollback_pool_invariants() {
+    // Satellite property for speculative rollback: arbitrary interleaved
+    // extend / fork (COW) / truncate / checkpoint+speculate+rollback /
+    // release sequences leave the pool structurally consistent at every
+    // step — free list exactly the unreferenced+unkeyed blocks (no leaks,
+    // no double frees), content index exactly the keyed blocks, byte
+    // accounting exact — and an f32 pool still serves every live table's
+    // committed rows verbatim. Quantized dtypes run the same op stream
+    // for the accounting half (their post-truncate slabs are tainted by
+    // design and their exactness is pinned by the kv unit tests).
+    use sdq::kv::{BlockPool, BlockTable, KvDtype, KvScratch};
+    check("truncate/fork/rollback invariants", 10, |rng| {
+        let d = 8usize;
+        let cfg = kv_test_cfg(d);
+        let dtype = [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3][rng.below(3)];
+        let mut pool = BlockPool::with_params(&cfg, 8 << 20, 8, dtype);
+        // (table, shadow copy of its committed tokens)
+        let mut live: Vec<(BlockTable, Vec<u8>)> = Vec::new();
+        let write = |pool: &mut BlockPool, t: &mut BlockTable, toks: &[u8]| {
+            pool.prepare_tokens(t, toks.len());
+            for (j, tok) in toks.iter().enumerate() {
+                let row: Vec<f32> = (0..d).map(|c| *tok as f32 + c as f32 * 0.25).collect();
+                let vrow: Vec<f32> = row.iter().map(|x| -x).collect();
+                pool.write_row(t, 0, t.len() + j, &row, &vrow);
+            }
+            pool.commit(t, toks);
+        };
+        let rand_toks = |rng: &mut Rng, n: usize| -> Vec<u8> {
+            (0..n).map(|_| rng.below(256) as u8).collect()
+        };
+        for _op in 0..40 {
+            match rng.below(6) {
+                0 => {
+                    // new table, freshly extended (sometimes via prefix attach)
+                    let mut t = BlockTable::new(cfg.max_seq);
+                    let toks = rand_toks(rng, 1 + rng.below(12));
+                    let shared = pool.attach_prefix(&mut t, &toks);
+                    write(&mut pool, &mut t, &toks[shared..]);
+                    live.push((t, toks));
+                }
+                1 if !live.is_empty() => {
+                    // extend a live table
+                    let i = rng.below(live.len());
+                    let room = live[i].0.remaining();
+                    if room > 0 {
+                        let toks = rand_toks(rng, 1 + rng.below(6.min(room)));
+                        let (t, shadow) = &mut live[i];
+                        write(&mut pool, t, &toks);
+                        shadow.extend_from_slice(&toks);
+                    }
+                }
+                2 if !live.is_empty() => {
+                    // fork (shares every block incl. a partial tail)
+                    let i = rng.below(live.len());
+                    let t2 = pool.fork(&live[i].0);
+                    let shadow = live[i].1.clone();
+                    live.push((t2, shadow));
+                }
+                3 if !live.is_empty() => {
+                    // truncate to a random earlier length
+                    let i = rng.below(live.len());
+                    let (t, shadow) = &mut live[i];
+                    let new_len = rng.below(t.len() + 1);
+                    pool.truncate(t, new_len);
+                    shadow.truncate(new_len);
+                }
+                4 if !live.is_empty() => {
+                    // checkpoint → speculate → rollback (the spec round)
+                    let i = rng.below(live.len());
+                    let (t, _) = &mut live[i];
+                    let room = t.remaining();
+                    if room > 1 {
+                        let cp = pool.checkpoint(t);
+                        let toks = rand_toks(rng, 1 + rng.below(room.min(5)));
+                        write(&mut pool, t, &toks);
+                        pool.rollback(t, cp);
+                    }
+                }
+                5 if !live.is_empty() => {
+                    let (t, _) = live.swap_remove(rng.below(live.len()));
+                    pool.release(t);
+                }
+                _ => {}
+            }
+            pool.assert_consistent();
+        }
+        // Every live table still serves its exact committed history
+        // (f32: verbatim rows; quantized: accounting-only, see above).
+        if dtype == KvDtype::F32 {
+            let mut scr = KvScratch::new();
+            for (t, shadow) in &live {
+                if t.is_empty() {
+                    continue;
+                }
+                if t.tokens() != &shadow[..] {
+                    return Err("table token history diverged from shadow".into());
+                }
+                let (ks, vs) = pool.layer_view(t, 0, t.len(), &mut scr);
+                for (pos, tok) in shadow.iter().enumerate() {
+                    let (bi, r) = (pos / 8, pos % 8);
+                    if ks[bi][r * d] != *tok as f32 || vs[bi][r * d] != -(*tok as f32) {
+                        return Err(format!(
+                            "row {pos} serves {} (want {tok}) after op soup",
+                            ks[bi][r * d]
+                        ));
+                    }
+                }
+            }
+        }
+        for (t, _) in live.drain(..) {
+            pool.release(t);
+        }
+        pool.assert_consistent();
+        if pool.referenced_blocks() != 0 {
+            return Err(format!("{} blocks leaked after full release", pool.referenced_blocks()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_speculative_greedy_is_bit_identical() {
+    // The tentpole invariant as a property: for random archs, prompts,
+    // KV dtypes and draft lengths, serving with the n-gram drafter
+    // emits exactly the tokens plain greedy serving emits.
+    use sdq::coordinator::batcher::{BatchPolicy, Batcher};
+    use sdq::coordinator::scheduler::Scheduler;
+    use sdq::coordinator::Request;
+    use sdq::kv::KvDtype;
+    use sdq::spec::SpecPolicy;
+    check("speculative == plain greedy", 6, |rng| {
+        let arch = [sdq::model::Arch::Gpt, sdq::model::Arch::Llama][rng.below(2)];
+        let model = sdq::model::testutil::tiny_model(arch, rng.next_u64());
+        let dtype = [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3][rng.below(3)];
+        let k = 1 + rng.below(4);
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| {
+                let plen = 1 + rng.below(10);
+                let prompt: Vec<u8> = (0..plen).map(|_| rng.below(256) as u8).collect();
+                Request::new(i, prompt, 2 + rng.below(7))
+            })
+            .collect();
+        let policy = BatchPolicy { kv_dtype: Some(dtype), ..Default::default() };
+        let mut run = |spec: Option<SpecPolicy>| {
+            let mut sched = Scheduler::with_spec(&model, policy, spec);
+            let mut batcher = Batcher::new();
+            for r in reqs.clone() {
+                batcher.enqueue(r);
+            }
+            let mut resp = sched.run_to_completion(&mut batcher);
+            resp.sort_by_key(|r| r.id);
+            sched.pool().assert_consistent();
+            resp.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        let plain = run(None);
+        let spec = run(Some(SpecPolicy::ngram(k)));
+        if spec != plain {
+            return Err(format!("{arch:?}/{dtype:?} k={k}: speculative output diverged"));
+        }
+        Ok(())
+    });
+}
