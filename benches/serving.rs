@@ -12,6 +12,18 @@
 //! compressed pool geometry — the same byte budget buys ~4× the blocks
 //! at int8, which the bench asserts (≥ 1.8× effective capacity).
 //!
+//! A **preemption arm** rides per config: an oversubscribed workload —
+//! more concurrent requests than worst-case reservation can admit at a
+//! deliberately tight block budget — served three ways: unconstrained
+//! (the token oracle), tight budget with the worst-case-reservation
+//! baseline, and tight budget with preemptive swap-out/swap-in
+//! (`BatchPolicy::preempt`). The preemptive row must admit ≥ 1.5× the
+//! baseline's peak concurrency **and** finish in fewer decode rounds
+//! (higher admitted throughput), with every request's greedy output
+//! bit-identical to the unconstrained run — asserted for f32 *and* int8
+//! pools (quantized resumes re-install snapshot bytes, so preemption is
+//! exact at every dtype).
+//!
 //! A **speculative-decode sweep** rides on top: per config/width, two
 //! extra f32-pool rows serve the same requests with drafting on —
 //! `ngram` (self-lookup, zero extra weights) and `sdq-draft` (a draft
@@ -39,7 +51,7 @@
 
 use sdq::coordinator::batcher::{BatchPolicy, Batcher};
 use sdq::coordinator::scheduler::Scheduler;
-use sdq::coordinator::Request;
+use sdq::coordinator::{assert_bit_identical, Request};
 use sdq::harness;
 use sdq::kv::KvDtype;
 use sdq::model::{Arch, Block, Linear, Model, ModelConfig, NamedLinear};
@@ -139,6 +151,7 @@ fn main() {
             "Config",
             "kv dtype",
             "spec",
+            "preempt",
             "max_active",
             "req",
             "batched tok/s",
@@ -228,7 +241,7 @@ fn main() {
             // KV dtype sweep: the f32 row is the exact reference; the
             // quantized rows report compressed pool geometry and their
             // greedy-token divergence against it.
-            let mut f32_tokens: Vec<Vec<u8>> = Vec::new();
+            let mut f32_out: Vec<sdq::coordinator::Response> = Vec::new();
             let mut f32_blocks = 0usize;
             let mut f32_rounds = 0u64;
             for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
@@ -237,21 +250,27 @@ fn main() {
                     // Live equivalence guard: paged + fused must not
                     // change a single greedy token vs the chunked
                     // per-sequence baseline.
-                    for (a, b) in paged_out.iter().zip(&legacy_out) {
-                        assert_eq!(a.tokens, b.tokens, "req {}: engines diverged", a.id);
-                    }
-                    f32_tokens = paged_out.iter().map(|r| r.tokens.clone()).collect();
+                    assert_bit_identical(
+                        &format!("{cfg_str} active={max_active} paged vs per-seq"),
+                        &paged_out,
+                        &legacy_out,
+                    );
+                    f32_out = paged_out.clone();
                     f32_blocks = batched.pool_budget_blocks;
                     f32_rounds = batched.decode_rounds;
                     0
                 } else {
                     paged_out
                         .iter()
-                        .zip(&f32_tokens)
+                        .zip(&f32_out)
                         .map(|(r, want)| {
-                            let same =
-                                r.tokens.iter().zip(want.iter()).filter(|(a, b)| a == b).count();
-                            r.tokens.len().max(want.len()) - same
+                            let same = r
+                                .tokens
+                                .iter()
+                                .zip(&want.tokens)
+                                .filter(|(a, b)| a == b)
+                                .count();
+                            r.tokens.len().max(want.tokens.len()) - same
                         })
                         .sum()
                 };
@@ -280,6 +299,7 @@ fn main() {
                 table.row(vec![
                     cfg_str.to_string(),
                     dtype.tag().to_string(),
+                    "off".to_string(),
                     "off".to_string(),
                     max_active.to_string(),
                     n_req.to_string(),
@@ -325,13 +345,11 @@ fn main() {
                 let (spec_out, sm) = run(true, KvDtype::F32, Some(spec), reqs.clone());
                 // Speculative greedy output must be bit-identical to the
                 // non-speculative f32 run on every request.
-                for (a, want) in spec_out.iter().zip(&f32_tokens) {
-                    assert_eq!(
-                        &a.tokens, want,
-                        "req {}: speculative ({mode}) output diverged from plain greedy",
-                        a.id
-                    );
-                }
+                assert_bit_identical(
+                    &format!("{cfg_str} active={max_active} spec={mode} vs plain greedy"),
+                    &spec_out,
+                    &f32_out,
+                );
                 if mode == "sdq-draft" {
                     assert!(sm.spec_drafted > 0, "sdq-draft: drafter never fired");
                     assert!(
@@ -356,6 +374,7 @@ fn main() {
                     cfg_str.to_string(),
                     "f32".to_string(),
                     mode.to_string(),
+                    "off".to_string(),
                     max_active.to_string(),
                     n_req.to_string(),
                     format!("{:.1}", sm.decode_tokens_per_second()),
@@ -383,6 +402,132 @@ fn main() {
                     sm.summary(),
                     sm.spec_acceptance_rate(),
                     sm.tokens_per_round()
+                );
+            }
+        }
+
+        // ---- oversubscribed preemption arm (per config) ----
+        // 8 concurrent requests whose worst-case footprint (3 blocks
+        // each) more than doubles a 6-block budget: worst-case
+        // reservation caps concurrency at 2, resident-charged admission
+        // with preemption packs the pool and swaps under pressure. The
+        // preemptive run must beat the baseline's peak concurrency by
+        // ≥ 1.5× and finish in fewer decode rounds, with greedy output
+        // bit-identical to an unconstrained pool — at f32 AND int8.
+        {
+            let mut over_rng = Rng::seed_from_u64(1234);
+            let (n_over, over_new, over_plen, over_blocks) = (8usize, 40usize, 8usize, 6usize);
+            let over_reqs: Vec<Request> = (0..n_over)
+                .map(|i| {
+                    let prompt: Vec<u8> =
+                        (0..over_plen).map(|_| over_rng.below(256) as u8).collect();
+                    Request::new(i as u64, prompt, over_new)
+                })
+                .collect();
+            let mut over_f32: Vec<sdq::coordinator::Response> = Vec::new();
+            for dtype in [KvDtype::F32, KvDtype::Int8] {
+                let block_bytes =
+                    sdq::kv::BlockPool::with_dtype(&model.cfg, 1, dtype).block_bytes();
+                let run_over = |budget_blocks: usize, preempt: bool| {
+                    let policy = BatchPolicy {
+                        max_active: n_over,
+                        kv_budget_bytes: budget_blocks * block_bytes,
+                        kv_dtype: Some(dtype),
+                        preempt,
+                        ..Default::default()
+                    };
+                    let mut sched = Scheduler::new(&model, policy);
+                    let mut batcher = Batcher::new();
+                    for r in over_reqs.clone() {
+                        batcher.enqueue(r);
+                    }
+                    let mut resps = sched.run_to_completion(&mut batcher);
+                    assert_eq!(resps.len(), n_over);
+                    sched.pool().assert_consistent();
+                    resps.sort_by_key(|r| r.id);
+                    (resps, sched.metrics)
+                };
+                // Unconstrained pool: the bit-identity oracle (1024
+                // blocks ≫ the 24-block worst case).
+                let (want, _) = run_over(1024, false);
+                let (base_out, base) = run_over(over_blocks, false);
+                let (pre_out, pre) = run_over(over_blocks, true);
+                let ctx = |arm: &str| format!("{cfg_str} kv={} oversubscribed {arm}", dtype.tag());
+                assert_bit_identical(&ctx("baseline"), &base_out, &want);
+                assert_bit_identical(&ctx("preempt"), &pre_out, &want);
+                assert!(pre.preemptions > 0, "{}: pressure never preempted", ctx("preempt"));
+                assert_eq!(pre.resumes, pre.preemptions, "{}: stranded swaps", ctx("preempt"));
+                assert!(
+                    pre.decode_width_max as f64 >= 1.5 * base.decode_width_max as f64,
+                    "{}: admitted concurrency {} must be ≥1.5× the reserved baseline's {}",
+                    ctx("preempt"),
+                    pre.decode_width_max,
+                    base.decode_width_max
+                );
+                assert!(
+                    pre.decode_rounds < base.decode_rounds,
+                    "{}: preemption must raise admitted throughput \
+                     ({} rounds vs baseline {})",
+                    ctx("preempt"),
+                    pre.decode_rounds,
+                    base.decode_rounds
+                );
+                // "div vs f32" reports the int8 row's token distance
+                // from the f32 oracle (bit-identity *within* a dtype is
+                // asserted above; cross-dtype drift is informational,
+                // exactly like the main sweep's quantized rows).
+                let divergence: usize = if dtype == KvDtype::F32 {
+                    over_f32 = want.clone();
+                    0
+                } else {
+                    pre_out
+                        .iter()
+                        .zip(&over_f32)
+                        .map(|(a, b)| {
+                            let same =
+                                a.tokens.iter().zip(&b.tokens).filter(|(x, y)| x == y).count();
+                            a.tokens.len().max(b.tokens.len()) - same
+                        })
+                        .sum()
+                };
+                table.row(vec![
+                    cfg_str.to_string(),
+                    dtype.tag().to_string(),
+                    "off".to_string(),
+                    "on".to_string(),
+                    n_over.to_string(),
+                    n_over.to_string(),
+                    format!("{:.1}", pre.decode_tokens_per_second()),
+                    format!("{:.1}", base.decode_tokens_per_second()),
+                    format!(
+                        "{:.2}x",
+                        pre.decode_tokens_per_second() / base.decode_tokens_per_second()
+                    ),
+                    format!("{:.2}", pre.decode_occupancy(n_over)),
+                    format!("{:.1}", pre.kv_bytes_peak as f64 / 1024.0),
+                    pre.pool_budget_blocks.to_string(),
+                    pre.pool_block_bytes.to_string(),
+                    format!("{:.3}", pre.pool_utilization_peak),
+                    format!("{:.2}", pre.prefix_hit_rate()),
+                    pre.kv_evictions.to_string(),
+                    divergence.to_string(),
+                    "0".to_string(),
+                    "0".to_string(),
+                    "0.00".to_string(),
+                    format!("{:.2}", pre.tokens_per_round()),
+                ]);
+                eprintln!(
+                    "  {cfg_str} kv={} oversubscribed preempt: {} | width {}→{} | rounds {}→{} \
+                     | preempts {} swap {:.1}KiB reprefill {}",
+                    dtype.tag(),
+                    pre.summary(),
+                    base.decode_width_max,
+                    pre.decode_width_max,
+                    base.decode_rounds,
+                    pre.decode_rounds,
+                    pre.preemptions,
+                    pre.swap_bytes as f64 / 1024.0,
+                    pre.resume_reprefill_tokens
                 );
             }
         }

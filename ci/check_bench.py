@@ -31,15 +31,20 @@ import json
 import sys
 
 # "spec" distinguishes the speculative-decode rows (off | ngram |
-# sdq-draft) that share a (Config, kv dtype, max_active) cell with the
-# plain row; legacy baselines without the field key as "off", so
-# pre-spec baselines keep matching current non-spec rows.
-KEY_FIELDS = ("Config", "kv dtype", "spec", "max_active")
+# sdq-draft) and "preempt" the preemptive-scheduling rows (off | on)
+# that share a (Config, kv dtype, max_active) cell with the plain row;
+# legacy baselines without either field key as "off", so pre-spec and
+# pre-preemption baselines keep matching current plain rows.
+KEY_FIELDS = ("Config", "kv dtype", "spec", "preempt", "max_active")
+
+# Key fields that default to "off" when a (legacy) row lacks them.
+_OFF_DEFAULT = {"spec", "preempt"}
 
 
 def row_key(row):
     return tuple(
-        str(row.get(k, "off") if k == "spec" else row.get(k)) for k in KEY_FIELDS
+        str(row.get(k, "off") if k in _OFF_DEFAULT else row.get(k))
+        for k in KEY_FIELDS
     )
 
 

@@ -5,9 +5,18 @@
 //!       [--config SDQ-W7:8-1:8int8-6:8fp4] [--requests 16] [--max-new 32]
 //!       [--kv-dtype f32|fp8-e4m3|int8]
 //!       [--spec off|ngram|sdq-draft] [--spec-k 4]
-//!       [--draft-config Q-VSQuant-WAint4]`
+//!       [--draft-config Q-VSQuant-WAint4]
+//!       [--preempt] [--max-resident 32]`
 //!
 //! Flags:
+//! * `--preempt` — preemptive scheduling: admission charges resident
+//!   KV blocks instead of worst-case footprints (oversubscription), and
+//!   under pressure the scheduler swaps the lowest-priority active
+//!   sequence out (and later back in) instead of refusing work. Greedy
+//!   output is bit-identical with or without it.
+//! * `--max-resident` — cap the paged pool's admission budget at this
+//!   many blocks (tighter of this and the byte budget): the lever for
+//!   demonstrating preemption under deliberate KV pressure.
 //! * `--spec` — speculative decoding mode. `ngram` drafts from the
 //!   sequence's own bytes (zero extra weights); `sdq-draft` builds a
 //!   second, more aggressively compressed model from the same base
@@ -93,6 +102,8 @@ fn main() -> sdq::Result<()> {
     let policy = BatchPolicy {
         max_active: args.get_usize("max-active", 8)?,
         kv_dtype,
+        preempt: args.has("preempt"),
+        max_resident_blocks: args.get("max-resident").map(|s| s.parse()).transpose()?,
         ..Default::default()
     };
     let (resps, metrics) = Engine::run_batch_spec(model, policy, spec, reqs);
@@ -127,6 +138,19 @@ fn main() -> sdq::Result<()> {
         metrics.kv_evictions,
         metrics.kv_cow_copies,
     );
+    if policy.preempt {
+        println!(
+            "preemption [budget {} blocks]: {} swap-outs / {} swap-ins, {:.1} KiB swapped, \
+             {} re-prefilled tokens (rate {:.2}/resume), preempt rate {:.3}/round",
+            metrics.pool_budget_blocks,
+            metrics.preemptions,
+            metrics.resumes,
+            metrics.swap_bytes as f64 / 1024.0,
+            metrics.resume_reprefill_tokens,
+            metrics.resume_reprefill_rate(),
+            metrics.preemption_rate(),
+        );
+    }
     if metrics.spec_drafter != "off" {
         println!(
             "speculative decode [{}, k={}]: drafted {}, accepted {} (rate {:.2}), \

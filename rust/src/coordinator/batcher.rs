@@ -53,6 +53,27 @@ pub struct BatchPolicy {
     /// blocks at ~¼ the bytes, so the same `kv_budget_bytes` admits ~4×
     /// the blocks.
     pub kv_dtype: Option<crate::kv::KvDtype>,
+    /// Preemptive scheduling (paged mode only). `false` (default):
+    /// admission reserves every active sequence's **worst-case** final
+    /// footprint — safe, conservative, and the A/B baseline. `true`:
+    /// admission charges only **resident** blocks (oversubscription),
+    /// and when a round's staged rows no longer fit the pool, the
+    /// scheduler swaps out the lowest-priority active sequence
+    /// ([`crate::kv::BlockPool::suspend`]) instead of stalling; swapped
+    /// sequences resume FIFO, ahead of any new admission, so no request
+    /// can starve. Greedy output is bit-identical either way — only
+    /// which rounds a sequence progresses in changes.
+    pub preempt: bool,
+    /// Optional cap on the paged pool's admission budget, in blocks
+    /// (tighter of this and the byte-derived budget). The operator lever
+    /// for deliberate KV pressure (`examples/serve.rs --max-resident`);
+    /// `None` leaves the byte budget in charge.
+    pub max_resident_blocks: Option<usize>,
+    /// Anti-thrash hysteresis: a sequence resumed from the swapped
+    /// queue cannot be preempted again for this many rounds, unless it
+    /// is the only eligible victim left. Guards against swap-in/swap-out
+    /// ping-pong under sustained pressure.
+    pub resume_hysteresis_rounds: usize,
 }
 
 impl Default for BatchPolicy {
@@ -64,6 +85,9 @@ impl Default for BatchPolicy {
             batched_decode: true,
             batched_prefill: true,
             kv_dtype: None,
+            preempt: false,
+            max_resident_blocks: None,
+            resume_hysteresis_rounds: 2,
         }
     }
 }

@@ -3,6 +3,12 @@
 //! Owns the model on a dedicated worker thread; callers submit requests
 //! over a channel and receive responses over another. `run_batch` is the
 //! synchronous convenience used by examples and benches.
+//!
+//! All scheduler state — including sequences swapped out by preemptive
+//! scheduling (`BatchPolicy::preempt`) — lives on the worker thread;
+//! `has_work` counts the swapped queue, so the engine keeps driving
+//! rounds until every suspended sequence has resumed and retired
+//! (shutdown cannot strand swapped work).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -172,6 +178,29 @@ mod tests {
         assert_eq!(metrics.spec_drafter, "ngram");
         assert!(metrics.spec_acceptance_rate() >= 0.0);
         assert!(metrics.tokens_per_round() >= 1.0);
+    }
+
+    #[test]
+    fn run_batch_preemptive_matches_plain_and_drains() {
+        // End-to-end through the threaded engine: an oversubscribed
+        // preemptive policy must complete every request with greedy
+        // output bit-identical to the unconstrained engine, stranding
+        // nothing in the swapped queue at shutdown.
+        use crate::model::generate::KvCache;
+        let model = tiny_model(Arch::Llama, 9);
+        let blk = KvCache::bytes_for_tokens(&model.cfg, 1);
+        let reqs = || -> Vec<Request> {
+            (0..6).map(|i| Request::new(i, vec![(65 + i) as u8; 4], 22)).collect()
+        };
+        let (mut plain, _) = Engine::run_batch(model.clone(), BatchPolicy::default(), reqs());
+        let tight = BatchPolicy { kv_budget_bytes: 3 * blk, preempt: true, ..Default::default() };
+        let (mut got, metrics) = Engine::run_batch(model, tight, reqs());
+        plain.sort_by_key(|r| r.id);
+        got.sort_by_key(|r| r.id);
+        super::super::request::assert_bit_identical("engine preempt", &got, &plain);
+        assert_eq!(metrics.requests_completed, 6);
+        assert!(metrics.preemptions > 0, "tight pool must preempt");
+        assert_eq!(metrics.resumes, metrics.preemptions, "no swapped sequence left behind");
     }
 
     #[test]

@@ -127,6 +127,20 @@ pub struct Metrics {
     /// Duplicate blocks merged at freeze time (identical concurrent
     /// streams).
     pub kv_dedup_merges: u64,
+    /// Active sequences swapped out under KV pressure (preemptive
+    /// scheduling; each suspension snapshots the sequence's tail/bytes
+    /// and releases its blocks back to the pool).
+    pub preemptions: u64,
+    /// Swapped sequences re-admitted to the active set.
+    pub resumes: u64,
+    /// Cumulative compressed bytes carried out of the pool by
+    /// preemption snapshots (the swap-out traffic a host-memory tier
+    /// would absorb).
+    pub swap_bytes: u64,
+    /// Tokens recomputed by the resume re-prefill fallback (an f32
+    /// sequence whose cached middle blocks were LRU-evicted while it
+    /// was swapped; quantized pools never re-prefill).
+    pub resume_reprefill_tokens: u64,
     pub ttft: Histogram,
     pub total_latency: Histogram,
     /// Wall time the engine spent serving (for throughput).
@@ -200,6 +214,28 @@ impl Metrics {
         self.tokens_decoded as f64 / self.decode_rounds as f64
     }
 
+    /// Preemptions per decode round — how often KV pressure actually
+    /// forced a swap-out. `0.0` before any round ran (never NaN: this
+    /// rides `BENCH_serving.json` as a number, same contract as
+    /// [`Self::prefix_hit_rate`]).
+    pub fn preemption_rate(&self) -> f64 {
+        if self.decode_rounds == 0 {
+            return 0.0;
+        }
+        self.preemptions as f64 / self.decode_rounds as f64
+    }
+
+    /// Mean tokens the re-prefill fallback recomputed per resume — the
+    /// cost of LRU eviction hitting swapped sequences (0 when every
+    /// resume re-attached or re-installed). `0.0` before any resume —
+    /// never NaN, same JSON-validity contract as the other rates.
+    pub fn resume_reprefill_rate(&self) -> f64 {
+        if self.resumes == 0 {
+            return 0.0;
+        }
+        self.resume_reprefill_tokens as f64 / self.resumes as f64
+    }
+
     /// Mean decode GEMM row width (weight-stream amortization factor).
     pub fn mean_decode_width(&self) -> f64 {
         if self.decode_batches == 0 {
@@ -261,7 +297,8 @@ impl Metrics {
             "requests={} tokens={} tput={:.1} tok/s decode={:.1} tok/s \
              width_mean={:.2} width_max={} prefill_width_mean={:.2} \
              kv_peak={:.1}KiB pool_util_peak={:.2} prefix_hit={:.2} \
-             evictions={} spec={} accept={:.2} tok/round={:.2} \
+             evictions={} preempt={} resumes={} swap={:.1}KiB reprefill={} \
+             spec={} accept={:.2} tok/round={:.2} \
              ttft_mean={:.1}ms ttft_p99={:.1}ms total_mean={:.1}ms",
             self.requests_completed,
             self.tokens_generated,
@@ -274,6 +311,10 @@ impl Metrics {
             self.pool_utilization_peak,
             self.prefix_hit_rate(),
             self.kv_evictions,
+            self.preemptions,
+            self.resumes,
+            self.swap_bytes as f64 / 1024.0,
+            self.resume_reprefill_tokens,
             if self.spec_drafter.is_empty() { "off" } else { self.spec_drafter.as_str() },
             self.spec_acceptance_rate(),
             self.tokens_per_round(),
@@ -378,6 +419,67 @@ mod tests {
         assert_eq!(parsed.get("prefix_hit_rate").and_then(|v| v.as_f64()), Some(0.0));
         assert_eq!(parsed.get("spec_acceptance_rate").and_then(|v| v.as_f64()), Some(0.0));
         assert_eq!(parsed.get("tokens_per_round").and_then(|v| v.as_f64()), Some(0.0));
+    }
+
+    /// Every rate helper whose value is emitted into JSON as a
+    /// **number**, evaluated on `m`. New rate fields belong in this
+    /// table — the cold-NaN bug has now been fixed three times
+    /// (`prefix_hit_rate` in PR 3, the spec rates in PR 4, and guarded
+    /// for the preemption rates in PR 5), and this single list is what
+    /// keeps a fourth from shipping.
+    fn json_rate_table(m: &Metrics) -> Vec<(&'static str, f64)> {
+        vec![
+            ("prefix_hit_rate", m.prefix_hit_rate()),
+            ("spec_acceptance_rate", m.spec_acceptance_rate()),
+            ("tokens_per_round", m.tokens_per_round()),
+            ("preemption_rate", m.preemption_rate()),
+            ("resume_reprefill_rate", m.resume_reprefill_rate()),
+            ("pool_utilization_peak", m.pool_utilization_peak),
+        ]
+    }
+
+    #[test]
+    fn cold_rates_are_finite_and_json_roundtrip() {
+        // Regression (table-driven): a freshly-constructed Metrics must
+        // yield a finite value — 0.0, not NaN — from every JSON-emitted
+        // rate helper, and the whole record must survive a JSON
+        // write/parse roundtrip (NaN is not representable in JSON).
+        use crate::util::json::Json;
+        let m = Metrics::default();
+        let rates = json_rate_table(&m);
+        for (name, v) in &rates {
+            assert!(v.is_finite(), "{name}: cold value {v} is not finite");
+            assert_eq!(*v, 0.0, "{name}: cold value must be exactly 0.0");
+        }
+        let j = Json::obj(rates.iter().map(|(n, v)| (*n, Json::Num(*v))).collect());
+        let text = j.to_string();
+        let parsed = Json::parse(&text).expect("cold metrics JSON must parse");
+        for (name, _) in &rates {
+            assert_eq!(
+                parsed.get(name).and_then(|v| v.as_f64()),
+                Some(0.0),
+                "{name}: did not roundtrip through JSON"
+            );
+        }
+    }
+
+    #[test]
+    fn preemption_counters_and_rates() {
+        let mut m = Metrics::default();
+        assert_eq!(m.preemption_rate(), 0.0, "cold rate is 0.0, never NaN");
+        assert_eq!(m.resume_reprefill_rate(), 0.0);
+        m.decode_rounds = 8;
+        m.preemptions = 2;
+        m.resumes = 2;
+        m.swap_bytes = 4096;
+        m.resume_reprefill_tokens = 10;
+        assert!((m.preemption_rate() - 0.25).abs() < 1e-9);
+        assert!((m.resume_reprefill_rate() - 5.0).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("preempt=2"), "summary must surface preemptions: {s}");
+        assert!(s.contains("resumes=2"));
+        assert!(s.contains("swap=4.0KiB"));
+        assert!(s.contains("reprefill=10"));
     }
 
     #[test]

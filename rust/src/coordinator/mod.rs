@@ -6,7 +6,9 @@
 //! **speculative**: draft → fused verify → accept/rollback, see
 //! [`crate::spec`]) → responses with latency metrics. KV memory lives
 //! in the shared [`crate::kv::BlockPool`] (prefix sharing,
-//! copy-on-write, LRU eviction, speculative rollback); the legacy
+//! copy-on-write, LRU eviction, speculative rollback, and — under
+//! `BatchPolicy::preempt` — swap-out/swap-in of whole sequences so
+//! admission can oversubscribe the pool, see [`scheduler`]); the legacy
 //! per-sequence chunked-cache path survives as the benchmark baseline
 //! (`BatchPolicy::batched_decode = false`).
 //! Python is never on this path; the model weights come from
@@ -26,4 +28,4 @@ pub mod request;
 pub mod scheduler;
 
 pub use engine::Engine;
-pub use request::{Request, Response};
+pub use request::{assert_bit_identical, Request, Response};

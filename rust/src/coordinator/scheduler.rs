@@ -28,13 +28,61 @@
 //! one batch-1 forward per sequence, byte-budget admission) — the
 //! benchmark's comparison arm and a live equivalence check: greedy
 //! outputs are bit-identical across both modes.
+//!
+//! # Preemptive scheduling (`BatchPolicy::preempt`)
+//!
+//! Worst-case reservation is safe but wastes exactly the capacity that
+//! compressed KV buys back: a sequence that *might* reach `max_seq` is
+//! charged for it from round one, so the pool refuses work it could
+//! actually hold. With `preempt = true` the scheduler oversubscribes —
+//! admission charges only **resident** blocks — and manages the
+//! resulting pressure by swapping sequences out and back in. Every
+//! request then moves through this state machine:
+//!
+//! ```text
+//!            admit (resident-block budget)          retire
+//! waiting ───────────────────────────────▶ active ─────────▶ retired
+//!                                          ▲    │
+//!                                   resume │    │ preempt (KV pressure)
+//!                        (FIFO, before any │    ▼
+//!                          new admission)  └─ swapped
+//! ```
+//!
+//! * **active → swapped** — before prefill and before every decode
+//!   batch the scheduler checks that the round's staged rows fit the
+//!   pool's [`BlockPool::headroom_blocks`]; while they don't, the
+//!   lowest-priority active sequence (newest [`InFlight::arrival`], so
+//!   the oldest work never starves) is suspended: its tail bytes move
+//!   into a [`Snapshot`](crate::kv::Snapshot), its blocks return to the
+//!   pool (frozen prefix blocks stay shareable in the content index),
+//!   and it parks in a FIFO swapped queue. A sequence resumed within
+//!   the last `resume_hysteresis_rounds` rounds is skipped (anti-thrash)
+//!   unless it is the only candidate left.
+//! * **swapped → active** — at the top of each round, swapped sequences
+//!   re-enter FIFO while they fit the head-room; while any sequence is
+//!   swapped, **no new request is admitted** (mid-flight work drains
+//!   first — together with newest-first victims this is the
+//!   no-starvation guarantee). Resume re-attaches surviving cached
+//!   prefix blocks, re-installs the snapshot bytes, and — f32 pools
+//!   only — re-prefills any LRU-evicted middle bit-exactly
+//!   (`resume_reprefill_tokens` counts that work). If the pool is too
+//!   tight but nothing is active, the head is force-resumed: the hard
+//!   cap guarantees one `max_seq` sequence always fits, so there is no
+//!   livelock.
+//!
+//! Suspend/resume is **byte-exact** (f32: verbatim rows + row-
+//! independent kernels; quantized: the snapshot owns every block's
+//! codes and scales), so greedy output with preemption on is
+//! bit-identical to an unconstrained-pool run — `tests/preemption.rs`
+//! stress-pins this for every `KvDtype` × drafter combination.
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::request::{InFlight, Request, Response};
-use crate::kv::{BlockPool, BlockTable, KvDtype};
+use crate::kv::{BlockPool, BlockTable, KvDtype, Snapshot};
 use crate::model::generate::KvCache;
 use crate::model::{Model, ModelConfig};
 use crate::spec::SpecPolicy;
@@ -60,15 +108,29 @@ fn with_tables<R>(
     body(&mut tbs)
 }
 
+/// A preempted sequence parked off-pool: its in-flight request state
+/// plus the swapped-out KV [`Snapshot`] that rebuilds its table.
+struct Swapped {
+    f: InFlight,
+    snap: Snapshot,
+}
+
 /// Scheduler over a (possibly compressed) model.
 pub struct Scheduler<'m> {
     model: &'m Model,
     pub policy: BatchPolicy,
     active: Vec<InFlight>,
+    /// Preempted sequences awaiting swap-in, FIFO. Resumed ahead of any
+    /// new admission (no starvation of mid-flight work).
+    swapped: VecDeque<Swapped>,
     pool: BlockPool,
     /// Speculative decode policy (paged mode only): draft → fused
     /// verify → accept/rollback per round. `None` = plain decode.
     spec: Option<SpecPolicy>,
+    /// Monotonic round counter (paged mode) — the hysteresis clock.
+    round_idx: u64,
+    /// Monotonic admission stamp — the preemption priority order.
+    arrival_seq: u64,
     pub metrics: Metrics,
 }
 
@@ -85,12 +147,21 @@ impl<'m> Scheduler<'m> {
     /// speculation on or off — only the number of forward rounds
     /// changes.
     pub fn with_spec(model: &'m Model, policy: BatchPolicy, spec: Option<SpecPolicy>) -> Self {
+        let mut policy = policy;
         let spec = if policy.batched_decode { spec } else { None };
+        // Like speculation, preemption is a paged-mode feature: the
+        // legacy baseline has no snapshot/restore story.
+        if !policy.batched_decode {
+            policy.preempt = false;
+        }
         // Policy override first, model default second — the pool's
         // block geometry (and hence the admission budget) is fixed at
         // engine construction.
         let dtype = policy.kv_dtype.unwrap_or(model.cfg.kv_dtype);
-        let pool = BlockPool::with_dtype(&model.cfg, policy.kv_budget_bytes, dtype);
+        let mut pool = BlockPool::with_dtype(&model.cfg, policy.kv_budget_bytes, dtype);
+        if let Some(n) = policy.max_resident_blocks {
+            pool.clamp_budget_blocks(n);
+        }
         let metrics = Metrics {
             kv_dtype: dtype.tag().to_string(),
             spec_drafter: spec.as_ref().map(|s| s.name()).unwrap_or("off").to_string(),
@@ -98,11 +169,26 @@ impl<'m> Scheduler<'m> {
             pool_block_bytes: pool.block_bytes(),
             ..Default::default()
         };
-        Scheduler { model, policy, active: Vec::new(), pool, spec, metrics }
+        Scheduler {
+            model,
+            policy,
+            active: Vec::new(),
+            swapped: VecDeque::new(),
+            pool,
+            spec,
+            round_idx: 0,
+            arrival_seq: 0,
+            metrics,
+        }
     }
 
     pub fn active(&self) -> usize {
         self.active.len()
+    }
+
+    /// Sequences currently swapped out awaiting resume.
+    pub fn swapped(&self) -> usize {
+        self.swapped.len()
     }
 
     /// The shared KV block pool (paged mode's memory substrate).
@@ -110,9 +196,9 @@ impl<'m> Scheduler<'m> {
         &self.pool
     }
 
-    /// Whether any work remains (active or waiting).
+    /// Whether any work remains (active, swapped-out, or waiting).
     pub fn has_work(&self, batcher: &Batcher) -> bool {
-        !self.active.is_empty() || batcher.waiting() > 0
+        !self.active.is_empty() || !self.swapped.is_empty() || batcher.waiting() > 0
     }
 
     /// Actual KV bytes resident: pool residency (paged) plus chunked
@@ -158,6 +244,128 @@ impl<'m> Scheduler<'m> {
         self.pool.blocks_for_tokens((len + f.remaining()).min(self.model.cfg.max_seq))
     }
 
+    /// Preempt mode: admission charge of a waiting request — the blocks
+    /// its prompt needs *now* plus one decode row, not its worst-case
+    /// final footprint (growth is handled by preemption, not refusal).
+    fn blocks_for_admission(pool: &BlockPool, cfg: &ModelConfig, req: &Request) -> usize {
+        let prompt = req.prompt.len().min(cfg.max_seq - 1);
+        pool.blocks_for_tokens(prompt + 1)
+    }
+
+    // ---- preemption: swap-out / swap-in (paged mode, `policy.preempt`) ----
+
+    /// Swap in swapped-out sequences, FIFO, while they fit the pool's
+    /// head-room and the `max_active` width. A head that does not fit
+    /// waits (no queue-jumping); if nothing at all is active it is
+    /// **force-resumed** — the pool's hard cap fits one `max_seq`
+    /// sequence, so the engine can always make progress.
+    fn resume_swapped(&mut self) {
+        let model = self.model;
+        loop {
+            let Some(head) = self.swapped.front() else { return };
+            if self.active.len() >= self.policy.max_active {
+                return;
+            }
+            // +1: the first post-resume decode row must also fit.
+            let need = self
+                .pool
+                .blocks_for_tokens((head.snap.len() + 1).min(self.model.cfg.max_seq));
+            if need > self.pool.headroom_blocks() && !self.active.is_empty() {
+                return;
+            }
+            let Swapped { mut f, snap } = self.swapped.pop_front().expect("peeked");
+            let (mut tb, ready) = self.pool.resume(&snap);
+            if ready < snap.len() {
+                // Evicted-middle fallback (f32 pools): recompute the
+                // missing rows through the normal paged forward — rows
+                // are verbatim and kernels row-independent, so the
+                // rebuilt KV is bit-identical to what was swapped out.
+                let missing = &snap.tokens()[ready..];
+                let _ = model.forward_paged(&[missing], &mut self.pool, &mut [&mut tb]);
+                self.metrics.resume_reprefill_tokens += missing.len() as u64;
+            }
+            debug_assert_eq!(tb.len(), snap.len(), "resume rebuilt the wrong length");
+            f.table = Some(tb);
+            f.resumed_round = Some(self.round_idx);
+            self.metrics.resumes += 1;
+            self.active.push(f);
+        }
+    }
+
+    /// Swap out active sequences (lowest priority first) until the pool
+    /// has head-room for `need` new blocks or only `min_active`
+    /// sequences remain. Two passes: hysteresis-respecting first, then
+    /// — only if still short — ignoring it.
+    fn make_headroom(&mut self, need: usize, min_active: usize) {
+        while self.pool.headroom_blocks() < need {
+            if !self.preempt_one(min_active, false) && !self.preempt_one(min_active, true) {
+                return;
+            }
+        }
+    }
+
+    /// Head-room for the coming decode batch: every decodable sequence
+    /// may stage up to `1 + k` rows (its input token plus drafts), so
+    /// preempt until the worst-case new-block demand fits. Stops at one
+    /// survivor — a single sequence always fits under the hard cap.
+    fn make_decode_headroom(&mut self) {
+        let k = self.spec.as_ref().map(|s| s.k).unwrap_or(0);
+        loop {
+            let need: usize = self
+                .active
+                .iter()
+                .filter(|f| f.decodable())
+                .map(|f| {
+                    let tb = f.table.as_ref().expect("active sequences are prefilled");
+                    let staged = (tb.len() + 1 + k).min(tb.capacity());
+                    self.pool.blocks_for_tokens(staged) - tb.block_ids().len()
+                })
+                .sum();
+            if need <= self.pool.headroom_blocks() {
+                return;
+            }
+            if !self.preempt_one(1, false) && !self.preempt_one(1, true) {
+                return;
+            }
+        }
+    }
+
+    /// Suspend one active sequence — the **lowest-priority** victim:
+    /// newest `arrival` stamp, skipping sequences resumed within the
+    /// hysteresis window unless `ignore_hysteresis`, never an
+    /// undecodable sequence (it retires and frees its blocks this round
+    /// anyway), and never below `min_active` survivors. Returns whether
+    /// a victim was swapped out.
+    fn preempt_one(&mut self, min_active: usize, ignore_hysteresis: bool) -> bool {
+        if self.active.len() <= min_active {
+            return false;
+        }
+        let hyst = self.policy.resume_hysteresis_rounds as u64;
+        let mut victim: Option<usize> = None;
+        for (i, f) in self.active.iter().enumerate() {
+            if f.table.is_none() || !f.decodable() {
+                continue;
+            }
+            if !ignore_hysteresis
+                && f.resumed_round.is_some_and(|r| self.round_idx.saturating_sub(r) < hyst)
+            {
+                continue;
+            }
+            if victim.is_none_or(|v| f.arrival > self.active[v].arrival) {
+                victim = Some(i);
+            }
+        }
+        let Some(i) = victim else { return false };
+        let mut f = self.active.remove(i);
+        let tb = f.table.take().expect("victims carry tables");
+        let snap = self.pool.suspend(tb);
+        f.preempt_count += 1;
+        self.metrics.preemptions += 1;
+        self.metrics.swap_bytes += snap.bytes() as u64;
+        self.swapped.push_back(Swapped { f, snap });
+        true
+    }
+
     /// One scheduling round. Returns completed responses.
     pub fn round(&mut self, batcher: &mut Batcher) -> Vec<Response> {
         if self.policy.batched_decode {
@@ -172,26 +380,69 @@ impl<'m> Scheduler<'m> {
     fn round_paged(&mut self, batcher: &mut Batcher) -> Vec<Response> {
         let t0 = Instant::now();
         let model = self.model;
+        self.round_idx += 1;
+
+        // ---- swap-in: preempted sequences re-enter first (FIFO) ----
+        if self.policy.preempt {
+            self.resume_swapped();
+        }
 
         // ---- admission against pool free blocks ----
-        let reserved: usize = self.active.iter().map(|f| self.blocks_reserved(f)).sum();
-        let mut admitted = {
+        let mut admitted = if !self.policy.preempt {
+            // Worst-case reservation: admitted work can always run to
+            // completion without touching anyone else.
+            let reserved: usize = self.active.iter().map(|f| self.blocks_reserved(f)).sum();
             let pool = &self.pool;
             let cfg = &model.cfg;
             batcher.admit(&self.policy, self.active.len(), reserved, pool.budget_blocks(), |r| {
                 Self::blocks_for_request(pool, cfg, r)
             })
+        } else if self.swapped.is_empty() {
+            // Oversubscribed admission: charge only blocks actually
+            // resident — growth pressure is preemption's job, not the
+            // admission gate's. New work never overtakes the swapped
+            // queue (drained above), so mid-flight sequences cannot
+            // starve behind fresh arrivals.
+            let resident: usize = self
+                .active
+                .iter()
+                .map(|f| f.table.as_ref().map_or(0, |t| t.block_ids().len()))
+                .sum();
+            let pool = &self.pool;
+            let cfg = &model.cfg;
+            batcher.admit(&self.policy, self.active.len(), resident, pool.budget_blocks(), |r| {
+                Self::blocks_for_admission(pool, cfg, r)
+            })
+        } else {
+            Vec::new()
         };
-        if admitted.is_empty() && self.active.is_empty() {
+        if admitted.is_empty() && self.active.is_empty() && self.swapped.is_empty() {
             // Over-budget head-of-queue: run it alone — the pool's hard
             // cap guarantees one max_seq sequence always fits.
             if let Some(f) = batcher.pop_front() {
                 admitted.push(f);
             }
         }
+        for f in &mut admitted {
+            f.arrival = self.arrival_seq;
+            self.arrival_seq += 1;
+        }
 
         // ---- prefix attach + batched prefill ----
         if !admitted.is_empty() {
+            if self.policy.preempt {
+                // Make room for the whole admission burst's prompts
+                // before any block is staged (attach hits only shrink
+                // the real need — the estimate is safely conservative).
+                let need: usize = admitted
+                    .iter()
+                    .map(|f| {
+                        let keep = f.req.prompt.len().min(model.cfg.max_seq - 1);
+                        self.pool.blocks_for_tokens(keep)
+                    })
+                    .sum();
+                self.make_headroom(need, 0);
+            }
             let max_seq = model.cfg.max_seq;
             let mut tables: Vec<BlockTable> = Vec::with_capacity(admitted.len());
             let mut suffixes: Vec<Vec<u8>> = Vec::with_capacity(admitted.len());
@@ -245,6 +496,12 @@ impl<'m> Scheduler<'m> {
         // With speculation on, each greedy sequence may first get up to
         // `k` drafted tokens; the verify pass scores them all and keeps
         // the longest greedy-exact prefix (abstentions plain-decode).
+        if self.policy.preempt {
+            // Swap out until this round's worst-case staged rows fit —
+            // the oversubscription debt comes due here, not as a pool
+            // exhaustion panic mid-forward.
+            self.make_decode_headroom();
+        }
         let td = Instant::now();
         let decode_idx: Vec<usize> = self
             .active
@@ -1039,5 +1296,198 @@ mod tests {
             sched.metrics.kv_bytes_peak < 2 * single_peak,
             "sharing must keep peak residency under 2× a single request"
         );
+    }
+
+    // ---- preemptive scheduling ----
+
+    /// Run `reqs` to completion under `policy`, returning sorted
+    /// responses + metrics, with pool invariants checked every round.
+    fn run_checked(
+        model: &Model,
+        policy: BatchPolicy,
+        reqs: Vec<Request>,
+    ) -> (Vec<crate::coordinator::request::Response>, Metrics) {
+        let mut sched = Scheduler::new(model, policy);
+        let mut batcher = Batcher::new();
+        for r in reqs {
+            batcher.enqueue(r);
+        }
+        let mut out = Vec::new();
+        let mut rounds = 0;
+        while sched.has_work(&batcher) {
+            out.extend(sched.round(&mut batcher));
+            sched.pool().assert_consistent();
+            rounds += 1;
+            assert!(rounds < 2000, "scheduler failed to drain (livelock?)");
+        }
+        assert_eq!(sched.pool().referenced_blocks(), 0, "retired sequences leaked blocks");
+        assert_eq!(sched.swapped(), 0, "swapped sequences were stranded");
+        out.sort_by_key(|r| r.id);
+        (out, sched.metrics)
+    }
+
+    /// Short prompts + long decode budgets under a tight block budget:
+    /// the workload where worst-case reservation serializes and
+    /// residency-charged admission + preemption oversubscribes.
+    fn pressure_reqs(n: u64) -> Vec<Request> {
+        (0..n).map(|i| Request::new(i, vec![(65 + i) as u8; 3 + (i as usize % 4)], 24)).collect()
+    }
+
+    #[test]
+    fn preemption_oversubscribes_and_stays_bit_exact() {
+        use crate::coordinator::request::assert_bit_identical;
+        let model = tiny_model(Arch::Llama, 50);
+        // 3 blocks: each request peaks at 2 blocks (≤ 31 tokens), so
+        // worst-case reservation admits one at a time while resident
+        // charging packs several and swaps under pressure.
+        let blk = KvCache::bytes_for_tokens(&model.cfg, 1);
+        let tight = BatchPolicy { kv_budget_bytes: 3 * blk, ..Default::default() };
+        let (want, _) = run_checked(&model, BatchPolicy::default(), pressure_reqs(6));
+        let (base, base_m) = run_checked(&model, tight, pressure_reqs(6));
+        let (got, m) = run_checked(
+            &model,
+            BatchPolicy { preempt: true, ..tight },
+            pressure_reqs(6),
+        );
+        assert_bit_identical("tight baseline vs unconstrained", &base, &want);
+        assert_bit_identical("preemptive vs unconstrained", &got, &want);
+        assert!(m.preemptions > 0, "a 3-block pool under 6 requests must preempt");
+        assert_eq!(m.resumes, m.preemptions, "every swap-out must swap back in");
+        assert!(m.swap_bytes > 0);
+        assert!(
+            m.decode_width_max > base_m.decode_width_max,
+            "oversubscription must widen concurrency beyond the reserved pool's \
+             ({} vs {})",
+            m.decode_width_max,
+            base_m.decode_width_max
+        );
+        assert!(m.preemption_rate() > 0.0);
+    }
+
+    #[test]
+    fn preemption_matches_across_kv_dtypes_and_spec() {
+        // Bit-identity under pressure for every dtype, with and without
+        // an n-gram drafter riding on top (spec rollback + preemption
+        // must compose).
+        use crate::coordinator::request::assert_bit_identical;
+        use crate::spec::SpecPolicy;
+        let model = tiny_model(Arch::Gpt, 51);
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+            for spec in [false, true] {
+                let mk_spec = || spec.then(|| SpecPolicy::ngram(3));
+                let roomy = BatchPolicy { kv_dtype: Some(dtype), ..Default::default() };
+                let (want, _) = {
+                    let mut sched = Scheduler::with_spec(&model, roomy, mk_spec());
+                    let mut batcher = Batcher::new();
+                    for r in pressure_reqs(5) {
+                        batcher.enqueue(r);
+                    }
+                    let mut out = sched.run_to_completion(&mut batcher);
+                    out.sort_by_key(|r| r.id);
+                    (out, sched.metrics)
+                };
+                let tight = BatchPolicy {
+                    kv_budget_bytes: usize::MAX,
+                    max_resident_blocks: Some(3),
+                    kv_dtype: Some(dtype),
+                    preempt: true,
+                    ..Default::default()
+                };
+                let mut sched = Scheduler::with_spec(&model, tight, mk_spec());
+                assert_eq!(sched.pool().budget_blocks(), 3, "max_resident must clamp");
+                let mut batcher = Batcher::new();
+                for r in pressure_reqs(5) {
+                    batcher.enqueue(r);
+                }
+                let mut rounds = 0;
+                let mut got = Vec::new();
+                while sched.has_work(&batcher) {
+                    got.extend(sched.round(&mut batcher));
+                    sched.pool().assert_consistent();
+                    rounds += 1;
+                    assert!(rounds < 2000, "{dtype:?}/spec={spec}: livelock");
+                }
+                got.sort_by_key(|r| r.id);
+                assert_bit_identical(&format!("{dtype:?}/spec={spec}"), &got, &want);
+                assert!(
+                    sched.metrics.preemptions > 0,
+                    "{dtype:?}/spec={spec}: pressure workload must preempt"
+                );
+                if dtype != KvDtype::F32 {
+                    assert_eq!(
+                        sched.metrics.resume_reprefill_tokens, 0,
+                        "{dtype:?}: quantized resume must never re-prefill"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn preemption_survives_single_block_budget() {
+        // Degenerate pressure: a budget of one block cannot hold even
+        // one growing sequence — force-admission, force-resume, and the
+        // hard cap must together still drain everything, bit-exactly.
+        use crate::coordinator::request::assert_bit_identical;
+        let model = tiny_model(Arch::Gpt, 52);
+        let blk = KvCache::bytes_for_tokens(&model.cfg, 1);
+        let (want, _) = run_checked(&model, BatchPolicy::default(), pressure_reqs(3));
+        let tight = BatchPolicy { kv_budget_bytes: blk, preempt: true, ..Default::default() };
+        let (got, m) = run_checked(&model, tight, pressure_reqs(3));
+        assert_bit_identical("single-block budget", &got, &want);
+        assert_eq!(m.requests_completed, 3);
+    }
+
+    #[test]
+    fn preempted_sampled_requests_keep_their_rng_streams() {
+        // Suspension must not perturb a temperature > 0 sequence: the
+        // RNG state swaps out and back in with the request.
+        use crate::coordinator::request::assert_bit_identical;
+        let model = tiny_model(Arch::Llama, 53);
+        let blk = KvCache::bytes_for_tokens(&model.cfg, 1);
+        let reqs = || -> Vec<Request> {
+            (0..4u64)
+                .map(|i| {
+                    Request::new(i, vec![(70 + i) as u8; 4], 20)
+                        .with_temperature(if i % 2 == 0 { 0.8 } else { 0.0 })
+                })
+                .collect()
+        };
+        let (want, _) = run_checked(&model, BatchPolicy::default(), reqs());
+        let tight = BatchPolicy { kv_budget_bytes: 3 * blk, preempt: true, ..Default::default() };
+        let (got, m) = run_checked(&model, tight, reqs());
+        assert_bit_identical("sampled under preemption", &got, &want);
+        assert!(m.preemptions > 0, "pressure workload must preempt");
+    }
+
+    #[test]
+    fn preemption_off_is_the_reserved_scheduler() {
+        // The default path must be byte-for-byte the old scheduler: no
+        // preemption counters move, worst-case reservation caps
+        // admission exactly as before.
+        let model = tiny_model(Arch::Gpt, 54);
+        let one = KvCache::bytes_for_tokens(&model.cfg, 4 + 8);
+        let policy = BatchPolicy { kv_budget_bytes: 2 * one, ..Default::default() };
+        let mut sched = Scheduler::new(&model, policy);
+        let mut batcher = Batcher::new();
+        for i in 0..4 {
+            batcher.enqueue(Request::new(i, vec![65u8; 4], 8));
+        }
+        let _ = sched.round(&mut batcher);
+        assert_eq!(sched.active(), 2, "worst-case reservation must still cap admission");
+        sched.run_to_completion(&mut batcher);
+        assert_eq!(sched.metrics.preemptions, 0);
+        assert_eq!(sched.metrics.resumes, 0);
+        assert_eq!(sched.metrics.swap_bytes, 0);
+        assert_eq!(sched.swapped(), 0);
+    }
+
+    #[test]
+    fn legacy_mode_drops_preempt_like_it_drops_spec() {
+        let model = tiny_model(Arch::Gpt, 55);
+        let policy =
+            BatchPolicy { batched_decode: false, preempt: true, ..Default::default() };
+        let sched = Scheduler::new(&model, policy);
+        assert!(!sched.policy.preempt, "legacy baseline has no snapshot story");
     }
 }

@@ -97,12 +97,27 @@
 //! re-materializes it in a fresh slot, so replaying rows on top
 //! reproduces the **bit-exact** write history (and quantized codes) of
 //! plain decode.
+//!
+//! **Preemption: swap-out / swap-in.** [`BlockPool::suspend`] turns a
+//! live sequence into a [`Snapshot`] — a first-class handle that owns
+//! its checkpointed bytes (the partial tail for f32 pools, every block
+//! for quantized pools) and releases the sequence's blocks back to the
+//! pool: frozen prefix blocks stay cached *and shareable* in the
+//! content index, partials free immediately. [`BlockPool::resume`]
+//! rebuilds the table later: re-attach surviving cached blocks
+//! (refcount bumps, no recompute), re-install snapshot-owned bytes in
+//! fresh slots (taint preserved), and — f32 only — fall back to a
+//! bit-exact model re-prefill when LRU eviction took a middle block
+//! while the sequence was swapped. This is the substrate the
+//! scheduler's preemptive admission builds on: suspend the
+//! lowest-priority sequence instead of refusing work the pool could
+//! hold.
 
 pub mod pool;
 pub mod store;
 pub mod table;
 
-pub use pool::{BlockPool, PoolStats, SpecCheckpoint};
+pub use pool::{BlockPool, PoolStats, Snapshot, SpecCheckpoint};
 pub use store::{fp8_e4m3_decode, fp8_e4m3_encode, KvDtype, KvScratch};
 pub use table::BlockTable;
 

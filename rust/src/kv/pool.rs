@@ -110,6 +110,71 @@ impl SpecCheckpoint {
     }
 }
 
+/// A suspended sequence's swapped-out KV state — the first-class handle
+/// preemptive scheduling parks while the sequence's blocks go back to
+/// the pool ([`BlockPool::suspend`] / [`BlockPool::resume`]).
+///
+/// A snapshot **owns** its checkpointed bytes, so it survives anything
+/// the pool does afterwards — LRU eviction of the source blocks, slot
+/// reuse, even another sequence rewriting the same chain. What it owns
+/// depends on the pool dtype:
+///
+/// * **f32** pools own only the partial tail block (if any). Full
+///   blocks are verbatim rows frozen into the content index; a resume
+///   re-attaches whatever is still cached and — because every kernel is
+///   row-independent — can *re-prefill* any evicted middle bit-exactly.
+/// * **quantized** pools own a byte-exact clone of **every** block
+///   (codes *and* scales), because a fused re-prefill would requantize
+///   mid-block on a different write batching and diverge from the
+///   incremental history. Owning the bytes makes resume exact
+///   unconditionally; per-block purity taint rides along so an impure
+///   slab stays out of the dedup index across a suspend/resume cycle.
+#[derive(Debug)]
+pub struct Snapshot {
+    dtype: KvDtype,
+    /// Committed token count at suspension.
+    len: usize,
+    /// Table capacity (the model's `max_seq`) for the rebuilt table.
+    max_tokens: usize,
+    /// Full committed token history — the attach keys for resume and
+    /// the replay source for the re-prefill fallback.
+    tokens: Vec<u8>,
+    /// Block index of the first owned store below; stores cover block
+    /// indices `owned_from ..` of the sequence.
+    owned_from: usize,
+    /// Byte-exact clones of the owned blocks with their purity taint.
+    stores: Vec<(KvStore, bool)>,
+    /// Compressed bytes held by `stores` (the `swap_bytes` metric).
+    bytes: usize,
+}
+
+impl Snapshot {
+    /// Committed token count the resume restores to.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The suspended sequence's committed token history.
+    pub fn tokens(&self) -> &[u8] {
+        &self.tokens
+    }
+
+    /// Blocks whose bytes the snapshot owns (tail-only for f32 pools,
+    /// every block for quantized pools).
+    pub fn owned_blocks(&self) -> usize {
+        self.stores.len()
+    }
+
+    /// Compressed bytes swapped out of the pool into this snapshot.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
 /// Shared, ref-counted KV block pool (see [`super`] for the full
 /// design).
 #[derive(Debug)]
@@ -125,6 +190,9 @@ pub struct BlockPool {
     /// Hard allocation cap: ≥ one `max_seq` sequence so a forced single
     /// admission can always complete.
     max_blocks: usize,
+    /// Blocks one `max_seq` sequence spans — the floor the hard cap
+    /// must keep when the budget is clamped tighter.
+    seq_blocks: usize,
     blocks: Vec<Block>,
     free: Vec<usize>,
     index: HashMap<BlockKey, usize>,
@@ -167,6 +235,7 @@ impl BlockPool {
             n_layer: cfg.n_layer,
             budget_blocks,
             max_blocks: budget_blocks.max(one_seq),
+            seq_blocks: one_seq,
             blocks: Vec::new(),
             free: Vec::new(),
             index: HashMap::new(),
@@ -208,6 +277,27 @@ impl BlockPool {
     /// Admission budget in blocks.
     pub fn budget_blocks(&self) -> usize {
         self.budget_blocks
+    }
+
+    /// Tighten the admission budget to at most `n` blocks (the
+    /// scheduler's `max_resident_blocks` operator lever — deliberate KV
+    /// pressure at a byte budget that would otherwise be roomy). The
+    /// hard cap stays ≥ one `max_seq` sequence so forced admission can
+    /// still run to completion. Call before the first allocation.
+    pub fn clamp_budget_blocks(&mut self, n: usize) {
+        debug_assert!(self.blocks.is_empty(), "clamp the budget before any allocation");
+        self.budget_blocks = self.budget_blocks.min(n.max(1));
+        self.max_blocks = self.budget_blocks.max(self.seq_blocks);
+    }
+
+    /// Blocks available for new allocations without disturbing any live
+    /// table: the budget minus blocks currently *referenced*. Cached
+    /// (frozen, refs == 0) blocks count as head-room — eviction reclaims
+    /// them on demand — as do free-listed slots. The preemptive
+    /// scheduler preempts until the coming round's staged rows fit in
+    /// this number.
+    pub fn headroom_blocks(&self) -> usize {
+        self.budget_blocks.saturating_sub(self.blocks.iter().filter(|b| b.refs > 0).count())
     }
 
     /// Blocks currently resident: referenced by tables **or** cached for
@@ -311,6 +401,42 @@ impl BlockPool {
 
     // ---- the sequence lifecycle ----
 
+    /// Walk `tokens[..limit]` (`limit` a block multiple) down the
+    /// content index from the chain root, attaching every leading hit
+    /// to `table` (refcount +1, no recompute). When `expect` is given
+    /// — the resume path's byte-exactness guard — a hit is accepted
+    /// only if its store equals the block-indexed expected copy.
+    /// Returns the attached token count (a block multiple). The single
+    /// keyed-chain walk [`Self::attach_prefix`] and [`Self::resume`]
+    /// share.
+    fn attach_chain(
+        &mut self,
+        table: &mut BlockTable,
+        tokens: &[u8],
+        limit: usize,
+        expect: Option<&[(KvStore, bool)]>,
+    ) -> usize {
+        let bt = self.block_tokens;
+        let (mut parent, mut parent_gen) = (NO_PARENT, 0u64);
+        let mut shared = 0;
+        while shared < limit {
+            let key =
+                BlockKey { parent, parent_gen, tokens: tokens[shared..shared + bt].to_vec() };
+            let Some(&id) = self.index.get(&key) else { break };
+            if let Some(stores) = expect {
+                if self.blocks[id].store != stores[shared / bt].0 {
+                    break;
+                }
+            }
+            self.blocks[id].refs += 1;
+            table.blocks.push(id);
+            parent = id;
+            parent_gen = self.blocks[id].gen;
+            shared += bt;
+        }
+        shared
+    }
+
     /// Walk `prompt` down the content index and attach every leading
     /// full block already resident, bumping refcounts instead of
     /// recomputing KV. Returns the shared token count (always a block
@@ -322,23 +448,8 @@ impl BlockPool {
         // Never share the whole prompt: the last token must be prefilled
         // to produce the logits that seed sampling.
         let max_share = (prompt.len().saturating_sub(1) / bt) * bt;
-        let mut shared = 0;
-        let (mut parent, mut parent_gen) = (NO_PARENT, 0u64);
-        while shared < max_share {
-            let key =
-                BlockKey { parent, parent_gen, tokens: prompt[shared..shared + bt].to_vec() };
-            match self.index.get(&key) {
-                Some(&id) => {
-                    self.blocks[id].refs += 1;
-                    table.blocks.push(id);
-                    table.tokens.extend_from_slice(&key.tokens);
-                    shared += bt;
-                    parent = id;
-                    parent_gen = self.blocks[id].gen;
-                }
-                None => break,
-            }
-        }
+        let shared = self.attach_chain(table, prompt, max_share, None);
+        table.tokens.extend_from_slice(&prompt[..shared]);
         table.len = shared;
         self.stats.shared_tokens += shared as u64;
         self.stats.prompt_tokens += prompt.len() as u64;
@@ -619,6 +730,99 @@ impl BlockPool {
             table.blocks.push(id);
             table.tokens.extend_from_slice(&cp.tail_tokens);
             table.len = cp.len;
+        }
+    }
+
+    // ---- preemption: swap-out / swap-in ----
+
+    /// Swap a live sequence out of the pool: capture a [`Snapshot`]
+    /// that owns everything a later [`Self::resume`] needs, then
+    /// release every block back to the pool. Frozen full blocks stay
+    /// cached *and indexed* (still shareable, still evictable — the
+    /// snapshot does not pin them); unkeyed partials go to the free
+    /// list, which is exactly what frees capacity for the work that
+    /// preempted this sequence.
+    ///
+    /// F32 pools snapshot only the partial tail (full blocks are
+    /// recoverable via the index or a bit-exact re-prefill); quantized
+    /// pools snapshot every block so resume never has to re-prefill —
+    /// see [`Snapshot`] for why re-prefill is not exact at low bit
+    /// widths.
+    pub fn suspend(&mut self, table: BlockTable) -> Snapshot {
+        let bt = self.block_tokens;
+        debug_assert_eq!(
+            table.blocks.len(),
+            self.blocks_for_tokens(table.len),
+            "suspend needs a committed table (no staged rows in flight)"
+        );
+        let owned_from = if self.dtype == KvDtype::F32 { table.len / bt } else { 0 };
+        let stores: Vec<(KvStore, bool)> = table.blocks[owned_from..]
+            .iter()
+            .map(|&id| (self.blocks[id].store.clone(), self.blocks[id].tainted))
+            .collect();
+        let snap = Snapshot {
+            dtype: self.dtype,
+            len: table.len,
+            max_tokens: table.capacity(),
+            tokens: table.tokens.clone(),
+            owned_from,
+            bytes: stores.len() * self.block_bytes(),
+            stores,
+        };
+        self.release(table);
+        snap
+    }
+
+    /// Swap a suspended sequence back in. Returns the rebuilt table and
+    /// `ready`, the number of committed tokens materialized:
+    ///
+    /// 1. **Attach** — walk the snapshot's token history down the
+    ///    content index exactly like [`Self::attach_prefix`], re-sharing
+    ///    every full block that survived eviction. On quantized pools a
+    ///    hit is additionally accepted only if its bytes equal the
+    ///    snapshot's own copy (codes are *normally* a pure function of
+    ///    the chain, but the snapshot is the ground truth and the
+    ///    compare keeps resume exact unconditionally).
+    /// 2. **Install** — every remaining block whose bytes the snapshot
+    ///    owns is re-materialized in a fresh slot (byte-exact, taint
+    ///    preserved), the same move [`Self::rollback`] makes for its
+    ///    tail. Installed blocks stay private and unkeyed.
+    /// 3. **Re-prefill fallback** (f32 only) — if a *middle* block was
+    ///    evicted, `ready < snap.len()`: the caller must re-run the
+    ///    model over `snap.tokens()[ready..]` to rebuild the missing
+    ///    rows, which is bit-exact for verbatim f32 rows.
+    ///
+    /// The snapshot is borrowed, not consumed, so a resume that the
+    /// scheduler later abandons (or a test) can replay it.
+    pub fn resume(&mut self, snap: &Snapshot) -> (BlockTable, usize) {
+        assert_eq!(snap.dtype, self.dtype, "snapshot dtype mismatch");
+        let bt = self.block_tokens;
+        let full = snap.len / bt;
+        let mut table = BlockTable::new(snap.max_tokens);
+        // Quantized pools own every block (`owned_from == 0`), so the
+        // expected-store slice is block-indexed from the chain root.
+        let expect = (self.dtype != KvDtype::F32).then_some(&snap.stores[..]);
+        let bi = self.attach_chain(&mut table, &snap.tokens, full * bt, expect) / bt;
+        if bi >= snap.owned_from {
+            for j in bi..self.blocks_for_tokens(snap.len) {
+                let (store, tainted) = &snap.stores[j - snap.owned_from];
+                let id = self.alloc_block();
+                self.blocks[id].store = store.clone();
+                self.blocks[id].tainted = *tainted;
+                table.blocks.push(id);
+            }
+            table.len = snap.len;
+            table.tokens = snap.tokens.clone();
+            (table, snap.len)
+        } else {
+            // An f32 middle block fell to LRU eviction while the
+            // sequence was swapped: hand back the intact prefix; the
+            // caller re-prefills the rest (and the then-stale tail
+            // snapshot is simply unused).
+            let ready = bi * bt;
+            table.len = ready;
+            table.tokens = snap.tokens[..ready].to_vec();
+            (table, ready)
         }
     }
 
@@ -1306,6 +1510,232 @@ mod tests {
         assert_eq!(t.block_ids().len(), 2);
         p.release(t);
         p.assert_consistent();
+    }
+
+    /// Assert two tables hold bit-identical dequantized K/V in their
+    /// (possibly different) pools — the suspend/resume exactness oracle.
+    fn assert_same_kv(ctx: &str, pa: &BlockPool, ta: &BlockTable, pb: &BlockPool, tb: &BlockTable) {
+        assert_eq!(ta.len(), tb.len(), "{ctx}: length drifted");
+        assert_eq!(ta.tokens(), tb.tokens(), "{ctx}: token history drifted");
+        let mut sa = KvScratch::new();
+        let mut sb = KvScratch::new();
+        for li in 0..2 {
+            let (ka, va) = pa.layer_view(ta, li, ta.len(), &mut sa);
+            let (kb, vb) = pb.layer_view(tb, li, tb.len(), &mut sb);
+            assert_eq!(ka, kb, "{ctx}: layer {li} K drifted");
+            assert_eq!(va, vb, "{ctx}: layer {li} V drifted");
+        }
+    }
+
+    #[test]
+    fn suspend_resume_roundtrip_every_dtype() {
+        // The happy path: suspend, resume while every full block is
+        // still cached → everything re-attaches or re-installs and the
+        // KV is bit-identical to a control table that never swapped.
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let mut p = pool_dt(16, dtype);
+            let mut ctrl_p = pool_dt(16, dtype);
+            let toks: Vec<u8> = (1..11).collect(); // 2 full blocks + 2-row tail
+            let mut t = BlockTable::new(64);
+            let mut c = BlockTable::new(64);
+            run_tokens(&mut p, &mut t, &toks);
+            run_tokens(&mut ctrl_p, &mut c, &toks);
+            let before = p.bytes_in_use();
+            let snap = p.suspend(t);
+            assert_eq!(snap.len(), 10);
+            assert_eq!(snap.tokens(), &toks[..]);
+            if dtype == KvDtype::F32 {
+                assert_eq!(snap.owned_blocks(), 1, "f32 owns only the tail");
+            } else {
+                assert_eq!(snap.owned_blocks(), 3, "quantized owns every block");
+            }
+            assert_eq!(snap.bytes(), snap.owned_blocks() * p.block_bytes());
+            // The partial tail went back to the free list: residency drops.
+            assert!(p.bytes_in_use() < before, "{dtype:?}: suspend must free the tail");
+            p.assert_consistent();
+            let (mut t2, ready) = p.resume(&snap);
+            assert_eq!(ready, 10, "{dtype:?}: cached blocks must avoid re-prefill");
+            p.assert_consistent();
+            assert_same_kv(&format!("{dtype:?} roundtrip"), &p, &t2, &ctrl_p, &c);
+            // The resumed table keeps serving: grow both and re-compare.
+            run_tokens(&mut p, &mut t2, &[60, 61, 62]);
+            run_tokens(&mut ctrl_p, &mut c, &[60, 61, 62]);
+            assert_same_kv(&format!("{dtype:?} regrowth"), &p, &t2, &ctrl_p, &c);
+            p.release(t2);
+            ctrl_p.release(c);
+            p.assert_consistent();
+            assert_eq!(p.referenced_blocks(), 0);
+        }
+    }
+
+    #[test]
+    fn resume_after_prefix_eviction_forces_reprefill() {
+        // The swapped sequence's cached full blocks fall to LRU
+        // eviction; resume must hand back only the intact prefix and
+        // report ready < len — the scheduler's re-prefill fallback —
+        // after which a replay of the missing rows restores the content.
+        let mut p = pool(4); // tight: churn evicts the suspended prefix
+        let toks: Vec<u8> = (10..20).collect(); // 2 full blocks + tail
+        let mut t = BlockTable::new(64);
+        run_tokens(&mut p, &mut t, &toks);
+        let snap = p.suspend(t);
+        // Churn: a 12-token stranger needs 3 of the 4 budget blocks.
+        let mut churn = BlockTable::new(64);
+        run_tokens(&mut p, &mut churn, &(100..112).collect::<Vec<u8>>());
+        assert!(p.stats.evictions >= 1, "churn must evict the suspended prefix");
+        p.release(churn);
+        let (mut t2, ready) = p.resume(&snap);
+        assert!(ready < snap.len(), "evicted middle must force the re-prefill path");
+        assert_eq!(ready % p.block_tokens(), 0);
+        assert_eq!(t2.tokens(), &toks[..ready]);
+        // Replay the missing rows (what the scheduler's forward does).
+        run_tokens(&mut p, &mut t2, &toks[ready..]);
+        p.assert_consistent();
+        let mut ctrl_p = pool(8);
+        let mut c = BlockTable::new(64);
+        run_tokens(&mut ctrl_p, &mut c, &toks);
+        assert_same_kv("reprefill", &p, &t2, &ctrl_p, &c);
+        p.release(t2);
+        p.assert_consistent();
+        assert_eq!(p.referenced_blocks(), 0);
+    }
+
+    #[test]
+    fn resume_of_forked_sequence_leaves_sibling_intact() {
+        // Suspending one fork releases only its own references; the
+        // sibling keeps serving, and the resumed fork carries its exact
+        // pre-suspension rows (shared prefix re-attaches, private tail
+        // re-installs).
+        for dtype in [KvDtype::F32, KvDtype::Int8] {
+            let mut p = pool_dt(8, dtype);
+            let mut a = BlockTable::new(64);
+            run_tokens(&mut p, &mut a, &[1, 2, 3, 4, 5, 6]);
+            let mut b = p.fork(&a);
+            // Diverge the fork so its tail is private (COW) content.
+            run_tokens(&mut p, &mut b, &[42]);
+            let mut ctrl_p = pool_dt(8, dtype);
+            let mut c = BlockTable::new(64);
+            run_tokens(&mut ctrl_p, &mut c, &[1, 2, 3, 4, 5, 6]);
+            let mut cb = ctrl_p.fork(&c);
+            run_tokens(&mut ctrl_p, &mut cb, &[42]);
+            let snap = p.suspend(b);
+            p.assert_consistent();
+            // Sibling survives suspension untouched.
+            assert_same_kv(&format!("{dtype:?} sibling"), &p, &a, &ctrl_p, &c);
+            let (b2, ready) = p.resume(&snap);
+            assert_eq!(ready, 7, "{dtype:?}");
+            p.assert_consistent();
+            assert_same_kv(&format!("{dtype:?} fork"), &p, &b2, &ctrl_p, &cb);
+            p.release(a);
+            p.release(b2);
+            p.assert_consistent();
+            assert_eq!(p.referenced_blocks(), 0);
+        }
+    }
+
+    #[test]
+    fn taint_survives_suspend_resume() {
+        // An impure quantized slab (mid-block truncate on an inflated
+        // amax) must come back from a swap still tainted: fill it to a
+        // full block after resume, release, and the chain must never
+        // serve a prefix hit.
+        let mut p = pool_dt(8, KvDtype::Int8);
+        let mut t = BlockTable::new(64);
+        run_tokens(&mut p, &mut t, &[1, 2, 200, 201]); // big rows inflate amax
+        p.truncate(&mut t, 2); // tail (block 0) now tainted
+        let snap = p.suspend(t);
+        let (mut t2, ready) = p.resume(&snap);
+        assert_eq!(ready, 2);
+        p.assert_consistent();
+        run_tokens(&mut p, &mut t2, &[3, 4]); // block 0 full: tokens 1,2,3,4
+        p.release(t2);
+        p.assert_consistent();
+        let mut probe = BlockTable::new(64);
+        assert_eq!(
+            p.attach_prefix(&mut probe, &[1, 2, 3, 4, 9]),
+            0,
+            "tainted slab leaked into the prefix index across suspend/resume"
+        );
+        p.release(probe);
+    }
+
+    #[test]
+    fn suspend_resume_cycle_is_idempotent() {
+        // Double-suspend: a suspend → resume → suspend → resume chain
+        // lands on exactly the same bytes as a single cycle, and a
+        // snapshot can be resumed twice (it is borrowed, not consumed)
+        // with both tables bit-identical.
+        for dtype in [KvDtype::F32, KvDtype::Int8] {
+            let mut p = pool_dt(16, dtype);
+            let mut ctrl_p = pool_dt(16, dtype);
+            let toks: Vec<u8> = (20..29).collect();
+            let mut t = BlockTable::new(64);
+            let mut c = BlockTable::new(64);
+            run_tokens(&mut p, &mut t, &toks);
+            run_tokens(&mut ctrl_p, &mut c, &toks);
+            let s1 = p.suspend(t);
+            let (t1, r1) = p.resume(&s1);
+            assert_eq!(r1, 9, "{dtype:?}");
+            let s2 = p.suspend(t1);
+            assert_eq!(s2.len(), s1.len());
+            assert_eq!(s2.tokens(), s1.tokens());
+            assert_eq!(s2.owned_blocks(), s1.owned_blocks(), "{dtype:?}: cycle changed shape");
+            let (t2, r2) = p.resume(&s2);
+            assert_eq!(r2, 9, "{dtype:?}");
+            let (t3, r3) = p.resume(&s2); // second resume of the same snapshot
+            assert_eq!(r3, 9, "{dtype:?}");
+            p.assert_consistent();
+            assert_same_kv(&format!("{dtype:?} cycle"), &p, &t2, &ctrl_p, &c);
+            assert_same_kv(&format!("{dtype:?} twin"), &p, &t3, &ctrl_p, &c);
+            p.release(t2);
+            p.release(t3);
+            p.assert_consistent();
+            assert_eq!(p.referenced_blocks(), 0);
+        }
+    }
+
+    #[test]
+    fn resume_reattaches_cached_blocks_instead_of_copying() {
+        // Full frozen blocks released by suspend stay in the content
+        // index; resume must share them (refcount bump) rather than
+        // installing duplicates — that re-sharing is what makes
+        // preemption cheaper than retire-and-readmit.
+        let mut p = pool(8);
+        let toks: Vec<u8> = (1..9).collect(); // exactly 2 full blocks
+        let mut t = BlockTable::new(64);
+        run_tokens(&mut p, &mut t, &toks);
+        let ids = t.block_ids().to_vec();
+        let snap = p.suspend(t);
+        let in_use = p.blocks_in_use();
+        let (t2, ready) = p.resume(&snap);
+        assert_eq!(ready, 8);
+        assert_eq!(t2.block_ids(), &ids[..], "resume must re-attach the cached blocks");
+        assert_eq!(p.blocks_in_use(), in_use, "re-attach must not allocate");
+        p.release(t2);
+        p.assert_consistent();
+    }
+
+    #[test]
+    fn clamp_budget_and_headroom_accounting() {
+        let mut p = pool(8);
+        p.clamp_budget_blocks(3);
+        assert_eq!(p.budget_blocks(), 3);
+        assert_eq!(p.headroom_blocks(), 3);
+        let mut t = BlockTable::new(64);
+        run_tokens(&mut p, &mut t, &(1..6).collect::<Vec<u8>>()); // 2 blocks referenced
+        assert_eq!(p.headroom_blocks(), 1);
+        p.release(t);
+        // Cached + free blocks are reclaimable: full head-room returns.
+        assert_eq!(p.headroom_blocks(), 3);
+        // The hard cap still fits one max_seq sequence (64 tokens / bt 4
+        // = 16 blocks) even under a 1-block budget.
+        let mut q = pool(8);
+        q.clamp_budget_blocks(1);
+        let mut big = BlockTable::new(64);
+        run_tokens(&mut q, &mut big, &(0..64).collect::<Vec<u8>>());
+        assert_eq!(big.len(), 64, "forced single sequence must still complete");
+        q.release(big);
+        q.assert_consistent();
     }
 
     #[test]

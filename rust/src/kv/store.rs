@@ -148,7 +148,11 @@ fn dec(dtype: KvDtype, scale: f32, b: u8) -> f32 {
 /// `Clone` is the speculative-decode checkpoint primitive: a clone of a
 /// partial tail block (codes *and* scales) is a bit-exact snapshot that
 /// [`super::BlockPool::rollback`] can re-install after rejected drafts.
-#[derive(Clone, Debug)]
+/// `PartialEq` compares payload bytes and scales exactly — the guard a
+/// preemption resume uses before re-attaching an indexed block in place
+/// of its swapped-out copy (quantized codes must match bit-for-bit or
+/// the resume installs its own snapshot bytes instead).
+#[derive(Clone, Debug, PartialEq)]
 pub(crate) enum KvStore {
     F32 {
         k: Vec<f32>,

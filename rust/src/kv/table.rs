@@ -48,6 +48,13 @@ impl BlockTable {
         self.max_tokens - self.len
     }
 
+    /// Total capacity in tokens (the model's `max_seq`) — what a
+    /// preemption [`super::Snapshot`] records so the rebuilt table keeps
+    /// the original bounds.
+    pub fn capacity(&self) -> usize {
+        self.max_tokens
+    }
+
     /// Pool block ids backing this sequence (shared prefixes show up as
     /// identical leading ids across tables).
     pub fn block_ids(&self) -> &[usize] {

@@ -45,7 +45,11 @@
 //! copy-on-write at divergence. The coordinator admits against pool
 //! free blocks ([`coordinator::scheduler::Scheduler`]), and the chunked
 //! per-request [`model::generate::KvCache`] survives as the
-//! per-sequence baseline the serving benchmark A/Bs against.
+//! per-sequence baseline the serving benchmark A/Bs against. Under
+//! `BatchPolicy::preempt` the scheduler **oversubscribes** instead of
+//! reserving worst-case footprints: sequences swap out to byte-exact
+//! [`kv::Snapshot`]s under pressure and swap back in ahead of new
+//! admissions — same greedy tokens, more admitted work per block.
 //!
 //! ## Quick tour
 //!
