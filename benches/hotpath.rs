@@ -2,10 +2,22 @@
 //! its time in. Drives the §Perf optimization loop (EXPERIMENTS.md).
 //!
 //! Covers: dense GEMM, packed N:M SpMM at several densities (validating
-//! `PACK_DENSITY_THRESHOLD`), dynamic activation quantization, the
-//! compression pipeline itself, and the simulated tensor core.
+//! `PACK_DENSITY_THRESHOLD`) plus the fused-dequant int8-value SpMM,
+//! paged attention over the KV pool (f32 zero-copy, quantized via the
+//! scratch-dequant route vs the quantized-domain `kv::qattn` route),
+//! dynamic activation quantization, the compression pipeline itself,
+//! and the simulated tensor core.
+//!
+//! `--smoke` keeps every shape (so row names — the CI baseline keys —
+//! are identical to a full run) but shrinks the per-bench minimum
+//! runtime: the CI guard that keeps the bench compiling, running, and
+//! feeding `BENCH_hotpath.json` (cwd) to the bench-regression gate
+//! alongside the usual `target/bench-results/hotpath.json` record.
 
 use sdq::formats::NumFormat;
+use sdq::kv::{BlockPool, BlockTable, KvDtype, KvScratch};
+use sdq::model::forward::{paged_attention, KvSegs, SeqKv};
+use sdq::model::{Arch, ModelConfig};
 use sdq::perfmodel::simtc::TensorCoreSpec;
 use sdq::sdq::nm::{topn_block_mask, NmPattern};
 use sdq::sdq::packed::pack;
@@ -40,7 +52,40 @@ fn gflops(m: &Measurement, flops: f64) -> String {
     format!("{:.2}", flops / m.median_ns)
 }
 
+/// Build a quantity of committed KV state to attend over: `n_seq`
+/// tables of `tokens` rows each in a pool of the given dtype.
+fn attn_fixture(
+    cfg: &ModelConfig,
+    dtype: KvDtype,
+    n_seq: usize,
+    tokens: usize,
+) -> (BlockPool, Vec<BlockTable>) {
+    let mut pool = BlockPool::with_dtype(cfg, 16 * 1024 * 1024, dtype);
+    let mut rng = Rng::seed_from_u64(17);
+    let d = cfg.d_model;
+    let mut tables = Vec::with_capacity(n_seq);
+    for s in 0..n_seq {
+        let mut tb = BlockTable::new(cfg.max_seq);
+        let toks: Vec<u8> = (0..tokens).map(|t| ((s * 31 + t) % 256) as u8).collect();
+        pool.prepare_tokens(&mut tb, tokens);
+        for pos in 0..tokens {
+            for li in 0..cfg.n_layer {
+                let k: Vec<f32> = (0..d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                let v: Vec<f32> = (0..d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                pool.write_row(&tb, li, pos, &k, &v);
+            }
+        }
+        pool.commit(&mut tb, &toks);
+        tables.push(tb);
+    }
+    (pool, tables)
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // Same shapes in smoke mode (row names are the CI baseline keys);
+    // only the timing budget shrinks.
+    let mrt = |full: u64| if smoke { 30 } else { full };
     let mut table = Table::new("hotpath microbenchmarks", &["bench", "median ms", "GFLOP/s"]);
 
     // Dense GEMM at serving shapes (prefill + eval batch).
@@ -48,7 +93,7 @@ fn main() {
         let x = rand_matrix(t, k, 1);
         let w = rand_matrix(o, k, 2);
         let mut c = Matrix::zeros(t, o);
-        let m = bench(&format!("gemm {t}x{k}x{o}"), 300, || {
+        let m = bench(&format!("gemm {t}x{k}x{o}"), mrt(300), || {
             matmul_into(&x, &w, &mut c);
             std::hint::black_box(&c);
         });
@@ -57,14 +102,15 @@ fn main() {
                        gflops(&m, 2.0 * (t * k * o) as f64)]);
     }
 
-    // Packed SpMM vs dense at several densities (threshold validation).
+    // Packed SpMM vs dense at several densities (threshold validation),
+    // plus the fused-dequant int8-value plane at the same shape.
     let (t, k, o) = (256usize, 512usize, 512usize);
     let x = rand_matrix(t, k, 3);
     for pat in [NmPattern::new(1, 8), NmPattern::new(2, 8), NmPattern::new(4, 8), NmPattern::new(6, 8)] {
         let w = sparse_matrix(o, k, pat, 4);
-        let p = pack(&w, pat).unwrap();
+        let mut p = pack(&w, pat).unwrap();
         let mut c = Matrix::zeros(t, o);
-        let m = bench(&format!("spmm {pat} {t}x{k}x{o}"), 300, || {
+        let m = bench(&format!("spmm {pat} {t}x{k}x{o}"), mrt(300), || {
             c.data.fill(0.0);
             p.spmm_into(&x, &mut c);
             std::hint::black_box(&c);
@@ -72,8 +118,16 @@ fn main() {
         report(&m);
         let useful = 2.0 * (t * k * o) as f64 * pat.density();
         table.row(vec![m.name.clone(), format!("{:.3}", m.median_ms()), gflops(&m, useful)]);
+        p.quantize_values_int8();
+        let mq = bench(&format!("spmm-q8 {pat} {t}x{k}x{o}"), mrt(300), || {
+            c.data.fill(0.0);
+            p.spmm_into(&x, &mut c);
+            std::hint::black_box(&c);
+        });
+        report(&mq);
+        table.row(vec![mq.name.clone(), format!("{:.3}", mq.median_ms()), gflops(&mq, useful)]);
         let mut cd = Matrix::zeros(t, o);
-        let md = bench(&format!("gemm-as-dense {pat}"), 300, || {
+        let md = bench(&format!("gemm-as-dense {pat}"), mrt(300), || {
             matmul_into(&x, &w, &mut cd);
             std::hint::black_box(&cd);
         });
@@ -82,10 +136,102 @@ fn main() {
                        gflops(&md, 2.0 * (t * k * o) as f64)]);
     }
 
+    // Paged attention over committed pool state, decode shape: 4
+    // sequences × 1 new token over a 128-token prefix. The f32 row is
+    // the zero-copy reference; each quantized dtype is measured twice —
+    // the scratch route (layer_views: dequantize all rows to fp32, then
+    // attend) vs the quantized-domain route (layer_code_views +
+    // kv::qattn: decode codes in register inside the kernels). The two
+    // produce bit-identical outputs (tests/qattn.rs); this measures the
+    // staging traffic they don't share.
+    {
+        let acfg = ModelConfig {
+            name: "attn-bench".into(),
+            arch: Arch::Gpt,
+            d_model: 128,
+            n_layer: 1,
+            n_head: 8,
+            d_ff: 128,
+            vocab: 256,
+            max_seq: 256,
+            eps: 1e-5,
+            rope_theta: 10000.0,
+            kv_dtype: KvDtype::F32,
+        };
+        let (n_seq, tokens) = (4usize, 128usize);
+        let (nh, dh, d) = (acfg.n_head, acfg.head_dim(), acfg.d_model);
+        let q = rand_matrix(n_seq, d, 19);
+        let attn_flops = (4 * n_seq * d * tokens) as f64;
+        fn seqs_from_f32<'a>(
+            views: Vec<(Vec<&'a [f32]>, Vec<&'a [f32]>)>,
+            bt: usize,
+            past: usize,
+        ) -> Vec<SeqKv<'a>> {
+            views
+                .into_iter()
+                .enumerate()
+                .map(|(i, (kk, vv))| SeqKv {
+                    q_row0: i,
+                    n_new: 1,
+                    past,
+                    segs: KvSegs::F32 { k: kk, v: vv },
+                    seg_tokens: bt,
+                })
+                .collect()
+        }
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let (pool, tables) = attn_fixture(&acfg, dtype, n_seq, tokens);
+            let tb_refs: Vec<&BlockTable> = tables.iter().collect();
+            let uptos = vec![tokens; n_seq];
+            let bt = pool.block_tokens();
+            let mut scratch = KvScratch::new();
+            let route = if dtype == KvDtype::F32 { "zero-copy" } else { "scratch" };
+            let m = bench(
+                &format!("attn-{route} {} {n_seq}x{tokens}", dtype.tag()),
+                mrt(200),
+                || {
+                    let views = pool.layer_views(&tb_refs, 0, &uptos, &mut scratch);
+                    let seqs = seqs_from_f32(views, bt, tokens - 1);
+                    let o = paged_attention(&q, &seqs, nh, dh, None);
+                    std::hint::black_box(&o);
+                },
+            );
+            report(&m);
+            table.row(vec![m.name.clone(), format!("{:.3}", m.median_ms()),
+                           gflops(&m, attn_flops)]);
+            if dtype == KvDtype::F32 {
+                continue;
+            }
+            let mq = bench(
+                &format!("attn-qdomain {} {n_seq}x{tokens}", dtype.tag()),
+                mrt(200),
+                || {
+                    let seqs: Vec<SeqKv> = pool
+                        .layer_code_views(&tb_refs, 0, &uptos)
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, (kk, vv))| SeqKv {
+                            q_row0: i,
+                            n_new: 1,
+                            past: tokens - 1,
+                            segs: KvSegs::Quant { dtype, k: kk, v: vv },
+                            seg_tokens: bt,
+                        })
+                        .collect();
+                    let o = paged_attention(&q, &seqs, nh, dh, None);
+                    std::hint::black_box(&o);
+                },
+            );
+            report(&mq);
+            table.row(vec![mq.name.clone(), format!("{:.3}", mq.median_ms()),
+                           gflops(&mq, attn_flops)]);
+        }
+    }
+
     // Dynamic activation quantization.
     for fmt in [NumFormat::Int(8), NumFormat::Fp4E2M1] {
         let mut x = rand_matrix(512, 384, 5);
-        let m = bench(&format!("act-quant {fmt} 512x384"), 200, || {
+        let m = bench(&format!("act-quant {fmt} 512x384"), mrt(200), || {
             fake_quant_dynamic_inplace(&mut x, fmt, 16);
             std::hint::black_box(&x);
         });
@@ -102,7 +248,7 @@ fn main() {
         if let sdq::sdq::config::Stages::Sdq { decompose, .. } = &mut cfg.stages {
             decompose.metric = sdq::sdq::config::DecompMetric::Magnitude;
         }
-        let m = bench(&format!("compress {cfg_str} 384x384"), 300, || {
+        let m = bench(&format!("compress {cfg_str} 384x384"), mrt(300), || {
             let c = compress_layer("l", &w, &cfg, None).unwrap();
             std::hint::black_box(&c);
         });
@@ -113,7 +259,7 @@ fn main() {
     // Simulated tensor core (pure model, should be ~ns).
     let spec = TensorCoreSpec::default();
     let cfg = "SDQ-W7:8-1:8int8-6:8fp4".parse().unwrap();
-    let m = bench("simtc 512x4096x4096", 100, || {
+    let m = bench("simtc 512x4096x4096", mrt(100), || {
         std::hint::black_box(spec.simulate(&cfg, 512, 4096, 4096));
     });
     report(&m);
@@ -121,4 +267,7 @@ fn main() {
 
     table.print();
     table.save_json("hotpath");
+    // Cross-PR trajectory record at the repo root (the CI
+    // bench-regression gate's input, like BENCH_serving.json).
+    let _ = std::fs::write("BENCH_hotpath.json", table.to_json().to_string());
 }

@@ -10,7 +10,11 @@
 //! quantized-KV rows (fp8-e4m3 / int8 blocks with per-block-per-layer
 //! scales) report their greedy-token divergence vs the f32 run and the
 //! compressed pool geometry — the same byte budget buys ~4× the blocks
-//! at int8, which the bench asserts (≥ 1.8× effective capacity).
+//! at int8, which the bench asserts (≥ 1.8× effective capacity). The
+//! `kv dequant / kv avoided KiB` columns report the pool's dequant
+//! traffic counters; the int8 rows assert the quantized-domain
+//! attention path left the scratch counter at exactly zero (every read
+//! decoded codes in register via `kv::qattn`).
 //!
 //! A **preemption arm** rides per config: an oversubscribed workload —
 //! more concurrent requests than worst-case reservation can admit at a
@@ -164,6 +168,8 @@ fn main() {
             "pool util",
             "prefix hit",
             "evict",
+            "kv dequant KiB",
+            "kv avoided KiB",
             "div vs f32",
             "spec drafted",
             "spec accepted",
@@ -284,6 +290,17 @@ fn main() {
                         batched.pool_budget_blocks,
                         f32_blocks
                     );
+                    // Quantized-domain acceptance: int8 decode must
+                    // never stage dequantized KV through scratch — every
+                    // read rides `layer_code_views` + `kv::qattn`.
+                    assert_eq!(
+                        batched.kv_dequant_bytes, 0,
+                        "int8 decode staged dequantized KV through scratch"
+                    );
+                    assert!(
+                        batched.kv_dequant_bytes_avoided > 0,
+                        "int8 decode reported no quantized-domain reads"
+                    );
                     if smoke {
                         // CI acceptance: on the synthetic model the
                         // int8-KV engine reproduces the f32 greedy
@@ -313,6 +330,8 @@ fn main() {
                     format!("{:.3}", batched.pool_utilization_peak),
                     format!("{:.2}", batched.prefix_hit_rate()),
                     batched.kv_evictions.to_string(),
+                    format!("{:.1}", batched.kv_dequant_bytes as f64 / 1024.0),
+                    format!("{:.1}", batched.kv_dequant_bytes_avoided as f64 / 1024.0),
                     divergence.to_string(),
                     "0".to_string(),
                     "0".to_string(),
@@ -390,6 +409,8 @@ fn main() {
                     format!("{:.3}", sm.pool_utilization_peak),
                     format!("{:.2}", sm.prefix_hit_rate()),
                     sm.kv_evictions.to_string(),
+                    format!("{:.1}", sm.kv_dequant_bytes as f64 / 1024.0),
+                    format!("{:.1}", sm.kv_dequant_bytes_avoided as f64 / 1024.0),
                     "0".to_string(),
                     sm.spec_drafted.to_string(),
                     sm.spec_accepted.to_string(),
@@ -510,6 +531,8 @@ fn main() {
                     format!("{:.3}", pre.pool_utilization_peak),
                     format!("{:.2}", pre.prefix_hit_rate()),
                     pre.kv_evictions.to_string(),
+                    format!("{:.1}", pre.kv_dequant_bytes as f64 / 1024.0),
+                    format!("{:.1}", pre.kv_dequant_bytes_avoided as f64 / 1024.0),
                     divergence.to_string(),
                     "0".to_string(),
                     "0".to_string(),

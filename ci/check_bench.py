@@ -17,17 +17,30 @@ gated, both with a relative tolerance (default ±25%):
   is a behavioral regression (an absolute floor of 0.02 absorbs
   rounding of the printed rate).
 
+A second gate covers the kernel microbenchmarks: `BENCH_hotpath.json`
+(from ``cargo bench --bench hotpath -- --smoke``) against
+``ci/bench_hotpath_baseline.json``. Hotpath rows key on the ``bench``
+name column and gate ``median ms`` one-sided — slower than baseline by
+more than the tolerance fails, faster never does. A ``null`` baseline
+median is record-only, exactly like a null serving throughput; arm it
+with ``--update`` from a trusted run. If the hotpath result file is
+absent (e.g. a serving-only invocation) the hotpath gate is skipped
+with a note rather than failing.
+
 Exit status is non-zero on any failure, which fails the CI job.
 
 Usage:
     python3 ci/check_bench.py [--current BENCH_serving.json]
                               [--baseline ci/bench_baseline.json]
+                              [--hotpath-current BENCH_hotpath.json]
+                              [--hotpath-baseline ci/bench_hotpath_baseline.json]
                               [--tolerance 0.25]
                               [--update]
 """
 
 import argparse
 import json
+import os
 import sys
 
 # "spec" distinguishes the speculative-decode rows (off | ngram |
@@ -67,26 +80,71 @@ def load_rows(path):
     return doc, rows
 
 
+def gate_hotpath(cur_rows, base_rows, tol, failures, notes):
+    """One-sided latency gate on the hotpath microbench table.
+
+    Rows key on the 'bench' name (shapes are identical in smoke and
+    full runs). A null baseline median is record-only.
+    """
+    current = {str(r.get("bench")): r for r in cur_rows}
+    for base in base_rows:
+        name = str(base.get("bench"))
+        cur = current.get(name)
+        if cur is None:
+            failures.append(f"[hotpath {name}] row missing from current results")
+            continue
+        base_ms = as_float(base.get("median ms"))
+        cur_ms = as_float(cur.get("median ms"))
+        if base_ms is None:
+            notes.append(
+                f"[hotpath {name}] latency baseline not yet recorded "
+                f"(current: {cur_ms} ms); run with --update on trusted hardware"
+            )
+        elif cur_ms is None:
+            failures.append(f"[hotpath {name}] current median missing/unparseable")
+        elif cur_ms > base_ms * (1.0 + tol):
+            failures.append(
+                f"[hotpath {name}] latency regressed: {cur_ms:.3f} ms > "
+                f"{base_ms:.3f} × (1 + {tol:.2f})"
+            )
+        else:
+            notes.append(
+                f"[hotpath {name}] latency ok: {cur_ms:.3f} ms "
+                f"(baseline {base_ms:.3f})"
+            )
+
+
+def refresh(current, baseline):
+    cur_doc, cur_rows = load_rows(current)
+    with open(baseline, "w") as f:
+        json.dump(cur_doc, f, indent=2, sort_keys=False)
+        f.write("\n")
+    print(f"baseline refreshed from {current} ({len(cur_rows)} rows)")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default="BENCH_serving.json")
     ap.add_argument("--baseline", default="ci/bench_baseline.json")
+    ap.add_argument("--hotpath-current", default="BENCH_hotpath.json")
+    ap.add_argument("--hotpath-baseline", default="ci/bench_hotpath_baseline.json")
     ap.add_argument("--tolerance", type=float, default=0.25)
     ap.add_argument(
         "--update",
         action="store_true",
-        help="rewrite the baseline from the current results instead of comparing",
+        help="rewrite the baselines from the current results instead of comparing",
     )
     args = ap.parse_args()
 
-    cur_doc, cur_rows = load_rows(args.current)
     if args.update:
-        with open(args.baseline, "w") as f:
-            json.dump(cur_doc, f, indent=2, sort_keys=False)
-            f.write("\n")
-        print(f"baseline refreshed from {args.current} ({len(cur_rows)} rows)")
+        refresh(args.current, args.baseline)
+        if os.path.exists(args.hotpath_current):
+            refresh(args.hotpath_current, args.hotpath_baseline)
+        else:
+            print(f"{args.hotpath_current} absent; hotpath baseline untouched")
         return 0
 
+    _, cur_rows = load_rows(args.current)
     _, base_rows = load_rows(args.baseline)
     current = {row_key(r): r for r in cur_rows}
     tol = args.tolerance
@@ -137,6 +195,18 @@ def main():
                     f"[{label}] prefix hit ok: {cur_hit} (baseline {base_hit})"
                 )
 
+    n_hotpath = 0
+    if os.path.exists(args.hotpath_current) and os.path.exists(args.hotpath_baseline):
+        _, hp_cur = load_rows(args.hotpath_current)
+        _, hp_base = load_rows(args.hotpath_baseline)
+        n_hotpath = len(hp_base)
+        gate_hotpath(hp_cur, hp_base, tol, failures, notes)
+    else:
+        notes.append(
+            f"hotpath gate skipped ({args.hotpath_current} or "
+            f"{args.hotpath_baseline} absent)"
+        )
+
     for n in notes:
         print("  " + n)
     if failures:
@@ -144,7 +214,10 @@ def main():
         for f_ in failures:
             print("  " + f_)
         return 1
-    print(f"\nbench regression gate passed ({len(base_rows)} baseline rows)")
+    print(
+        f"\nbench regression gate passed "
+        f"({len(base_rows)} serving + {n_hotpath} hotpath baseline rows)"
+    )
     return 0
 
 

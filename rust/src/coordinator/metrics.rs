@@ -141,6 +141,21 @@ pub struct Metrics {
     /// sequence whose cached middle blocks were LRU-evicted while it
     /// was swapped; quantized pools never re-prefill).
     pub resume_reprefill_tokens: u64,
+    /// f32 bytes a quantized pool staged through the [`KvScratch`]
+    /// dequant route ([`BlockPool::layer_views`]) — write-then-reread
+    /// traffic the quantized-domain attention path exists to avoid.
+    /// Always 0 for f32 pools (reads are zero-copy borrows).
+    ///
+    /// [`KvScratch`]: crate::kv::KvScratch
+    /// [`BlockPool::layer_views`]: crate::kv::BlockPool::layer_views
+    pub kv_dequant_bytes: u64,
+    /// f32 bytes the quantized-domain route
+    /// ([`BlockPool::layer_code_views`] + [`crate::kv::qattn`]) *would
+    /// have* staged had it gone through scratch — the dequant traffic
+    /// actually avoided by decoding codes in register.
+    ///
+    /// [`BlockPool::layer_code_views`]: crate::kv::BlockPool::layer_code_views
+    pub kv_dequant_bytes_avoided: u64,
     pub ttft: Histogram,
     pub total_latency: Histogram,
     /// Wall time the engine spent serving (for throughput).
@@ -236,6 +251,20 @@ impl Metrics {
         self.resume_reprefill_tokens as f64 / self.resumes as f64
     }
 
+    /// Fraction of would-be KV dequant traffic served in the quantized
+    /// domain instead: `avoided / (staged + avoided)`. `1.0` when every
+    /// quantized read went through [`crate::kv::qattn`]; `0.0` both for
+    /// f32 pools (nothing to avoid) and before any read — deliberately
+    /// not NaN, same `BENCH_serving.json` contract as
+    /// [`Self::prefix_hit_rate`].
+    pub fn kv_dequant_avoided_rate(&self) -> f64 {
+        let total = self.kv_dequant_bytes + self.kv_dequant_bytes_avoided;
+        if total == 0 {
+            return 0.0;
+        }
+        self.kv_dequant_bytes_avoided as f64 / total as f64
+    }
+
     /// Mean decode GEMM row width (weight-stream amortization factor).
     pub fn mean_decode_width(&self) -> f64 {
         if self.decode_batches == 0 {
@@ -297,6 +326,7 @@ impl Metrics {
             "requests={} tokens={} tput={:.1} tok/s decode={:.1} tok/s \
              width_mean={:.2} width_max={} prefill_width_mean={:.2} \
              kv_peak={:.1}KiB pool_util_peak={:.2} prefix_hit={:.2} \
+             dequant={:.1}KiB dequant_avoided={:.1}KiB \
              evictions={} preempt={} resumes={} swap={:.1}KiB reprefill={} \
              spec={} accept={:.2} tok/round={:.2} \
              ttft_mean={:.1}ms ttft_p99={:.1}ms total_mean={:.1}ms",
@@ -310,6 +340,8 @@ impl Metrics {
             self.kv_bytes_peak as f64 / 1024.0,
             self.pool_utilization_peak,
             self.prefix_hit_rate(),
+            self.kv_dequant_bytes as f64 / 1024.0,
+            self.kv_dequant_bytes_avoided as f64 / 1024.0,
             self.kv_evictions,
             self.preemptions,
             self.resumes,
@@ -435,6 +467,7 @@ mod tests {
             ("preemption_rate", m.preemption_rate()),
             ("resume_reprefill_rate", m.resume_reprefill_rate()),
             ("pool_utilization_peak", m.pool_utilization_peak),
+            ("kv_dequant_avoided_rate", m.kv_dequant_avoided_rate()),
         ]
     }
 
@@ -461,6 +494,22 @@ mod tests {
                 "{name}: did not roundtrip through JSON"
             );
         }
+    }
+
+    #[test]
+    fn dequant_counters_and_rate() {
+        let mut m = Metrics::default();
+        assert_eq!(m.kv_dequant_avoided_rate(), 0.0, "cold rate is 0.0, never NaN");
+        // Quantized-domain rounds only: everything avoided.
+        m.kv_dequant_bytes_avoided = 4096;
+        assert!((m.kv_dequant_avoided_rate() - 1.0).abs() < 1e-9);
+        // A scratch-route fill (e.g. the property test's reference arm)
+        // shifts the ratio.
+        m.kv_dequant_bytes = 4096;
+        assert!((m.kv_dequant_avoided_rate() - 0.5).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("dequant=4.0KiB"), "summary must surface dequant traffic: {s}");
+        assert!(s.contains("dequant_avoided=4.0KiB"));
     }
 
     #[test]

@@ -82,7 +82,7 @@ use std::time::Instant;
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::request::{InFlight, Request, Response};
-use crate::kv::{BlockPool, BlockTable, KvDtype, Snapshot};
+use crate::kv::{BlockPool, BlockTable, KvDtype, KvScratch, Snapshot};
 use crate::model::generate::KvCache;
 use crate::model::{Model, ModelConfig};
 use crate::spec::SpecPolicy;
@@ -124,6 +124,11 @@ pub struct Scheduler<'m> {
     /// new admission (no starvation of mid-flight work).
     swapped: VecDeque<Swapped>,
     pool: BlockPool,
+    /// Dequant staging arena shared by every paged forward this
+    /// scheduler issues — buffers are grown once and reused across
+    /// rounds, so steady-state decode does no per-round allocation
+    /// (pinned by [`KvScratch::alloc_events`] in `tests/qattn.rs`).
+    scratch: KvScratch,
     /// Speculative decode policy (paged mode only): draft → fused
     /// verify → accept/rollback per round. `None` = plain decode.
     spec: Option<SpecPolicy>,
@@ -175,6 +180,7 @@ impl<'m> Scheduler<'m> {
             active: Vec::new(),
             swapped: VecDeque::new(),
             pool,
+            scratch: KvScratch::new(),
             spec,
             round_idx: 0,
             arrival_seq: 0,
@@ -281,7 +287,12 @@ impl<'m> Scheduler<'m> {
                 // are verbatim and kernels row-independent, so the
                 // rebuilt KV is bit-identical to what was swapped out.
                 let missing = &snap.tokens()[ready..];
-                let _ = model.forward_paged(&[missing], &mut self.pool, &mut [&mut tb]);
+                let _ = model.forward_paged_in(
+                    &[missing],
+                    &mut self.pool,
+                    &mut [&mut tb],
+                    &mut self.scratch,
+                );
                 self.metrics.resume_reprefill_tokens += missing.len() as u64;
             }
             debug_assert_eq!(tb.len(), snap.len(), "resume rebuilt the wrong length");
@@ -462,7 +473,12 @@ impl<'m> Scheduler<'m> {
                 let logits = {
                     let tok_slices: Vec<&[u8]> = suffixes.iter().map(|s| s.as_slice()).collect();
                     let mut tb_refs: Vec<&mut BlockTable> = tables.iter_mut().collect();
-                    model.forward_paged(&tok_slices, &mut self.pool, &mut tb_refs)
+                    model.forward_paged_in(
+                        &tok_slices,
+                        &mut self.pool,
+                        &mut tb_refs,
+                        &mut self.scratch,
+                    )
                 };
                 for (i, f) in admitted.iter_mut().enumerate() {
                     let tok = model.sample_row(&logits, i, f.req.temperature, &mut f.rng);
@@ -474,10 +490,11 @@ impl<'m> Scheduler<'m> {
                 // Per-prompt prefill baseline (A/B lever): same paged
                 // machinery, weights re-streamed per prompt.
                 for (i, f) in admitted.iter_mut().enumerate() {
-                    let logits = model.forward_paged(
+                    let logits = model.forward_paged_in(
                         &[suffixes[i].as_slice()],
                         &mut self.pool,
                         &mut [&mut tables[i]],
+                        &mut self.scratch,
                     );
                     let tok = model.sample_row(&logits, 0, f.req.temperature, &mut f.rng);
                     f.generated.push(tok);
@@ -529,6 +546,8 @@ impl<'m> Scheduler<'m> {
         let resident = self.kv_bytes_in_use();
         self.metrics.kv_bytes_peak = self.metrics.kv_bytes_peak.max(resident);
         self.metrics.sync_pool(&self.pool.stats, self.pool.utilization());
+        self.metrics.kv_dequant_bytes = self.pool.dequant_bytes();
+        self.metrics.kv_dequant_bytes_avoided = self.pool.dequant_bytes_avoided();
 
         // ---- retire completed ----
         let mut done = Vec::new();
@@ -598,9 +617,10 @@ impl<'m> Scheduler<'m> {
         let model = self.model;
         let logits = {
             let pool = &mut self.pool;
+            let scratch = &mut self.scratch;
             let tok_slices: Vec<&[u8]> = last.iter().map(std::slice::from_ref).collect();
             with_tables(&mut self.active, decode_idx, |tbs| {
-                model.forward_paged(&tok_slices, pool, tbs)
+                model.forward_paged_in(&tok_slices, pool, tbs, scratch)
             })
         };
         for (row, &i) in decode_idx.iter().enumerate() {
@@ -646,9 +666,10 @@ impl<'m> Scheduler<'m> {
             .collect();
         let (logits, offs) = {
             let pool = &mut self.pool;
+            let scratch = &mut self.scratch;
             let tok_slices: Vec<&[u8]> = new_tokens.iter().map(|t| t.as_slice()).collect();
             with_tables(&mut self.active, decode_idx, |tbs| {
-                model.forward_paged_spec(&tok_slices, pool, tbs)
+                model.forward_paged_spec_in(&tok_slices, pool, tbs, scratch)
             })
         };
         for (j, &i) in decode_idx.iter().enumerate() {
@@ -697,9 +718,10 @@ impl<'m> Scheduler<'m> {
                 .collect();
             let logits = {
                 let pool = &mut self.pool;
+                let scratch = &mut self.scratch;
                 let tok_slices: Vec<&[u8]> = toks.iter().map(std::slice::from_ref).collect();
                 with_tables(&mut self.active, &idxs, |tbs| {
-                    model.forward_paged(&tok_slices, pool, tbs)
+                    model.forward_paged_in(&tok_slices, pool, tbs, scratch)
                 })
             };
             let mut next = Vec::with_capacity(cur.len());

@@ -75,13 +75,19 @@
 //! compressed size, so an int8 pool admits ~4× the blocks at the same
 //! byte budget.
 //!
-//! The model reads K/V through tables with [`BlockPool::layer_views`]:
-//! per layer, a list of borrowed per-block row slices per sequence
-//! (gather-free — attention walks segments in place, exactly like the
-//! contiguous borrow it used before). F32 pools borrow straight from
-//! block storage; quantized pools dequantize into a caller-owned
-//! [`KvScratch`] arena first and borrow from there — the segment shapes
-//! are identical either way, so attention is dtype-blind.
+//! The model reads K/V through tables along two routes:
+//!
+//! * [`BlockPool::layer_views`] — per layer, a list of borrowed
+//!   per-block fp32 row slices per sequence (gather-free — attention
+//!   walks segments in place). F32 pools borrow straight from block
+//!   storage (zero-copy); quantized pools dequantize into a
+//!   caller-owned [`KvScratch`] arena first and borrow from there.
+//! * [`BlockPool::layer_code_views`] — the **quantized-domain** hot
+//!   path: per-block [`QuantSeg`]s (raw code bytes + the layer's decode
+//!   scale) that the [`qattn`] kernels decode *in register*, inside the
+//!   Q·K dot and score·V accumulation. No scratch staging, bit-identical
+//!   results (see [`qattn`]'s module docs); the traffic saved vs the
+//!   scratch route is accounted in [`BlockPool::dequant_bytes_avoided`].
 
 //! **Truncation & speculative rollback.** [`BlockPool::truncate`] cuts
 //! a sequence back to `n` committed tokens, releasing the dropped
@@ -114,10 +120,12 @@
 //! hold.
 
 pub mod pool;
+pub mod qattn;
 pub mod store;
 pub mod table;
 
 pub use pool::{BlockPool, PoolStats, Snapshot, SpecCheckpoint};
+pub use qattn::QuantSeg;
 pub use store::{fp8_e4m3_decode, fp8_e4m3_encode, KvDtype, KvScratch};
 pub use table::BlockTable;
 

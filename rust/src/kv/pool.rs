@@ -3,7 +3,9 @@
 //! storage (see module docs in [`super`]).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
+use super::qattn::QuantSeg;
 use super::store::{KvDtype, KvScratch, KvStore};
 use super::table::BlockTable;
 use super::NO_PARENT;
@@ -198,6 +200,16 @@ pub struct BlockPool {
     index: HashMap<BlockKey, usize>,
     tick: u64,
     pub stats: PoolStats,
+    /// fp32 bytes materialized into [`KvScratch`] by the dequantize
+    /// read path ([`Self::layer_views`] on a quantized pool). Atomic
+    /// because views are taken through `&self`; `PoolStats` stays a
+    /// plain `Copy` snapshot.
+    dequant_bytes: AtomicU64,
+    /// fp32 bytes the quantized-domain read path
+    /// ([`Self::layer_code_views`]) did *not* materialize — the same
+    /// accounting unit as `dequant_bytes`, so the two are directly
+    /// comparable per round.
+    dequant_bytes_avoided: AtomicU64,
 }
 
 impl BlockPool {
@@ -241,6 +253,8 @@ impl BlockPool {
             index: HashMap::new(),
             tick: 0,
             stats: PoolStats::default(),
+            dequant_bytes: AtomicU64::new(0),
+            dequant_bytes_avoided: AtomicU64::new(0),
         }
     }
 
@@ -315,6 +329,17 @@ impl BlockPool {
     /// Residency as a fraction of the admission budget.
     pub fn utilization(&self) -> f64 {
         self.blocks_in_use() as f64 / self.budget_blocks as f64
+    }
+
+    /// fp32 bytes dequantized into scratch so far (see the field docs).
+    pub fn dequant_bytes(&self) -> u64 {
+        self.dequant_bytes.load(Ordering::Relaxed)
+    }
+
+    /// fp32 bytes of scratch traffic the quantized-domain read path
+    /// avoided so far (see the field docs).
+    pub fn dequant_bytes_avoided(&self) -> u64 {
+        self.dequant_bytes_avoided.load(Ordering::Relaxed)
     }
 
     /// Cached blocks reclaimable on demand (frozen, unreferenced).
@@ -908,6 +933,8 @@ impl BlockPool {
         let mut bufs: Vec<Option<(usize, usize)>> = Vec::with_capacity(tables.len());
         if self.dtype != KvDtype::F32 {
             for (t, &upto) in tables.iter().zip(uptos) {
+                // K + V, `upto × d` f32 each, staged then re-read.
+                self.dequant_bytes.fetch_add((2 * upto * d * 4) as u64, Ordering::Relaxed);
                 let ki = scratch.take(upto * d);
                 let vi = scratch.take(upto * d);
                 for bi in 0..upto.div_ceil(bt) {
@@ -956,6 +983,46 @@ impl BlockPool {
                             vs.push(&scr.buf(vi)[base..base + rows * d]);
                         }
                     }
+                }
+                (ks, vs)
+            })
+            .collect()
+    }
+
+    /// Borrowed K/V *code* segments for layer `li` across `tables` —
+    /// the quantized-domain counterpart of [`Self::layer_views`]
+    /// (same per-block segment walk, same `uptos` semantics), for
+    /// quantized pools only. Each block contributes one [`QuantSeg`]
+    /// per side: its raw byte slab plus the layer's effective decode
+    /// scale. Attention decodes in register via [`super::qattn`]
+    /// instead of staging fp32 copies in scratch — the traffic saved is
+    /// accounted in [`Self::dequant_bytes_avoided`] in the same units
+    /// [`Self::dequant_bytes`] would have charged the scratch route.
+    pub fn layer_code_views<'a>(
+        &'a self,
+        tables: &[&BlockTable],
+        li: usize,
+        uptos: &[usize],
+    ) -> Vec<(Vec<QuantSeg<'a>>, Vec<QuantSeg<'a>>)> {
+        assert_eq!(tables.len(), uptos.len(), "one upto per table");
+        assert_ne!(self.dtype, KvDtype::F32, "f32 pools read zero-copy via layer_views");
+        let (d, bt) = (self.d, self.block_tokens);
+        tables
+            .iter()
+            .zip(uptos)
+            .map(|(t, &upto)| {
+                self.dequant_bytes_avoided
+                    .fetch_add((2 * upto * d * 4) as u64, Ordering::Relaxed);
+                let nb = upto.div_ceil(bt);
+                debug_assert!(nb <= t.blocks.len(), "view past prepared blocks");
+                let mut ks = Vec::with_capacity(nb);
+                let mut vs = Vec::with_capacity(nb);
+                for bi in 0..nb {
+                    let rows = (upto - bi * bt).min(bt);
+                    let store = &self.blocks[t.blocks[bi]].store;
+                    let (kc, vc, kscale, vscale) = store.code_slices(li, rows, bt, d);
+                    ks.push(QuantSeg { codes: kc, scale: kscale });
+                    vs.push(QuantSeg { codes: vc, scale: vscale });
                 }
                 (ks, vs)
             })
@@ -1063,6 +1130,37 @@ mod tests {
                     }
                 }
             }
+            p.release(t);
+        }
+    }
+
+    #[test]
+    fn code_views_match_scratch_views_bitwise() {
+        for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let mut p = pool_dt(8, dtype);
+            let mut t = BlockTable::new(64);
+            run_tokens(&mut p, &mut t, &[1, 2, 3, 4, 5, 6]); // 2 blocks (4 + 2)
+            assert_eq!(p.dequant_bytes(), 0);
+            assert_eq!(p.dequant_bytes_avoided(), 0);
+            let mut scr = KvScratch::new();
+            for li in 0..2 {
+                let (ks, vs) = p.layer_view(&t, li, 6, &mut scr);
+                let mut code_views = p.layer_code_views(&[&t], li, &[6]);
+                let (kq, vq) = code_views.pop().unwrap();
+                assert_eq!(kq.len(), ks.len());
+                for ((seg, f32s), side) in
+                    kq.iter().zip(&ks).map(|p| (p, "k")).chain(vq.iter().zip(&vs).map(|p| (p, "v")))
+                {
+                    assert_eq!(seg.codes.len(), f32s.len(), "{dtype:?} {side}");
+                    for (&b, &want) in seg.codes.iter().zip(*f32s) {
+                        let got = crate::kv::qattn::raw_decode(dtype, b) * seg.scale;
+                        assert_eq!(got.to_bits(), want.to_bits(), "{dtype:?} {side}");
+                    }
+                }
+            }
+            // Both paths covered 6 tokens × d=8 × 4 bytes × K+V × 2 layers.
+            assert_eq!(p.dequant_bytes(), 2 * 2 * 6 * 8 * 4);
+            assert_eq!(p.dequant_bytes_avoided(), 2 * 2 * 6 * 8 * 4);
             p.release(t);
         }
     }

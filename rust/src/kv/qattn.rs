@@ -1,0 +1,278 @@
+//! Quantized-domain attention kernels: compute over raw KV codes.
+//!
+//! The scratch route ([`super::BlockPool::layer_views`]) services a
+//! quantized pool by dequantizing every resident block's K/V rows into
+//! an fp32 [`super::KvScratch`] arena each layer, then attending over
+//! the borrowed fp32 segments. At int8's 4× residency that staging copy
+//! — write `rows × d` floats, read them straight back — is pure memory
+//! traffic: the decode itself is one multiply per element.
+//!
+//! This module is the fused alternative ([`super::BlockPool::
+//! layer_code_views`] hands out [`QuantSeg`]s): attention streams the
+//! 1-byte codes directly and decodes **in register**, inside the dot /
+//! accumulate loops, with the block's per-layer scale applied per
+//! element. No scratch write, no fp32 re-read — the win the pool's
+//! `dequant_bytes_avoided` counter measures.
+//!
+//! # Bit-exactness
+//!
+//! These kernels are bit-identical to dequantize-then-attend for *both*
+//! quantized dtypes, which is what lets the serving path switch over
+//! without disturbing any pinned logits:
+//!
+//! * each element decodes as `fl(raw(code) · scale)` — exactly the op
+//!   `KvStore::dequant_into` applies (int8: `code as f32`, exact; fp8:
+//!   a 256-entry table of the pure [`super::fp8_e4m3_decode`]);
+//! * [`dot_head`] then replays [`crate::tensor::dot`]'s exact
+//!   schedule (32-lane accumulator array, pairwise tree reduction,
+//!   scalar tail) over the decoded values, and [`axpy_head`] replays
+//!   attention's elementwise `out += w · v`.
+//!
+//! Same inputs, same ops, same order ⇒ same f32 bits. The property
+//! tests in `tests/qattn.rs` pin this against the scratch route under
+//! random block boundaries, amax growth, COW forks and truncation.
+//!
+//! The issue's `score_blk = scale_k · Σ q·code` factoring (hoisting the
+//! scale out of the partial dot) is mathematically equal for int8 but
+//! *not* bit-equal under f32 rounding; decoding in register keeps the
+//! fusion win while staying on the dequantize path's exact bit pattern.
+
+use std::sync::OnceLock;
+
+use super::store::{fp8_e4m3_decode, KvDtype};
+
+/// One block's worth of raw K or V codes for one layer, plus the
+/// effective decode scale (`amax / code_max`). `codes` is `rows × d`
+/// bytes, row-major, exactly the slab layout `KvStore` keeps.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantSeg<'a> {
+    pub codes: &'a [u8],
+    pub scale: f32,
+}
+
+/// 256-entry decode table for fp8-e4m3 codes. [`fp8_e4m3_decode`] is a
+/// pure function of the byte, so a table lookup is bit-identical to
+/// calling it — it just drops the per-element branch chain.
+fn fp8_lut() -> &'static [f32; 256] {
+    static LUT: OnceLock<[f32; 256]> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0.0f32; 256];
+        for (b, slot) in t.iter_mut().enumerate() {
+            *slot = fp8_e4m3_decode(b as u8);
+        }
+        t
+    })
+}
+
+/// Decode one raw code byte (scale not yet applied).
+#[inline]
+pub fn raw_decode(dtype: KvDtype, b: u8) -> f32 {
+    match dtype {
+        KvDtype::Int8 => (b as i8) as f32,
+        KvDtype::Fp8E4M3 => fp8_lut()[b as usize],
+        KvDtype::F32 => unreachable!("f32 pools read zero-copy, not via codes"),
+    }
+}
+
+/// Dot product of an fp32 query head slice against a quantized K head
+/// slice, decoding in register. Bit-identical to
+/// `dot(q, dequantized_k_row)` — see the module docs.
+#[inline]
+pub fn dot_head(q: &[f32], codes: &[u8], scale: f32, dtype: KvDtype) -> f32 {
+    match dtype {
+        KvDtype::Int8 => dot_head_raw(q, codes, scale, |b| (b as i8) as f32),
+        KvDtype::Fp8E4M3 => {
+            let lut = fp8_lut();
+            dot_head_raw(q, codes, scale, |b| lut[b as usize])
+        }
+        KvDtype::F32 => unreachable!("f32 pools read zero-copy, not via codes"),
+    }
+}
+
+/// The [`crate::tensor::dot`] schedule — 32 independent
+/// accumulators, pairwise tree reduction, scalar tail — replayed over
+/// `fl(raw(code) · scale)` elements. Any change here must stay in
+/// lockstep with `dot` or the bit-exactness pins break.
+#[inline]
+fn dot_head_raw(x: &[f32], codes: &[u8], scale: f32, raw: impl Fn(u8) -> f32) -> f32 {
+    debug_assert_eq!(x.len(), codes.len());
+    let n = x.len();
+    const W: usize = 32;
+    let mut acc = [0.0f32; W];
+    let chunks = n / W;
+    for i in 0..chunks {
+        let xi = &x[i * W..i * W + W];
+        let yi = &codes[i * W..i * W + W];
+        for l in 0..W {
+            acc[l] += xi[l] * (raw(yi[l]) * scale);
+        }
+    }
+    let mut width = W / 2;
+    while width > 0 {
+        for l in 0..width {
+            acc[l] += acc[l + width];
+        }
+        width /= 2;
+    }
+    let mut s = acc[0];
+    for i in chunks * W..n {
+        s += x[i] * (raw(codes[i]) * scale);
+    }
+    s
+}
+
+/// `out[l] += w · decode(codes[l])` — the score·V accumulation with the
+/// V decode fused in. Bit-identical to the fp32 path's
+/// `out += w · v_row` over a dequantized row.
+#[inline]
+pub fn axpy_head(out: &mut [f32], w: f32, codes: &[u8], scale: f32, dtype: KvDtype) {
+    match dtype {
+        KvDtype::Int8 => {
+            for (o, &b) in out.iter_mut().zip(codes) {
+                *o += w * ((b as i8) as f32 * scale);
+            }
+        }
+        KvDtype::Fp8E4M3 => {
+            let lut = fp8_lut();
+            for (o, &b) in out.iter_mut().zip(codes) {
+                *o += w * (lut[b as usize] * scale);
+            }
+        }
+        KvDtype::F32 => unreachable!("f32 pools read zero-copy, not via codes"),
+    }
+}
+
+/// Decode a head slice into `dst` (`dst[l] = decode(codes[l])`) — used
+/// to fill the per-head K panel that RoPE rotates in place. Same
+/// per-element op as `KvStore::dequant_into`, so the panel holds the
+/// same bits the scratch route would have copied in.
+#[inline]
+pub fn decode_head_into(dst: &mut [f32], codes: &[u8], scale: f32, dtype: KvDtype) {
+    debug_assert_eq!(dst.len(), codes.len());
+    match dtype {
+        KvDtype::Int8 => {
+            for (o, &b) in dst.iter_mut().zip(codes) {
+                *o = (b as i8) as f32 * scale;
+            }
+        }
+        KvDtype::Fp8E4M3 => {
+            let lut = fp8_lut();
+            for (o, &b) in dst.iter_mut().zip(codes) {
+                *o = lut[b as usize] * scale;
+            }
+        }
+        KvDtype::F32 => unreachable!("f32 pools read zero-copy, not via codes"),
+    }
+}
+
+/// Head-column slice of a quantized row: the code analogue of the fp32
+/// path's `seg_head`. `r` is the absolute row over the concatenated
+/// segments (`seg_tokens` rows per segment), `col0..col0+dh` the head
+/// columns.
+#[inline]
+pub fn seg_head_codes<'a>(
+    segs: &[QuantSeg<'a>],
+    seg_tokens: usize,
+    d: usize,
+    col0: usize,
+    dh: usize,
+    r: usize,
+) -> (&'a [u8], f32) {
+    let seg = &segs[r / seg_tokens];
+    (&seg.codes[(r % seg_tokens) * d + col0..][..dh], seg.scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dot;
+
+    fn codes_and_floats(dtype: KvDtype, n: usize, seed: u64) -> (Vec<u8>, Vec<f32>, f32) {
+        let mut s = seed;
+        let mut next = move || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+            (s >> 33) as u32
+        };
+        let scale = 0.0173f32;
+        let codes: Vec<u8> = (0..n)
+            .map(|_| {
+                let b: i32 = match dtype {
+                    KvDtype::Int8 => (next() % 255) as i32 - 127,
+                    _ => {
+                        // Any non-NaN fp8 byte pattern.
+                        let mut b = (next() % 256) as i32;
+                        if b & 0x7f == 0x7f {
+                            b &= !0x08;
+                        }
+                        b
+                    }
+                };
+                b as u8
+            })
+            .collect();
+        let deq: Vec<f32> = codes.iter().map(|&b| raw_decode(dtype, b) * scale).collect();
+        (codes, deq, scale)
+    }
+
+    #[test]
+    fn fp8_lut_matches_decoder() {
+        for b in 0..=255u8 {
+            assert_eq!(fp8_lut()[b as usize].to_bits(), fp8_e4m3_decode(b).to_bits());
+        }
+    }
+
+    #[test]
+    fn dot_head_bit_matches_dequant_then_dot() {
+        for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+            // 67 exercises two 32-lane chunks plus the scalar tail.
+            for n in [8usize, 32, 67] {
+                let (codes, deq, scale) = codes_and_floats(dtype, n, 7 + n as u64);
+                let q: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+                let fused = dot_head(&q, &codes, scale, dtype);
+                let reference = dot(&q, &deq);
+                assert_eq!(fused.to_bits(), reference.to_bits(), "{dtype:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_head_bit_matches_dequant_then_axpy() {
+        for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let n = 24;
+            let (codes, deq, scale) = codes_and_floats(dtype, n, 99);
+            let mut fused: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
+            let mut reference = fused.clone();
+            axpy_head(&mut fused, 0.625, &codes, scale, dtype);
+            for (o, &v) in reference.iter_mut().zip(&deq) {
+                *o += 0.625 * v;
+            }
+            for (a, b) in fused.iter().zip(&reference) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_head_matches_reference() {
+        for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let (codes, deq, scale) = codes_and_floats(dtype, 16, 5);
+            let mut dst = vec![0.0f32; 16];
+            decode_head_into(&mut dst, &codes, scale, dtype);
+            for (a, b) in dst.iter().zip(&deq) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn seg_head_codes_walks_segments() {
+        let (d, st, dh) = (4, 2, 2);
+        let a: Vec<u8> = (0..st * d).map(|i| i as u8).collect();
+        let b: Vec<u8> = (0..st * d).map(|i| 100 + i as u8).collect();
+        let segs =
+            [QuantSeg { codes: &a, scale: 1.0 }, QuantSeg { codes: &b, scale: 2.0 }];
+        let (head, sc) = seg_head_codes(&segs, st, d, 2, dh, 3);
+        assert_eq!(head, &[106, 107]);
+        assert_eq!(sc, 2.0);
+    }
+}

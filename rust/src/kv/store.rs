@@ -70,7 +70,7 @@ impl KvDtype {
 
     /// Largest code magnitude of the storage grid — the scale anchor
     /// (`scale = amax / code_max`).
-    fn code_max(self) -> f32 {
+    pub(crate) fn code_max(self) -> f32 {
         match self {
             KvDtype::F32 => unreachable!("f32 blocks are not scaled"),
             KvDtype::Fp8E4M3 => 448.0,
@@ -279,6 +279,30 @@ impl KvStore {
         }
     }
 
+    /// Borrowed *code* slices for layer `li` (`rows × d` raw bytes each)
+    /// plus the layer's effective K and V scales — the quantized-domain
+    /// read path ([`super::qattn`]): attention decodes elements in
+    /// register (`code · scale`, the exact op [`Self::dequant_into`]
+    /// applies) instead of staging an fp32 copy in scratch. Q8 stores
+    /// only.
+    pub fn code_slices(
+        &self,
+        li: usize,
+        rows: usize,
+        bt: usize,
+        d: usize,
+    ) -> (&[u8], &[u8], f32, f32) {
+        match self {
+            KvStore::F32 { .. } => unreachable!("f32 blocks read zero-copy via f32_slices"),
+            KvStore::Q8 { dtype, k, v, k_amax, v_amax } => {
+                let base = li * bt * d;
+                let ks = k_amax[li] / dtype.code_max();
+                let vs = v_amax[li] / dtype.code_max();
+                (&k[base..base + rows * d], &v[base..base + rows * d], ks, vs)
+            }
+        }
+    }
+
     /// Dequantize the first `rows` rows of layer `li` into `k_out` /
     /// `v_out` (each `rows × d`).
     pub fn dequant_into(
@@ -344,11 +368,22 @@ fn write_side(dtype: KvDtype, slab: &mut [u8], amax: &mut f32, row: usize, d: us
 pub struct KvScratch {
     bufs: Vec<Vec<f32>>,
     used: usize,
+    /// Heap-allocation events (new buffer pushed, or an existing buffer
+    /// regrown past its capacity). A warm scratch reused across rounds
+    /// of the same shape must not advance this — the no-per-round-
+    /// allocation tests pin that.
+    allocs: u64,
 }
 
 impl KvScratch {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Allocation events so far (see the field doc). Monotonic; never
+    /// reset so tests can difference across rounds.
+    pub fn alloc_events(&self) -> u64 {
+        self.allocs
     }
 
     pub(crate) fn reset(&mut self) {
@@ -363,10 +398,14 @@ impl KvScratch {
     pub(crate) fn take(&mut self, len: usize) -> usize {
         if self.used == self.bufs.len() {
             self.bufs.push(Vec::with_capacity(len));
+            self.allocs += 1;
         }
         let i = self.used;
         self.used += 1;
         let b = &mut self.bufs[i];
+        if b.capacity() < len {
+            self.allocs += 1;
+        }
         b.resize(len, 0.0);
         i
     }
@@ -469,6 +508,52 @@ mod tests {
         // after reset they round-trip within fp8 relative error.
         assert!((k[0] - 0.01).abs() < 0.01 * 0.07, "stale scale survived reset: {}", k[0]);
         assert!((k[1] - 0.02).abs() < 0.02 * 0.07);
+    }
+
+    #[test]
+    fn scratch_reuses_capacity_across_rounds() {
+        let mut s = KvScratch::new();
+        // Cold round: allocations expected.
+        s.reset();
+        assert_eq!(s.take(64), 0);
+        assert_eq!(s.take(128), 1);
+        assert!(s.alloc_events() > 0);
+        let warm = s.alloc_events();
+        // Warm rounds of the same shape: zero new allocations.
+        for _ in 0..10 {
+            s.reset();
+            s.take(64);
+            s.take(128);
+        }
+        assert_eq!(s.alloc_events(), warm, "warm rounds must not allocate");
+        // Growing a buffer past capacity is an allocation event again.
+        s.reset();
+        s.take(256);
+        assert!(s.alloc_events() > warm);
+    }
+
+    #[test]
+    fn code_slices_match_dequant_into() {
+        let (bt, d) = (4, 8);
+        let mut s = KvStore::new(KvDtype::Int8, 2, bt, d);
+        for r in 0..3 {
+            let row: Vec<f32> = (0..d).map(|i| ((r * d + i) as f32).sin() * 2.0).collect();
+            for li in 0..2 {
+                s.write_row(li, r, bt, d, &row, &row);
+            }
+        }
+        for li in 0..2 {
+            let (kc, vc, ks, vs) = s.code_slices(li, 3, bt, d);
+            let mut k = vec![0.0; 3 * d];
+            let mut v = vec![0.0; 3 * d];
+            s.dequant_into(li, 3, bt, d, &mut k, &mut v);
+            for (i, (&b, &want)) in kc.iter().zip(&k).enumerate() {
+                assert_eq!((b as i8) as f32 * ks, want, "k elem {i}");
+            }
+            for (i, (&b, &want)) in vc.iter().zip(&v).enumerate() {
+                assert_eq!((b as i8) as f32 * vs, want, "v elem {i}");
+            }
+        }
     }
 
     #[test]

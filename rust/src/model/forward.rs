@@ -4,6 +4,8 @@
 use super::ops::*;
 use super::{Arch, Model};
 use crate::data::embed;
+use crate::kv::qattn::{self, QuantSeg};
+use crate::kv::KvDtype;
 use crate::sdq::calib::CalibStats;
 use crate::tensor::{dot, matmul, matmul_nn, Matrix};
 
@@ -20,25 +22,52 @@ fn obs(calib: &mut Option<&mut CalibStats>, key: &str, x: &Matrix) {
 /// lengths across a batch are the point — this is the unit of
 /// raggedness in [`Model::attention_kv`].
 ///
-/// K/V rows arrive as **segments**: contiguous `[rows * d]` slices of
-/// `seg_tokens` rows each (the last may be short). The chunked
-/// [`super::generate::KvCache`] contributes one flat segment; the paged
-/// [`crate::kv::BlockPool`] contributes one segment per block — borrowed
-/// straight from fp32 block storage, or from the per-forward
-/// [`crate::kv::KvScratch`] arena when the pool stores blocks quantized
-/// (fp8/int8) and dequantizes on read. Either way the segment shapes are
-/// identical and attention walks rows in place, gather-free and
-/// dtype-blind.
-pub(crate) struct SeqKv<'a> {
+/// K/V rows arrive as **segments**: contiguous `rows × d` spans of
+/// `seg_tokens` rows each (the last may be short), in one of two
+/// representations ([`KvSegs`]). The chunked
+/// [`super::generate::KvCache`] contributes one flat fp32 segment; the
+/// paged [`crate::kv::BlockPool`] contributes one segment per block —
+/// fp32 slices borrowed straight from block storage for f32 pools, or
+/// raw code segments ([`QuantSeg`]) for quantized pools, which the
+/// [`qattn`] kernels decode in register. Either way the segment
+/// geometry is identical and attention walks rows in place,
+/// gather-free.
+pub struct SeqKv<'a> {
     pub q_row0: usize,
     pub n_new: usize,
     pub past: usize,
-    pub k: Vec<&'a [f32]>,
-    pub v: Vec<&'a [f32]>,
+    pub segs: KvSegs<'a>,
     /// Rows per segment (row `r` lives in segment `r / seg_tokens` at
     /// row offset `r % seg_tokens`). Single-segment callers pass the
     /// total row count.
     pub seg_tokens: usize,
+}
+
+/// The two K/V segment representations attention consumes — fp32 rows
+/// (zero-copy or scratch-dequantized) or raw quantized codes computed
+/// on in the quantized domain. The quantized arm is bit-identical to
+/// dequantizing the same segments first (see [`qattn`]).
+pub enum KvSegs<'a> {
+    F32 { k: Vec<&'a [f32]>, v: Vec<&'a [f32]> },
+    Quant { dtype: KvDtype, k: Vec<QuantSeg<'a>>, v: Vec<QuantSeg<'a>> },
+}
+
+impl KvSegs<'_> {
+    /// Total K elements across segments (debug shape check).
+    fn k_len(&self) -> usize {
+        match self {
+            KvSegs::F32 { k, .. } => k.iter().map(|b| b.len()).sum(),
+            KvSegs::Quant { k, .. } => k.iter().map(|b| b.codes.len()).sum(),
+        }
+    }
+
+    /// Total V elements across segments (debug shape check).
+    fn v_len(&self) -> usize {
+        match self {
+            KvSegs::F32 { v, .. } => v.iter().map(|b| b.len()).sum(),
+            KvSegs::Quant { v, .. } => v.iter().map(|b| b.codes.len()).sum(),
+        }
+    }
 }
 
 /// Row `r`'s `[col0, col0 + dh)` head slice out of segmented K or V
@@ -204,89 +233,11 @@ impl Model {
         out
     }
 
-    /// Multi-head attention for the KV-cached decode paths, **ragged**
-    /// over sequences: each sequence attends to its own prefix length.
-    /// Parallel over `(sequence, head)` pairs. K/V are *borrowed*
-    /// straight from the cache segments (no per-step copies — the
-    /// chunked cache hands over one flat segment, the paged pool one
-    /// segment per block); K is cached pre-RoPE, so rotation is applied
-    /// here from absolute positions. The score·V product accumulates
-    /// directly into the output head slice — the transpose is folded
-    /// into the loop.
+    /// Multi-head attention for the KV-cached decode paths — see
+    /// [`paged_attention`] (this is the model-config-aware wrapper).
     pub(crate) fn attention_kv(&self, q: &Matrix, seqs: &[SeqKv]) -> Matrix {
-        let d = self.cfg.d_model;
-        let dh = self.cfg.head_dim();
-        let nh = self.cfg.n_head;
-        let scale = 1.0 / (dh as f32).sqrt();
-        let rope = self.cfg.arch == Arch::Llama;
-        let theta = self.cfg.rope_theta;
-        let results: Vec<Matrix> = crate::util::par::par_map(seqs.len() * nh, |sh| {
-            let s = &seqs[sh / nh];
-            let hd = sh % nh;
-            let kv_len = s.past + s.n_new;
-            let st = s.seg_tokens;
-            debug_assert!(st > 0, "segment size must be positive");
-            debug_assert_eq!(
-                s.k.iter().map(|b| b.len()).sum::<usize>(),
-                kv_len * d,
-                "K prefix length mismatch"
-            );
-            debug_assert_eq!(
-                s.v.iter().map(|b| b.len()).sum::<usize>(),
-                kv_len * d,
-                "V prefix length mismatch"
-            );
-            let col0 = hd * dh;
-            // RoPE'd K head panel, built once per (seq, head) task and
-            // reused across this sequence's query rows. GPT (no RoPE)
-            // skips the copy entirely and dots against the cache rows.
-            let kh: Option<Matrix> = if rope {
-                let mut kh = Matrix::zeros(kv_len, dh);
-                for r in 0..kv_len {
-                    kh.row_mut(r).copy_from_slice(seg_head(&s.k, st, d, col0, dh, r));
-                }
-                rope_inplace(&mut kh, 0, theta);
-                Some(kh)
-            } else {
-                None
-            };
-            let mut oh = Matrix::zeros(s.n_new, dh);
-            let mut scores = vec![0.0f32; kv_len];
-            let mut qh = vec![0.0f32; dh];
-            for qi in 0..s.n_new {
-                qh.copy_from_slice(&q.row(s.q_row0 + qi)[col0..col0 + dh]);
-                if rope {
-                    rope_row_inplace(&mut qh, s.past + qi, theta);
-                }
-                // Causal limit: this token sees the prefix plus itself.
-                let limit = s.past + qi + 1;
-                for (r, sc) in scores[..limit].iter_mut().enumerate() {
-                    let krow = match &kh {
-                        Some(m) => m.row(r),
-                        None => seg_head(&s.k, st, d, col0, dh, r),
-                    };
-                    *sc = dot(&qh, krow) * scale;
-                }
-                softmax_slice(&mut scores[..limit]);
-                let orow = oh.row_mut(qi);
-                for (r, &w) in scores[..limit].iter().enumerate() {
-                    let vrow = seg_head(&s.v, st, d, col0, dh, r);
-                    for (o, vv) in orow.iter_mut().zip(vrow) {
-                        *o += w * vv;
-                    }
-                }
-            }
-            oh
-        });
-        let mut out = Matrix::zeros(q.rows, d);
-        for (sh, oh) in results.iter().enumerate() {
-            let s = &seqs[sh / nh];
-            let hd = sh % nh;
-            for qi in 0..s.n_new {
-                out.row_mut(s.q_row0 + qi)[hd * dh..(hd + 1) * dh].copy_from_slice(oh.row(qi));
-            }
-        }
-        out
+        let rope = (self.cfg.arch == Arch::Llama).then_some(self.cfg.rope_theta);
+        paged_attention(q, seqs, self.cfg.n_head, self.cfg.head_dim(), rope)
     }
 
     /// Sum of next-token NLL (nats) over a `[batch, seq]` window.
@@ -294,6 +245,115 @@ impl Model {
         let logits = self.forward(inputs, batch, seq, None);
         cross_entropy_sum(&logits, targets)
     }
+}
+
+/// Multi-head attention for the KV-cached decode paths, **ragged** over
+/// sequences: each sequence attends to its own prefix length. Parallel
+/// over `(sequence, head)` pairs. K/V are *borrowed* straight from the
+/// cache segments (no per-step copies — the chunked cache hands over
+/// one flat segment, the paged pool one segment per block); K is cached
+/// pre-RoPE, so rotation is applied here from absolute positions
+/// (`rope_theta = Some(θ)` for Llama, `None` for GPT). The score·V
+/// product accumulates directly into the output head slice — the
+/// transpose is folded into the loop.
+///
+/// Quantized segments ([`KvSegs::Quant`]) never materialize fp32 rows:
+/// the Q·K dot, the RoPE K-panel fill, and the score·V accumulation
+/// decode codes in register via [`qattn`], bit-identical to running
+/// this same function over the dequantized segments.
+///
+/// Free function (not a [`Model`] method) so benches and property tests
+/// can drive the kernel against a pool directly, without a model.
+pub fn paged_attention(
+    q: &Matrix,
+    seqs: &[SeqKv],
+    nh: usize,
+    dh: usize,
+    rope_theta: Option<f32>,
+) -> Matrix {
+    let d = nh * dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let results: Vec<Matrix> = crate::util::par::par_map(seqs.len() * nh, |sh| {
+        let s = &seqs[sh / nh];
+        let hd = sh % nh;
+        let kv_len = s.past + s.n_new;
+        let st = s.seg_tokens;
+        debug_assert!(st > 0, "segment size must be positive");
+        debug_assert_eq!(s.segs.k_len(), kv_len * d, "K prefix length mismatch");
+        debug_assert_eq!(s.segs.v_len(), kv_len * d, "V prefix length mismatch");
+        let col0 = hd * dh;
+        // RoPE'd K head panel, built once per (seq, head) task and
+        // reused across this sequence's query rows. GPT (no RoPE)
+        // skips the copy entirely and dots against the cache rows.
+        let kh: Option<Matrix> = if let Some(theta) = rope_theta {
+            let mut kh = Matrix::zeros(kv_len, dh);
+            for r in 0..kv_len {
+                match &s.segs {
+                    KvSegs::F32 { k, .. } => {
+                        kh.row_mut(r).copy_from_slice(seg_head(k, st, d, col0, dh, r));
+                    }
+                    KvSegs::Quant { dtype, k, .. } => {
+                        let (codes, sc) = qattn::seg_head_codes(k, st, d, col0, dh, r);
+                        qattn::decode_head_into(kh.row_mut(r), codes, sc, *dtype);
+                    }
+                }
+            }
+            rope_inplace(&mut kh, 0, theta);
+            Some(kh)
+        } else {
+            None
+        };
+        let mut oh = Matrix::zeros(s.n_new, dh);
+        let mut scores = vec![0.0f32; kv_len];
+        let mut qh = vec![0.0f32; dh];
+        for qi in 0..s.n_new {
+            qh.copy_from_slice(&q.row(s.q_row0 + qi)[col0..col0 + dh]);
+            if let Some(theta) = rope_theta {
+                rope_row_inplace(&mut qh, s.past + qi, theta);
+            }
+            // Causal limit: this token sees the prefix plus itself.
+            let limit = s.past + qi + 1;
+            for (r, sc) in scores[..limit].iter_mut().enumerate() {
+                let qk = match &kh {
+                    Some(m) => dot(&qh, m.row(r)),
+                    None => match &s.segs {
+                        KvSegs::F32 { k, .. } => dot(&qh, seg_head(k, st, d, col0, dh, r)),
+                        KvSegs::Quant { dtype, k, .. } => {
+                            let (codes, sc) = qattn::seg_head_codes(k, st, d, col0, dh, r);
+                            qattn::dot_head(&qh, codes, sc, *dtype)
+                        }
+                    },
+                };
+                *sc = qk * scale;
+            }
+            softmax_slice(&mut scores[..limit]);
+            let orow = oh.row_mut(qi);
+            for (r, &w) in scores[..limit].iter().enumerate() {
+                match &s.segs {
+                    KvSegs::F32 { v, .. } => {
+                        let vrow = seg_head(v, st, d, col0, dh, r);
+                        for (o, vv) in orow.iter_mut().zip(vrow) {
+                            *o += w * vv;
+                        }
+                    }
+                    KvSegs::Quant { dtype, v, .. } => {
+                        let (codes, sc) = qattn::seg_head_codes(v, st, d, col0, dh, r);
+                        qattn::axpy_head(orow, w, codes, sc, *dtype);
+                    }
+                }
+            }
+        }
+        oh
+    });
+    let mut out = Matrix::zeros(q.rows, d);
+    for (sh, oh) in results.iter().enumerate() {
+        let s = &seqs[sh / nh];
+        let hd = sh % nh;
+        for qi in 0..s.n_new {
+            out.row_mut(s.q_row0 + qi)[hd * dh..(hd + 1) * dh].copy_from_slice(oh.row(qi));
+        }
+    }
+    out
 }
 
 #[cfg(test)]

@@ -18,7 +18,7 @@
 
 use crate::util::rng::Rng;
 
-use super::forward::SeqKv;
+use super::forward::{KvSegs, SeqKv};
 use super::ops::*;
 use super::{Arch, Model, ModelConfig};
 use crate::data::embed;
@@ -170,8 +170,10 @@ impl Model {
                     q_row0: 0,
                     n_new: n,
                     past,
-                    k: vec![cache.k_rows(li)],
-                    v: vec![cache.v_rows(li)],
+                    segs: KvSegs::F32 {
+                        k: vec![cache.k_rows(li)],
+                        v: vec![cache.v_rows(li)],
+                    },
                     seg_tokens: past + n,
                 }];
                 self.attention_kv(&q, &seq)
@@ -257,8 +259,10 @@ impl Model {
                         q_row0: i,
                         n_new: 1,
                         past: c.len,
-                        k: vec![c.k_rows(li)],
-                        v: vec![c.v_rows(li)],
+                        segs: KvSegs::F32 {
+                            k: vec![c.k_rows(li)],
+                            v: vec![c.v_rows(li)],
+                        },
                         seg_tokens: c.len + 1,
                     })
                     .collect();

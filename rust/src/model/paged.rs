@@ -10,24 +10,26 @@
 //! weight streams across every prompt admitted in a scheduling round
 //! exactly as PR 1's fused decode amortizes them across sequences.
 //!
-//! Attention reads K/V *through the block tables*: per layer,
-//! [`BlockPool::layer_views`] hands back one borrowed row segment per
-//! block per sequence (gather-free) and the shared
-//! [`Model::attention_kv`] substrate walks them in place. An f32 pool
-//! borrows storage directly; a quantized pool (fp8/int8 blocks with
-//! per-block-per-layer scales) dequantizes into a per-forward
-//! [`KvScratch`] arena first — the segment shapes are identical, so
-//! attention is dtype-blind. Because every kernel on the path is
-//! row-independent, an **f32** pool's logits are bit-identical to the
-//! chunked per-request cache path ([`Model::forward_cached`]) — the
-//! property tests pin this; quantized pools trade bounded KV error for
-//! ~4× pool capacity (tolerance-tested).
+//! Attention reads K/V *through the block tables*: per layer, an f32
+//! pool hands back one borrowed row segment per block per sequence via
+//! [`BlockPool::layer_views`] (zero-copy, gather-free), while a
+//! quantized pool (fp8/int8 blocks with per-block-per-layer scales)
+//! hands back raw *code* segments via [`BlockPool::layer_code_views`]
+//! and the shared [`Model::attention_kv`] substrate decodes them in
+//! register ([`crate::kv::qattn`]) — no per-layer [`KvScratch`]
+//! staging, bit-identical to dequantize-then-attend. Because every
+//! kernel on the path is row-independent, an **f32** pool's logits are
+//! bit-identical to the chunked per-request cache path
+//! ([`Model::forward_cached`]) — the property tests pin this; quantized
+//! pools trade bounded KV error for ~4× pool capacity
+//! (tolerance-tested, and `tests/qattn.rs` pins the quantized-domain
+//! read against the scratch route bit-for-bit).
 
-use super::forward::SeqKv;
+use super::forward::{KvSegs, SeqKv};
 use super::ops::*;
 use super::{Arch, Model};
 use crate::data::embed;
-use crate::kv::{BlockPool, BlockTable, KvScratch};
+use crate::kv::{BlockPool, BlockTable, KvDtype, KvScratch};
 use crate::tensor::{matmul, Matrix};
 
 impl Model {
@@ -49,7 +51,23 @@ impl Model {
         pool: &mut BlockPool,
         tables: &mut [&mut BlockTable],
     ) -> Matrix {
-        let (x, offs) = self.paged_core(new_tokens, pool, tables);
+        let mut scratch = KvScratch::new();
+        self.forward_paged_in(new_tokens, pool, tables, &mut scratch)
+    }
+
+    /// [`Self::forward_paged`] with a caller-owned [`KvScratch`] — the
+    /// scheduler holds one scratch for the whole serving run so warm
+    /// rounds never reallocate the dequant arena (the f32 fallback
+    /// paths; the quantized hot path reads codes directly and does not
+    /// touch it).
+    pub fn forward_paged_in(
+        &self,
+        new_tokens: &[&[u8]],
+        pool: &mut BlockPool,
+        tables: &mut [&mut BlockTable],
+        scratch: &mut KvScratch,
+    ) -> Matrix {
+        let (x, offs) = self.paged_core(new_tokens, pool, tables, scratch);
         // Only each sequence's last position seeds sampling: project
         // just those rows through the tied head. Row-independent GEMMs
         // make this bit-identical to projecting all rows and selecting.
@@ -72,7 +90,20 @@ impl Model {
         pool: &mut BlockPool,
         tables: &mut [&mut BlockTable],
     ) -> (Matrix, Vec<usize>) {
-        let (x, offs) = self.paged_core(new_tokens, pool, tables);
+        let mut scratch = KvScratch::new();
+        self.forward_paged_spec_in(new_tokens, pool, tables, &mut scratch)
+    }
+
+    /// [`Self::forward_paged_spec`] with a caller-owned [`KvScratch`]
+    /// (see [`Self::forward_paged_in`]).
+    pub fn forward_paged_spec_in(
+        &self,
+        new_tokens: &[&[u8]],
+        pool: &mut BlockPool,
+        tables: &mut [&mut BlockTable],
+        scratch: &mut KvScratch,
+    ) -> (Matrix, Vec<usize>) {
+        let (x, offs) = self.paged_core(new_tokens, pool, tables, scratch);
         (matmul(&x, &self.tok_emb), offs)
     }
 
@@ -85,6 +116,7 @@ impl Model {
         new_tokens: &[&[u8]],
         pool: &mut BlockPool,
         tables: &mut [&mut BlockTable],
+        scratch: &mut KvScratch,
     ) -> (Matrix, Vec<usize>) {
         let n_seq = new_tokens.len();
         assert_eq!(n_seq, tables.len(), "one block table per sequence");
@@ -121,13 +153,10 @@ impl Model {
         }
         {
             // Read-only table views for the layer loop (commit below
-            // needs the tables mutably again). The scratch arena backs
-            // dequantized K/V segments for quantized pools (f32 pools
-            // never touch it); one instance amortizes across layers.
+            // needs the tables mutably again).
             let tb_views: Vec<&BlockTable> = tables.iter().map(|t| &**t).collect();
             let uptos: Vec<usize> =
                 new_tokens.iter().zip(&pasts).map(|(t, p)| p + t.len()).collect();
-            let mut scratch = KvScratch::new();
             for (li, blk) in self.blocks.iter().enumerate() {
                 let mut h = x.clone();
                 self.norm1(blk, &mut h);
@@ -149,23 +178,42 @@ impl Model {
                     }
                 }
                 // Ragged attention through the block tables: one
-                // borrowed segment per block, walked in place (from
-                // storage or, quantized, from the scratch arena).
+                // borrowed segment per block, walked in place. F32
+                // pools borrow storage zero-copy; quantized pools hand
+                // out raw code segments and attention decodes them in
+                // register (the quantized-domain path — bit-identical
+                // to dequantizing into scratch first, without the
+                // staging traffic).
                 let attn = {
                     let pool_ref: &BlockPool = pool;
-                    let views = pool_ref.layer_views(&tb_views, li, &uptos, &mut scratch);
-                    let seqs: Vec<SeqKv> = views
-                        .into_iter()
-                        .enumerate()
-                        .map(|(i, (k, v))| SeqKv {
-                            q_row0: offs[i],
-                            n_new: new_tokens[i].len(),
-                            past: pasts[i],
-                            k,
-                            v,
-                            seg_tokens: pool_ref.block_tokens(),
-                        })
-                        .collect();
+                    let dtype = pool_ref.dtype();
+                    let seqs: Vec<SeqKv> = if dtype == KvDtype::F32 {
+                        pool_ref
+                            .layer_views(&tb_views, li, &uptos, scratch)
+                            .into_iter()
+                            .enumerate()
+                            .map(|(i, (k, v))| SeqKv {
+                                q_row0: offs[i],
+                                n_new: new_tokens[i].len(),
+                                past: pasts[i],
+                                segs: KvSegs::F32 { k, v },
+                                seg_tokens: pool_ref.block_tokens(),
+                            })
+                            .collect()
+                    } else {
+                        pool_ref
+                            .layer_code_views(&tb_views, li, &uptos)
+                            .into_iter()
+                            .enumerate()
+                            .map(|(i, (k, v))| SeqKv {
+                                q_row0: offs[i],
+                                n_new: new_tokens[i].len(),
+                                past: pasts[i],
+                                segs: KvSegs::Quant { dtype, k, v },
+                                seg_tokens: pool_ref.block_tokens(),
+                            })
+                            .collect()
+                    };
                     self.attention_kv(&q, &seqs)
                 };
                 let mut o_out = Matrix::zeros(total, d);

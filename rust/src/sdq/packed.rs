@@ -9,12 +9,17 @@
 //! * the **bits-per-weight accounting** (`perfmodel::bits`),
 //! * the **sparse compute path**: [`PackedNm::spmm_into`] skips all
 //!   pruned positions, the CPU analogue of the paper's sparse-TC SpMM.
-//!   Like the dense GEMM, it switches to a column-parallel schedule for
-//!   small ragged serving batches, so compressed layers ride the fused
-//!   decode/prefill path at full core occupancy.
+//!   Like the dense GEMM it rides the shared
+//!   [`par_col_blocks`](crate::util::par::par_col_blocks) schedule for
+//!   small ragged serving batches, so compressed layers keep full core
+//!   occupancy on the fused decode/prefill path,
+//! * the **fused-dequant MAC**: [`PackedNm::quantize_values_int8`]
+//!   installs an opt-in int8 value plane (per-`(row, M-block)` scales,
+//!   the SDQ weight-scale layout) and the gather kernel then dequantizes
+//!   codes in register instead of materializing f32 weights.
 
 use anyhow::bail;
-use crate::util::par::par_chunks_mut;
+use crate::util::par::{par_chunks_mut, par_col_blocks, COL_BLOCK, TILE_ROWS};
 
 use super::nm::NmPattern;
 use crate::tensor::Matrix;
@@ -32,6 +37,26 @@ pub struct PackedNm {
     pub indices: Vec<u8>,
     /// Absolute column of each value slot (precomputed for the hot loop).
     pub abs_cols: Vec<u32>,
+    /// Stored non-zero count, fixed at pack time (padding slots are
+    /// zeros; [`pack`] counts survivors as it stores them, so
+    /// [`PackedNm::nnz`] never rescans `values`).
+    nnz: usize,
+    /// Opt-in int8 value plane ([`PackedNm::quantize_values_int8`]);
+    /// `None` keeps the exact f32 SpMM path.
+    qvalues: Option<QuantValues>,
+}
+
+/// Int8 codes for the value slots plus per-`(row, M-block)` decode
+/// scales — the SDQ weight-scale layout
+/// (`python/compile/kernels/sdq_matmul.py`), consumed by the
+/// fused-dequant gather MAC [`PackedNm::row_dot_q8`].
+#[derive(Clone, Debug)]
+pub struct QuantValues {
+    /// One int8 code per value slot (same layout as `PackedNm::values`).
+    pub codes: Vec<i8>,
+    /// `rows × blocks` scales: slot `s` of block `b` in row `r` decodes
+    /// as `codes[s] · scales[r · blocks + b]`.
+    pub scales: Vec<f32>,
 }
 
 impl PackedNm {
@@ -45,9 +70,11 @@ impl PackedNm {
         self.blocks() * self.pattern.n
     }
 
-    /// Stored non-zero count (excludes padding).
+    /// Stored non-zero count (excludes padding). O(1): counted once at
+    /// pack time instead of the old per-call O(slots) rescan of
+    /// `values`.
     pub fn nnz(&self) -> usize {
-        self.values.iter().filter(|v| **v != 0.0).count()
+        self.nnz
     }
 
     /// Unpack to a dense matrix.
@@ -88,6 +115,86 @@ impl PackedNm {
         s
     }
 
+    /// [`Self::row_dot`] over the int8 value plane: the gather MAC
+    /// dequantizes each code **in register** — `(code · scale) · x` —
+    /// instead of materializing f32 values first, mirroring
+    /// `python/compile/kernels/sdq_matmul.py`'s fused weight-scale
+    /// dequant. One scale per M-block, so the scale load is hoisted out
+    /// of the inner N-slot loop; the same 4 independent accumulators
+    /// hide the gather-chain FMA latency.
+    #[inline]
+    fn row_dot_q8(&self, q: &QuantValues, o: usize, xrow: &[f32]) -> f32 {
+        let spr = self.slots_per_row();
+        let nb = self.blocks();
+        let npat = self.pattern.n;
+        let codes = &q.codes[o * spr..(o + 1) * spr];
+        let cols = &self.abs_cols[o * spr..(o + 1) * spr];
+        let scales = &q.scales[o * nb..(o + 1) * nb];
+        let mut acc = [0.0f32; 4];
+        let mut lane = 0usize;
+        for b in 0..nb {
+            let sc = scales[b];
+            for s in b * npat..(b + 1) * npat {
+                let w = codes[s] as f32 * sc;
+                acc[lane & 3] += w * xrow[cols[s] as usize];
+                lane += 1;
+            }
+        }
+        (acc[0] + acc[2]) + (acc[1] + acc[3])
+    }
+
+    /// Hot-loop dispatch: exact f32 values by default, fused-dequant
+    /// int8 when [`Self::quantize_values_int8`] installed a plane.
+    #[inline]
+    fn row_dot_any(&self, o: usize, xrow: &[f32]) -> f32 {
+        match &self.qvalues {
+            Some(q) => self.row_dot_q8(q, o, xrow),
+            None => self.row_dot(o, xrow),
+        }
+    }
+
+    /// Quantize the value slots to int8 with one symmetric scale per
+    /// `(row, M-block)` (`amax / 127`), switching [`Self::spmm_into`]
+    /// onto the fused-dequant gather MAC. Opt-in and lossy (≈0.4 % per
+    /// 2:4 block in practice — the SpMM tolerance tests bound it);
+    /// padding slots quantize to code 0 and stay no-op MACs. Call
+    /// [`Self::dequantize_values`] to drop the plane and restore the
+    /// exact path.
+    pub fn quantize_values_int8(&mut self) {
+        let spr = self.slots_per_row();
+        let nb = self.blocks();
+        let npat = self.pattern.n;
+        let mut codes = vec![0i8; self.values.len()];
+        let mut scales = vec![0.0f32; self.rows * nb];
+        for r in 0..self.rows {
+            for b in 0..nb {
+                let s0 = r * spr + b * npat;
+                let blk = &self.values[s0..s0 + npat];
+                let amax = blk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                if amax == 0.0 {
+                    continue;
+                }
+                let scale = amax / 127.0;
+                scales[r * nb + b] = scale;
+                for (i, v) in blk.iter().enumerate() {
+                    let c = (v / scale).round().clamp(-127.0, 127.0);
+                    codes[s0 + i] = c as i8;
+                }
+            }
+        }
+        self.qvalues = Some(QuantValues { codes, scales });
+    }
+
+    /// Drop the int8 value plane (back to the exact f32 SpMM path).
+    pub fn dequantize_values(&mut self) {
+        self.qvalues = None;
+    }
+
+    /// Whether the fused-dequant int8 value plane is active.
+    pub fn values_quantized(&self) -> bool {
+        self.qvalues.is_some()
+    }
+
     /// Structured-sparse GEMM: `out[t, o] += Σ_s values[o, s] · x[t, col(o, s)]`.
     ///
     /// `x: [tokens, cols]`, `out: [tokens, rows]`. This is the CPU
@@ -105,42 +212,44 @@ impl PackedNm {
         assert_eq!(out.rows, x.rows);
         assert_eq!(out.cols, self.rows);
         let n = self.rows;
-        // Token-row tile / column-block sizes matching the dense GEMM's
-        // column-parallel crossover.
-        const TB: usize = 16;
-        const CB: usize = 64;
-        if x.rows > 1 && x.rows < TB && n >= 2 * CB && crate::util::par::num_threads() > 1 {
-            let rows = x.rows;
-            let nb = n.div_ceil(CB);
-            let parts: Vec<Vec<f32>> = crate::util::par::par_map(nb, |bi| {
-                let o0 = bi * CB;
-                let o1 = (o0 + CB).min(n);
+        let rows = x.rows;
+        // Ragged batches take the same shared column-parallel schedule
+        // as the dense GEMM (crossover predicate lives in
+        // `par_col_blocks`); the write callback `+=`-merges because
+        // spmm accumulates into `out`.
+        let out_data = &mut out.data;
+        let ran = par_col_blocks(
+            rows,
+            n,
+            TILE_ROWS,
+            COL_BLOCK,
+            |o0, o1| {
                 let mut part = vec![0.0f32; rows * (o1 - o0)];
                 for t in 0..rows {
                     let xrow = x.row(t);
                     for o in o0..o1 {
-                        part[t * (o1 - o0) + (o - o0)] = self.row_dot(o, xrow);
+                        part[t * (o1 - o0) + (o - o0)] = self.row_dot_any(o, xrow);
                     }
                 }
                 part
-            });
-            for (bi, part) in parts.iter().enumerate() {
-                let o0 = bi * CB;
-                let o1 = (o0 + CB).min(n);
+            },
+            |o0, o1, part| {
                 let bw = o1 - o0;
                 for t in 0..rows {
-                    let orow = &mut out.data[t * n + o0..t * n + o1];
+                    let orow = &mut out_data[t * n + o0..t * n + o1];
                     for (c, p) in orow.iter_mut().zip(&part[t * bw..(t + 1) * bw]) {
                         *c += *p;
                     }
                 }
-            }
+            },
+        );
+        if ran {
             return;
         }
-        par_chunks_mut(&mut out.data, n, |t, orow| {
+        par_chunks_mut(out_data, n, |t, orow| {
             let xrow = x.row(t);
             for (o, o_el) in orow.iter_mut().enumerate() {
-                *o_el += self.row_dot(o, xrow);
+                *o_el += self.row_dot_any(o, xrow);
             }
         });
     }
@@ -168,6 +277,7 @@ pub fn pack(w: &Matrix, pat: NmPattern) -> Result<PackedNm> {
     let mut values = vec![0.0f32; w.rows * spr];
     let mut indices = vec![0u8; w.rows * spr];
     let mut abs_cols = vec![0u32; w.rows * spr];
+    let mut nnz = 0usize;
     for r in 0..w.rows {
         let row = w.row(r);
         for b in 0..blocks {
@@ -186,6 +296,7 @@ pub fn pack(w: &Matrix, pat: NmPattern) -> Result<PackedNm> {
                     values[s] = *v;
                     indices[s] = i as u8;
                     abs_cols[s] = (b * pat.m + i) as u32;
+                    nnz += 1;
                     slot += 1;
                 }
             }
@@ -197,7 +308,16 @@ pub fn pack(w: &Matrix, pat: NmPattern) -> Result<PackedNm> {
             }
         }
     }
-    Ok(PackedNm { pattern: pat, rows: w.rows, cols: w.cols, values, indices, abs_cols })
+    Ok(PackedNm {
+        pattern: pat,
+        rows: w.rows,
+        cols: w.cols,
+        values,
+        indices,
+        abs_cols,
+        nnz,
+        qvalues: None,
+    })
 }
 
 #[cfg(test)]
@@ -291,6 +411,66 @@ mod tests {
         p.spmm_into(&x, &mut out);
         for (a, b) in out.data.iter().zip(&first.data) {
             assert!((a - 2.0 * b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn nnz_cached_at_pack_matches_rescan() {
+        let pat = NmPattern::new(2, 8);
+        let w = sparse_matrix(16, 64, pat, 8);
+        let p = pack(&w, pat).unwrap();
+        let rescan = p.values.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(p.nnz(), rescan, "cached count must equal a value rescan");
+        assert!(p.nnz() > 0);
+    }
+
+    #[test]
+    fn quantized_values_spmm_within_bound() {
+        let pat = NmPattern::new(2, 4);
+        let w = sparse_matrix(24, 32, pat, 11);
+        let mut p = pack(&w, pat).unwrap();
+        let mut rng = Rng::seed_from_u64(12);
+        let x = Matrix::from_vec(5, 32, (0..160).map(|_| rng.range_f32(-1.0, 1.0)).collect());
+        let mut exact = Matrix::zeros(5, 24);
+        p.spmm_into(&x, &mut exact);
+        assert!(!p.values_quantized());
+        p.quantize_values_int8();
+        assert!(p.values_quantized());
+        let mut quant = Matrix::zeros(5, 24);
+        p.spmm_into(&x, &mut quant);
+        // Per-block symmetric int8: |w - ŵ| ≤ amax/254 ≤ 1/254 per
+        // weight here, and each dot gathers 16 survivors with |x| ≤ 1,
+        // so 16/254 ≈ 0.063 bounds the worst case deterministically.
+        for (a, b) in exact.data.iter().zip(&quant.data) {
+            assert!((a - b).abs() < 0.064, "{a} vs {b}");
+        }
+        // Dropping the plane restores the exact path bit-for-bit.
+        p.dequantize_values();
+        let mut back = Matrix::zeros(5, 24);
+        p.spmm_into(&x, &mut back);
+        assert_eq!(back.data, exact.data);
+    }
+
+    #[test]
+    fn quantized_values_ragged_path_matches_row_path() {
+        // Both parallel schedules must dispatch to the same fused
+        // kernel: a ragged (column-parallel) shape and a row-per-chunk
+        // shape over the same quantized weights agree exactly.
+        let pat = NmPattern::new(2, 8);
+        let w = sparse_matrix(160, 64, pat, 13);
+        let mut p = pack(&w, pat).unwrap();
+        p.quantize_values_int8();
+        let mut rng = Rng::seed_from_u64(14);
+        let x =
+            Matrix::from_vec(4, 64, (0..4 * 64).map(|_| rng.range_f32(-1.0, 1.0)).collect());
+        let mut ragged = Matrix::zeros(4, 160);
+        p.spmm_into(&x, &mut ragged);
+        // One row at a time forces the sequential/row schedule.
+        for t in 0..4 {
+            let xr = Matrix::from_vec(1, 64, x.row(t).to_vec());
+            let mut or = Matrix::zeros(1, 160);
+            p.spmm_into(&xr, &mut or);
+            assert_eq!(or.data, ragged.data[t * 160..(t + 1) * 160].to_vec());
         }
     }
 

@@ -10,22 +10,19 @@
 //! tensor core consumes.
 
 use super::Matrix;
-use crate::util::par::par_chunks_mut;
+use crate::util::par::{par_chunks_mut, par_col_blocks, COL_BLOCK, TILE_ROWS};
 
 /// Tunable K-blocking for the inner dot products; 256 f32 = 1 KiB per row
 /// slice, keeps A and W panels resident in L1/L2.
 const KB: usize = 256;
 
-/// Token rows per register tile: each W row loaded from cache is reused
-/// across `TB` activation rows (GEBP-style), cutting W streaming
-/// bandwidth by TB× (§Perf iteration 1 — see EXPERIMENTS.md).
-const TB: usize = 16;
+/// Token rows per register tile (shared with the N:M SpMM — see
+/// [`TILE_ROWS`] for the GEBP rationale).
+const TB: usize = TILE_ROWS;
 
-/// Output-column block for the column-parallel path taken by small row
-/// counts (ragged decode batches): with fewer than `TB` rows the row
-/// tiling above degenerates to a single tile on one core, so the output
-/// columns (W rows) are split across workers instead.
-const CB: usize = 64;
+/// Output-column block for the ragged column-parallel schedule (see
+/// [`COL_BLOCK`]).
+const CB: usize = COL_BLOCK;
 
 /// `c = a · wᵀ` into a fresh matrix. `a: [m, k]`, `w: [n, k]` → `c: [m, n]`.
 pub fn matmul(a: &Matrix, w: &Matrix) -> Matrix {
@@ -34,70 +31,89 @@ pub fn matmul(a: &Matrix, w: &Matrix) -> Matrix {
     c
 }
 
+/// The GEBP micro-panel both parallel schedules call into: accumulate
+/// `out[t, o-o0] += Σ_k a[t0+t, k] · w[o, k]` for activation rows
+/// `t0..t0+rows` and output columns `o0..o1`, K-blocked (`KB`) so the A
+/// slices stay L1-hot and the 32-lane [`dot`] is reused as the register
+/// kernel. Inside each K-block the o loop walks `CB`-wide chunks (the W
+/// panel that fits L2) with `t` innermost, so every W row loaded from
+/// cache is dotted against all `rows` activation rows before moving on.
+///
+/// Numerics: per output element the K-blocks accumulate in ascending-k
+/// order regardless of how the caller sliced rows/columns, so the row-
+/// and column-parallel schedules (and any tile shape) produce
+/// bit-identical results. `out` is row-major with stride `out_stride`
+/// and must be pre-initialized (zeroed or carrying bias).
+#[inline]
+fn gemm_panel(
+    a: &Matrix,
+    w: &Matrix,
+    t0: usize,
+    rows: usize,
+    o0: usize,
+    o1: usize,
+    out: &mut [f32],
+    out_stride: usize,
+) {
+    let k = a.cols;
+    let mut k0 = 0;
+    while k0 < k {
+        let kend = (k0 + KB).min(k);
+        let mut ob = o0;
+        while ob < o1 {
+            let oe = (ob + CB).min(o1);
+            for o in ob..oe {
+                let w_blk = &w.data[o * k + k0..o * k + kend];
+                for t in 0..rows {
+                    let a_blk = &a.data[(t0 + t) * k + k0..(t0 + t) * k + kend];
+                    out[t * out_stride + (o - o0)] += dot(a_blk, w_blk);
+                }
+            }
+            ob = oe;
+        }
+        k0 = kend;
+    }
+}
+
 /// `c = a · wᵀ` into a caller-provided buffer (hot path: no allocation).
 pub fn matmul_into(a: &Matrix, w: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols, w.cols, "inner dimensions must match");
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, w.rows);
-    let k = a.cols;
     let n = w.rows;
+    let rows = a.rows;
     // Ragged decode batches: a handful of activation rows against a wide
-    // W. One row tile would leave all but one core idle, so parallelize
-    // over output-column blocks instead. Numerics are identical to the
-    // row-tiled path: every output element is the same Σ over K-blocks
-    // of dot(a_blk, w_blk). Single rows (`a.rows == 1`) stay sequential:
-    // the per-sequence decode baseline parallelizes across sequences and
-    // must not nest thread scopes.
-    if a.rows > 1 && a.rows < TB && n >= 2 * CB && crate::util::par::num_threads() > 1 {
-        let rows = a.rows;
-        let nb = n.div_ceil(CB);
-        let parts: Vec<Vec<f32>> = crate::util::par::par_map(nb, |bi| {
-            let o0 = bi * CB;
-            let o1 = (o0 + CB).min(n);
+    // W. One row tile would leave all but one core idle, so
+    // `par_col_blocks` splits the output columns across workers instead
+    // (crossover predicate lives there). Numerics are identical to the
+    // row-tiled path: both run the same `gemm_panel`.
+    let c_data = &mut c.data;
+    let ran = par_col_blocks(
+        rows,
+        n,
+        TB,
+        CB,
+        |o0, o1| {
             let mut part = vec![0.0f32; rows * (o1 - o0)];
-            let mut k0 = 0;
-            while k0 < k {
-                let kend = (k0 + KB).min(k);
-                for o in o0..o1 {
-                    let w_blk = &w.data[o * k + k0..o * k + kend];
-                    for t in 0..rows {
-                        let a_blk = &a.data[t * k + k0..t * k + kend];
-                        part[t * (o1 - o0) + (o - o0)] += dot(a_blk, w_blk);
-                    }
-                }
-                k0 = kend;
-            }
+            gemm_panel(a, w, 0, rows, o0, o1, &mut part, o1 - o0);
             part
-        });
-        for (bi, part) in parts.iter().enumerate() {
-            let o0 = bi * CB;
-            let o1 = (o0 + CB).min(n);
+        },
+        |o0, o1, part| {
             let bw = o1 - o0;
             for t in 0..rows {
-                c.data[t * n + o0..t * n + o1].copy_from_slice(&part[t * bw..(t + 1) * bw]);
+                c_data[t * n + o0..t * n + o1].copy_from_slice(&part[t * bw..(t + 1) * bw]);
             }
-        }
+        },
+    );
+    if ran {
         return;
     }
-    // Parallelize over TB-row tiles of the output. Within a tile, each W
-    // row is loaded once from cache and dotted against all TB activation
-    // rows (register/L1 reuse); K-blocked so the A slices stay hot.
-    par_chunks_mut(&mut c.data, TB * n, |tile, c_tile| {
+    // Parallelize over TB-row tiles of the output; each tile is one
+    // full-width panel call.
+    par_chunks_mut(c_data, TB * n, |tile, c_tile| {
         c_tile.fill(0.0);
-        let t0 = tile * TB;
         let rows = c_tile.len() / n;
-        let mut k0 = 0;
-        while k0 < k {
-            let kend = (k0 + KB).min(k);
-            for o in 0..n {
-                let w_blk = &w.data[o * k + k0..o * k + kend];
-                for t in 0..rows {
-                    let a_blk = &a.data[(t0 + t) * k + k0..(t0 + t) * k + kend];
-                    c_tile[t * n + o] += dot(a_blk, w_blk);
-                }
-            }
-            k0 = kend;
-        }
+        gemm_panel(a, w, tile * TB, rows, 0, n, c_tile, n);
     });
 }
 

@@ -59,6 +59,64 @@ where
     });
 }
 
+/// Token rows per register tile of the serving GEMM/SpMM kernels: each
+/// weight row loaded from cache is reused across `TILE_ROWS` activation
+/// rows (GEBP-style), cutting weight streaming bandwidth by TILE_ROWS×
+/// (§Perf iteration 1 — see EXPERIMENTS.md).
+pub const TILE_ROWS: usize = 16;
+
+/// Output-column block width for the column-parallel schedule taken by
+/// small ragged batches: with fewer than [`TILE_ROWS`] activation rows
+/// the row tiling degenerates to a single tile on one core, so the
+/// output columns (weight rows) are split across workers instead.
+pub const COL_BLOCK: usize = 64;
+
+/// The ragged-batch column-parallel schedule shared by the dense GEMM
+/// (`tensor::matmul_into`) and the N:M SpMM (`sdq::PackedNm::spmm_into`):
+/// decide the crossover, split the `n` output columns into `cb`-wide
+/// blocks, compute each block's dense `rows × width` partial on the
+/// worker pool, and hand the partials back to `write` in ascending
+/// block order.
+///
+/// * **Crossover** — taken only for ragged serving batches: more than
+///   one activation row but fewer than `tb` (one row tile would leave
+///   every other core idle), at least `2·cb` output columns to split,
+///   and a real thread pool. Single rows stay sequential: the
+///   per-sequence decode baseline parallelizes across sequences and
+///   must not nest thread scopes. When the predicate fails nothing runs
+///   and `false` is returned — the caller falls back to its
+///   row-parallel schedule.
+/// * `kernel(o0, o1)` returns the `rows × (o1-o0)` partial (row-major,
+///   stride `o1-o0`) for output columns `o0..o1`; it runs concurrently
+///   and must not touch the real output. `write(o0, o1, part)` runs
+///   sequentially on the caller's thread afterwards, so the caller
+///   chooses the merge semantics — copy (GEMM overwrites) or
+///   accumulate (SpMM adds into pre-filled output).
+pub fn par_col_blocks(
+    rows: usize,
+    n: usize,
+    tb: usize,
+    cb: usize,
+    kernel: impl Fn(usize, usize) -> Vec<f32> + Sync,
+    mut write: impl FnMut(usize, usize, &[f32]),
+) -> bool {
+    if !(rows > 1 && rows < tb && n >= 2 * cb && num_threads() > 1) {
+        return false;
+    }
+    let nb = n.div_ceil(cb);
+    let parts: Vec<Vec<f32>> = par_map(nb, |bi| {
+        let o0 = bi * cb;
+        let o1 = (o0 + cb).min(n);
+        kernel(o0, o1)
+    });
+    for (bi, part) in parts.iter().enumerate() {
+        let o0 = bi * cb;
+        let o1 = (o0 + cb).min(n);
+        write(o0, o1, part);
+    }
+    true
+}
+
 /// Parallel map over an index range: returns `f(0..n)` results in order.
 pub fn par_map<R: Send, F>(n: usize, f: F) -> Vec<R>
 where
@@ -112,6 +170,41 @@ mod tests {
         let out = par_map(257, |i| i * i);
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn col_blocks_crossover_and_order() {
+        // Predicate misses run nothing and report false: a single row
+        // (nested-scope hazard) and a too-narrow output both fall
+        // through to the caller's row schedule.
+        assert!(!par_col_blocks(1, 1000, 16, 64, |_, _| unreachable!(), |_, _, _| ()));
+        assert!(!par_col_blocks(4, 100, 16, 64, |_, _| unreachable!(), |_, _, _| ()));
+        if num_threads() > 1 {
+            let (rows, n) = (3usize, 200usize);
+            let mut out = vec![0.0f32; rows * n];
+            let ran = par_col_blocks(
+                rows,
+                n,
+                16,
+                64,
+                |o0, o1| {
+                    (0..rows)
+                        .flat_map(|t| (o0..o1).map(move |o| (t * n + o) as f32))
+                        .collect()
+                },
+                |o0, o1, part| {
+                    let bw = o1 - o0;
+                    for t in 0..rows {
+                        out[t * n + o0..t * n + o1]
+                            .copy_from_slice(&part[t * bw..(t + 1) * bw]);
+                    }
+                },
+            );
+            assert!(ran, "ragged shape must take the column schedule");
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i as f32, "block {i} landed out of order");
+            }
         }
     }
 

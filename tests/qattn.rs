@@ -1,0 +1,315 @@
+//! Quantized-domain attention equivalence properties (PR 6's tentpole
+//! claim, tested end-to-end against the paged pool).
+//!
+//! The sharp claim: [`paged_attention`] over raw code segments
+//! ([`BlockPool::layer_code_views`] → [`KvSegs::Quant`], decoded in
+//! register by `kv::qattn`) is **bit-for-bit identical** to the same
+//! kernel over scratch-dequantized fp32 segments
+//! ([`BlockPool::layer_views`] → [`KvSegs::F32`]) — for int8 AND
+//! fp8-e4m3, with and without RoPE, under a randomized pool mutation
+//! history that hits every hazard the quantized store has:
+//!
+//! * **random block boundaries** — 4-token blocks and ragged extends,
+//!   so views constantly cut mid-block;
+//! * **amax growth** — write magnitudes climb across rounds, forcing
+//!   the open block to requantize already-staged rows;
+//! * **COW forks** — [`BlockPool::fork`] then diverging extends, so
+//!   code segments are read through shared and privately-copied blocks;
+//! * **mid-block truncation** — [`BlockPool::truncate`] to a non-block
+//!   boundary then re-extend, so stale quantized tails sit past live
+//!   rows inside the same block.
+//!
+//! Riding along: a loose divergence sanity bound for the quantized
+//! routes against an fp32-pool reference (the *storage* error — both
+//! quantized routes being bit-equal, either stands in for both), and
+//! the scratch-reuse property — warm [`BlockPool::layer_views`] rounds
+//! of a fixed shape perform zero allocations
+//! ([`KvScratch::alloc_events`]).
+
+use sdq::kv::{BlockPool, BlockTable, KvDtype, KvScratch};
+use sdq::model::forward::{paged_attention, KvSegs, SeqKv};
+use sdq::model::{Arch, ModelConfig};
+use sdq::tensor::Matrix;
+use sdq::util::rng::Rng;
+
+fn tiny_cfg(dtype: KvDtype) -> ModelConfig {
+    ModelConfig {
+        name: "qattn-test".into(),
+        arch: Arch::Gpt,
+        d_model: 16,
+        n_layer: 2,
+        n_head: 2,
+        d_ff: 16,
+        vocab: 256,
+        max_seq: 256,
+        eps: 1e-5,
+        rope_theta: 10000.0,
+        kv_dtype: dtype,
+    }
+}
+
+fn rand_matrix(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+    Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+}
+
+/// Stage, write and commit `n` fresh rows of magnitude `mag` on `tb`.
+fn extend(cfg: &ModelConfig, pool: &mut BlockPool, tb: &mut BlockTable, rng: &mut Rng, n: usize, mag: f32) {
+    let (d, base) = (cfg.d_model, tb.len());
+    pool.prepare_tokens(tb, n);
+    for j in 0..n {
+        for li in 0..cfg.n_layer {
+            let k: Vec<f32> = (0..d).map(|_| rng.range_f32(-mag, mag)).collect();
+            let v: Vec<f32> = (0..d).map(|_| rng.range_f32(-mag, mag)).collect();
+            pool.write_row(tb, li, base + j, &k, &v);
+        }
+    }
+    let toks: Vec<u8> = (0..n).map(|_| rng.below(250) as u8).collect();
+    pool.commit(tb, &toks);
+}
+
+/// Per-sequence `(q_row0, n_new, past)` for a random ragged decode step
+/// over the current committed lengths.
+fn decode_meta(uptos: &[usize], rng: &mut Rng) -> Vec<(usize, usize, usize)> {
+    let mut q_row0 = 0;
+    uptos
+        .iter()
+        .map(|&u| {
+            let nn = if u >= 2 && rng.below(2) == 1 { 2 } else { 1 };
+            let m = (q_row0, nn, u - nn);
+            q_row0 += nn;
+            m
+        })
+        .collect()
+}
+
+/// Run both routes over identical pool state and assert bit equality.
+fn assert_routes_bit_identical(
+    cfg: &ModelConfig,
+    pool: &BlockPool,
+    tables: &[&BlockTable],
+    rng: &mut Rng,
+    scratch: &mut KvScratch,
+) {
+    let (nh, dh) = (cfg.n_head, cfg.d_model / cfg.n_head);
+    let bt = pool.block_tokens();
+    let uptos: Vec<usize> = tables.iter().map(|t| t.len()).collect();
+    let meta = decode_meta(&uptos, rng);
+    let q_rows = meta.iter().map(|&(_, nn, _)| nn).sum::<usize>();
+    let q = rand_matrix(q_rows, cfg.d_model, rng);
+    for li in 0..cfg.n_layer {
+        for rope in [None, Some(cfg.rope_theta)] {
+            let views = pool.layer_views(tables, li, &uptos, scratch);
+            let seqs: Vec<SeqKv> = views
+                .into_iter()
+                .zip(&meta)
+                .map(|((kk, vv), &(q0, nn, past))| SeqKv {
+                    q_row0: q0,
+                    n_new: nn,
+                    past,
+                    segs: KvSegs::F32 { k: kk, v: vv },
+                    seg_tokens: bt,
+                })
+                .collect();
+            let via_scratch = paged_attention(&q, &seqs, nh, dh, rope);
+            drop(seqs);
+            let codes = pool.layer_code_views(tables, li, &uptos);
+            let seqs: Vec<SeqKv> = codes
+                .into_iter()
+                .zip(&meta)
+                .map(|((kk, vv), &(q0, nn, past))| SeqKv {
+                    q_row0: q0,
+                    n_new: nn,
+                    past,
+                    segs: KvSegs::Quant { dtype: pool.dtype(), k: kk, v: vv },
+                    seg_tokens: bt,
+                })
+                .collect();
+            let via_qdomain = paged_attention(&q, &seqs, nh, dh, rope);
+            for (i, (a, b)) in via_scratch.data.iter().zip(&via_qdomain.data).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "layer {li} rope {rope:?} elem {i}: scratch {a} != qdomain {b} ({})",
+                    pool.dtype().tag()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_domain_attention_bit_identical_under_churn() {
+    for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for seed in 0..4u64 {
+            let cfg = tiny_cfg(dtype);
+            // 4-token blocks: every extend crosses boundaries quickly.
+            let mut pool = BlockPool::with_params(&cfg, 1 << 22, 4, dtype);
+            let mut rng = Rng::seed_from_u64(100 * seed + 7);
+            let mut scratch = KvScratch::new();
+            let mut tables: Vec<BlockTable> = Vec::new();
+            for _ in 0..2 {
+                let mut tb = BlockTable::new(cfg.max_seq);
+                let n = 2 + rng.below(7) as usize;
+                extend(&cfg, &mut pool, &mut tb, &mut rng, n, 0.3);
+                tables.push(tb);
+            }
+            for round in 0..8 {
+                // Climbing magnitude: later writes raise the open
+                // block's amax and force requantization of its
+                // already-staged rows.
+                let mag = 0.3 + 0.6 * round as f32;
+                let ti = rng.below(tables.len() as u64) as usize;
+                match rng.below(4) {
+                    0 | 1 => {
+                        let n = 1 + rng.below(9) as usize;
+                        extend(&cfg, &mut pool, &mut tables[ti], &mut rng, n, mag);
+                    }
+                    2 => {
+                        // Truncate to a mid-block length, then write
+                        // fresh rows over the stale quantized tail.
+                        let len = tables[ti].len();
+                        if len >= 3 {
+                            let new_len = 1 + rng.below(len as u64 - 1) as usize;
+                            pool.truncate(&mut tables[ti], new_len);
+                        }
+                        let n = 1 + rng.below(5) as usize;
+                        extend(&cfg, &mut pool, &mut tables[ti], &mut rng, n, mag);
+                    }
+                    _ => {
+                        // Fork, then diverge both sides: the shared
+                        // open block goes through copy-on-write.
+                        if tables.len() < 4 {
+                            let mut f = pool.fork(&tables[ti]);
+                            let n = 1 + rng.below(5) as usize;
+                            extend(&cfg, &mut pool, &mut f, &mut rng, n, mag);
+                            tables.push(f);
+                        }
+                        let n = 1 + rng.below(5) as usize;
+                        extend(&cfg, &mut pool, &mut tables[ti], &mut rng, n, mag);
+                    }
+                }
+                let tb_refs: Vec<&BlockTable> = tables.iter().collect();
+                assert_routes_bit_identical(&cfg, &pool, &tb_refs, &mut rng, &mut scratch);
+            }
+        }
+    }
+}
+
+/// Loose divergence sanity bound against an fp32-pool reference fed the
+/// identical rows. The sharp equivalence claim is the bit-identity test
+/// above — qdomain ≡ scratch — so this pins only the *storage* error of
+/// the quantized pool itself, with deliberately generous bounds (int8:
+/// ~1/254 per-element error, softmax-amplified; fp8-e4m3: ~2^-4
+/// relative, likewise amplified).
+#[test]
+fn quantized_routes_track_f32_reference() {
+    for (dtype, bound) in [(KvDtype::Int8, 0.1f32), (KvDtype::Fp8E4M3, 0.75f32)] {
+        let cfgq = tiny_cfg(dtype);
+        let cfgf = tiny_cfg(KvDtype::F32);
+        let mut pq = BlockPool::with_params(&cfgq, 1 << 22, 4, dtype);
+        let mut pf = BlockPool::with_params(&cfgf, 1 << 22, 4, KvDtype::F32);
+        let mut tq = BlockTable::new(cfgq.max_seq);
+        let mut tf = BlockTable::new(cfgf.max_seq);
+        let mut rng = Rng::seed_from_u64(23);
+        let (d, tokens) = (cfgq.d_model, 20usize);
+        pq.prepare_tokens(&mut tq, tokens);
+        pf.prepare_tokens(&mut tf, tokens);
+        for pos in 0..tokens {
+            for li in 0..cfgq.n_layer {
+                let k: Vec<f32> = (0..d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                let v: Vec<f32> = (0..d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                pq.write_row(&tq, li, pos, &k, &v);
+                pf.write_row(&tf, li, pos, &k, &v);
+            }
+        }
+        let toks: Vec<u8> = (0..tokens as u8).collect();
+        pq.commit(&mut tq, &toks);
+        pf.commit(&mut tf, &toks);
+        let (nh, dh) = (cfgq.n_head, cfgq.d_model / cfgq.n_head);
+        let bt = pq.block_tokens();
+        let uptos = [tokens];
+        let q = rand_matrix(1, d, &mut rng);
+        let mut scratch = KvScratch::new();
+        for rope in [None, Some(cfgq.rope_theta)] {
+            let mk_seq = |kk, vv| SeqKv {
+                q_row0: 0,
+                n_new: 1,
+                past: tokens - 1,
+                segs: KvSegs::Quant { dtype, k: kk, v: vv },
+                seg_tokens: bt,
+            };
+            let codes = pq.layer_code_views(&[&tq], 0, &uptos);
+            let (kk, vv) = codes.into_iter().next().unwrap();
+            let out_q = paged_attention(&q, &[mk_seq(kk, vv)], nh, dh, rope);
+            let views = pf.layer_views(&[&tf], 0, &uptos, &mut scratch);
+            let (kk, vv) = views.into_iter().next().unwrap();
+            let seq = SeqKv {
+                q_row0: 0,
+                n_new: 1,
+                past: tokens - 1,
+                segs: KvSegs::F32 { k: kk, v: vv },
+                seg_tokens: bt,
+            };
+            let out_f = paged_attention(&q, &[seq], nh, dh, rope);
+            let worst = out_q
+                .data
+                .iter()
+                .zip(&out_f.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                worst.is_finite() && worst < bound,
+                "{} rope {rope:?}: divergence {worst} exceeds {bound}",
+                dtype.tag()
+            );
+        }
+    }
+}
+
+/// Scratch-capacity reuse (the scheduler holds one [`KvScratch`] for
+/// its whole lifetime): after a cold round sizes the arena, repeated
+/// `layer_views` rounds of the same shape must not allocate. Growing a
+/// sequence may allocate again (buffers regrow once), after which the
+/// new shape is warm too.
+#[test]
+fn layer_views_warm_rounds_do_not_allocate() {
+    let cfg = tiny_cfg(KvDtype::Int8);
+    let mut pool = BlockPool::with_params(&cfg, 1 << 22, 4, KvDtype::Int8);
+    let mut rng = Rng::seed_from_u64(5);
+    let mut tables: Vec<BlockTable> = Vec::new();
+    for n in [7usize, 11] {
+        let mut tb = BlockTable::new(cfg.max_seq);
+        extend(&cfg, &mut pool, &mut tb, &mut rng, n, 1.0);
+        tables.push(tb);
+    }
+    let tb_refs: Vec<&BlockTable> = tables.iter().collect();
+    let uptos: Vec<usize> = tb_refs.iter().map(|t| t.len()).collect();
+    let mut scratch = KvScratch::new();
+    for li in 0..cfg.n_layer {
+        let _ = pool.layer_views(&tb_refs, li, &uptos, &mut scratch);
+    }
+    let warm = scratch.alloc_events();
+    assert!(warm > 0, "cold round must have sized the arena");
+    for _ in 0..10 {
+        for li in 0..cfg.n_layer {
+            let _ = pool.layer_views(&tb_refs, li, &uptos, &mut scratch);
+        }
+    }
+    assert_eq!(scratch.alloc_events(), warm, "warm rounds must not allocate");
+    // Grow one sequence: the next round may regrow buffers (bounded),
+    // and the new shape is immediately warm after that.
+    drop(tb_refs);
+    extend(&cfg, &mut pool, &mut tables[0], &mut rng, 16, 1.0);
+    let tb_refs: Vec<&BlockTable> = tables.iter().collect();
+    let uptos: Vec<usize> = tb_refs.iter().map(|t| t.len()).collect();
+    for li in 0..cfg.n_layer {
+        let _ = pool.layer_views(&tb_refs, li, &uptos, &mut scratch);
+    }
+    let regrown = scratch.alloc_events();
+    for _ in 0..10 {
+        for li in 0..cfg.n_layer {
+            let _ = pool.layer_views(&tb_refs, li, &uptos, &mut scratch);
+        }
+    }
+    assert_eq!(scratch.alloc_events(), regrown, "grown shape must be warm after one round");
+}
