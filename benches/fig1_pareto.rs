@@ -22,7 +22,7 @@ fn main() {
         let ecfg = harness::eval_cfg_for(&model, false);
         let mut table = Table::new(
             &format!("Fig 1: throughput vs Δppl Pareto — {mname}"),
-            &["Configuration", "Family", "EffTput", "ppl", "Δppl%"],
+            &["Configuration", "Family", "EffTput", "weight MiB", "vs dense", "ppl", "Δppl%"],
         );
         let mut baseline = f64::NAN;
         for cfg_str in harness::table2_configs() {
@@ -43,10 +43,15 @@ fn main() {
                     }
                     let delta = (r.ppl.ppl - baseline) / baseline * 100.0;
                     eprintln!("  {mname} {cfg_str}: {:.3} ({delta:+.2}%)", r.ppl.ppl);
+                    // Actual packed resident bytes (codes + scales +
+                    // sparse metadata), not the analytic bits/weight —
+                    // `vs dense` is the honest compression ratio.
                     table.row(vec![
                         cfg_str.to_string(),
                         family.to_string(),
                         format!("{:.2}", r.effective_throughput),
+                        format!("{:.2}", r.weight_bytes as f64 / (1024.0 * 1024.0)),
+                        format!("{:.2}x", r.dense_weight_bytes as f64 / r.weight_bytes as f64),
                         format!("{:.3}", r.ppl.ppl),
                         format!("{delta:+.2}"),
                     ]);

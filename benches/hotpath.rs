@@ -1,7 +1,9 @@
 //! Hot-path microbenchmarks: the kernels the eval/serving stack spends
 //! its time in. Drives the §Perf optimization loop (EXPERIMENTS.md).
 //!
-//! Covers: dense GEMM, packed N:M SpMM at several densities (validating
+//! Covers: dense GEMM, the fused quantized-weight GEMM (`gemm-q8` /
+//! `gemm-q4`: QuantMat codes decoded in register, `matmul_q_into`),
+//! packed N:M SpMM at several densities (validating
 //! `PACK_DENSITY_THRESHOLD`) plus the fused-dequant int8-value SpMM,
 //! paged attention over the KV pool (f32 zero-copy, quantized via the
 //! scratch-dequant route vs the quantized-domain `kv::qattn` route),
@@ -22,8 +24,9 @@ use sdq::perfmodel::simtc::TensorCoreSpec;
 use sdq::sdq::nm::{topn_block_mask, NmPattern};
 use sdq::sdq::packed::pack;
 use sdq::sdq::pipeline::compress_layer;
-use sdq::sdq::quantize::fake_quant_dynamic_inplace;
-use sdq::tensor::{matmul_into, Matrix};
+use sdq::sdq::qmat::QuantMat;
+use sdq::sdq::quantize::{fake_quant_dynamic_inplace, quantize_tensor, VsQuantCfg};
+use sdq::tensor::{matmul_into, matmul_q_into, Matrix};
 use sdq::util::bench::{bench, report, Measurement, Table};
 use sdq::util::rng::Rng;
 
@@ -100,6 +103,35 @@ fn main() {
         report(&m);
         table.row(vec![m.name.clone(), format!("{:.3}", m.median_ms()),
                        gflops(&m, 2.0 * (t * k * o) as f64)]);
+    }
+
+    // Fused quantized-weight GEMM: decode QuantMat codes (int8 bytes /
+    // fp4 nibbles × fp8 scales) in register inside the same micro-tile
+    // schedule as the dense GEMM above. Bit-identical output to
+    // dequantize-then-matmul_into (tests/qmat.rs) at ~4× / ~7× less
+    // weight traffic; this measures the decode overhead against the
+    // `gemm 512x384x384` dense row.
+    {
+        let (t, k, o) = (512usize, 384usize, 384usize);
+        let x = rand_matrix(t, k, 7);
+        let w = rand_matrix(o, k, 8);
+        let mut c = Matrix::zeros(t, o);
+        for (name, fmt) in
+            [("gemm-q8", NumFormat::Int(8)), ("gemm-q4", NumFormat::Fp4E2M1)]
+        {
+            let qt = quantize_tensor(
+                &w,
+                VsQuantCfg { fmt, qvec: 16, scale_fmt: NumFormat::Fp8E4M3 },
+            );
+            let qm = QuantMat::try_from_tensor(&qt).expect("format must pack");
+            let m = bench(&format!("{name} {t}x{k}x{o}"), mrt(300), || {
+                matmul_q_into(&x, &qm, &mut c);
+                std::hint::black_box(&c);
+            });
+            report(&m);
+            table.row(vec![m.name.clone(), format!("{:.3}", m.median_ms()),
+                           gflops(&m, 2.0 * (t * k * o) as f64)]);
+        }
     }
 
     // Packed SpMM vs dense at several densities (threshold validation),

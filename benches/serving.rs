@@ -43,6 +43,15 @@
 //! on how repetitive the model's output is and is reported, not
 //! asserted.
 //!
+//! The `weight MiB / w streamed KiB / w avoided KiB` columns report the
+//! **actual packed weight bytes** (quantized codes + scales + N:M
+//! sparse metadata — `Model::weight_bytes`) and the per-run weight
+//! traffic split (`Metrics::weight_bytes_streamed/avoided`): compressed
+//! configs serve from real codes (`QuantMat` planes decoded in-register
+//! by `matmul_q_into`, value-packed SpMM), so every int8-bearing config
+//! is asserted to stream ≥3.5× fewer weight bytes than its dense f32
+//! view.
+//!
 //! Emits `BENCH_serving.json` (cwd) plus the usual
 //! `target/bench-results/serving.json` record so the perf trajectory is
 //! tracked across PRs (and gated by CI's `bench-regression` job against
@@ -170,6 +179,9 @@ fn main() {
             "evict",
             "kv dequant KiB",
             "kv avoided KiB",
+            "weight MiB",
+            "w streamed KiB",
+            "w avoided KiB",
             "div vs f32",
             "spec drafted",
             "spec accepted",
@@ -200,6 +212,22 @@ fn main() {
             None => synth_calib(&model),
         };
         model.compress(&cfg, &calib).unwrap();
+        // Honest weight accounting: actual packed resident bytes (codes
+        // + scales + N:M metadata) and the per-forward stream split.
+        // Every int8-bearing compressed config must stream ≥3.5× fewer
+        // weight bytes than its dense f32 view — the point of carrying
+        // real codes (QuantMat / value-quantized SpMM) to serving time.
+        let weight_mib = model.weight_bytes() as f64 / (1024.0 * 1024.0);
+        let (w_streamed, w_avoided) = model.weight_stream_bytes();
+        if *cfg_str != "Dense-WA16" {
+            let dense_w = (w_streamed + w_avoided) as f64;
+            assert!(
+                dense_w / w_streamed as f64 >= 3.5,
+                "{cfg_str}: packed planes stream {w_streamed} of {dense_w} dense bytes \
+                 (ratio {:.2} < 3.5)",
+                dense_w / w_streamed as f64
+            );
+        }
         for &max_active in widths {
             // Same prompts for both modes — the A/B must only vary the
             // serving engine.
@@ -332,6 +360,9 @@ fn main() {
                     batched.kv_evictions.to_string(),
                     format!("{:.1}", batched.kv_dequant_bytes as f64 / 1024.0),
                     format!("{:.1}", batched.kv_dequant_bytes_avoided as f64 / 1024.0),
+                    format!("{weight_mib:.2}"),
+                    format!("{:.1}", batched.weight_bytes_streamed as f64 / 1024.0),
+                    format!("{:.1}", batched.weight_bytes_avoided as f64 / 1024.0),
                     divergence.to_string(),
                     "0".to_string(),
                     "0".to_string(),
@@ -411,6 +442,9 @@ fn main() {
                     sm.kv_evictions.to_string(),
                     format!("{:.1}", sm.kv_dequant_bytes as f64 / 1024.0),
                     format!("{:.1}", sm.kv_dequant_bytes_avoided as f64 / 1024.0),
+                    format!("{weight_mib:.2}"),
+                    format!("{:.1}", sm.weight_bytes_streamed as f64 / 1024.0),
+                    format!("{:.1}", sm.weight_bytes_avoided as f64 / 1024.0),
                     "0".to_string(),
                     sm.spec_drafted.to_string(),
                     sm.spec_accepted.to_string(),
@@ -533,6 +567,9 @@ fn main() {
                     pre.kv_evictions.to_string(),
                     format!("{:.1}", pre.kv_dequant_bytes as f64 / 1024.0),
                     format!("{:.1}", pre.kv_dequant_bytes_avoided as f64 / 1024.0),
+                    format!("{weight_mib:.2}"),
+                    format!("{:.1}", pre.weight_bytes_streamed as f64 / 1024.0),
+                    format!("{:.1}", pre.weight_bytes_avoided as f64 / 1024.0),
                     divergence.to_string(),
                     "0".to_string(),
                     "0".to_string(),

@@ -27,6 +27,16 @@ with ``--update`` from a trusted run. If the hotpath result file is
 absent (e.g. a serving-only invocation) the hotpath gate is skipped
 with a note rather than failing.
 
+Row coverage is gated **symmetrically** in both tables: a baseline row
+missing from the current run fails (a bench case silently disappeared),
+and a current row missing from the baseline fails too (a new bench case
+was added without recording it — add the row to the baseline file with
+a ``null`` metric, or refresh with ``--update``). New rows therefore
+always require a one-time baseline touch: commit them with ``null``
+metrics (record-only until trusted hardware arms them via
+``python3 ci/check_bench.py --update``), never with numbers measured on
+a developer machine.
+
 Exit status is non-zero on any failure, which fails the CI job.
 
 Usage:
@@ -87,6 +97,15 @@ def gate_hotpath(cur_rows, base_rows, tol, failures, notes):
     full runs). A null baseline median is record-only.
     """
     current = {str(r.get("bench")): r for r in cur_rows}
+    # Symmetric coverage: a bench case added without a baseline row is
+    # as much a gate escape as one that silently disappeared.
+    base_names = {str(b.get("bench")) for b in base_rows}
+    for name in current:
+        if name not in base_names:
+            failures.append(
+                f"[hotpath {name}] row missing from baseline — add it to the "
+                f"baseline file with a null 'median ms' (or run --update)"
+            )
     for base in base_rows:
         name = str(base.get("bench"))
         cur = current.get(name)
@@ -150,6 +169,17 @@ def main():
     tol = args.tolerance
     failures = []
     notes = []
+
+    # Symmetric coverage (mirrors the per-baseline-row missing check
+    # below): every current row must have a baseline row, so new bench
+    # cases land with an explicit — initially null — baseline entry.
+    base_keys = {row_key(b) for b in base_rows}
+    for k, _row in current.items():
+        if k not in base_keys:
+            failures.append(
+                f"[{' / '.join(k)}] row missing from baseline — add it with a "
+                f"null 'batched tok/s' (or run --update)"
+            )
 
     for base in base_rows:
         k = row_key(base)

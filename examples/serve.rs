@@ -6,9 +6,15 @@
 //!       [--kv-dtype f32|fp8-e4m3|int8]
 //!       [--spec off|ngram|sdq-draft] [--spec-k 4]
 //!       [--draft-config Q-VSQuant-WAint4]
-//!       [--preempt] [--max-resident 32]`
+//!       [--preempt] [--max-resident 32] [--no-packed-weights]`
 //!
 //! Flags:
+//! * `--no-packed-weights` — strip the packed quantized weight planes
+//!   (`QuantMat` codes + fp8 scales) after compression, forcing every
+//!   GEMM back onto the dequantized dense f32 view. Greedy output is
+//!   bit-identical either way; only `w_streamed` / `w_avoided` in the
+//!   metrics move (the packed int8 plane streams ≥3.5× fewer weight
+//!   bytes per decode round).
 //! * `--preempt` — preemptive scheduling: admission charges resident
 //!   KV blocks instead of worst-case footprints (oversubscription), and
 //!   under pressure the scheduler swaps the lowest-priority active
@@ -64,6 +70,10 @@ fn main() -> sdq::Result<()> {
     let ds = harness::load_dataset()?;
     let calib = harness::calibrate(&model, &ds, 1024, harness::needs_gram(&cfg));
     model.compress(&cfg, &calib)?;
+    if args.has("no-packed-weights") {
+        model.strip_packed_weights();
+        println!("packed weight planes stripped: GEMMs run on the dense f32 view");
+    }
     let spec = match spec_mode.as_str() {
         "off" => None,
         "ngram" => Some(SpecPolicy::ngram(spec_k)),

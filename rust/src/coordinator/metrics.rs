@@ -156,6 +156,19 @@ pub struct Metrics {
     ///
     /// [`BlockPool::layer_code_views`]: crate::kv::BlockPool::layer_code_views
     pub kv_dequant_bytes_avoided: u64,
+    /// Weight bytes the serving forwards actually streamed: packed
+    /// codes + scales + sparse gather metadata for compressed planes,
+    /// f32 for plain ones ([`Linear::weight_stream_bytes`] summed over
+    /// layers × forward calls — deterministic analytic accounting, no
+    /// hot-loop counters).
+    ///
+    /// [`Linear::weight_stream_bytes`]: crate::model::Linear::weight_stream_bytes
+    pub weight_bytes_streamed: u64,
+    /// Weight bytes those same forwards would have streamed serving
+    /// every plane as dense f32, minus what they streamed — the traffic
+    /// the packed quantized weight plane (`sdq::qmat`) and packed SpMM
+    /// forms avoided.
+    pub weight_bytes_avoided: u64,
     pub ttft: Histogram,
     pub total_latency: Histogram,
     /// Wall time the engine spent serving (for throughput).
@@ -265,6 +278,29 @@ impl Metrics {
         self.kv_dequant_bytes_avoided as f64 / total as f64
     }
 
+    /// Fraction of would-be dense f32 weight traffic the packed planes
+    /// avoided: `avoided / (streamed + avoided)`. ≈0.73 for an
+    /// all-int8-plane model (~3.76× fewer bytes), `0.0` both for
+    /// uncompressed models (nothing avoided) and before any forward —
+    /// deliberately not NaN, same `BENCH_serving.json` contract as
+    /// [`Self::prefix_hit_rate`].
+    pub fn weight_stream_avoided_rate(&self) -> f64 {
+        let total = self.weight_bytes_streamed + self.weight_bytes_avoided;
+        if total == 0 {
+            return 0.0;
+        }
+        self.weight_bytes_avoided as f64 / total as f64
+    }
+
+    /// Record one forward pass's weight traffic (precomputed per-model
+    /// constants from [`Model::weight_stream_bytes`]).
+    ///
+    /// [`Model::weight_stream_bytes`]: crate::model::Model::weight_stream_bytes
+    pub fn record_weight_stream(&mut self, streamed: u64, avoided: u64) {
+        self.weight_bytes_streamed += streamed;
+        self.weight_bytes_avoided += avoided;
+    }
+
     /// Mean decode GEMM row width (weight-stream amortization factor).
     pub fn mean_decode_width(&self) -> f64 {
         if self.decode_batches == 0 {
@@ -327,6 +363,7 @@ impl Metrics {
              width_mean={:.2} width_max={} prefill_width_mean={:.2} \
              kv_peak={:.1}KiB pool_util_peak={:.2} prefix_hit={:.2} \
              dequant={:.1}KiB dequant_avoided={:.1}KiB \
+             w_streamed={:.1}KiB w_avoided={:.1}KiB \
              evictions={} preempt={} resumes={} swap={:.1}KiB reprefill={} \
              spec={} accept={:.2} tok/round={:.2} \
              ttft_mean={:.1}ms ttft_p99={:.1}ms total_mean={:.1}ms",
@@ -342,6 +379,8 @@ impl Metrics {
             self.prefix_hit_rate(),
             self.kv_dequant_bytes as f64 / 1024.0,
             self.kv_dequant_bytes_avoided as f64 / 1024.0,
+            self.weight_bytes_streamed as f64 / 1024.0,
+            self.weight_bytes_avoided as f64 / 1024.0,
             self.kv_evictions,
             self.preemptions,
             self.resumes,
@@ -468,6 +507,7 @@ mod tests {
             ("resume_reprefill_rate", m.resume_reprefill_rate()),
             ("pool_utilization_peak", m.pool_utilization_peak),
             ("kv_dequant_avoided_rate", m.kv_dequant_avoided_rate()),
+            ("weight_stream_avoided_rate", m.weight_stream_avoided_rate()),
         ]
     }
 
@@ -510,6 +550,21 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("dequant=4.0KiB"), "summary must surface dequant traffic: {s}");
         assert!(s.contains("dequant_avoided=4.0KiB"));
+    }
+
+    #[test]
+    fn weight_stream_counters_and_rate() {
+        let mut m = Metrics::default();
+        assert_eq!(m.weight_stream_avoided_rate(), 0.0, "cold rate is 0.0, never NaN");
+        // Two forwards of an int8-plane model: ~3.76× fewer bytes each.
+        m.record_weight_stream(1088, 3008);
+        m.record_weight_stream(1088, 3008);
+        assert_eq!(m.weight_bytes_streamed, 2176);
+        assert_eq!(m.weight_bytes_avoided, 6016);
+        assert!((m.weight_stream_avoided_rate() - 6016.0 / 8192.0).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("w_streamed=2.1KiB"), "summary must surface weight traffic: {s}");
+        assert!(s.contains("w_avoided=5.9KiB"));
     }
 
     #[test]

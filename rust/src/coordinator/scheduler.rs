@@ -136,6 +136,15 @@ pub struct Scheduler<'m> {
     round_idx: u64,
     /// Monotonic admission stamp — the preemption priority order.
     arrival_seq: u64,
+    /// Weight bytes one full forward streams / avoids
+    /// ([`Model::weight_stream_bytes`]) — precomputed once (the model
+    /// is immutable behind `&'m`), added to the metrics at every
+    /// forward call site. Analytic accounting: deterministic, no
+    /// hot-loop counters, and identical for fused and per-sequence
+    /// schedules per *forward call* — which is exactly the point: the
+    /// fused paths issue fewer calls.
+    w_stream_per_fwd: u64,
+    w_avoid_per_fwd: u64,
     pub metrics: Metrics,
 }
 
@@ -174,6 +183,7 @@ impl<'m> Scheduler<'m> {
             pool_block_bytes: pool.block_bytes(),
             ..Default::default()
         };
+        let (w_stream_per_fwd, w_avoid_per_fwd) = model.weight_stream_bytes();
         Scheduler {
             model,
             policy,
@@ -184,8 +194,15 @@ impl<'m> Scheduler<'m> {
             spec,
             round_idx: 0,
             arrival_seq: 0,
+            w_stream_per_fwd,
+            w_avoid_per_fwd,
             metrics,
         }
+    }
+
+    /// Account `n` full weight streams (one per forward call issued).
+    fn note_weight_stream(&mut self, n: u64) {
+        self.metrics.record_weight_stream(n * self.w_stream_per_fwd, n * self.w_avoid_per_fwd);
     }
 
     pub fn active(&self) -> usize {
@@ -294,6 +311,7 @@ impl<'m> Scheduler<'m> {
                     &mut self.scratch,
                 );
                 self.metrics.resume_reprefill_tokens += missing.len() as u64;
+                self.note_weight_stream(1);
             }
             debug_assert_eq!(tb.len(), snap.len(), "resume rebuilt the wrong length");
             f.table = Some(tb);
@@ -486,6 +504,7 @@ impl<'m> Scheduler<'m> {
                     f.first_token = Some(Instant::now());
                 }
                 self.metrics.record_prefill_batch(admitted.len());
+                self.note_weight_stream(1);
             } else {
                 // Per-prompt prefill baseline (A/B lever): same paged
                 // machinery, weights re-streamed per prompt.
@@ -500,6 +519,7 @@ impl<'m> Scheduler<'m> {
                     f.generated.push(tok);
                     f.first_token = Some(Instant::now());
                     self.metrics.record_prefill_batch(1);
+                    self.note_weight_stream(1);
                 }
             }
             self.metrics.prefill_tokens += suffixes.iter().map(|s| s.len() as u64).sum::<u64>();
@@ -629,6 +649,7 @@ impl<'m> Scheduler<'m> {
             f.generated.push(tok);
         }
         self.metrics.record_decode_batch(decode_idx.len());
+        self.note_weight_stream(1);
     }
 
     /// Fused speculative verify (f32 pools): one ragged forward scores
@@ -690,6 +711,7 @@ impl<'m> Scheduler<'m> {
             f.generated.extend_from_slice(&emitted);
         }
         self.metrics.record_decode_batch(decode_idx.len());
+        self.note_weight_stream(1);
     }
 
     /// Stepwise speculative verify (quantized pools). A quantized slab
@@ -736,6 +758,7 @@ impl<'m> Scheduler<'m> {
                 }
             }
             self.metrics.record_decode_batch(idxs.len());
+            self.note_weight_stream(1);
             cur = next;
             step += 1;
         }
@@ -776,6 +799,7 @@ impl<'m> Scheduler<'m> {
             f.first_token = Some(Instant::now());
             f.cache = Some(cache);
             self.metrics.record_prefill_batch(1);
+            self.note_weight_stream(1);
         }
         self.active.append(&mut admitted);
 
@@ -799,6 +823,9 @@ impl<'m> Scheduler<'m> {
         for _ in 0..width {
             self.metrics.record_decode_batch(1);
         }
+        // Each batch-1 decode re-streamed the full weights — the
+        // baseline's per-forward traffic the fused path amortizes away.
+        self.note_weight_stream(width as u64);
         self.metrics.decode_time += td.elapsed();
         self.metrics.decode_rounds += 1;
         let resident = self.kv_bytes_in_use();
@@ -859,6 +886,14 @@ mod tests {
         }
         assert_eq!(sched.metrics.requests_completed, 6);
         assert_eq!(sched.metrics.tokens_generated, 30);
+        // Plain f32 model: every forward streamed dense weights and
+        // avoided nothing — exactly (prefill + decode calls) × model f32
+        // bytes of traffic.
+        let (per_fwd, avoid) = model.weight_stream_bytes();
+        assert_eq!(avoid, 0);
+        let calls = sched.metrics.prefill_batches + sched.metrics.decode_batches;
+        assert_eq!(sched.metrics.weight_bytes_streamed, calls * per_fwd);
+        assert_eq!(sched.metrics.weight_bytes_avoided, 0);
     }
 
     #[test]

@@ -64,6 +64,21 @@ impl NumFormat {
         matches!(self, NumFormat::Int(_))
     }
 
+    /// Physical bits per code in packed weight storage
+    /// ([`crate::sdq::qmat::QuantMat`]): 4 for formats whose codes fit a
+    /// nibble (fp4-e2m1, int2..int4), 8 for int5..int8, `None` for
+    /// formats the packed plane does not store (fp8/fp16/fp32 weights
+    /// stay dense f32 — no byte win worth a decode step, or no integral
+    /// code representation at all).
+    pub fn packed_code_bits(&self) -> Option<u32> {
+        match self {
+            NumFormat::Fp4E2M1 => Some(4),
+            NumFormat::Int(b) if *b <= 4 => Some(4),
+            NumFormat::Int(b) if *b <= 8 => Some(8),
+            _ => None,
+        }
+    }
+
     /// True for unsigned formats (only valid for non-negative inputs).
     pub fn is_unsigned(&self) -> bool {
         matches!(self, NumFormat::UFp8E6M2)
@@ -147,6 +162,12 @@ impl FromStr for NumFormat {
         }
     }
 }
+
+/// The eight non-negative FP4-E2M1 magnitudes in nibble-index order:
+/// `FP4_GRID[m]` is the value whose packed sign-magnitude nibble has
+/// magnitude bits `m` (sign lives in bit 3). Shared by the packed
+/// weight codec ([`crate::sdq::qmat`]) and its round-trip tests.
+pub const FP4_GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
 
 /// Round-half-to-even for scalar f32 (matches hardware RNE rounding).
 /// Uses the `roundeven` intrinsic (§Perf iteration 4: branch-free int
@@ -314,6 +335,36 @@ mod tests {
         assert_eq!(f.quantize(100.0), 6.0);
         assert_eq!(f.quantize(0.2), 0.0); // below 0.25 → 0
         assert_eq!(f.quantize(0.3), 0.5);
+    }
+
+    #[test]
+    fn fp4_grid_const_matches_quantizer_fixed_points() {
+        for (m, g) in FP4_GRID.iter().enumerate() {
+            assert_eq!(NumFormat::Fp4E2M1.quantize(*g), *g, "index {m}");
+        }
+        // Strictly increasing → nibble decode is injective on magnitudes.
+        for w in FP4_GRID.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn packed_code_bits_covers_exactly_the_low_bit_formats() {
+        assert_eq!(NumFormat::Fp4E2M1.packed_code_bits(), Some(4));
+        assert_eq!(NumFormat::Int(2).packed_code_bits(), Some(4));
+        assert_eq!(NumFormat::Int(4).packed_code_bits(), Some(4));
+        assert_eq!(NumFormat::Int(5).packed_code_bits(), Some(8));
+        assert_eq!(NumFormat::Int(8).packed_code_bits(), Some(8));
+        for fmt in [
+            NumFormat::Fp32,
+            NumFormat::Fp16,
+            NumFormat::Fp8E4M3,
+            NumFormat::Fp8E5M2,
+            NumFormat::UFp8E6M2,
+            NumFormat::Int(12),
+        ] {
+            assert_eq!(fmt.packed_code_bits(), None, "{fmt}");
+        }
     }
 
     #[test]

@@ -110,7 +110,15 @@ pub struct ConfigEval {
     pub config: String,
     pub ppl: PplResult,
     pub effective_throughput: f64,
+    /// Analytic bits/weight from the perf model (format arithmetic).
     pub bits_per_weight: f64,
+    /// Actual packed resident bytes across every linear: quantized
+    /// codes + scales + N:M sparse metadata (`Model::weight_bytes`) —
+    /// the honest size, where `bits_per_weight` is the formula.
+    pub weight_bytes: u64,
+    /// Dense f32 bytes of the same linears (4 bytes per weight): the
+    /// denominator for the real compression ratio.
+    pub dense_weight_bytes: u64,
     pub mean_rel_err: f64,
     pub reports: Vec<LayerReport>,
 }
@@ -126,6 +134,8 @@ pub fn eval_config(
     let mut model = base.clone();
     let calib = calibrate(&model, ds, ecfg.calib_tokens, needs_gram(cfg));
     let reports = model.compress(cfg, &calib)?;
+    let weight_bytes = model.weight_bytes();
+    let (streamed, avoided) = model.weight_stream_bytes();
     let ppl = perplexity(&model, ds, Split::Test, ecfg.batch, ecfg.seq, ecfg.eval_tokens);
     let mean_rel_err =
         reports.iter().map(|r| r.rel_err).sum::<f64>() / reports.len().max(1) as f64;
@@ -134,6 +144,8 @@ pub fn eval_config(
         ppl,
         effective_throughput: cfg.effective_throughput(),
         bits_per_weight: crate::perfmodel::bits_per_weight(cfg),
+        weight_bytes,
+        dense_weight_bytes: streamed + avoided,
         mean_rel_err,
         reports,
     })

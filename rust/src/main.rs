@@ -145,7 +145,7 @@ fn compress(args: &Args) -> Result<()> {
         let tensors: Vec<(String, sdq::tensor::Matrix)> = model
             .linears()
             .iter()
-            .map(|l| (l.name.clone(), l.lin.dense_view()))
+            .map(|l| (l.name.clone(), l.lin.dense_view().into_owned()))
             .collect();
         let refs: Vec<(String, &sdq::tensor::Matrix)> =
             tensors.iter().map(|(n, m)| (n.clone(), m)).collect();

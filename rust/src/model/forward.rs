@@ -1,4 +1,11 @@
 //! Full-sequence batched forward pass (perplexity eval + calibration).
+//!
+//! Linear layers go through [`super::Linear::forward_into`], so the
+//! eval path exercises the same dispatch as serving — including the
+//! packed quantized weight plane (`sdq::qmat` via
+//! [`crate::tensor::matmul_q_into`]), which is bit-identical to the
+//! dequantized f32 GEMM and therefore leaves every perplexity number
+//! unchanged.
 
 
 use super::ops::*;

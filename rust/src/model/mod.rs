@@ -33,6 +33,8 @@ pub mod generate;
 pub mod ops;
 pub mod paged;
 
+use std::borrow::Cow;
+
 use anyhow::bail;
 
 use crate::artifacts::WeightBundle;
@@ -40,7 +42,7 @@ use crate::sdq::calib::CalibStats;
 use crate::sdq::config::CompressionConfig;
 use crate::sdq::pipeline::{compress_layer, CompressedLayer, ExecPath, LayerReport};
 use crate::sdq::quantize::fake_quant_dynamic_inplace;
-use crate::tensor::{matmul_into, Matrix};
+use crate::tensor::{matmul_into, matmul_q_into, Matrix};
 use crate::Result;
 
 /// Architecture flavour.
@@ -190,11 +192,16 @@ impl Linear {
 
     /// `out = x · Wᵀ` with whatever quantization/sparsity this layer
     /// carries. `out` is fully overwritten.
+    ///
+    /// Dispatch per plane: packed SpMM when a structured-sparse form
+    /// exists, else the fused quantized GEMM over real packed codes
+    /// ([`matmul_q_into`], bit-identical to the f32 GEMM — see
+    /// `sdq::qmat`), else the dense f32 GEMM.
     pub fn forward_into(&self, x: &Matrix, out: &mut Matrix) {
         match self {
             Linear::Plain(w) => matmul_into(x, w, out),
             Linear::Compressed(c) => match &c.path {
-                ExecPath::Dense { w, act_fmt, packed } => {
+                ExecPath::Dense { w, act_fmt, packed, qw } => {
                     let xq;
                     let x_eff = match act_fmt {
                         Some(fmt) => {
@@ -205,41 +212,50 @@ impl Linear {
                         }
                         None => x,
                     };
-                    match packed {
-                        Some(p) => {
+                    match (packed, qw) {
+                        (Some(p), _) => {
                             out.data.fill(0.0);
                             p.spmm_into(x_eff, out);
                         }
-                        None => matmul_into(x_eff, w, out),
+                        (None, Some(q)) => matmul_q_into(x_eff, q, out),
+                        (None, None) => matmul_into(x_eff, w, out),
                     }
                 }
                 ExecPath::Decomposed {
                     outlier_w,
                     outlier_packed,
+                    outlier_q,
                     outlier_act,
                     inlier_w,
                     inlier_packed,
+                    inlier_q,
                     inlier_act,
                 } => {
                     // Y = Q_o(X)·W_oᵀ + Q_i(X)·W_iᵀ  (Fig. 8)
                     out.data.fill(0.0);
                     let mut xo = x.clone();
                     fake_quant_dynamic_inplace(&mut xo, *outlier_act, c.qvec);
-                    match outlier_packed {
-                        Some(p) => p.spmm_into(&xo, out),
-                        None => {
+                    match (outlier_packed, outlier_q) {
+                        (Some(p), _) => p.spmm_into(&xo, out),
+                        (None, q) => {
                             let mut t = Matrix::zeros(out.rows, out.cols);
-                            matmul_into(&xo, outlier_w, &mut t);
+                            match q {
+                                Some(q) => matmul_q_into(&xo, q, &mut t),
+                                None => matmul_into(&xo, outlier_w, &mut t),
+                            }
                             ops::add_inplace(out, &t);
                         }
                     }
                     let mut xi = x.clone();
                     fake_quant_dynamic_inplace(&mut xi, *inlier_act, c.qvec);
-                    match inlier_packed {
-                        Some(p) => p.spmm_into(&xi, out),
-                        None => {
+                    match (inlier_packed, inlier_q) {
+                        (Some(p), _) => p.spmm_into(&xi, out),
+                        (None, q) => {
                             let mut t = Matrix::zeros(out.rows, out.cols);
-                            matmul_into(&xi, inlier_w, &mut t);
+                            match q {
+                                Some(q) => matmul_q_into(&xi, q, &mut t),
+                                None => matmul_into(&xi, inlier_w, &mut t),
+                            }
                             ops::add_inplace(out, &t);
                         }
                     }
@@ -249,15 +265,77 @@ impl Linear {
     }
 
     /// Underlying dense weight view (original or dequantized-summed).
-    pub fn dense_view(&self) -> Matrix {
+    /// Borrows when a dense matrix already exists (`Plain` and every
+    /// `Dense` path); only the decomposed two-plane sum allocates.
+    pub fn dense_view(&self) -> Cow<'_, Matrix> {
         match self {
-            Linear::Plain(w) => w.clone(),
+            Linear::Plain(w) => Cow::Borrowed(w),
             Linear::Compressed(c) => match &c.path {
-                ExecPath::Dense { w, .. } => w.clone(),
+                ExecPath::Dense { w, .. } => Cow::Borrowed(w),
                 ExecPath::Decomposed { outlier_w, inlier_w, .. } => {
                     let mut s = outlier_w.clone();
                     ops::add_inplace(&mut s, inlier_w);
-                    s
+                    Cow::Owned(s)
+                }
+            },
+        }
+    }
+
+    /// Weight bytes the serving hot path streams through one forward of
+    /// this layer, and the bytes *avoided* versus streaming the same
+    /// plane(s) as dense f32 — `(streamed, avoided)`. Deterministic
+    /// (depends only on the compressed representation), so the
+    /// scheduler can account traffic without hot-loop counters.
+    pub fn weight_stream_bytes(&self) -> (u64, u64) {
+        fn plane(dense_len: usize, packed: &Option<crate::sdq::packed::PackedNm>,
+                 qw: &Option<crate::sdq::qmat::QuantMat>) -> (u64, u64) {
+            let dense = 4 * dense_len as u64;
+            let streamed = match (packed, qw) {
+                (Some(p), _) => p.stream_bytes(),
+                (None, Some(q)) => q.packed_bytes() as u64,
+                (None, None) => dense,
+            };
+            (streamed, dense.saturating_sub(streamed))
+        }
+        match self {
+            Linear::Plain(w) => (4 * w.len() as u64, 0),
+            Linear::Compressed(c) => match &c.path {
+                ExecPath::Dense { w, packed, qw, .. } => plane(w.len(), packed, qw),
+                ExecPath::Decomposed {
+                    outlier_w, outlier_packed, outlier_q,
+                    inlier_w, inlier_packed, inlier_q, ..
+                } => {
+                    let (so, ao) = plane(outlier_w.len(), outlier_packed, outlier_q);
+                    let (si, ai) = plane(inlier_w.len(), inlier_packed, inlier_q);
+                    (so + si, ao + ai)
+                }
+            },
+        }
+    }
+
+    /// Resident bytes of the representation the serving path streams
+    /// (packed codes + scales + sparse metadata where those exist, f32
+    /// otherwise) — the honest numerator for compression ratios. The
+    /// dequantized f32 views kept for eval paths are not counted.
+    pub fn weight_bytes(&self) -> u64 {
+        fn plane(dense_len: usize, packed: &Option<crate::sdq::packed::PackedNm>,
+                 qw: &Option<crate::sdq::qmat::QuantMat>) -> u64 {
+            match (packed, qw) {
+                (Some(p), _) => p.packed_weight_bytes(),
+                (None, Some(q)) => q.packed_bytes() as u64,
+                (None, None) => 4 * dense_len as u64,
+            }
+        }
+        match self {
+            Linear::Plain(w) => 4 * w.len() as u64,
+            Linear::Compressed(c) => match &c.path {
+                ExecPath::Dense { w, packed, qw, .. } => plane(w.len(), packed, qw),
+                ExecPath::Decomposed {
+                    outlier_w, outlier_packed, outlier_q,
+                    inlier_w, inlier_packed, inlier_q, ..
+                } => {
+                    plane(outlier_w.len(), outlier_packed, outlier_q)
+                        + plane(inlier_w.len(), inlier_packed, inlier_q)
                 }
             },
         }
@@ -405,10 +483,44 @@ impl Model {
     pub fn decompress(&mut self) {
         for nl in self.linears_mut() {
             if let Linear::Compressed(_) = nl.lin {
-                let w = nl.lin.dense_view();
+                let w = nl.lin.dense_view().into_owned();
                 nl.lin = Linear::Plain(w);
             }
         }
+    }
+
+    /// Drop every packed quantized code plane (`qw` / `outlier_q` /
+    /// `inlier_q`), reverting the dense planes to the dequantized f32
+    /// GEMM. A/B switch for the fused weight plane — output must be
+    /// bit-identical either way (`tests/integration.rs` pins it).
+    pub fn strip_packed_weights(&mut self) {
+        for nl in self.linears_mut() {
+            if let Linear::Compressed(c) = &mut nl.lin {
+                match &mut c.path {
+                    ExecPath::Dense { qw, .. } => *qw = None,
+                    ExecPath::Decomposed { outlier_q, inlier_q, .. } => {
+                        *outlier_q = None;
+                        *inlier_q = None;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Sum of [`Linear::weight_stream_bytes`] over all linear layers:
+    /// `(streamed, avoided)` per full weight stream (one decode round
+    /// or one prefill batch — every layer streams once per forward).
+    pub fn weight_stream_bytes(&self) -> (u64, u64) {
+        self.linears().iter().fold((0, 0), |(s, a), nl| {
+            let (ls, la) = nl.lin.weight_stream_bytes();
+            (s + ls, a + la)
+        })
+    }
+
+    /// Sum of [`Linear::weight_bytes`] over all linear layers — actual
+    /// packed size of the serving weight representation.
+    pub fn weight_bytes(&self) -> u64 {
+        self.linears().iter().map(|nl| nl.lin.weight_bytes()).sum()
     }
 }
 
@@ -503,7 +615,8 @@ mod tests {
     #[test]
     fn compress_then_decompress_roundtrips_dense_view() {
         let mut m = tiny_model(Arch::Gpt, 3);
-        let orig: Vec<Matrix> = m.linears().iter().map(|l| l.lin.dense_view()).collect();
+        let orig: Vec<Matrix> =
+            m.linears().iter().map(|l| l.lin.dense_view().into_owned()).collect();
         let calib = crate::sdq::calib::CalibStats::new(false);
         let cfg: CompressionConfig = "Q-VSQuant-WAint8".parse().unwrap();
         let reports = m.compress(&cfg, &calib).unwrap();
@@ -515,6 +628,50 @@ mod tests {
         for (l, o) in m.linears().iter().zip(&orig) {
             let now = l.lin.dense_view();
             assert!(now.rel_frob_dist(o) < 0.02);
+        }
+    }
+
+    #[test]
+    fn plain_dense_view_borrows_without_cloning() {
+        let m = tiny_model(Arch::Gpt, 7);
+        let l = &m.linears()[0].lin;
+        let v = l.dense_view();
+        assert!(matches!(v, Cow::Borrowed(_)));
+        if let Linear::Plain(w) = l {
+            assert!(std::ptr::eq(&*v, w));
+        } else {
+            panic!("tiny model starts plain");
+        }
+    }
+
+    #[test]
+    fn packed_weight_plane_strips_to_bit_identical_forward() {
+        let mut m = tiny_model(Arch::Gpt, 5);
+        let calib = crate::sdq::calib::CalibStats::new(false);
+        let cfg: CompressionConfig = "Q-VSQuant-WAint8".parse().unwrap();
+        m.compress(&cfg, &calib).unwrap();
+        // int8 codes + fp8 scales cut dense-plane traffic ~3.66× at
+        // serving widths (asserted ≥3.5 in benches/serving.rs); the
+        // tiny 32-dim test model pays 4 B of chan-scale per 32-weight
+        // row, so the floor here is 3.0.
+        let (streamed, avoided) = m.weight_stream_bytes();
+        let dense = streamed + avoided;
+        assert!(
+            dense as f64 / streamed as f64 >= 3.0,
+            "int8 plane only cut {dense}/{streamed}"
+        );
+        assert!(m.weight_bytes() < dense / 3);
+        let x = Matrix::from_vec(3, 32, (0..96).map(|i| (i as f32).sin()).collect());
+        let mut with_q = Matrix::zeros(3, 32);
+        m.linears()[0].lin.forward_into(&x, &mut with_q);
+        m.strip_packed_weights();
+        // Stripping reverts to the f32 view: traffic goes dense again…
+        assert_eq!(m.weight_stream_bytes(), (dense, 0));
+        let mut without_q = Matrix::zeros(3, 32);
+        m.linears()[0].lin.forward_into(&x, &mut without_q);
+        // …and the outputs match to the bit.
+        for (a, b) in with_q.data.iter().zip(&without_q.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

@@ -9,6 +9,12 @@
 //! it is **batched multi-prompt prefill**, amortizing the (compressed)
 //! weight streams across every prompt admitted in a scheduling round
 //! exactly as PR 1's fused decode amortizes them across sequences.
+//! Each of those weight streams is itself packed: quantized dense
+//! planes serve real int8/nibble codes through the fused
+//! [`crate::tensor::matmul_q_into`] GEMM (`sdq::qmat`, bit-identical
+//! to the f32 view), so the per-round traffic the scheduler accounts
+//! in `Metrics::weight_bytes_streamed` is ~4× (int8) to ~7× (fp4)
+//! below dense f32.
 //!
 //! Attention reads K/V *through the block tables*: per layer, an f32
 //! pool hands back one borrowed row segment per block per sequence via

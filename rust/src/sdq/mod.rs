@@ -16,6 +16,10 @@
 //!   quantized scale factors (§5 Stage 3, Fig. 11).
 //! * [`packed`] — ELLPACK-like packed N:M storage (values + index
 //!   metadata) feeding the bits-per-weight model (§3.3, Fig. 4).
+//! * [`qmat`] — packed quantized dense plane ([`qmat::QuantMat`]): real
+//!   int8 / nibble codes + fp8-e4m3 scales served straight into the
+//!   fused GEMM ([`crate::tensor::matmul_q_into`]), bit-identical to
+//!   the dequantized f32 view.
 //! * [`pipeline`] — applies a full [`config::CompressionConfig`] to every
 //!   linear layer of a model.
 //! * [`linalg`] — small dense linear algebra (Cholesky, inversion) used
@@ -29,5 +33,6 @@ pub mod linalg;
 pub mod nm;
 pub mod packed;
 pub mod pipeline;
+pub mod qmat;
 pub mod quantize;
 pub mod sparsify;

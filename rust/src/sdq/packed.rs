@@ -264,6 +264,33 @@ impl PackedNm {
     pub fn index_bits_total(&self) -> u64 {
         (self.indices.len() as u64) * self.pattern.index_bits() as u64
     }
+
+    /// Bytes the SpMM hot loop actually reads per full weight stream:
+    /// value slots (f32, or int8 codes + per-`(row, M-block)` f32
+    /// scales when the fused-dequant plane is active) plus the
+    /// precomputed `abs_cols` gather indices (u32 per slot). The
+    /// `indices` nibbles are pack-time metadata, never touched by
+    /// [`Self::spmm_into`].
+    pub fn stream_bytes(&self) -> u64 {
+        let slots = self.values.len() as u64;
+        let value_bytes = match &self.qvalues {
+            Some(q) => q.codes.len() as u64 + 4 * q.scales.len() as u64,
+            None => 4 * slots,
+        };
+        value_bytes + 4 * slots
+    }
+
+    /// Resident bytes of the packed representation for weight-size
+    /// accounting: value slots (f32 or int8 + scales) plus the
+    /// `log2(M)`-bit intra-block index metadata (what a storage format
+    /// would ship; `abs_cols` is its CPU-side expansion).
+    pub fn packed_weight_bytes(&self) -> u64 {
+        let value_bytes = match &self.qvalues {
+            Some(q) => q.codes.len() as u64 + 4 * q.scales.len() as u64,
+            None => 4 * self.values.len() as u64,
+        };
+        value_bytes + self.index_bits_total().div_ceil(8)
+    }
 }
 
 /// Pack `w` under `pat`. Fails if any block exceeds N non-zeros (i.e. the

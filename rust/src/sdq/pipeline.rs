@@ -4,8 +4,10 @@
 //!
 //! The compressed layer carries everything the inference engine needs:
 //! the dequantized weight view(s) for fake-quant evaluation, optional
-//! packed N:M forms for the structured-sparse compute path, and the
-//! activation formats each path expects (§5.1: `A_o` int8 / `A_i` fp4).
+//! packed N:M forms for the structured-sparse compute path, real packed
+//! code planes ([`QuantMat`]) for quantized dense planes (served via the
+//! fused GEMM, bit-identical to the f32 view), and the activation
+//! formats each path expects (§5.1: `A_o` int8 / `A_i` fp4).
 
 
 use super::calib::LayerStats;
@@ -13,7 +15,8 @@ use super::config::{CompressionConfig, QuantAlgo, Stages};
 use super::gptq::gptq_fake_quant;
 use super::decompose::decompose;
 use super::packed::{pack, PackedNm};
-use super::quantize::{fake_quant, VsQuantCfg};
+use super::qmat::QuantMat;
+use super::quantize::{quantize_tensor, QuantizedTensor, VsQuantCfg};
 use super::sparsify::sparsify;
 use crate::formats::NumFormat;
 use crate::tensor::Matrix;
@@ -35,14 +38,24 @@ pub enum ExecPath {
         act_fmt: Option<NumFormat>,
         /// Packed form when the weight is structured-sparse enough.
         packed: Option<PackedNm>,
+        /// Real packed codes for the quantized dense plane, served via
+        /// the fused [`crate::tensor::matmul_q_into`] (bit-identical to
+        /// the `w` GEMM). Built only when the plane actually executes
+        /// dense (`packed.is_none()`) and the value format has a packed
+        /// representation; `None` otherwise (fp16, GPTQ, SpMM plane).
+        qw: Option<QuantMat>,
     },
     /// SDQ two-path execution: `Y = Q_o(X)·W_oᵀ + Q_i(X)·W_iᵀ` (Fig. 8).
     Decomposed {
         outlier_w: Matrix,
         outlier_packed: Option<PackedNm>,
+        /// Packed codes for the outlier plane when it executes dense.
+        outlier_q: Option<QuantMat>,
         outlier_act: NumFormat,
         inlier_w: Matrix,
         inlier_packed: Option<PackedNm>,
+        /// Packed codes for the inlier plane when it executes dense.
+        inlier_q: Option<QuantMat>,
         inlier_act: NumFormat,
     },
 }
@@ -90,12 +103,19 @@ pub fn compress_layer(
         }
         out
     };
+    // VS-Quant a plane and keep *both* views: the dequantized f32
+    // matrix (eval / quality accounting / bit-identity reference) and
+    // the quantized tensor the packed code plane is built from.
+    let vsq = |m: &Matrix, fmt: NumFormat| -> (Matrix, QuantizedTensor) {
+        let qt = quantize_tensor(m, VsQuantCfg { fmt, qvec: cfg.qvec, scale_fmt: cfg.scale_fmt });
+        (qt.dequantize(), qt)
+    };
 
     let (path, rel_err, density) = match &cfg.stages {
         Stages::Dense => {
             let wq = fp16(w);
             let rel = wq.rel_frob_dist(w);
-            (ExecPath::Dense { w: wq, act_fmt: None, packed: None }, rel, 1.0)
+            (ExecPath::Dense { w: wq, act_fmt: None, packed: None, qw: None }, rel, 1.0)
         }
         Stages::SparsifyOnly(sp) => {
             let mut ws = w.clone();
@@ -106,25 +126,27 @@ pub fn compress_layer(
             let packed = (sp.pattern.density() <= PACK_DENSITY_THRESHOLD)
                 .then(|| pack(&ws, sp.pattern))
                 .transpose()?;
-            (ExecPath::Dense { w: ws, act_fmt: None, packed }, rel, density)
+            (ExecPath::Dense { w: ws, act_fmt: None, packed, qw: None }, rel, density)
         }
         Stages::QuantOnly { weight_fmt, act_fmt, algo } => {
-            let wq = match algo {
-                QuantAlgo::VsQuant => fake_quant(
-                    w,
-                    VsQuantCfg { fmt: *weight_fmt, qvec: cfg.qvec, scale_fmt: cfg.scale_fmt },
-                ),
+            let (wq, qw) = match algo {
+                QuantAlgo::VsQuant => {
+                    let (wq, qt) = vsq(w, *weight_fmt);
+                    (wq, QuantMat::try_from_tensor(&qt))
+                }
                 QuantAlgo::Gptq => {
+                    // GPTQ rounds in a data-dependent order and never
+                    // materializes a QuantizedTensor → no packed plane.
                     let gram = stats
                         .and_then(|st| st.finalized_gram())
                         .ok_or_else(|| anyhow::anyhow!("GPTQ requires Gram calibration"))?;
                     let mut wq = w.clone();
                     gptq_fake_quant(&mut wq, &gram, *weight_fmt, cfg.qvec, cfg.scale_fmt)?;
-                    wq
+                    (wq, None)
                 }
             };
             let rel = wq.rel_frob_dist(w);
-            (ExecPath::Dense { w: wq, act_fmt: *act_fmt, packed: None }, rel, 1.0)
+            (ExecPath::Dense { w: wq, act_fmt: *act_fmt, packed: None, qw }, rel, 1.0)
         }
         Stages::Sdq { sparsify: sp, decompose: dc } => {
             let mut ws = w.clone();
@@ -132,14 +154,8 @@ pub fn compress_layer(
                 sparsify(&mut ws, *sp, stats)?;
             }
             let parts = decompose(&ws, dc, stats, cfg.qvec)?;
-            let out_q = fake_quant(
-                &parts.outliers,
-                VsQuantCfg { fmt: dc.outlier_fmt, qvec: cfg.qvec, scale_fmt: cfg.scale_fmt },
-            );
-            let in_q = fake_quant(
-                &parts.inliers,
-                VsQuantCfg { fmt: dc.inlier_fmt, qvec: cfg.qvec, scale_fmt: cfg.scale_fmt },
-            );
+            let (out_q, out_qt) = vsq(&parts.outliers, dc.outlier_fmt);
+            let (in_q, in_qt) = vsq(&parts.inliers, dc.inlier_fmt);
             // Quality accounting against the original dense weights.
             let mut sum = out_q.clone();
             for (s, i) in sum.data.iter_mut().zip(&in_q.data) {
@@ -154,13 +170,21 @@ pub fn compress_layer(
             let inlier_packed = (dc.inlier_pattern.density() <= PACK_DENSITY_THRESHOLD)
                 .then(|| pack(&in_q, dc.inlier_pattern))
                 .transpose()?;
+            // Packed codes only for planes that execute as dense GEMM —
+            // a plane with an SpMM form never streams its dense codes.
+            let outlier_q =
+                outlier_packed.is_none().then(|| QuantMat::try_from_tensor(&out_qt)).flatten();
+            let inlier_q =
+                inlier_packed.is_none().then(|| QuantMat::try_from_tensor(&in_qt)).flatten();
             (
                 ExecPath::Decomposed {
                     outlier_w: out_q,
                     outlier_packed,
+                    outlier_q,
                     outlier_act: dc.outlier_fmt,
                     inlier_w: in_q,
                     inlier_packed,
+                    inlier_q,
                     inlier_act: dc.inlier_fmt,
                 },
                 rel,

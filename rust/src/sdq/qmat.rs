@@ -1,0 +1,428 @@
+//! Packed quantized weight plane: the serving-time storage for the
+//! dense residual of an SDQ layer (and for quant-only layers).
+//!
+//! [`crate::sdq::pipeline::compress_layer`] historically *fake*-
+//! quantized weights — snapped to the target grid but stored as f32
+//! [`Matrix`] — so the decode hot path streamed 4 bytes per weight and
+//! the paper's memory win existed only on paper. [`QuantMat`] stores
+//! the real thing:
+//!
+//! * **codes** — one `i8` per element for int5..int8, or two
+//!   sign-magnitude / two's-complement nibbles per byte for
+//!   fp4-e2m1 / int2..int4 ([`NumFormat::packed_code_bits`]);
+//! * **per-(row, Q-vector) scales** — the VS-Quant first level, stored
+//!   as real fp8-e4m3 *bytes* when every ratio round-trips the
+//!   [`crate::kv::fp8_e4m3_encode`] codec exactly (it always does when
+//!   `scale_fmt = fp8-e4m3`, the default: quantized ratios already live
+//!   on that grid), f32 otherwise;
+//! * **per-row f32 channel scales** — the VS-Quant second level.
+//!
+//! At int8 that is `cols + cols/qvec + 4` bytes per row against
+//! `4·cols` dense — ~3.76× fewer bytes streamed per decode round
+//! (fp4 ≈ 6.9×) — and [`Metrics`](crate::coordinator::metrics::Metrics)
+//! accounts it via [`QuantMat::packed_bytes`].
+//!
+//! # Bit-identity
+//!
+//! `QuantMat` implements [`WeightPlane`], so
+//! [`crate::tensor::matmul_q_into`] can fuse the dequant into the GEMM
+//! micro-tile. The decode replays
+//! [`QuantizedTensor::dequantize`]'s per-element op order exactly —
+//! `s = vec_scale · chan_scale` (one multiply, per Q-vector group),
+//! then `w = code · s`, groups walked in ascending k — so the fused
+//! route equals dequantize-then-`matmul_into` **to the bit**
+//! (`tests/qmat.rs` pins it across ragged tile shapes). Construction is
+//! from the [`QuantizedTensor`] the pipeline already produces: codes
+//! are exact small integers / fp4 grid points, so the i8 / nibble
+//! round-trip is lossless by construction (checked in debug builds).
+//!
+//! One deliberate asymmetry: an integer code of `-0.0` (RNE of a small
+//! negative value) decodes as `+0.0` from the i8 plane. The product
+//! `code · s` then differs only in zero sign, which IEEE-754 addition
+//! absorbs (`+0.0 + -0.0 = +0.0`, and an accumulator that starts at
+//! `+0.0` can never become `-0.0`), so GEMM outputs remain
+//! bit-identical. The fp4 nibble is sign-magnitude and preserves even
+//! `-0.0`.
+
+use crate::formats::{NumFormat, FP4_GRID};
+use crate::kv::{fp8_e4m3_decode, fp8_e4m3_encode};
+use crate::tensor::{Matrix, WeightPlane};
+
+use super::quantize::QuantizedTensor;
+
+/// Physical code storage: one byte per code, or two nibbles per byte
+/// with per-row stride `cols.div_ceil(2)` (rows never share a byte).
+#[derive(Clone, Debug)]
+enum CodePlane {
+    /// int5..int8 codes, two's complement, stride `cols`.
+    I8(Vec<i8>),
+    /// fp4-e2m1 (sign-magnitude: bit 3 sign, bits 0..2 index into
+    /// [`FP4_GRID`]) or int2..int4 (two's-complement nibble). Element
+    /// `i` of a row lives in byte `i / 2`: low nibble for even `i`,
+    /// high for odd.
+    Nibble(Vec<u8>),
+}
+
+/// First-level (per-row, per-Q-vector) scale storage.
+#[derive(Clone, Debug)]
+enum ScalePlane {
+    /// Real fp8-e4m3 bytes; decode is the exact [`fp8_e4m3_decode`].
+    Fp8(Vec<u8>),
+    /// Fallback when some ratio is not fp8-e4m3-exact (non-default
+    /// `scale_fmt`, or underflow below the e4m3 subnormal floor).
+    F32(Vec<f32>),
+}
+
+/// A packed quantized `[rows, cols]` weight matrix (VS-Quant two-level
+/// scaling), logically equal to `QuantizedTensor::dequantize()` of the
+/// tensor it was built from — see the module docs for the layout and
+/// the bit-identity contract.
+#[derive(Clone, Debug)]
+pub struct QuantMat {
+    fmt: NumFormat,
+    rows: usize,
+    cols: usize,
+    qvec: usize,
+    codes: CodePlane,
+    vec_scales: ScalePlane,
+    chan_scales: Vec<f32>,
+}
+
+impl QuantMat {
+    /// Pack a [`QuantizedTensor`], or `None` when its value format has
+    /// no packed representation ([`NumFormat::packed_code_bits`]).
+    pub fn try_from_tensor(qt: &QuantizedTensor) -> Option<QuantMat> {
+        let bits = qt.cfg.fmt.packed_code_bits()?;
+        let (rows, cols) = (qt.rows, qt.cols);
+        let codes = match (bits, qt.cfg.fmt) {
+            (4, NumFormat::Fp4E2M1) => {
+                let stride = cols.div_ceil(2);
+                let mut nib = vec![0u8; rows * stride];
+                for r in 0..rows {
+                    for i in 0..cols {
+                        let c = qt.codes[r * cols + i];
+                        let n = fp4_encode_nibble(c);
+                        debug_assert_eq!(
+                            fp4_decode_nibble(n).to_bits(),
+                            c.to_bits(),
+                            "fp4 code {c} not nibble-exact"
+                        );
+                        nib[r * stride + i / 2] |= n << (4 * (i % 2));
+                    }
+                }
+                CodePlane::Nibble(nib)
+            }
+            (4, _) => {
+                let stride = cols.div_ceil(2);
+                let mut nib = vec![0u8; rows * stride];
+                for r in 0..rows {
+                    for i in 0..cols {
+                        let c = qt.codes[r * cols + i];
+                        debug_assert!((-8.0..=7.0).contains(&c), "int4 code {c} out of range");
+                        let n = (c as i8 as u8) & 0x0f;
+                        nib[r * stride + i / 2] |= n << (4 * (i % 2));
+                    }
+                }
+                CodePlane::Nibble(nib)
+            }
+            _ => {
+                let mut i8s = vec![0i8; rows * cols];
+                for (dst, c) in i8s.iter_mut().zip(&qt.codes) {
+                    debug_assert!((-128.0..=127.0).contains(c), "int8 code {c} out of range");
+                    *dst = *c as i8;
+                }
+                CodePlane::I8(i8s)
+            }
+        };
+        // Scales go to 1-byte fp8-e4m3 only when *every* ratio survives
+        // the codec bit-exactly — anything less would break the
+        // bit-identity contract for a 3-byte-per-row saving.
+        let exact = qt.vec_scales.iter().all(|s| {
+            fp8_e4m3_decode(fp8_e4m3_encode(*s)).to_bits() == s.to_bits()
+        });
+        let vec_scales = if exact {
+            ScalePlane::Fp8(qt.vec_scales.iter().map(|s| fp8_e4m3_encode(*s)).collect())
+        } else {
+            ScalePlane::F32(qt.vec_scales.clone())
+        };
+        Some(QuantMat {
+            fmt: qt.cfg.fmt,
+            rows,
+            cols,
+            qvec: qt.cfg.qvec,
+            codes,
+            vec_scales,
+            chan_scales: qt.chan_scales.clone(),
+        })
+    }
+
+    /// Value format of the codes.
+    pub fn fmt(&self) -> NumFormat {
+        self.fmt
+    }
+
+    /// Output rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Input (reduction) columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Q-vector (scale group) size along the reduction dimension.
+    pub fn qvec(&self) -> usize {
+        self.qvec
+    }
+
+    /// Whether the first-level scales are stored as 1-byte fp8-e4m3.
+    pub fn scales_are_fp8(&self) -> bool {
+        matches!(self.vec_scales, ScalePlane::Fp8(_))
+    }
+
+    /// Q-vectors per row.
+    fn qvecs_per_row(&self) -> usize {
+        self.cols.div_ceil(self.qvec)
+    }
+
+    /// Actual bytes of packed storage (codes + vec scales + channel
+    /// scales) — what one full weight stream through the fused GEMM
+    /// reads from memory, and what honest weight-size accounting
+    /// reports.
+    pub fn packed_bytes(&self) -> usize {
+        let code_bytes = match &self.codes {
+            CodePlane::I8(v) => v.len(),
+            CodePlane::Nibble(v) => v.len(),
+        };
+        let scale_bytes = match &self.vec_scales {
+            ScalePlane::Fp8(v) => v.len(),
+            ScalePlane::F32(v) => 4 * v.len(),
+        };
+        code_bytes + scale_bytes + 4 * self.chan_scales.len()
+    }
+
+    /// First-level scale for (row, Q-vector) — exactly the f32 the
+    /// source tensor held (fp8 plane: the byte decodes back to it).
+    #[inline]
+    fn vec_scale(&self, r: usize, q: usize) -> f32 {
+        let idx = r * self.qvecs_per_row() + q;
+        match &self.vec_scales {
+            ScalePlane::Fp8(v) => fp8_e4m3_decode(v[idx]),
+            ScalePlane::F32(v) => v[idx],
+        }
+    }
+
+    /// Code `w[r, i]` as the f32 the source tensor's `codes` held
+    /// (up to integer zero sign — see module docs).
+    #[inline]
+    fn code(&self, r: usize, i: usize) -> f32 {
+        match &self.codes {
+            CodePlane::I8(v) => v[r * self.cols + i] as f32,
+            CodePlane::Nibble(v) => {
+                let stride = self.cols.div_ceil(2);
+                let byte = v[r * stride + i / 2];
+                let n = (byte >> (4 * (i % 2))) & 0x0f;
+                if self.fmt == NumFormat::Fp4E2M1 {
+                    fp4_decode_nibble(n)
+                } else {
+                    // sign-extend the two's-complement nibble
+                    (((n << 4) as i8) >> 4) as f32
+                }
+            }
+        }
+    }
+
+    /// Dequantize to a dense matrix (eval paths, tests). Same op order
+    /// as [`QuantizedTensor::dequantize`].
+    pub fn dequantize(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let row = out.row_mut(r);
+            self.decode_row_span(r, 0, self.cols, row);
+        }
+        out
+    }
+
+    /// Decode `w[r, k0..kend]` into `dst[..kend - k0]` — the
+    /// [`WeightPlane`] workhorse. Walks Q-vector groups in ascending k,
+    /// computing `s = vec_scale · chan_scale` once per group and
+    /// `w = code · s` per element: the dequant path's exact op order.
+    #[inline]
+    fn decode_row_span(&self, r: usize, k0: usize, kend: usize, dst: &mut [f32]) {
+        let chan = self.chan_scales[r];
+        let mut i = k0;
+        let mut d = 0;
+        while i < kend {
+            let q = i / self.qvec;
+            let gend = ((q + 1) * self.qvec).min(kend);
+            let s = self.vec_scale(r, q) * chan;
+            for ii in i..gend {
+                dst[d] = self.code(r, ii) * s;
+                d += 1;
+            }
+            i = gend;
+        }
+    }
+}
+
+impl WeightPlane for QuantMat {
+    fn k(&self) -> usize {
+        self.cols
+    }
+
+    fn n(&self) -> usize {
+        self.rows
+    }
+
+    fn decode_row_block(&self, o: usize, k0: usize, kend: usize, dst: &mut [f32]) {
+        self.decode_row_span(o, k0, kend, dst);
+    }
+}
+
+/// Encode an fp4-e2m1 grid value to a sign-magnitude nibble. The value
+/// must be a grid point (codes out of the quantizer always are).
+#[inline]
+fn fp4_encode_nibble(c: f32) -> u8 {
+    let sign = if c.is_sign_negative() { 8u8 } else { 0 };
+    let a = c.abs();
+    // 8-entry grid: a comparison scan is exact and branch-predictable.
+    let mut m = 0u8;
+    for (i, g) in FP4_GRID.iter().enumerate() {
+        if a == *g {
+            m = i as u8;
+            break;
+        }
+    }
+    debug_assert!(FP4_GRID.contains(&a), "fp4 code {c} off-grid");
+    sign | m
+}
+
+/// Decode a sign-magnitude fp4 nibble back to its f32 grid value
+/// (preserves `-0.0`, keeping the nibble round-trip fully lossless).
+#[inline]
+fn fp4_decode_nibble(n: u8) -> f32 {
+    let v = FP4_GRID[(n & 7) as usize];
+    if n & 8 != 0 {
+        -v
+    } else {
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sdq::quantize::{quantize_tensor, VsQuantCfg};
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed_from_u64(seed);
+        Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.range_f32(-2.0, 2.0)).collect())
+    }
+
+    fn cfg(fmt: NumFormat, qvec: usize) -> VsQuantCfg {
+        VsQuantCfg { fmt, qvec, scale_fmt: NumFormat::Fp8E4M3 }
+    }
+
+    #[test]
+    fn fp4_nibble_codec_roundtrips_the_whole_grid() {
+        for g in FP4_GRID {
+            for v in [g, -g] {
+                let n = fp4_encode_nibble(v);
+                assert!(n < 16);
+                assert_eq!(fp4_decode_nibble(n).to_bits(), v.to_bits(), "{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn dequantize_matches_source_tensor() {
+        for fmt in [NumFormat::Int(8), NumFormat::Int(4), NumFormat::Fp4E2M1] {
+            // K deliberately not a multiple of qvec (ragged last group).
+            let w = rand_matrix(9, 53, 7);
+            let qt = quantize_tensor(&w, cfg(fmt, 16));
+            let qm = QuantMat::try_from_tensor(&qt).unwrap();
+            let a = qm.dequantize();
+            let b = qt.dequantize();
+            for (x, y) in a.data.iter().zip(&b.data) {
+                // `==` not to_bits: an integer code of -0.0 decodes +0.0
+                // from the i8 plane (harmless for GEMM — module docs).
+                assert_eq!(*x, *y, "{fmt}");
+            }
+        }
+    }
+
+    #[test]
+    fn unpackable_formats_return_none() {
+        let w = rand_matrix(4, 32, 9);
+        for fmt in [NumFormat::Fp8E4M3, NumFormat::Fp16, NumFormat::Fp32] {
+            let qt = quantize_tensor(&w, cfg(fmt, 16));
+            assert!(QuantMat::try_from_tensor(&qt).is_none(), "{fmt}");
+        }
+    }
+
+    #[test]
+    fn default_scale_fmt_packs_scales_to_one_byte() {
+        let w = rand_matrix(8, 64, 11);
+        let qm =
+            QuantMat::try_from_tensor(&quantize_tensor(&w, cfg(NumFormat::Int(8), 16))).unwrap();
+        assert!(qm.scales_are_fp8());
+        // int8: 1 B/code + 1 B per 16-element group + 4 B/row.
+        assert_eq!(qm.packed_bytes(), 8 * 64 + 8 * 4 + 8 * 4);
+        let dense = 4 * 8 * 64;
+        assert!(dense as f64 / qm.packed_bytes() as f64 > 3.5);
+    }
+
+    #[test]
+    fn nibble_plane_halves_code_bytes_and_handles_odd_cols() {
+        let w = rand_matrix(5, 33, 13);
+        let qm =
+            QuantMat::try_from_tensor(&quantize_tensor(&w, cfg(NumFormat::Fp4E2M1, 16))).unwrap();
+        // 33 cols → 17 bytes/row of codes, 3 scale bytes, 4 B channel.
+        assert_eq!(qm.packed_bytes(), 5 * (17 + 3 + 4));
+        assert!(qm.scales_are_fp8());
+    }
+
+    #[test]
+    fn non_e4m3_scale_fmt_falls_back_to_f32_scales_exactly() {
+        let w = rand_matrix(6, 48, 17);
+        let qt = quantize_tensor(
+            &w,
+            VsQuantCfg { fmt: NumFormat::Int(4), qvec: 16, scale_fmt: NumFormat::Fp32 },
+        );
+        let qm = QuantMat::try_from_tensor(&qt).unwrap();
+        // Raw fp32 ratios are generally not on the e4m3 grid → F32 plane,
+        // and the dequantized view still matches bit-for-bit.
+        let a = qm.dequantize();
+        let b = qt.dequantize();
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(*x, *y);
+        }
+    }
+
+    #[test]
+    fn fused_gemm_is_bit_identical_to_dequantized_gemm() {
+        use crate::tensor::{matmul_into, matmul_q_into};
+        // Ragged shapes: 1-row decode, TB straddling (rows > 16),
+        // K not a multiple of qvec, K crossing the KB=256 boundary.
+        for (t, k, n, fmt) in [
+            (1usize, 300usize, 96usize, NumFormat::Int(8)),
+            (17, 72, 40, NumFormat::Fp4E2M1),
+            (4, 53, 33, NumFormat::Int(4)),
+        ] {
+            let x = rand_matrix(t, k, 19 + t as u64);
+            let w = rand_matrix(n, k, 23 + k as u64);
+            let qt = quantize_tensor(&w, cfg(fmt, 16));
+            let qm = QuantMat::try_from_tensor(&qt).unwrap();
+            let deq = qt.dequantize();
+            let mut c_ref = Matrix::zeros(t, n);
+            matmul_into(&x, &deq, &mut c_ref);
+            let mut c_q = Matrix::zeros(t, n);
+            matmul_q_into(&x, &qm, &mut c_q);
+            for (a, b) in c_q.data.iter().zip(&c_ref.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{fmt} {t}x{k}x{n}");
+            }
+        }
+    }
+}

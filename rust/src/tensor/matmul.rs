@@ -8,6 +8,31 @@
 //! autovectorizes well and keeps the N:M block direction identical to
 //! the reduction direction — exactly the layout a structured-sparse
 //! tensor core consumes.
+//!
+//! # Quantized weight planes (`gemm_panel_q`, §Perf iteration 10)
+//!
+//! [`matmul_q_into`] runs the same GEBP schedule against a packed
+//! quantized weight plane (codes + per-(row, K-group) scales) instead
+//! of a dense f32 `Matrix`, via the [`WeightPlane`] trait: per K-block,
+//! the `≤ KB` weights of one output row are decoded `code · scale` into
+//! an L1-resident stack buffer and fed to the identical 32-lane
+//! [`dot`], so DRAM sees only the packed bytes. This is the CPU mirror
+//! of the scale-folding schedule in the AOT Pallas kernel
+//! (`python/compile/kernels/sdq_matmul.py::_dequant_tile`): there a
+//! `[bn, bk]` codes tile is reshaped to `[bn, bk/qvec, qvec]` and
+//! multiplied by `scales[..., None]` in VMEM before the MXU pass; here
+//! the same per-Q-vector scale is applied to each ≤`qvec`-element code
+//! group as the K-block is decoded into registers/L1, then the dense
+//! micro-kernel runs unchanged.
+//!
+//! Bit-identity discipline (the contract `kv::qattn` and
+//! `sdq::PackedNm::row_dot_q8` established): a [`WeightPlane`] decoder
+//! must reproduce the dequantize path's per-element op order *exactly*
+//! — for the VS-Quant plane that is `s = vec_scale * chan_scale` then
+//! `w = code * s`, groups walked in ascending k — so `matmul_q_into`
+//! equals dequantize-then-[`matmul_into`] to the bit on every tile
+//! shape (the K-blocks accumulate in ascending-k order regardless of
+//! how rows/columns were sliced, exactly as in the f32 panel).
 
 use super::Matrix;
 use crate::util::par::{par_chunks_mut, par_col_blocks, COL_BLOCK, TILE_ROWS};
@@ -114,6 +139,122 @@ pub fn matmul_into(a: &Matrix, w: &Matrix, c: &mut Matrix) {
         c_tile.fill(0.0);
         let rows = c_tile.len() / n;
         gemm_panel(a, w, tile * TB, rows, 0, n, c_tile, n);
+    });
+}
+
+/// A packed quantized weight operand for [`matmul_q_into`]: logically a
+/// `[n, k]` row-major f32 matrix, physically codes + scales that are
+/// decoded one (output-row, K-block) span at a time.
+///
+/// Contract: `decode_row_block(o, k0, kend, dst)` must write into
+/// `dst[..kend - k0]` **exactly** the f32 values a full dequantization
+/// of the plane would hold at `w[o, k0..kend]` — same op order, same
+/// intermediate products — so the fused GEMM stays bit-identical to
+/// dequantize-then-[`matmul_into`]. Callers never pass spans wider than
+/// `KB` (= 256) elements.
+pub trait WeightPlane: Sync {
+    /// Reduction (K) dimension — must equal `a.cols`.
+    fn k(&self) -> usize;
+    /// Output (N) dimension — number of weight rows.
+    fn n(&self) -> usize;
+    /// Decode `w[o, k0..kend]` into `dst[..kend - k0]`.
+    fn decode_row_block(&self, o: usize, k0: usize, kend: usize, dst: &mut [f32]);
+}
+
+/// Every dense `Matrix` is trivially a weight plane (borrow-decode);
+/// property tests use this to pin the `_q` schedule against the f32 one.
+impl WeightPlane for Matrix {
+    fn k(&self) -> usize {
+        self.cols
+    }
+
+    fn n(&self) -> usize {
+        self.rows
+    }
+
+    fn decode_row_block(&self, o: usize, k0: usize, kend: usize, dst: &mut [f32]) {
+        dst.copy_from_slice(&self.data[o * self.cols + k0..o * self.cols + kend]);
+    }
+}
+
+/// [`gemm_panel`] over a packed [`WeightPlane`]: identical KB/CB/TB
+/// loop structure, but each W row's K-block is decoded `code · scale`
+/// into a `KB`-float stack buffer (L1-resident — DRAM traffic is the
+/// packed codes + scales only) immediately before the same 32-lane
+/// [`dot`]. Decoding whole K-blocks (not single elements) keeps the
+/// register kernel untouched, which is what makes bit-identity to the
+/// dequantized path structural rather than a numerics argument.
+#[inline]
+fn gemm_panel_q<W: WeightPlane + ?Sized>(
+    a: &Matrix,
+    w: &W,
+    t0: usize,
+    rows: usize,
+    o0: usize,
+    o1: usize,
+    out: &mut [f32],
+    out_stride: usize,
+) {
+    let k = a.cols;
+    let mut wbuf = [0.0f32; KB];
+    let mut k0 = 0;
+    while k0 < k {
+        let kend = (k0 + KB).min(k);
+        let wlen = kend - k0;
+        let mut ob = o0;
+        while ob < o1 {
+            let oe = (ob + CB).min(o1);
+            for o in ob..oe {
+                w.decode_row_block(o, k0, kend, &mut wbuf[..wlen]);
+                let w_blk = &wbuf[..wlen];
+                for t in 0..rows {
+                    let a_blk = &a.data[(t0 + t) * k + k0..(t0 + t) * k + kend];
+                    out[t * out_stride + (o - o0)] += dot(a_blk, w_blk);
+                }
+            }
+            ob = oe;
+        }
+        k0 = kend;
+    }
+}
+
+/// `c = a · wᵀ` against a packed quantized weight plane, fully
+/// overwriting `c`. Same two parallel schedules as [`matmul_into`]
+/// (column-parallel for small ragged decode batches via
+/// `par_col_blocks`, TB-row tiles otherwise), both driving
+/// [`gemm_panel_q`] — bit-identical to dequantizing `w` and calling
+/// [`matmul_into`].
+pub fn matmul_q_into<W: WeightPlane + ?Sized>(a: &Matrix, w: &W, c: &mut Matrix) {
+    assert_eq!(a.cols, w.k(), "inner dimensions must match");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, w.n());
+    let n = w.n();
+    let rows = a.rows;
+    let c_data = &mut c.data;
+    let ran = par_col_blocks(
+        rows,
+        n,
+        TB,
+        CB,
+        |o0, o1| {
+            let mut part = vec![0.0f32; rows * (o1 - o0)];
+            gemm_panel_q(a, w, 0, rows, o0, o1, &mut part, o1 - o0);
+            part
+        },
+        |o0, o1, part| {
+            let bw = o1 - o0;
+            for t in 0..rows {
+                c_data[t * n + o0..t * n + o1].copy_from_slice(&part[t * bw..(t + 1) * bw]);
+            }
+        },
+    );
+    if ran {
+        return;
+    }
+    par_chunks_mut(c_data, TB * n, |tile, c_tile| {
+        c_tile.fill(0.0);
+        let rows = c_tile.len() / n;
+        gemm_panel_q(a, w, tile * TB, rows, 0, n, c_tile, n);
     });
 }
 
@@ -302,6 +443,30 @@ mod tests {
         let b = matmul(&s, &v.transpose());
         for (x, y) in a.data.iter().zip(&b.data) {
             assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_q_over_dense_plane_is_bit_identical() {
+        // A dense Matrix is itself a WeightPlane (copy-decode), so the
+        // _q schedule must reproduce matmul_into *to the bit* across
+        // shapes that exercise 1-row decode, the column-parallel
+        // crossover, TB straddling and the K-block remainder.
+        let mut seed = 11u64;
+        let mut next = move || {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((seed >> 33) as f32 / 2.0f32.powi(31)) - 0.5
+        };
+        for (m, k, n) in [(1, 300, 200), (4, 259, 140), (17, 64, 33), (33, 512, 130)] {
+            let a = Matrix::from_vec(m, k, (0..m * k).map(|_| next()).collect());
+            let w = Matrix::from_vec(n, k, (0..n * k).map(|_| next()).collect());
+            let mut c_f32 = Matrix::zeros(m, n);
+            matmul_into(&a, &w, &mut c_f32);
+            let mut c_q = Matrix::zeros(m, n);
+            matmul_q_into(&a, &w, &mut c_q);
+            for (x, y) in c_q.data.iter().zip(&c_f32.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{m}x{k}x{n}: {x} vs {y}");
+            }
         }
     }
 

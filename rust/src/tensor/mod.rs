@@ -7,7 +7,10 @@
 
 mod matmul;
 
-pub use matmul::{dot, matmul, matmul_bias_into, matmul_into, matmul_nn, matmul_nn_into};
+pub use matmul::{
+    dot, matmul, matmul_bias_into, matmul_into, matmul_nn, matmul_nn_into, matmul_q_into,
+    WeightPlane,
+};
 
 
 /// Row-major 2-D `f32` matrix: `rows x cols`, index `[r * cols + c]`.

@@ -370,6 +370,92 @@ fn pjrt_model_forward_executes() {
     eprintln!("pjrt model_fwd_sdq executed: {} logits ✓", out[0].len());
 }
 
+/// Tentpole acceptance: serving with the **packed quantized weight
+/// plane** (QuantMat codes decoded in-register by `matmul_q_into`) must
+/// produce greedy output bit-identical to the same model with the
+/// packed planes stripped (dense f32 `matmul_into` over the dequantized
+/// view) — across a ragged multi-request workload, for both the
+/// quant-only and the full SDQ decomposition configs. Also pins the
+/// weight-traffic accounting: the packed int8 plane must stream ≥3.5×
+/// fewer bytes than its dense view, and the stripped model must report
+/// zero avoided bytes. Tiny in-memory models — always runs.
+#[test]
+fn packed_weight_plane_serving_is_bit_identical_and_cuts_traffic() {
+    use sdq::coordinator::batcher::{BatchPolicy, Batcher};
+    use sdq::coordinator::scheduler::Scheduler;
+    use sdq::coordinator::Request;
+    use sdq::model::testutil::tiny_model;
+    use sdq::model::Arch;
+    use sdq::sdq::calib::CalibStats;
+
+    // (config, needs real calibration stats)
+    let configs = [("Q-VSQuant-WAint8", false), ("SDQ-W7:8-1:8int8-6:8fp4", true)];
+    for (cfg_str, needs_stats) in configs {
+        let mut model = tiny_model(Arch::Gpt, 73);
+        let mut stats = CalibStats::new(false);
+        if needs_stats {
+            // Wanda's |w|·‖x‖ metric needs activation norms.
+            let calib_toks: Vec<u8> = (0..64u32).map(|i| (i * 5 + 3) as u8).collect();
+            model.forward(&calib_toks, 2, 32, Some(&mut stats));
+        }
+        model.compress(&cfg_str.parse::<CompressionConfig>().unwrap(), &stats).unwrap();
+
+        // The packed plane must exist and pay for itself. At serving
+        // widths the int8 cut is ~3.66× (asserted ≥3.5 in
+        // benches/serving.rs); the tiny 32-dim model pays 4 B of
+        // chan-scale per 32-weight row, so the floor here is 3.0.
+        let (streamed, avoided) = model.weight_stream_bytes();
+        let dense = streamed + avoided;
+        assert!(avoided > 0, "{cfg_str}: no dense-plane traffic avoided");
+        if cfg_str == "Q-VSQuant-WAint8" {
+            assert!(
+                dense as f64 / streamed as f64 >= 3.0,
+                "{cfg_str}: packed plane streams {streamed} of {dense} dense bytes \
+                 (ratio {:.2} < 3.0)",
+                dense as f64 / streamed as f64
+            );
+        }
+
+        let mut stripped = model.clone();
+        stripped.strip_packed_weights();
+        assert_eq!(
+            stripped.weight_stream_bytes(),
+            (dense, 0),
+            "{cfg_str}: stripped model must stream the full dense plane"
+        );
+
+        let run = |m: &sdq::model::Model| {
+            let policy =
+                BatchPolicy { max_active: 3, max_prefill_per_round: 2, ..Default::default() };
+            let mut sched = Scheduler::new(m, policy);
+            let mut batcher = Batcher::new();
+            for i in 0..5u64 {
+                let plen = 2 + (i as usize * 3) % 8;
+                let prompt: Vec<u8> =
+                    (0..plen).map(|j| (23 * (i as usize + 1) + 9 * j) as u8).collect();
+                batcher.enqueue(Request::new(i, prompt, 3 + (i as usize) % 4));
+            }
+            let mut resp = sched.run_to_completion(&mut batcher);
+            resp.sort_by_key(|r| r.id);
+            (resp.into_iter().map(|r| r.tokens).collect::<Vec<_>>(), sched.metrics.clone())
+        };
+        let (packed_tokens, pm) = run(&model);
+        let (dense_tokens, dm) = run(&stripped);
+        assert_eq!(
+            packed_tokens, dense_tokens,
+            "{cfg_str}: greedy output diverged between packed and stripped weight planes"
+        );
+        // Traffic accounting flows through to serving metrics.
+        assert!(pm.weight_bytes_streamed > 0, "{cfg_str}");
+        assert!(pm.weight_bytes_avoided > 0, "{cfg_str}: packed run avoided nothing");
+        assert_eq!(dm.weight_bytes_avoided, 0, "{cfg_str}: stripped run must avoid nothing");
+        assert!(
+            pm.weight_bytes_streamed < dm.weight_bytes_streamed,
+            "{cfg_str}: packed run must stream strictly less than dense"
+        );
+    }
+}
+
 /// Satellite: speculative greedy output is **bit-identical** to
 /// non-speculative greedy output for every drafter × KV-dtype combo,
 /// under the serving smoke compression config. Tiny in-memory models +

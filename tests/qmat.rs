@@ -1,0 +1,175 @@
+//! Property tests for the packed quantized weight plane (`sdq::qmat`):
+//! the fused GEMM over real codes must equal dequantize-then-GEMM **to
+//! the bit** for every supported format across ragged tile shapes, and
+//! the nibble codecs must round-trip their grids exactly.
+//!
+//! Shape taxonomy (the micro-tile schedule in `tensor/matmul.rs` is
+//! KB=256 / CB=64 / TB=16):
+//! * `t = 1` — single-row decode, the serving hot case;
+//! * `t = 17` — straddles a TB=16 row-tile boundary;
+//! * `n = 33, 130` — ragged CB=64 column blocks, and (with small `t`,
+//!   `n ≥ 128`) the `par_col_blocks` column-parallel crossover;
+//! * `k = 53, 300, 530` — K not a multiple of the q-vector (ragged
+//!   last scale group) and K crossing the KB=256 block boundary
+//!   mid-group.
+
+use sdq::formats::{NumFormat, FP4_GRID};
+use sdq::sdq::qmat::QuantMat;
+use sdq::sdq::quantize::{quantize_tensor, VsQuantCfg};
+use sdq::tensor::{matmul_into, matmul_q_into, Matrix};
+use sdq::util::rng::Rng;
+
+fn rand_matrix(rows: usize, cols: usize, lo: f32, hi: f32, seed: u64) -> Matrix {
+    let mut rng = Rng::seed_from_u64(seed);
+    Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.range_f32(lo, hi)).collect())
+}
+
+fn cfg(fmt: NumFormat, qvec: usize) -> VsQuantCfg {
+    VsQuantCfg { fmt, qvec, scale_fmt: NumFormat::Fp8E4M3 }
+}
+
+/// The tentpole property: for int8, int4 and fp4 weight planes, the
+/// fused `matmul_q_into` over packed codes is bit-identical to
+/// dequantizing the same tensor and running the dense `matmul_into` —
+/// across every ragged-shape class and q-vector size.
+#[test]
+fn fused_gemm_bit_identical_to_dequantized_gemm_across_shapes() {
+    let fmts = [NumFormat::Int(8), NumFormat::Int(4), NumFormat::Fp4E2M1];
+    // (t, k, n): see the module docs for why each shape is here.
+    let shapes = [
+        (1usize, 300usize, 96usize), // 1-row decode, K crosses KB=256
+        (1, 53, 130),                // 1-row + ragged K + ragged CB + col-parallel
+        (17, 64, 40),                // TB straddle
+        (4, 530, 33),                // two KB blocks + ragged tail everywhere
+        (16, 128, 64),               // exactly tile-aligned control
+    ];
+    for fmt in fmts {
+        for qvec in [8usize, 16] {
+            for (i, &(t, k, n)) in shapes.iter().enumerate() {
+                let seed = 1000 + i as u64;
+                let x = rand_matrix(t, k, -2.0, 2.0, seed);
+                let w = rand_matrix(n, k, -1.5, 1.5, seed + 77);
+                let qt = quantize_tensor(&w, cfg(fmt, qvec));
+                let qm = QuantMat::try_from_tensor(&qt)
+                    .unwrap_or_else(|| panic!("{fmt} must pack"));
+                let deq = qt.dequantize();
+                let mut c_ref = Matrix::zeros(t, n);
+                matmul_into(&x, &deq, &mut c_ref);
+                let mut c_fused = Matrix::zeros(t, n);
+                matmul_q_into(&x, &qm, &mut c_fused);
+                for (j, (a, b)) in c_fused.data.iter().zip(&c_ref.data).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{fmt} qvec={qvec} shape {t}x{k}x{n} elem {j}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Outlier-heavy weights (the SDQ decomposition's raison d'être) push
+/// scales across many binades — the fused route must stay bit-exact
+/// there too, including rows that are entirely zero (scale 0 groups).
+#[test]
+fn fused_gemm_bit_identical_on_outliers_and_zero_rows() {
+    let mut w = rand_matrix(24, 96, -0.05, 0.05, 42);
+    let mut rng = Rng::seed_from_u64(43);
+    for _ in 0..40 {
+        let i = rng.below(w.data.len());
+        w.data[i] = rng.range_f32(4.0, 9.0) * if rng.bool(0.5) { 1.0 } else { -1.0 };
+    }
+    // Two all-zero rows: quantize_tensor gives them zero scales.
+    for r in [3usize, 20] {
+        for v in w.row_mut(r) {
+            *v = 0.0;
+        }
+    }
+    let x = rand_matrix(5, 96, -1.0, 1.0, 44);
+    for fmt in [NumFormat::Int(8), NumFormat::Fp4E2M1] {
+        let qt = quantize_tensor(&w, cfg(fmt, 16));
+        let qm = QuantMat::try_from_tensor(&qt).unwrap();
+        let deq = qt.dequantize();
+        let mut c_ref = Matrix::zeros(5, 24);
+        matmul_into(&x, &deq, &mut c_ref);
+        let mut c_fused = Matrix::zeros(5, 24);
+        matmul_q_into(&x, &qm, &mut c_fused);
+        for (a, b) in c_fused.data.iter().zip(&c_ref.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{fmt}");
+        }
+    }
+}
+
+/// Packed-nibble fp4 codec round-trip against `NumFormat::Fp4E2M1`'s
+/// own grid: quantize a value set that covers every grid point (both
+/// signs, plus off-grid values that RNE onto it), pack, and check the
+/// decoded plane equals the tensor's codes bit-for-bit — fp4's
+/// sign-magnitude nibble preserves even `-0.0`.
+#[test]
+fn fp4_nibble_codec_roundtrips_the_e2m1_grid() {
+    // One row per grid sign, cols cover grid points and midpoints.
+    let mut vals = Vec::new();
+    for g in FP4_GRID {
+        for s in [1.0f32, -1.0] {
+            vals.push(g * s); // exact grid points (incl. ±0.0)
+            vals.push(g * s * 1.04); // rounds back onto the grid
+        }
+    }
+    while vals.len() % 16 != 0 {
+        vals.push(0.25); // fp4 RNE → 0.5 or 0.0 depending on tie rules
+    }
+    let w = Matrix::from_vec(2, vals.len() / 2, vals);
+    let qt = quantize_tensor(&w, cfg(NumFormat::Fp4E2M1, 16));
+    // Every code the quantizer emits must be an fp4 grid point.
+    for c in &qt.codes {
+        assert!(FP4_GRID.contains(&c.abs()), "off-grid code {c}");
+    }
+    let qm = QuantMat::try_from_tensor(&qt).unwrap();
+    let unpacked = qm.dequantize();
+    let reference = qt.dequantize();
+    for (a, b) in unpacked.data.iter().zip(&reference.data) {
+        // Bit equality: sign-magnitude nibbles are fully lossless.
+        assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+    }
+}
+
+/// Int planes store codes as two's-complement bytes/nibbles, which
+/// cannot carry a `-0.0` code — the dequantized views therefore agree
+/// under `==` (value equality) while GEMM outputs stay bit-identical
+/// (IEEE addition absorbs the zero-sign difference).
+#[test]
+fn int_dequantize_value_equal_and_range_edges_roundtrip() {
+    for (fmt, maxc) in [(NumFormat::Int(8), 127.0f32), (NumFormat::Int(4), 7.0)] {
+        // Values engineered to hit the extreme codes ±max.
+        let w = rand_matrix(7, 48, -3.0, 3.0, 55);
+        let qt = quantize_tensor(&w, cfg(fmt, 16));
+        assert!(
+            qt.codes.iter().any(|c| c.abs() == maxc),
+            "{fmt}: test data never hit the extreme code"
+        );
+        let qm = QuantMat::try_from_tensor(&qt).unwrap();
+        let a = qm.dequantize();
+        let b = qt.dequantize();
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(*x, *y, "{fmt}");
+        }
+    }
+}
+
+/// Byte accounting: the packed plane must beat the ≥3.5× (int8) and
+/// ≥6× (fp4) dense-traffic cuts the serving metrics advertise, at
+/// serving-realistic shapes.
+#[test]
+fn packed_bytes_ratios_meet_the_advertised_cuts() {
+    let w = rand_matrix(384, 384, -1.0, 1.0, 66);
+    let dense = 4 * w.len() as f64;
+    let q8 = QuantMat::try_from_tensor(&quantize_tensor(&w, cfg(NumFormat::Int(8), 16))).unwrap();
+    assert!(q8.scales_are_fp8(), "default e4m3 scales must pack to one byte");
+    let r8 = dense / q8.packed_bytes() as f64;
+    assert!(r8 >= 3.5, "int8 ratio {r8:.2} < 3.5");
+    let q4 =
+        QuantMat::try_from_tensor(&quantize_tensor(&w, cfg(NumFormat::Fp4E2M1, 16))).unwrap();
+    let r4 = dense / q4.packed_bytes() as f64;
+    assert!(r4 >= 6.0, "fp4 ratio {r4:.2} < 6.0");
+}
