@@ -1,0 +1,260 @@
+//! Closed-loop gateway latency benchmark: open-loop Poisson arrivals
+//! driving the streaming gateway ([`sdq::gateway`]) in-process, with
+//! **client-observed** latency — each request's stream is drained on
+//! its own thread, timestamping every received token. Reported per arm:
+//!
+//! * **TTFT** (time to first token): submit → first `Token` event, so
+//!   admission-queue wait is included — the number a caller actually
+//!   experiences under load.
+//! * **ITL** (inter-token latency): gaps between consecutive `Token`
+//!   events on one stream.
+//!
+//! Both are exact p50/p99 over the pooled per-request samples (sorted
+//! sample quantiles, no histogram bucketing — sample counts here are
+//! small enough that exactness is free).
+//!
+//! Arms sweep the serving levers that change the latency profile while
+//! provably **not** changing tokens: KV dtype (int8 pool), speculative
+//! decode (`ngram`), and preemptive scheduling. Every arm's surviving
+//! streams are asserted bit-identical to a synchronous
+//! `Engine::run_batch_spec` run of the same requests — arrival order
+//! and admission interleaving must never perturb greedy output. After
+//! each arm the gateway is drained and the pool must hold **zero**
+//! referenced blocks.
+//!
+//! Arrivals are open-loop: exponential inter-arrival gaps at the arm's
+//! rate (req/s), submitted on schedule regardless of completions, so
+//! queueing is real rather than an artifact of lock-step driving.
+//! Priorities cycle interactive → standard → batch across requests to
+//! keep the per-class fairness counters exercised.
+//!
+//! Emits `BENCH_latency.json` (cwd) plus the usual
+//! `target/bench-results/latency.json` record. CI runs `--smoke` (one
+//! arrival rate) and gates `p99 ttft ms` / `p99 itl ms` one-sided
+//! against `ci/bench_latency_baseline.json` via `ci/check_bench.py` —
+//! null baselines are record-only until armed with `--update` on
+//! trusted hardware, exactly like the serving and hotpath tables.
+
+use std::time::{Duration, Instant};
+
+use sdq::coordinator::{Engine, Request};
+use sdq::gateway::{Gateway, GatewayOpts, GatewayRequest, Priority, StreamEvent};
+use sdq::kv::KvDtype;
+use sdq::model::testutil::synth_model;
+use sdq::coordinator::batcher::BatchPolicy;
+use sdq::spec::SpecPolicy;
+use sdq::util::bench::Table;
+use sdq::util::rng::Rng;
+
+/// One latency arm: a policy point swept at every arrival rate.
+struct Arm {
+    dtype: KvDtype,
+    spec: &'static str,
+    preempt: bool,
+}
+
+impl Arm {
+    fn policy(&self) -> BatchPolicy {
+        BatchPolicy {
+            kv_dtype: Some(self.dtype),
+            preempt: self.preempt,
+            ..Default::default()
+        }
+    }
+
+    /// Fresh spec policy per use (`SpecPolicy` owns drafter state).
+    fn spec(&self) -> Option<SpecPolicy> {
+        (self.spec == "ngram").then(|| SpecPolicy::ngram(3))
+    }
+}
+
+/// Exact sample quantile: sorted, nearest-rank on (n−1)·q.
+fn pctl_ms(samples: &mut [f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    samples[((samples.len() - 1) as f64 * q).round() as usize]
+}
+
+/// Per-request client-side record from one drained stream.
+struct Drained1 {
+    ttft_ms: f64,
+    itl_ms: Vec<f64>,
+    streamed: Vec<u8>,
+    final_tokens: Vec<u8>,
+    cancelled: bool,
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let model = synth_model();
+    eprintln!("latency bench on {} (synthetic weights)", model.cfg.name);
+
+    let arms: &[Arm] = &[
+        Arm { dtype: KvDtype::F32, spec: "off", preempt: false },
+        Arm { dtype: KvDtype::Int8, spec: "off", preempt: false },
+        Arm { dtype: KvDtype::F32, spec: "ngram", preempt: false },
+        Arm { dtype: KvDtype::F32, spec: "off", preempt: true },
+    ];
+    // Arrival rates in req/s. Smoke keeps CI to one rate — the baseline
+    // file's keys must match the smoke rows exactly.
+    let rates: &[f64] = if smoke { &[32.0] } else { &[8.0, 32.0] };
+    let (n_req, max_new, plen) = if smoke { (8, 12, 16) } else { (24, 24, 24) };
+
+    let mut table = Table::new(
+        "Gateway latency under Poisson arrivals (client-observed, exact percentiles)",
+        &[
+            "Config",
+            "kv dtype",
+            "spec",
+            "preempt",
+            "arrival rate",
+            "req",
+            "p50 ttft ms",
+            "p99 ttft ms",
+            "p50 itl ms",
+            "p99 itl ms",
+            "tok/s",
+            "q peak",
+        ],
+    );
+
+    // Shared prompt pool: a 1-block common prefix (prefix-share hits in
+    // the pool) then per-request random tails.
+    let mut prng = Rng::seed_from_u64(1234);
+    let prefix: Vec<u8> = (0..16).map(|_| prng.below(256) as u8).collect();
+    let prompts: Vec<Vec<u8>> = (0..n_req)
+        .map(|_| {
+            let mut p = prefix.clone();
+            p.extend((0..plen - 16).map(|_| prng.below(256) as u8));
+            p
+        })
+        .collect();
+
+    for arm in arms {
+        // Per-arm bit-identity oracle: a synchronous engine run of the
+        // same requests. Greedy tokens depend only on (weights, prompt,
+        // kv dtype) — never on arrival timing — so one oracle covers
+        // every rate.
+        let sync_reqs: Vec<Request> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Request::new(i as u64, p.clone(), max_new))
+            .collect();
+        let (sync_out, _) =
+            Engine::run_batch_spec(model.clone(), arm.policy(), arm.spec(), sync_reqs);
+        let mut oracle: Vec<Vec<u8>> = vec![Vec::new(); n_req];
+        for r in &sync_out {
+            oracle[r.id as usize] = r.tokens.clone();
+        }
+
+        for &rate in rates {
+            let gw = Gateway::start(
+                model.clone(),
+                arm.policy(),
+                arm.spec(),
+                GatewayOpts::default(),
+            );
+            let h = gw.handle();
+            let mut arrival_rng = Rng::seed_from_u64(7 + rate as u64);
+            let t0 = Instant::now();
+            let mut due = 0.0f64;
+            let mut joins = Vec::with_capacity(n_req);
+            for (i, prompt) in prompts.iter().enumerate() {
+                // Exponential inter-arrival gap; 1−u keeps ln() finite.
+                due += -(1.0 - arrival_rng.f64()).ln() / rate;
+                let target = t0 + Duration::from_secs_f64(due);
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+                let req = GatewayRequest::greedy(prompt.clone(), max_new)
+                    .with_priority(Priority::ALL[i % Priority::ALL.len()]);
+                let submitted = Instant::now();
+                let s = h.submit(req).expect("queue sized for the workload");
+                let slot = s.id as usize;
+                joins.push((i, slot, std::thread::spawn(move || drain_timed(s, submitted))));
+            }
+            let mut ttfts = Vec::new();
+            let mut itls = Vec::new();
+            let mut tokens_total = 0usize;
+            for (i, _slot, j) in joins {
+                let d = j.join().expect("drain thread");
+                assert!(!d.cancelled, "nothing was cancelled in this workload");
+                assert_eq!(
+                    d.streamed, oracle[i],
+                    "[{} {} {}] streamed tokens diverged from the sync oracle (req {i})",
+                    arm.dtype, arm.spec, rate
+                );
+                assert_eq!(d.final_tokens, oracle[i], "Done payload != stream (req {i})");
+                tokens_total += d.streamed.len();
+                ttfts.push(d.ttft_ms);
+                itls.extend(d.itl_ms);
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let drained = gw.shutdown();
+            assert_eq!(
+                drained.referenced_blocks, 0,
+                "pool still references blocks after a full drain"
+            );
+            assert_eq!(drained.metrics.requests_completed, n_req as u64);
+            assert_eq!(drained.metrics.requests_cancelled, 0);
+
+            table.row(vec![
+                "Dense-WA16".into(),
+                arm.dtype.to_string(),
+                arm.spec.into(),
+                if arm.preempt { "on" } else { "off" }.into(),
+                format!("{rate:.0}"),
+                format!("{n_req}"),
+                format!("{:.2}", pctl_ms(&mut ttfts, 0.50)),
+                format!("{:.2}", pctl_ms(&mut ttfts, 0.99)),
+                format!("{:.2}", pctl_ms(&mut itls, 0.50)),
+                format!("{:.2}", pctl_ms(&mut itls, 0.99)),
+                format!("{:.0}", tokens_total as f64 / wall),
+                format!("{}", drained.metrics.queue_depth_peak),
+            ]);
+        }
+    }
+
+    table.print();
+    table.save_json("latency");
+    let _ = std::fs::write("BENCH_latency.json", table.to_json().to_string());
+    println!("\nwrote BENCH_latency.json ({} rows)", if smoke { arms.len() } else { arms.len() * 2 });
+}
+
+/// Drain one stream, timestamping each token as the client sees it.
+fn drain_timed(s: sdq::gateway::StreamHandle, submitted: Instant) -> Drained1 {
+    let mut ttft_ms = 0.0;
+    let mut itl_ms = Vec::new();
+    let mut streamed = Vec::new();
+    let mut last = submitted;
+    loop {
+        match s.recv() {
+            Some(StreamEvent::Token { token, .. }) => {
+                let now = Instant::now();
+                let gap = now.duration_since(last).as_secs_f64() * 1e3;
+                if streamed.is_empty() {
+                    ttft_ms = gap;
+                } else {
+                    itl_ms.push(gap);
+                }
+                last = now;
+                streamed.push(token);
+            }
+            Some(StreamEvent::Done { cancelled, tokens }) => {
+                return Drained1 { ttft_ms, itl_ms, streamed, final_tokens: tokens, cancelled }
+            }
+            None => {
+                return Drained1 {
+                    ttft_ms,
+                    itl_ms,
+                    streamed,
+                    final_tokens: Vec::new(),
+                    cancelled: true,
+                }
+            }
+        }
+    }
+}

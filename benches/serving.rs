@@ -67,71 +67,16 @@ use sdq::coordinator::scheduler::Scheduler;
 use sdq::coordinator::{assert_bit_identical, Request};
 use sdq::harness;
 use sdq::kv::KvDtype;
-use sdq::model::{Arch, Block, Linear, Model, ModelConfig, NamedLinear};
+use sdq::model::testutil::synth_model;
+use sdq::model::Model;
 use sdq::sdq::calib::CalibStats;
 use sdq::sdq::config::CompressionConfig;
 use sdq::spec::{SdqDrafter, SpecPolicy};
-use sdq::tensor::Matrix;
 use sdq::util::bench::Table;
 use sdq::util::rng::Rng;
 
 /// Drafted tokens per sequence per round in the spec rows.
 const SPEC_K: usize = 3;
-
-/// Synthetic GPT big enough that decode is weight-stream bound
-/// (the regime batching is supposed to win in).
-fn synth_model() -> Model {
-    let cfg = ModelConfig {
-        name: "synthetic-gpt".into(),
-        arch: Arch::Gpt,
-        d_model: 128,
-        n_layer: 4,
-        n_head: 8,
-        d_ff: 512,
-        vocab: 256,
-        max_seq: 128,
-        eps: 1e-5,
-        rope_theta: 10000.0,
-        kv_dtype: KvDtype::F32,
-    };
-    let mut rng = Rng::seed_from_u64(42);
-    let mut m = |r: usize, c: usize| {
-        let s = 1.0 / (c as f32).sqrt();
-        Matrix::from_vec(r, c, (0..r * c).map(|_| rng.range_f32(-s, s)).collect())
-    };
-    let (d, f) = (cfg.d_model, cfg.d_ff);
-    let blocks = (0..cfg.n_layer)
-        .map(|i| {
-            let p = |s: &str| format!("block{i}.{s}");
-            let mut nl = |name: &str, key: &str, r: usize, c: usize| NamedLinear {
-                name: p(name),
-                stats_key: p(key),
-                lin: Linear::Plain(m(r, c)),
-            };
-            Block {
-                ln1_g: vec![1.0; d],
-                ln1_b: Some(vec![0.0; d]),
-                q: nl("attn.q", "attn.in", d, d),
-                k: nl("attn.k", "attn.in", d, d),
-                v: nl("attn.v", "attn.in", d, d),
-                o: nl("attn.o", "attn.o.in", d, d),
-                ln2_g: vec![1.0; d],
-                ln2_b: Some(vec![0.0; d]),
-                ff1: nl("mlp.ff1", "mlp.in", f, d),
-                ff2: nl("mlp.ff2", "mlp.ff2.in", d, f),
-                ff3: None,
-            }
-        })
-        .collect();
-    Model {
-        tok_emb: m(cfg.vocab, d),
-        pos_emb: Some(m(cfg.max_seq, d)),
-        blocks,
-        lnf_g: vec![1.0; d],
-        lnf_b: Some(vec![0.0; d]),
-        cfg,
-    }
-}
 
 /// Calibration stats from a forward pass over random tokens (fallback
 /// path — no corpus on disk).

@@ -27,6 +27,23 @@ with ``--update`` from a trusted run. If the hotpath result file is
 absent (e.g. a serving-only invocation) the hotpath gate is skipped
 with a note rather than failing.
 
+A third gate covers the streaming gateway's closed-loop latency:
+`BENCH_latency.json` (from ``cargo bench --bench latency -- --smoke``)
+against ``ci/bench_latency_baseline.json``. Latency rows key on
+(Config, kv dtype, spec, preempt, arrival rate) and gate **two**
+metrics, both one-sided: ``p99 ttft ms`` (queue wait + first token)
+and ``p99 itl ms`` (inter-token gap). Null baselines are record-only
+per metric; absent files skip the gate with a note, exactly like the
+hotpath table.
+
+The three-table arming flow: every new row lands with null metrics
+(committed by the PR that adds the bench case — symmetric coverage
+makes CI fail otherwise), CI reports record-only values until someone
+runs ``python3 ci/check_bench.py --update`` on trusted hardware and
+commits the refreshed baselines, after which the numeric gates arm.
+``--update`` skips (with a note) any results file that does not exist,
+so a partial bench run can refresh just the tables it produced.
+
 Row coverage is gated **symmetrically** in both tables: a baseline row
 missing from the current run fails (a bench case silently disappeared),
 and a current row missing from the baseline fails too (a new bench case
@@ -44,6 +61,8 @@ Usage:
                               [--baseline ci/bench_baseline.json]
                               [--hotpath-current BENCH_hotpath.json]
                               [--hotpath-baseline ci/bench_hotpath_baseline.json]
+                              [--latency-current BENCH_latency.json]
+                              [--latency-baseline ci/bench_latency_baseline.json]
                               [--tolerance 0.25]
                               [--update]
 """
@@ -60,14 +79,17 @@ import sys
 # pre-preemption baselines keep matching current plain rows.
 KEY_FIELDS = ("Config", "kv dtype", "spec", "preempt", "max_active")
 
+# The gateway latency table sweeps arrival rate instead of batch width.
+LATENCY_KEY_FIELDS = ("Config", "kv dtype", "spec", "preempt", "arrival rate")
+
 # Key fields that default to "off" when a (legacy) row lacks them.
 _OFF_DEFAULT = {"spec", "preempt"}
 
 
-def row_key(row):
+def row_key(row, fields=KEY_FIELDS):
     return tuple(
         str(row.get(k, "off") if k in _OFF_DEFAULT else row.get(k))
-        for k in KEY_FIELDS
+        for k in fields
     )
 
 
@@ -133,12 +155,60 @@ def gate_hotpath(cur_rows, base_rows, tol, failures, notes):
             )
 
 
+def gate_latency(cur_rows, base_rows, tol, failures, notes):
+    """One-sided gates on the gateway latency table: 'p99 ttft ms' and
+    'p99 itl ms', keyed on LATENCY_KEY_FIELDS. Null baselines are
+    record-only per metric, coverage is symmetric (a latency arm that
+    appears or disappears without a baseline touch fails)."""
+    current = {row_key(r, LATENCY_KEY_FIELDS): r for r in cur_rows}
+    base_keys = {row_key(b, LATENCY_KEY_FIELDS) for b in base_rows}
+    for k in current:
+        if k not in base_keys:
+            failures.append(
+                f"[latency {' / '.join(k)}] row missing from baseline — add it "
+                f"with null p99 metrics (or run --update)"
+            )
+    for base in base_rows:
+        k = row_key(base, LATENCY_KEY_FIELDS)
+        label = "latency " + " / ".join(k)
+        cur = current.get(k)
+        if cur is None:
+            failures.append(f"[{label}] row missing from current results")
+            continue
+        for metric in ("p99 ttft ms", "p99 itl ms"):
+            base_ms = as_float(base.get(metric))
+            cur_ms = as_float(cur.get(metric))
+            if base_ms is None:
+                notes.append(
+                    f"[{label}] {metric} baseline not yet recorded "
+                    f"(current: {cur_ms}); run with --update on trusted hardware"
+                )
+            elif cur_ms is None:
+                failures.append(f"[{label}] current {metric} missing/unparseable")
+            elif cur_ms > base_ms * (1.0 + tol):
+                failures.append(
+                    f"[{label}] {metric} regressed: {cur_ms:.2f} > "
+                    f"{base_ms:.2f} × (1 + {tol:.2f})"
+                )
+            else:
+                notes.append(
+                    f"[{label}] {metric} ok: {cur_ms:.2f} (baseline {base_ms:.2f})"
+                )
+
+
 def refresh(current, baseline):
+    """Rewrite one baseline from its current results file. A missing
+    results file is skipped with a note, not a traceback — ``--update``
+    after a partial bench run refreshes only the tables that ran."""
+    if not os.path.exists(current):
+        print(f"{current} absent; baseline {baseline} untouched")
+        return False
     cur_doc, cur_rows = load_rows(current)
     with open(baseline, "w") as f:
         json.dump(cur_doc, f, indent=2, sort_keys=False)
         f.write("\n")
     print(f"baseline refreshed from {current} ({len(cur_rows)} rows)")
+    return True
 
 
 def main():
@@ -147,6 +217,8 @@ def main():
     ap.add_argument("--baseline", default="ci/bench_baseline.json")
     ap.add_argument("--hotpath-current", default="BENCH_hotpath.json")
     ap.add_argument("--hotpath-baseline", default="ci/bench_hotpath_baseline.json")
+    ap.add_argument("--latency-current", default="BENCH_latency.json")
+    ap.add_argument("--latency-baseline", default="ci/bench_latency_baseline.json")
     ap.add_argument("--tolerance", type=float, default=0.25)
     ap.add_argument(
         "--update",
@@ -157,10 +229,8 @@ def main():
 
     if args.update:
         refresh(args.current, args.baseline)
-        if os.path.exists(args.hotpath_current):
-            refresh(args.hotpath_current, args.hotpath_baseline)
-        else:
-            print(f"{args.hotpath_current} absent; hotpath baseline untouched")
+        refresh(args.hotpath_current, args.hotpath_baseline)
+        refresh(args.latency_current, args.latency_baseline)
         return 0
 
     _, cur_rows = load_rows(args.current)
@@ -237,6 +307,18 @@ def main():
             f"{args.hotpath_baseline} absent)"
         )
 
+    n_latency = 0
+    if os.path.exists(args.latency_current) and os.path.exists(args.latency_baseline):
+        _, lat_cur = load_rows(args.latency_current)
+        _, lat_base = load_rows(args.latency_baseline)
+        n_latency = len(lat_base)
+        gate_latency(lat_cur, lat_base, tol, failures, notes)
+    else:
+        notes.append(
+            f"latency gate skipped ({args.latency_current} or "
+            f"{args.latency_baseline} absent)"
+        )
+
     for n in notes:
         print("  " + n)
     if failures:
@@ -246,7 +328,8 @@ def main():
         return 1
     print(
         f"\nbench regression gate passed "
-        f"({len(base_rows)} serving + {n_hotpath} hotpath baseline rows)"
+        f"({len(base_rows)} serving + {n_hotpath} hotpath + "
+        f"{n_latency} latency baseline rows)"
     )
     return 0
 

@@ -1,0 +1,192 @@
+#!/usr/bin/env python3
+"""Self-test for the bench-regression gate (``ci/check_bench.py``).
+
+The gate is the last line of defense for three bench tables (serving
+throughput, hotpath latency, gateway latency) — a bug here silently
+disarms every perf regression check, so the gate itself is gated: CI
+runs this file in a fast Python-only job. Each scenario builds a
+results/baseline fixture in a temp directory and runs the real script
+as a subprocess, asserting on exit status and output.
+
+Run directly: ``python3 ci/test_check_bench.py``
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+CHECK = os.path.join(os.path.dirname(os.path.abspath(__file__)), "check_bench.py")
+
+
+def serving_row(tput="100.0", hit="0.50", **over):
+    row = {
+        "Config": "Dense-WA16",
+        "kv dtype": "f32",
+        "spec": "off",
+        "preempt": "off",
+        "max_active": "4",
+        "batched tok/s": tput,
+        "prefix hit": hit,
+    }
+    row.update(over)
+    return row
+
+
+def latency_row(ttft="5.00", itl="2.00", **over):
+    row = {
+        "Config": "Dense-WA16",
+        "kv dtype": "f32",
+        "spec": "off",
+        "preempt": "off",
+        "arrival rate": "32",
+        "p99 ttft ms": ttft,
+        "p99 itl ms": itl,
+    }
+    row.update(over)
+    return row
+
+
+class GateHarness(unittest.TestCase):
+    """Temp-dir fixture + subprocess runner shared by every scenario."""
+
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        self.dir = self._tmp.name
+        os.mkdir(os.path.join(self.dir, "ci"))
+
+    def tearDown(self):
+        self._tmp.cleanup()
+
+    def write(self, relpath, rows, title="t"):
+        path = os.path.join(self.dir, relpath)
+        with open(path, "w") as f:
+            json.dump({"title": title, "rows": rows}, f)
+        return path
+
+    def run_gate(self, *extra_args):
+        proc = subprocess.run(
+            [sys.executable, CHECK, *extra_args],
+            cwd=self.dir,
+            capture_output=True,
+            text=True,
+        )
+        return proc
+
+    def seed_passing_fixture(self):
+        """Serving + latency tables, identical current and baseline
+        (hotpath files absent → that gate skips with a note)."""
+        self.write("BENCH_serving.json", [serving_row()])
+        self.write("ci/bench_baseline.json", [serving_row()])
+        self.write("BENCH_latency.json", [latency_row()])
+        self.write("ci/bench_latency_baseline.json", [latency_row()])
+
+
+class TestGate(GateHarness):
+    def test_all_tables_within_tolerance_pass(self):
+        self.seed_passing_fixture()
+        proc = self.run_gate()
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertIn("bench regression gate passed", proc.stdout)
+        self.assertIn("1 latency baseline rows", proc.stdout)
+        self.assertIn("hotpath gate skipped", proc.stdout)
+
+    def test_serving_throughput_regression_fails(self):
+        self.seed_passing_fixture()
+        self.write("BENCH_serving.json", [serving_row(tput="60.0")])  # −40% > 25%
+        proc = self.run_gate()
+        self.assertEqual(proc.returncode, 1, proc.stdout)
+        self.assertIn("throughput regressed", proc.stdout)
+
+    def test_latency_p99_regression_fails_one_sided(self):
+        self.seed_passing_fixture()
+        self.write("BENCH_latency.json", [latency_row(ttft="9.00")])  # +80% > 25%
+        proc = self.run_gate()
+        self.assertEqual(proc.returncode, 1, proc.stdout)
+        self.assertIn("p99 ttft ms regressed", proc.stdout)
+
+    def test_latency_improvement_never_fails(self):
+        self.seed_passing_fixture()
+        self.write("BENCH_latency.json", [latency_row(ttft="0.10", itl="0.05")])
+        proc = self.run_gate()
+        self.assertEqual(proc.returncode, 0, proc.stdout)
+
+    def test_null_latency_baseline_is_record_only(self):
+        self.seed_passing_fixture()
+        self.write("ci/bench_latency_baseline.json", [latency_row(ttft=None, itl=None)])
+        self.write("BENCH_latency.json", [latency_row(ttft="9999.0", itl="9999.0")])
+        proc = self.run_gate()
+        self.assertEqual(proc.returncode, 0, proc.stdout)
+        self.assertIn("not yet recorded", proc.stdout)
+
+    def test_latency_coverage_is_symmetric(self):
+        # A new current arm without a baseline row fails …
+        self.seed_passing_fixture()
+        self.write(
+            "BENCH_latency.json",
+            [latency_row(), latency_row(**{"kv dtype": "int8"})],
+        )
+        proc = self.run_gate()
+        self.assertEqual(proc.returncode, 1, proc.stdout)
+        self.assertIn("missing from baseline", proc.stdout)
+        # … and a baseline arm that disappeared from the current run
+        # fails too.
+        self.write("BENCH_latency.json", [latency_row()])
+        self.write(
+            "ci/bench_latency_baseline.json",
+            [latency_row(), latency_row(**{"preempt": "on"})],
+        )
+        proc = self.run_gate()
+        self.assertEqual(proc.returncode, 1, proc.stdout)
+        self.assertIn("missing from current results", proc.stdout)
+
+    def test_absent_latency_files_skip_the_gate(self):
+        self.write("BENCH_serving.json", [serving_row()])
+        self.write("ci/bench_baseline.json", [serving_row()])
+        proc = self.run_gate()
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertIn("latency gate skipped", proc.stdout)
+
+    def test_update_with_missing_results_file_is_not_a_traceback(self):
+        # The --update edge: no bench has run, so no BENCH_*.json
+        # exists. The refresh must skip each table with a note — exit 0,
+        # no exception — and leave the committed baselines untouched.
+        baseline = self.write("ci/bench_baseline.json", [serving_row()])
+        with open(baseline) as f:
+            before = f.read()
+        proc = self.run_gate("--update")
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertNotIn("Traceback", proc.stderr)
+        self.assertIn("BENCH_serving.json absent", proc.stdout)
+        self.assertIn("BENCH_latency.json absent", proc.stdout)
+        with open(baseline) as f:
+            self.assertEqual(f.read(), before, "baseline must be untouched")
+
+    def test_update_refreshes_present_tables(self):
+        self.seed_passing_fixture()
+        self.write("BENCH_latency.json", [latency_row(ttft="7.77")])
+        proc = self.run_gate("--update")
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        with open(os.path.join(self.dir, "ci/bench_latency_baseline.json")) as f:
+            refreshed = json.load(f)
+        self.assertEqual(refreshed["rows"][0]["p99 ttft ms"], "7.77")
+        # Serving baseline refreshed too; hotpath (absent) skipped.
+        self.assertIn("baseline refreshed from BENCH_serving.json", proc.stdout)
+        self.assertIn("BENCH_hotpath.json absent", proc.stdout)
+
+    def test_hotpath_regression_still_fails(self):
+        # The merged bench job runs all three tables through one
+        # invocation — make sure extending the script kept the hotpath
+        # gate armed.
+        self.seed_passing_fixture()
+        self.write("BENCH_hotpath.json", [{"bench": "gemm", "median ms": "2.0"}])
+        self.write("ci/bench_hotpath_baseline.json", [{"bench": "gemm", "median ms": "1.0"}])
+        proc = self.run_gate()
+        self.assertEqual(proc.returncode, 1, proc.stdout)
+        self.assertIn("latency regressed", proc.stdout)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)

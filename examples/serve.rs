@@ -34,18 +34,80 @@
 //! * `--draft-config` — compression config for the `sdq-draft` draft
 //!   model (default `Q-VSQuant-WAint4`, deliberately rougher than the
 //!   serving config: drafts are cheap, verification keeps them honest).
+//! * `--gateway` — run the streaming HTTP/SSE serving gateway instead
+//!   of the one-shot batch demo: `cargo run --release --example serve
+//!   -- --gateway [--port 8090] [--queue-capacity 256]
+//!   [--round-delay-ms 0] [--max-active 8] [--kv-dtype int8]
+//!   [--preempt] [--max-resident 32] [--spec off|ngram]`. Serves
+//!   `POST /v1/completions` (SSE token stream), `POST /v1/cancel/<id>`,
+//!   `GET /metrics`, `GET /healthz` until killed. Falls back to the
+//!   synthetic model when artifacts are absent, so the CI smoke step
+//!   can exercise the full submit → stream → cancel → reclaim loop
+//!   without `make artifacts`.
 
 use sdq::coordinator::{batcher::BatchPolicy, Engine, Request};
 use sdq::data::Split;
+use sdq::gateway::{Gateway, GatewayOpts};
 use sdq::harness;
 use sdq::spec::{SdqDrafter, SpecPolicy};
 use sdq::util::cli::Args;
 
+/// `--gateway` mode: continuous-batching streaming front-end over the
+/// same scheduler the batch demo uses. Blocks in the accept loop until
+/// the process is killed.
+fn gateway_main(args: &Args) -> sdq::Result<()> {
+    let mname = args.get_or("model", "gpt-micro").to_string();
+    let model = if harness::artifacts_ready() {
+        harness::load_model(&mname)?
+    } else {
+        eprintln!("artifacts missing: gateway serving the synthetic model");
+        sdq::model::testutil::synth_model()
+    };
+    let kv_dtype = match args.get("kv-dtype") {
+        Some(s) => Some(sdq::kv::KvDtype::parse(s)?),
+        None => None,
+    };
+    let policy = BatchPolicy {
+        max_active: args.get_usize("max-active", 8)?,
+        kv_dtype,
+        preempt: args.has("preempt"),
+        max_resident_blocks: args.get("max-resident").map(|s| s.parse()).transpose()?,
+        ..Default::default()
+    };
+    let spec_mode = args.get_or("spec", "off").to_string();
+    let spec = match spec_mode.as_str() {
+        "off" => None,
+        "ngram" => Some(SpecPolicy::ngram(args.get_usize("spec-k", 4)?)),
+        other => anyhow::bail!("--gateway supports --spec off | ngram (got {other})"),
+    };
+    let opts = GatewayOpts {
+        queue_capacity: args.get_usize("queue-capacity", 256)?,
+        round_delay: std::time::Duration::from_millis(
+            args.get_usize("round-delay-ms", 0)? as u64,
+        ),
+    };
+    let port = args.get_usize("port", 8090)?;
+    let gw = Gateway::start(model, policy, spec, opts);
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
+    println!(
+        "gateway listening on http://127.0.0.1:{port} \
+         (kv {}, preempt {}, spec {spec_mode}, queue {})",
+        args.get_or("kv-dtype", "model-default"),
+        policy.preempt,
+        opts.queue_capacity,
+    );
+    sdq::gateway::http::serve(listener, gw.handle())?;
+    Ok(())
+}
+
 fn main() -> sdq::Result<()> {
+    let args = Args::parse();
+    if args.has("gateway") {
+        return gateway_main(&args);
+    }
     if !harness::artifacts_ready() {
         return Ok(());
     }
-    let args = Args::parse();
     let mname = args.get_or("model", "gpt-micro").to_string();
     let cfg_str = args.get_or("config", "SDQ-W7:8-1:8int8-6:8fp4").to_string();
     let n_req = args.get_usize("requests", 16)?;

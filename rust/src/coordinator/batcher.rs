@@ -118,6 +118,15 @@ impl Batcher {
         self.waiting.pop_front()
     }
 
+    /// Remove a queued request by id before it reaches the scheduler
+    /// (the gateway's queue-stage cancellation). Returns the removed
+    /// entry so the caller can account for it; `None` if the id is not
+    /// waiting here (already admitted, or never enqueued).
+    pub fn cancel(&mut self, id: u64) -> Option<InFlight> {
+        let i = self.waiting.iter().position(|f| f.req.id == id)?;
+        self.waiting.remove(i)
+    }
+
     /// Admit up to the policy limits given the current active set size,
     /// the KV units already charged against `kv_budget`, and a cost
     /// projection per waiting request (blocks in paged mode, bytes in
@@ -217,6 +226,20 @@ mod tests {
         let mut b = Batcher::new();
         assert!(b.admit(&BatchPolicy::default(), 0, 0, usize::MAX, |_| 1).is_empty());
         assert!(b.pop_front().is_none());
+    }
+
+    #[test]
+    fn cancel_removes_only_the_target() {
+        let mut b = Batcher::new();
+        for i in 0..4 {
+            b.enqueue(req(i));
+        }
+        assert_eq!(b.cancel(2).map(|f| f.req.id), Some(2));
+        assert!(b.cancel(2).is_none(), "second cancel of the same id is a no-op");
+        assert!(b.cancel(99).is_none());
+        let admitted = b.admit(&BatchPolicy::default(), 0, 0, usize::MAX, |_| 1);
+        let ids: Vec<u64> = admitted.iter().map(|f| f.req.id).collect();
+        assert_eq!(ids, vec![0, 1, 3], "FIFO order preserved around the hole");
     }
 
     #[test]

@@ -2,6 +2,12 @@
 
 use std::time::Duration;
 
+/// Number of gateway priority classes
+/// ([`crate::gateway::Priority`]): interactive, standard, batch. The
+/// per-class fairness counters below are fixed-size arrays indexed by
+/// `Priority as usize`.
+pub const PRIORITY_CLASSES: usize = 3;
+
 /// Fixed-bucket latency histogram (log-spaced, µs to minutes).
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -169,6 +175,50 @@ pub struct Metrics {
     /// the packed quantized weight plane (`sdq::qmat`) and packed SpMM
     /// forms avoided.
     pub weight_bytes_avoided: u64,
+    /// Requests accepted into the gateway admission queue (excludes
+    /// rejections; includes requests later cancelled).
+    pub requests_submitted: u64,
+    /// Requests refused at the gateway door because the admission queue
+    /// was at capacity (backpressure).
+    pub requests_rejected: u64,
+    /// Requests cancelled mid-flight (explicit cancel or client
+    /// disconnect) at any stage: gateway queue, batcher queue, active,
+    /// or swapped. Cancelled requests never produce a `Response`.
+    pub requests_cancelled: u64,
+    /// Tokens that had already been generated for requests that were
+    /// then cancelled — work thrown away at the client's request.
+    pub tokens_cancelled: u64,
+    /// Pool blocks released by cancelling *active* sequences (frozen
+    /// prefix blocks stay cached and shareable; a swapped sequence's
+    /// blocks went back at suspend time, so it frees none here).
+    pub cancel_freed_blocks: u64,
+    /// Peak gateway admission-queue depth (requests accepted but not
+    /// yet admitted into the scheduler).
+    pub queue_depth_peak: u64,
+    /// Client-observed time-to-first-token: gateway submit → first
+    /// streamed token. Unlike [`Self::ttft`] (scheduler enqueue →
+    /// first token) this includes gateway queue wait, so it is the
+    /// number an SLO would be written against.
+    pub stream_ttft: Histogram,
+    /// Client-observed gap between consecutive streamed tokens. Tokens
+    /// that land in the same scheduling round (e.g. an accepted
+    /// speculative burst) arrive together and record ~0 gaps — that is
+    /// the latency the client actually sees, not an artifact.
+    pub inter_token: Histogram,
+    /// Per-priority-class fairness counters, indexed by
+    /// `gateway::Priority as usize` (0 = interactive, 1 = standard,
+    /// 2 = batch).
+    pub class_submitted: [u64; PRIORITY_CLASSES],
+    /// Requests per class admitted out of the gateway queue into the
+    /// scheduler (denominator for the mean queue wait).
+    pub class_admitted: [u64; PRIORITY_CLASSES],
+    pub class_completed: [u64; PRIORITY_CLASSES],
+    pub class_cancelled: [u64; PRIORITY_CLASSES],
+    /// Tokens streamed per class (includes partial output of cancelled
+    /// requests — bytes the client actually received).
+    pub class_tokens: [u64; PRIORITY_CLASSES],
+    /// Σ gateway-queue wait (submit → scheduler admission) per class.
+    pub class_queue_wait: [Duration; PRIORITY_CLASSES],
     pub ttft: Histogram,
     pub total_latency: Histogram,
     /// Wall time the engine spent serving (for throughput).
@@ -292,6 +342,37 @@ impl Metrics {
         self.weight_bytes_avoided as f64 / total as f64
     }
 
+    /// Fraction of accepted requests that were cancelled mid-flight.
+    /// `0.0` before any request was submitted — deliberately not NaN,
+    /// same JSON-validity contract as [`Self::prefix_hit_rate`] (this
+    /// rides the gateway `/metrics` snapshot and `BENCH_latency.json`).
+    pub fn cancellation_rate(&self) -> f64 {
+        if self.requests_submitted == 0 {
+            return 0.0;
+        }
+        self.requests_cancelled as f64 / self.requests_submitted as f64
+    }
+
+    /// Fraction of arriving requests turned away by backpressure:
+    /// `rejected / (submitted + rejected)`. `0.0` cold — never NaN.
+    pub fn rejection_rate(&self) -> f64 {
+        let arrived = self.requests_submitted + self.requests_rejected;
+        if arrived == 0 {
+            return 0.0;
+        }
+        self.requests_rejected as f64 / arrived as f64
+    }
+
+    /// Mean gateway-queue wait for priority class `c`, in milliseconds.
+    /// `0.0` while the class has no admissions — never NaN (emitted as
+    /// a JSON number in the gateway `/metrics` snapshot).
+    pub fn class_mean_queue_wait_ms(&self, c: usize) -> f64 {
+        if self.class_admitted[c] == 0 {
+            return 0.0;
+        }
+        self.class_queue_wait[c].as_secs_f64() * 1e3 / self.class_admitted[c] as f64
+    }
+
     /// Record one forward pass's weight traffic (precomputed per-model
     /// constants from [`Model::weight_stream_bytes`]).
     ///
@@ -366,6 +447,7 @@ impl Metrics {
              w_streamed={:.1}KiB w_avoided={:.1}KiB \
              evictions={} preempt={} resumes={} swap={:.1}KiB reprefill={} \
              spec={} accept={:.2} tok/round={:.2} \
+             submitted={} cancelled={} rejected={} q_peak={} \
              ttft_mean={:.1}ms ttft_p99={:.1}ms total_mean={:.1}ms",
             self.requests_completed,
             self.tokens_generated,
@@ -389,6 +471,10 @@ impl Metrics {
             if self.spec_drafter.is_empty() { "off" } else { self.spec_drafter.as_str() },
             self.spec_acceptance_rate(),
             self.tokens_per_round(),
+            self.requests_submitted,
+            self.requests_cancelled,
+            self.requests_rejected,
+            self.queue_depth_peak,
             self.ttft.mean().as_secs_f64() * 1e3,
             self.ttft.quantile(0.99).as_secs_f64() * 1e3,
             self.total_latency.mean().as_secs_f64() * 1e3,
@@ -508,6 +594,11 @@ mod tests {
             ("pool_utilization_peak", m.pool_utilization_peak),
             ("kv_dequant_avoided_rate", m.kv_dequant_avoided_rate()),
             ("weight_stream_avoided_rate", m.weight_stream_avoided_rate()),
+            ("cancellation_rate", m.cancellation_rate()),
+            ("rejection_rate", m.rejection_rate()),
+            ("queue_wait_ms_interactive", m.class_mean_queue_wait_ms(0)),
+            ("queue_wait_ms_standard", m.class_mean_queue_wait_ms(1)),
+            ("queue_wait_ms_batch", m.class_mean_queue_wait_ms(2)),
         ]
     }
 
@@ -584,6 +675,32 @@ mod tests {
         assert!(s.contains("resumes=2"));
         assert!(s.contains("swap=4.0KiB"));
         assert!(s.contains("reprefill=10"));
+    }
+
+    #[test]
+    fn gateway_counters_and_rates() {
+        let mut m = Metrics::default();
+        assert_eq!(m.cancellation_rate(), 0.0, "cold rate is 0.0, never NaN");
+        assert_eq!(m.rejection_rate(), 0.0);
+        assert_eq!(m.class_mean_queue_wait_ms(0), 0.0);
+        m.requests_submitted = 8;
+        m.requests_cancelled = 2;
+        m.requests_rejected = 2;
+        m.queue_depth_peak = 5;
+        m.class_admitted[1] = 4;
+        m.class_queue_wait[1] = Duration::from_millis(20);
+        assert!((m.cancellation_rate() - 0.25).abs() < 1e-9);
+        assert!((m.rejection_rate() - 0.2).abs() < 1e-9, "2 of 10 arrivals rejected");
+        assert!((m.class_mean_queue_wait_ms(1) - 5.0).abs() < 1e-9);
+        m.stream_ttft.record(Duration::from_millis(3));
+        m.inter_token.record(Duration::from_millis(1));
+        assert_eq!(m.stream_ttft.count(), 1);
+        assert_eq!(m.inter_token.count(), 1);
+        let s = m.summary();
+        assert!(s.contains("submitted=8"), "summary must surface gateway traffic: {s}");
+        assert!(s.contains("cancelled=2"));
+        assert!(s.contains("rejected=2"));
+        assert!(s.contains("q_peak=5"));
     }
 
     #[test]

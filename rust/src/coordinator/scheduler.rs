@@ -224,6 +224,51 @@ impl<'m> Scheduler<'m> {
         !self.active.is_empty() || !self.swapped.is_empty() || batcher.waiting() > 0
     }
 
+    /// Cancel an in-flight request mid-flight, reclaiming its KV now.
+    ///
+    /// An **active** sequence releases its block table back to the pool
+    /// — the exact teardown retirement uses, so frozen prefix blocks
+    /// stay cached/shareable and partial tail blocks free immediately.
+    /// A **swapped** sequence just drops its off-pool [`Snapshot`] (its
+    /// blocks already went back at suspend time). Returns `false` when
+    /// the id is not in flight here (still queued in the `Batcher`,
+    /// already completed, or unknown) — queue-stage cancellation is the
+    /// caller's job ([`Batcher::cancel`]). A cancelled request never
+    /// produces a [`Response`].
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(i) = self.active.iter().position(|f| f.req.id == id) {
+            let mut f = self.active.remove(i);
+            if let Some(tb) = f.table.take() {
+                self.metrics.cancel_freed_blocks += tb.block_ids().len() as u64;
+                self.pool.release(tb);
+            }
+            self.metrics.requests_cancelled += 1;
+            self.metrics.tokens_cancelled += f.generated.len() as u64;
+            return true;
+        }
+        if let Some(i) = self.swapped.iter().position(|s| s.f.req.id == id) {
+            let s = self.swapped.remove(i).expect("position() indexed into swapped");
+            self.metrics.requests_cancelled += 1;
+            self.metrics.tokens_cancelled += s.f.generated.len() as u64;
+            return true;
+        }
+        false
+    }
+
+    /// Per-token streaming hook for front-ends: calls `f` with every
+    /// in-flight sequence's `(request id, tokens generated so far)` —
+    /// active and swapped alike, in no particular order. Sequences that
+    /// retired this round are *not* here; their final token vectors
+    /// come back from [`Self::round`] as [`Response`]s.
+    pub fn for_each_progress(&self, mut f: impl FnMut(u64, &[u8])) {
+        for fl in &self.active {
+            f(fl.req.id, &fl.generated);
+        }
+        for s in &self.swapped {
+            f(s.f.req.id, &s.f.generated);
+        }
+    }
+
     /// Actual KV bytes resident: pool residency (paged) plus chunked
     /// caches (legacy mode).
     pub fn kv_bytes_in_use(&self) -> usize {
@@ -1546,5 +1591,138 @@ mod tests {
             BatchPolicy { batched_decode: false, preempt: true, ..Default::default() };
         let sched = Scheduler::new(&model, policy);
         assert!(!sched.policy.preempt, "legacy baseline has no snapshot story");
+    }
+
+    // ---- mid-flight cancellation (the gateway's reclaim path) ----
+
+    #[test]
+    fn cancel_active_releases_blocks_and_suppresses_response() {
+        let model = tiny_model(Arch::Gpt, 56);
+        let mut sched = Scheduler::new(&model, BatchPolicy::default());
+        let mut batcher = Batcher::new();
+        for i in 0..4 {
+            batcher.enqueue(Request::new(i, vec![(65 + i) as u8; 4], 10));
+        }
+        let mut out = sched.round(&mut batcher);
+        out.extend(sched.round(&mut batcher));
+        let before = sched.pool().referenced_blocks();
+        assert!(sched.cancel(1), "id 1 must be active after two rounds");
+        assert!(sched.pool().referenced_blocks() < before, "cancel must release blocks now");
+        sched.pool().assert_consistent();
+        assert!(!sched.cancel(1), "double cancel is a no-op");
+        assert!(!sched.cancel(99), "unknown id is a no-op");
+        while sched.has_work(&batcher) {
+            out.extend(sched.round(&mut batcher));
+        }
+        let mut ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 2, 3], "a cancelled request must never produce a response");
+        assert_eq!(sched.pool().referenced_blocks(), 0);
+        assert_eq!(sched.metrics.requests_cancelled, 1);
+        assert!(sched.metrics.cancel_freed_blocks >= 1);
+        assert!(sched.metrics.tokens_cancelled >= 1, "two rounds in, ≥2 tokens existed");
+    }
+
+    #[test]
+    fn cancel_swapped_drops_snapshot_without_touching_pool() {
+        let model = tiny_model(Arch::Llama, 57);
+        let tight = BatchPolicy {
+            kv_budget_bytes: usize::MAX,
+            max_resident_blocks: Some(3),
+            preempt: true,
+            ..Default::default()
+        };
+        let mut sched = Scheduler::new(&model, tight);
+        let mut batcher = Batcher::new();
+        for r in pressure_reqs(5) {
+            batcher.enqueue(r);
+        }
+        let mut out = Vec::new();
+        let mut rounds = 0;
+        while sched.swapped() == 0 {
+            out.extend(sched.round(&mut batcher));
+            rounds += 1;
+            assert!(rounds < 2000, "pressure workload never swapped");
+        }
+        // Cancel a swapped sequence: its blocks went back at suspend, so
+        // residency must not move and no snapshot may be stranded.
+        let mut victim = None;
+        sched.for_each_progress(|id, _| {
+            if victim.is_none() && !sched_active_ids(&sched).contains(&id) {
+                victim = Some(id);
+            }
+        });
+        let victim = victim.expect("swapped() > 0 ⇒ some non-active id in progress");
+        let before = sched.pool().referenced_blocks();
+        assert!(sched.cancel(victim));
+        assert_eq!(sched.pool().referenced_blocks(), before);
+        sched.pool().assert_consistent();
+        while sched.has_work(&batcher) {
+            out.extend(sched.round(&mut batcher));
+            rounds += 1;
+            assert!(rounds < 2000, "livelock after cancelling a swapped sequence");
+        }
+        assert_eq!(out.len(), 4, "4 of 5 must complete");
+        assert!(out.iter().all(|r| r.id != victim));
+        assert_eq!(sched.pool().referenced_blocks(), 0);
+        assert_eq!(sched.swapped(), 0);
+        assert_eq!(sched.metrics.cancel_freed_blocks, 0, "swapped cancel frees nothing now");
+    }
+
+    /// Ids currently in the active set (test helper for picking a
+    /// swapped victim via `for_each_progress`).
+    fn sched_active_ids(s: &Scheduler) -> Vec<u64> {
+        s.active.iter().map(|f| f.req.id).collect()
+    }
+
+    #[test]
+    fn cancel_storm_empties_pool_immediately() {
+        let model = tiny_model(Arch::Gpt, 58);
+        let mut sched = Scheduler::new(&model, BatchPolicy::default());
+        let mut batcher = Batcher::new();
+        for i in 0..6 {
+            batcher.enqueue(Request::new(i, vec![(70 + i) as u8; 5], 20));
+        }
+        let _ = sched.round(&mut batcher);
+        let _ = sched.round(&mut batcher);
+        // Storm: every id, wherever it currently lives.
+        for id in 0..6 {
+            let _ = sched.cancel(id) || batcher.cancel(id).is_some();
+        }
+        assert_eq!(sched.pool().referenced_blocks(), 0, "storm must leave zero resident blocks");
+        sched.pool().assert_consistent();
+        assert!(!sched.has_work(&batcher), "nothing may remain anywhere");
+        assert_eq!(
+            sched.metrics.requests_cancelled as usize + batcher.waiting(),
+            6 - sched.metrics.requests_completed as usize,
+            "every unfinished request was cancelled somewhere"
+        );
+    }
+
+    #[test]
+    fn progress_snapshots_are_prefixes_of_final_output() {
+        // The streaming contract: what `for_each_progress` reports after
+        // round N is a prefix of the request's final token vector.
+        let model = tiny_model(Arch::Llama, 59);
+        let mut sched = Scheduler::new(&model, BatchPolicy::default());
+        let mut batcher = Batcher::new();
+        for i in 0..3 {
+            batcher.enqueue(Request::new(i, vec![(75 + i) as u8; 3], 8));
+        }
+        let mut seen: std::collections::HashMap<u64, Vec<u8>> = Default::default();
+        let mut out = Vec::new();
+        while sched.has_work(&batcher) {
+            out.extend(sched.round(&mut batcher));
+            sched.for_each_progress(|id, toks| {
+                let prev = seen.entry(id).or_default();
+                assert!(toks.len() >= prev.len(), "progress went backwards");
+                assert_eq!(&toks[..prev.len()], &prev[..], "progress rewrote history");
+                *prev = toks.to_vec();
+            });
+        }
+        for r in &out {
+            let prev = &seen[&r.id];
+            assert_eq!(&r.tokens[..prev.len()], &prev[..], "final output rewrote the stream");
+        }
     }
 }

@@ -1,0 +1,203 @@
+//! HTTP/1.1 + SSE surface over the gateway core.
+//!
+//! Hand-rolled on [`std::net::TcpListener`], thread-per-connection,
+//! `Connection: close` (no keep-alive, no chunked encoding) — the
+//! crate's only dependency is `anyhow`, and this is the protocol
+//! subset per-token streaming actually needs. Routes:
+//!
+//! | route                  | behavior                                   |
+//! |------------------------|--------------------------------------------|
+//! | `GET /healthz`         | `200 ok` — readiness probe                 |
+//! | `GET /metrics`         | latest JSON metrics snapshot               |
+//! | `POST /v1/cancel/<id>` | flag a live request for cancellation       |
+//! | `POST /v1/completions` | submit + stream tokens as SSE              |
+//!
+//! The completions body is JSON: `{"prompt": "...}` required;
+//! `max_new_tokens` (default 16), `temperature` (default 0.0 =
+//! greedy), `priority` (`interactive` | `standard` | `batch`) optional.
+//! The SSE stream opens with `data: {"id":N}` (N is the
+//! `/v1/cancel/<id>` key), carries one `data: {"index":i,"token":t}`
+//! per token, then a final `data: {"done":true,"cancelled":…,
+//! "tokens":[…]}` and a `data: [DONE]` sentinel. A client that goes
+//! away mid-stream is detected at the next write and its request is
+//! cancelled — the KV-reclaim disconnect path, driven by the CI smoke
+//! step with plain `curl`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+use super::{GatewayHandle, GatewayRequest, Priority, StreamEvent, SubmitError};
+use crate::util::json::Json;
+
+/// Accept loop: one thread per connection, forever (the process model
+/// is "kill the server to stop it" — CI does exactly that).
+pub fn serve(listener: TcpListener, handle: GatewayHandle) -> std::io::Result<()> {
+    for conn in listener.incoming() {
+        let stream = conn?;
+        let h = handle.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(stream, h);
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(mut stream: TcpStream, h: GatewayHandle) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+
+    let mut content_length = 0usize;
+    let mut expect_continue = false;
+    loop {
+        let mut hl = String::new();
+        if reader.read_line(&mut hl)? == 0 {
+            break;
+        }
+        let t = hl.trim();
+        if t.is_empty() {
+            break;
+        }
+        let lower = t.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        } else if lower.starts_with("expect:") && lower.contains("100-continue") {
+            expect_continue = true;
+        }
+    }
+    if expect_continue {
+        stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+    }
+    let mut body = vec![0u8; content_length.min(1 << 20)];
+    if !body.is_empty() {
+        reader.read_exact(&mut body)?;
+    }
+    let body = String::from_utf8_lossy(&body).into_owned();
+
+    match (method.as_str(), path.as_str()) {
+        ("GET", "/healthz") => respond(&mut stream, 200, "text/plain", "ok\n"),
+        ("GET", "/metrics") => {
+            let snap = h.metrics_json();
+            respond(&mut stream, 200, "application/json", &(snap + "\n"))
+        }
+        ("POST", p) if p.starts_with("/v1/cancel/") => {
+            match p["/v1/cancel/".len()..].parse::<u64>() {
+                Ok(id) => {
+                    let hit = h.cancel(id);
+                    let j = Json::obj(vec![
+                        ("id", Json::from(id as usize)),
+                        ("cancelled", Json::from(hit)),
+                    ]);
+                    let status = if hit { 200 } else { 404 };
+                    respond(&mut stream, status, "application/json", &(j.to_string() + "\n"))
+                }
+                Err(_) => {
+                    respond(&mut stream, 400, "application/json", "{\"error\":\"bad id\"}\n")
+                }
+            }
+        }
+        ("POST", "/v1/completions") => completions(&mut stream, &h, &body),
+        _ => respond(&mut stream, 404, "text/plain", "not found\n"),
+    }
+}
+
+fn completions(stream: &mut TcpStream, h: &GatewayHandle, body: &str) -> std::io::Result<()> {
+    let parsed = match Json::parse(body) {
+        Ok(j) => j,
+        Err(_) => {
+            return respond(stream, 400, "application/json", "{\"error\":\"invalid JSON\"}\n")
+        }
+    };
+    let Some(prompt) = parsed.get("prompt").and_then(|v| v.as_str()).map(|s| s.as_bytes().to_vec())
+    else {
+        return respond(stream, 400, "application/json", "{\"error\":\"missing prompt\"}\n");
+    };
+    let req = GatewayRequest {
+        prompt,
+        max_new_tokens: parsed.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(16),
+        temperature: parsed.get("temperature").and_then(|v| v.as_f64()).unwrap_or(0.0) as f32,
+        priority: parsed
+            .get("priority")
+            .and_then(|v| v.as_str())
+            .and_then(Priority::parse)
+            .unwrap_or(Priority::Standard),
+    };
+    let s = match h.submit(req) {
+        Ok(s) => s,
+        Err(SubmitError::QueueFull) => {
+            return respond(stream, 429, "application/json", "{\"error\":\"queue full\"}\n")
+        }
+        Err(SubmitError::ShutDown) => {
+            return respond(stream, 503, "application/json", "{\"error\":\"shutting down\"}\n")
+        }
+    };
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+          Cache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    // Opening event: the id is what `/v1/cancel/<id>` takes.
+    let start = Json::obj(vec![("id", Json::from(s.id as usize))]);
+    if write_event(stream, &start.to_string()).is_err() {
+        s.cancel();
+        return Ok(());
+    }
+    loop {
+        match s.recv() {
+            Some(StreamEvent::Token { index, token }) => {
+                let j = Json::obj(vec![
+                    ("index", Json::from(index)),
+                    ("token", Json::from(token as usize)),
+                ]);
+                if write_event(stream, &j.to_string()).is_err() {
+                    // Client went away: reclaim the request's KV.
+                    s.cancel();
+                    return Ok(());
+                }
+            }
+            Some(StreamEvent::Done { cancelled, tokens }) => {
+                let j = Json::obj(vec![
+                    ("done", Json::from(true)),
+                    ("cancelled", Json::from(cancelled)),
+                    (
+                        "tokens",
+                        Json::Arr(tokens.iter().map(|t| Json::from(*t as usize)).collect()),
+                    ),
+                ]);
+                let _ = write_event(stream, &j.to_string());
+                let _ = write_event(stream, "[DONE]");
+                return Ok(());
+            }
+            // Gateway shut down mid-stream.
+            None => {
+                s.cancel();
+                return Ok(());
+            }
+        }
+    }
+}
+
+fn write_event(stream: &mut TcpStream, data: &str) -> std::io::Result<()> {
+    stream.write_all(format!("data: {data}\n\n").as_bytes())?;
+    stream.flush()
+}
+
+fn respond(stream: &mut TcpStream, status: u16, ctype: &str, body: &str) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
+        _ => "Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()
+}

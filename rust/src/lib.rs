@@ -77,6 +77,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod formats;
+pub mod gateway;
 pub mod harness;
 pub mod kv;
 pub mod model;

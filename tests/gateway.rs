@@ -1,0 +1,447 @@
+//! Streaming-gateway integration tests (PR 8's archetype focus).
+//!
+//! The serving claims, each pinned end-to-end against the public
+//! [`sdq::gateway`] surface on tiny in-memory models (no artifacts):
+//!
+//! * **Bit-identity** — tokens streamed through the gateway's
+//!   continuous-batching loop equal a synchronous `Engine::run_batch`
+//!   of the same requests, for every KV dtype × preempt on/off.
+//!   Arrival order, admission interleaving, and swap-out/swap-in must
+//!   never perturb greedy output.
+//! * **Reclamation** — a cancel storm (explicit cancels + dropped
+//!   client handles) over in-flight requests leaves the pool with
+//!   **zero** referenced blocks and a consistent free list.
+//! * **Isolation under churn** — randomized concurrent
+//!   submit/cancel/disconnect across dtypes × preempt: surviving
+//!   streams still match the sync oracle exactly; every interrupted
+//!   stream is a strict prefix of it.
+//! * **Priority** — an interactive request submitted after a batch
+//!   request overtakes it as soon as capacity frees.
+//! * **HTTP/SSE** — the hand-rolled wire surface round-trips a
+//!   completion, a mid-stream cancel, and the metrics endpoint over
+//!   real sockets.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use sdq::coordinator::batcher::BatchPolicy;
+use sdq::coordinator::{Engine, Request};
+use sdq::gateway::{Gateway, GatewayOpts, GatewayRequest, Priority, StreamEvent};
+use sdq::kv::{KvDtype, KV_BLOCK_TOKENS};
+use sdq::model::generate::KvCache;
+use sdq::model::testutil::tiny_model;
+use sdq::model::Model;
+use sdq::model::Arch;
+use sdq::util::json::Json;
+use sdq::util::rng::Rng;
+
+/// Seeded ragged workload: every third prompt shares a one-block
+/// prefix (prefix-share pressure), decode budgets long enough to cross
+/// a block boundary mid-decode (what makes preemption structural on a
+/// tight pool). Returns `(prompt, max_new_tokens)` pairs.
+fn workload(rng: &mut Rng, n: usize) -> Vec<(Vec<u8>, usize)> {
+    let prefix: Vec<u8> = (0..KV_BLOCK_TOKENS as u8).map(|j| 120 + j).collect();
+    (0..n)
+        .map(|i| {
+            let mut prompt = if i % 3 == 2 { prefix.clone() } else { Vec::new() };
+            let extra = 2 + rng.below(9);
+            prompt.extend((0..extra).map(|_| rng.below(120) as u8));
+            (prompt, 15 + rng.below(4))
+        })
+        .collect()
+}
+
+/// Tight-pool preemptive policy (mirrors `tests/preemption.rs`): a
+/// 4-block budget forces swap-out/swap-in on the workload above.
+fn tight_preempt(model: &Model, dtype: KvDtype) -> BatchPolicy {
+    BatchPolicy {
+        kv_dtype: Some(dtype),
+        preempt: true,
+        kv_budget_bytes: 4 * KvCache::bytes_for_tokens(&model.cfg, 1),
+        ..Default::default()
+    }
+}
+
+/// Synchronous oracle: `Engine::run_batch` of the same requests under
+/// the same policy, keyed by prompt (identical prompts produce
+/// identical greedy tokens, so collisions are harmless).
+fn sync_oracle(
+    model: &Model,
+    policy: BatchPolicy,
+    reqs: &[(Vec<u8>, usize)],
+) -> HashMap<Vec<u8>, Vec<u8>> {
+    let rs: Vec<Request> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, (p, m))| Request::new(i as u64, p.clone(), *m))
+        .collect();
+    let (out, _) = Engine::run_batch(model.clone(), policy, rs);
+    out.into_iter().map(|r| (reqs[r.id as usize].0.clone(), r.tokens)).collect()
+}
+
+// ---------------------------------------------------------------------
+// Bit-identity
+// ---------------------------------------------------------------------
+
+#[test]
+fn streams_bit_identical_to_sync_run_across_dtypes_and_preempt() {
+    for (di, dtype) in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3].into_iter().enumerate() {
+        for preempt in [false, true] {
+            let model = tiny_model(Arch::Gpt, 90 + di as u64);
+            let mut rng = Rng::seed_from_u64(0xBE5E ^ ((di as u64) << 2) ^ (preempt as u64));
+            let reqs = workload(&mut rng, 6);
+            let policy = if preempt {
+                tight_preempt(&model, dtype)
+            } else {
+                BatchPolicy { kv_dtype: Some(dtype), ..Default::default() }
+            };
+            let oracle = sync_oracle(&model, policy, &reqs);
+
+            let gw = Gateway::start(model.clone(), policy, None, GatewayOpts::default());
+            let h = gw.handle();
+            let streams: Vec<_> = reqs
+                .iter()
+                .map(|(p, m)| h.submit(GatewayRequest::greedy(p.clone(), *m)).unwrap())
+                .collect();
+            for (s, (p, _)) in streams.into_iter().zip(&reqs) {
+                let out = s.drain();
+                assert!(!out.cancelled, "[{dtype} preempt={preempt}] spurious cancel");
+                assert_eq!(
+                    out.streamed, oracle[p],
+                    "[{dtype} preempt={preempt}] streamed tokens diverged from sync run"
+                );
+                assert_eq!(out.final_tokens, oracle[p], "Done payload != streamed tokens");
+            }
+            let d = gw.shutdown();
+            assert_eq!(d.referenced_blocks, 0, "[{dtype} preempt={preempt}] leaked blocks");
+            assert_eq!(d.metrics.requests_completed, reqs.len() as u64);
+            assert_eq!(d.metrics.requests_cancelled, 0);
+            if preempt {
+                assert!(
+                    d.metrics.preemptions > 0,
+                    "[{dtype}] tight pool never preempted — pressure arm is vacuous"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cancellation storm
+// ---------------------------------------------------------------------
+
+#[test]
+fn cancel_storm_reclaims_every_block() {
+    let model = tiny_model(Arch::Gpt, 120);
+    // Slow rounds + long budgets: nothing can finish before the storm.
+    let opts = GatewayOpts { round_delay: Duration::from_millis(20), ..Default::default() };
+    let gw = Gateway::start(model, BatchPolicy::default(), None, opts);
+    let h = gw.handle();
+    let n = 10usize;
+    let streams: Vec<_> = (0..n)
+        .map(|i| h.submit(GatewayRequest::greedy(vec![60 + i as u8; 5], 55)).unwrap())
+        .collect();
+    // Half cancel explicitly (handle kept, Done{cancelled} observed);
+    // half disconnect (handle dropped undrained — the loop finds the
+    // dead channel at the next token it tries to deliver).
+    for (i, s) in streams.into_iter().enumerate() {
+        if i % 2 == 0 {
+            s.cancel();
+            let out = s.drain();
+            assert!(out.cancelled, "explicit cancel must end in Done{{cancelled}}");
+            assert!(out.final_tokens.is_empty());
+        } else {
+            drop(s);
+        }
+    }
+    let d = gw.shutdown();
+    assert_eq!(d.referenced_blocks, 0, "cancel storm left referenced blocks behind");
+    assert_eq!(d.metrics.requests_completed, 0, "55-token requests can't finish in the storm");
+    assert_eq!(d.metrics.requests_cancelled, n as u64);
+    assert_eq!(
+        d.metrics.requests_cancelled,
+        d.metrics.class_cancelled.iter().sum::<u64>(),
+        "per-class cancel counters must tally the total"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Randomized concurrent stress
+// ---------------------------------------------------------------------
+
+enum Fate {
+    Completed { streamed: Vec<u8>, final_tokens: Vec<u8> },
+    Interrupted { streamed: Vec<u8> },
+}
+
+#[test]
+fn randomized_submit_cancel_disconnect_stress() {
+    let combos =
+        [(KvDtype::F32, false), (KvDtype::Int8, false), (KvDtype::F32, true), (KvDtype::Int8, true)];
+    for (ci, (dtype, preempt)) in combos.into_iter().enumerate() {
+        let model = tiny_model(Arch::Gpt, 140 + ci as u64);
+        let mut rng = Rng::seed_from_u64(0xD15C0 + ci as u64);
+        let reqs = workload(&mut rng, 16);
+        let policy = if preempt {
+            tight_preempt(&model, dtype)
+        } else {
+            BatchPolicy { kv_dtype: Some(dtype), ..Default::default() }
+        };
+        let oracle = sync_oracle(&model, policy, &reqs);
+
+        let opts = GatewayOpts { round_delay: Duration::from_millis(2), ..Default::default() };
+        let gw = Gateway::start(model.clone(), policy, None, opts);
+        let h = gw.handle();
+        let mut threads = Vec::new();
+        for (i, (p, m)) in reqs.iter().cloned().enumerate() {
+            let h = h.clone();
+            // 0 → explicit cancel, 1 → disconnect, 2.. → drain fully.
+            let action = rng.below(4);
+            let after = 1 + rng.below(4);
+            threads.push(std::thread::spawn(move || -> (Vec<u8>, Fate) {
+                let s = h
+                    .submit(
+                        GatewayRequest::greedy(p.clone(), m)
+                            .with_priority(Priority::ALL[i % Priority::ALL.len()]),
+                    )
+                    .expect("capacity 256 never rejects 16 requests");
+                if action >= 2 {
+                    let out = s.drain();
+                    assert!(!out.cancelled, "undisturbed stream was cancelled");
+                    return (p, Fate::Completed {
+                        streamed: out.streamed,
+                        final_tokens: out.final_tokens,
+                    });
+                }
+                // Read a few tokens, then interrupt. The request may
+                // legitimately complete first — both endings are valid.
+                let mut streamed = Vec::new();
+                while streamed.len() < after {
+                    match s.recv() {
+                        Some(StreamEvent::Token { token, .. }) => streamed.push(token),
+                        Some(StreamEvent::Done { cancelled, tokens }) => {
+                            assert!(!cancelled, "nobody cancelled this stream yet");
+                            return (p, Fate::Completed { streamed, final_tokens: tokens });
+                        }
+                        None => return (p, Fate::Interrupted { streamed }),
+                    }
+                }
+                if action == 0 {
+                    s.cancel();
+                    let out = s.drain();
+                    streamed.extend(out.streamed);
+                    if out.cancelled {
+                        (p, Fate::Interrupted { streamed })
+                    } else {
+                        (p, Fate::Completed { streamed, final_tokens: out.final_tokens })
+                    }
+                } else {
+                    drop(s); // disconnect: undrained channel dies
+                    (p, Fate::Interrupted { streamed })
+                }
+            }));
+        }
+
+        let mut completed = 0u64;
+        for t in threads {
+            let (p, fate) = t.join().expect("stress thread panicked");
+            let want = &oracle[&p];
+            match fate {
+                Fate::Completed { streamed, final_tokens } => {
+                    completed += 1;
+                    assert_eq!(
+                        &streamed, want,
+                        "[{dtype} preempt={preempt}] survivor diverged under churn"
+                    );
+                    assert_eq!(&final_tokens, want);
+                }
+                Fate::Interrupted { streamed } => {
+                    assert!(
+                        streamed.len() <= want.len() && streamed == want[..streamed.len()],
+                        "[{dtype} preempt={preempt}] interrupted stream is not a prefix \
+                         of the oracle ({streamed:?} vs {want:?})"
+                    );
+                }
+            }
+        }
+        let d = gw.shutdown();
+        assert_eq!(d.referenced_blocks, 0, "[{dtype} preempt={preempt}] leaked blocks");
+        assert_eq!(
+            d.metrics.requests_completed + d.metrics.requests_cancelled,
+            reqs.len() as u64,
+            "every request must end exactly once"
+        );
+        assert!(d.metrics.requests_completed >= completed, "client saw more Dones than counted");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Priority classes
+// ---------------------------------------------------------------------
+
+#[test]
+fn interactive_overtakes_batch_when_capacity_frees() {
+    let model = tiny_model(Arch::Gpt, 155);
+    // One active slot, one queued feed per round: whichever class is
+    // popped first when the slot frees wins — that must be interactive,
+    // even though the batch request was submitted earlier.
+    let policy = BatchPolicy { max_active: 1, max_prefill_per_round: 1, ..Default::default() };
+    let opts = GatewayOpts { round_delay: Duration::from_millis(25), ..Default::default() };
+    let gw = Gateway::start(model, policy, None, opts);
+    let h = gw.handle();
+    let plug = h.submit(GatewayRequest::greedy(vec![80; 4], 20)).unwrap();
+    let batch = h
+        .submit(GatewayRequest::greedy(vec![81; 4], 3).with_priority(Priority::Batch))
+        .unwrap();
+    let inter = h
+        .submit(GatewayRequest::greedy(vec![82; 4], 3).with_priority(Priority::Interactive))
+        .unwrap();
+    let time_done = |s: sdq::gateway::StreamHandle| {
+        std::thread::spawn(move || {
+            let out = s.drain();
+            assert!(!out.cancelled);
+            Instant::now()
+        })
+    };
+    let tb = time_done(batch);
+    let ti = time_done(inter);
+    assert!(!plug.drain().cancelled);
+    let (ti, tb) = (ti.join().unwrap(), tb.join().unwrap());
+    assert!(
+        ti < tb,
+        "interactive finished after batch despite a free slot ({:?} later)",
+        ti.duration_since(tb)
+    );
+    let d = gw.shutdown();
+    assert_eq!(d.metrics.class_completed[Priority::Interactive as usize], 1);
+    assert_eq!(d.metrics.class_completed[Priority::Batch as usize], 1);
+    assert_eq!(d.metrics.class_completed[Priority::Standard as usize], 1); // the plug
+    assert_eq!(d.referenced_blocks, 0);
+}
+
+// ---------------------------------------------------------------------
+// HTTP/SSE wire surface
+// ---------------------------------------------------------------------
+
+/// One-shot HTTP request over a raw socket; returns the full response
+/// text (the server always answers `Connection: close`).
+fn http(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> String {
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    write!(
+        conn,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut out = String::new();
+    use std::io::Read;
+    conn.read_to_string(&mut out).expect("read response");
+    out
+}
+
+/// Extract the payloads of every `data: …` SSE line.
+fn sse_events(response: &str) -> Vec<String> {
+    response
+        .lines()
+        .filter_map(|l| l.strip_prefix("data: "))
+        .map(|s| s.to_string())
+        .collect()
+}
+
+#[test]
+fn http_stream_cancel_and_metrics_roundtrip() {
+    let model = tiny_model(Arch::Gpt, 160);
+    let opts = GatewayOpts { round_delay: Duration::from_millis(10), ..Default::default() };
+    let gw = Gateway::start(model, BatchPolicy::default(), None, opts);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let h = gw.handle();
+    std::thread::spawn(move || {
+        let _ = sdq::gateway::http::serve(listener, h);
+    });
+
+    assert!(http(addr, "GET", "/healthz", "").ends_with("ok\n"));
+    assert!(http(addr, "GET", "/nope", "").starts_with("HTTP/1.1 404"));
+    assert!(http(addr, "POST", "/v1/completions", "{not json")
+        .starts_with("HTTP/1.1 400"));
+
+    // Full completion: 4 tokens, then the Done event and the sentinel.
+    let resp = http(
+        addr,
+        "POST",
+        "/v1/completions",
+        r#"{"prompt":"ABCD","max_new_tokens":4,"priority":"interactive"}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 200"), "got: {resp}");
+    assert!(resp.contains("text/event-stream"));
+    let events = sse_events(&resp);
+    assert_eq!(events.last().map(String::as_str), Some("[DONE]"));
+    let first = Json::parse(&events[0]).expect("start event is JSON");
+    assert!(first.get("id").and_then(|v| v.as_usize()).is_some());
+    let tokens: Vec<&String> = events.iter().filter(|e| e.contains("\"index\"")).collect();
+    assert_eq!(tokens.len(), 4, "expected 4 token events: {events:?}");
+    let done = events.iter().find(|e| e.contains("\"done\"")).expect("done event");
+    assert!(done.contains("\"cancelled\":false"), "clean completion: {done}");
+    let done = Json::parse(done).unwrap();
+    assert_eq!(
+        done.get("tokens").and_then(|v| v.as_arr()).map(|a| a.len()),
+        Some(4),
+        "Done carries the full final token vector"
+    );
+
+    // Mid-stream cancel: open a long stream, read up to the first token
+    // event, cancel by id from a second connection, then observe the
+    // stream end with a cancelled Done.
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let payload = r#"{"prompt":"EFGH","max_new_tokens":50}"#;
+    write!(
+        conn,
+        "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{payload}",
+        payload.len()
+    )
+    .unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut id = None;
+    let mut line = String::new();
+    while reader.read_line(&mut line).unwrap() > 0 {
+        if let Some(data) = line.trim_end().strip_prefix("data: ") {
+            id = Json::parse(data).ok().and_then(|j| j.get("id").and_then(|v| v.as_usize()));
+            break;
+        }
+        line.clear();
+    }
+    let id = id.expect("stream opened with an id event");
+    let cancel_resp = http(addr, "POST", &format!("/v1/cancel/{id}"), "");
+    assert!(cancel_resp.starts_with("HTTP/1.1 200"), "got: {cancel_resp}");
+    assert!(cancel_resp.contains("\"cancelled\":true"));
+    let mut rest = String::new();
+    use std::io::Read;
+    reader.read_to_string(&mut rest).unwrap();
+    assert!(rest.contains("\"cancelled\":true"), "stream must end cancelled: {rest}");
+    assert!(rest.contains("[DONE]"));
+
+    // Metrics endpoint: poll until the cancel has been folded in and
+    // the pool shows zero referenced blocks (snapshot refreshes once
+    // per loop iteration).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = http(addr, "GET", "/metrics", "");
+        let json_start = m.find("\r\n\r\n").map(|i| i + 4).unwrap_or(0);
+        let snap = Json::parse(m[json_start..].trim()).expect("metrics endpoint serves JSON");
+        let cancelled =
+            snap.get("requests_cancelled").and_then(|v| v.as_usize()).unwrap_or(0);
+        let referenced =
+            snap.get("pool_referenced_blocks").and_then(|v| v.as_usize()).unwrap_or(1);
+        if cancelled >= 1 && referenced == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "metrics never showed the reclaimed cancel: {snap}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    drop(gw); // shutdown joins the worker; the serve thread dies with the process
+}
