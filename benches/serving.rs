@@ -536,6 +536,151 @@ fn main() {
                 );
             }
         }
+
+        // ---- tiered-spill arm (SDQ config only: 5 rows) ----
+        // The same oversubscribed shape with preemption on and the
+        // victim cost model pinned to one tier per row: `resident`
+        // (snapshots stay in host memory — the preemption arm's
+        // behavior), `spill` (zero resident budget, every victim
+        // round-trips the disk tier through the versioned wire format),
+        // and `reprefill` (no disk tier at all — f32 victims drop their
+        // KV and replay it at resume; quantized replay is not bit-exact,
+        // so int8 has no reprefill row). Every tier must reproduce the
+        // unconstrained pool's greedy output bit-identically; the spill
+        // rows additionally assert the disk round-trip was byte-exact
+        // (bytes restored == bytes spilled). The `speedup` column is
+        // tier throughput vs the resident tier — the cost of each rung.
+        if *cfg_str == "SDQ-W7:8-1:8int8-6:8fp4" {
+            use sdq::swap::{SwapConfig, SwapDir};
+            use sdq::util::testdir::TempDir;
+            let mut tier_rng = Rng::seed_from_u64(4321);
+            let (n_t, t_new, t_plen, t_blocks) = (8usize, 40usize, 8usize, 6usize);
+            let tier_reqs: Vec<Request> = (0..n_t)
+                .map(|i| {
+                    let prompt: Vec<u8> = (0..t_plen).map(|_| tier_rng.below(256) as u8).collect();
+                    Request::new(i as u64, prompt, t_new)
+                })
+                .collect();
+            let tmp = TempDir::new("serving-spill-bench");
+            for dtype in [KvDtype::F32, KvDtype::Int8] {
+                let block_bytes =
+                    sdq::kv::BlockPool::with_dtype(&model.cfg, 1, dtype).block_bytes();
+                let run_tier = |budget_blocks: usize, preempt: bool, swap: Option<SwapConfig>| {
+                    let policy = BatchPolicy {
+                        max_active: n_t,
+                        kv_budget_bytes: budget_blocks * block_bytes,
+                        kv_dtype: Some(dtype),
+                        preempt,
+                        ..Default::default()
+                    };
+                    let mut sched = Scheduler::new(&model, policy);
+                    if let Some(cfg) = swap {
+                        sched.set_swap(cfg);
+                    }
+                    let mut batcher = Batcher::new();
+                    for r in tier_reqs.clone() {
+                        batcher.enqueue(r);
+                    }
+                    let mut resps = sched.run_to_completion(&mut batcher);
+                    assert_eq!(resps.len(), n_t);
+                    sched.pool().assert_consistent();
+                    resps.sort_by_key(|r| r.id);
+                    (resps, sched.metrics)
+                };
+                let (want, _) = run_tier(1024, false, None);
+                let tiers: &[&str] = if dtype == KvDtype::F32 {
+                    &["resident", "spill", "reprefill"]
+                } else {
+                    &["resident", "spill"]
+                };
+                let mut resident_tps = 0.0f64;
+                for tier in tiers {
+                    let swap = match *tier {
+                        "resident" => SwapConfig::default(),
+                        "spill" => SwapConfig {
+                            dir: Some(
+                                SwapDir::new(tmp.path().join(format!("{}-{tier}", dtype.tag())))
+                                    .expect("swap dir"),
+                            ),
+                            resident_budget_bytes: 0,
+                            ..Default::default()
+                        },
+                        _ => SwapConfig { resident_budget_bytes: 0, ..Default::default() },
+                    };
+                    let (out, m) = run_tier(t_blocks, true, Some(swap));
+                    let ctx = format!("{cfg_str} kv={} tier={tier}", dtype.tag());
+                    assert_bit_identical(&ctx, &out, &want);
+                    assert!(m.preemptions > 0, "{ctx}: pressure never preempted");
+                    match *tier {
+                        "spill" => {
+                            assert!(m.spills > 0, "{ctx}: zero resident budget never spilled");
+                            assert_eq!(m.restores, m.spills, "{ctx}: stranded spill files");
+                            assert_eq!(
+                                m.restored_bytes, m.spilled_bytes,
+                                "{ctx}: disk round-trip must be byte-exact"
+                            );
+                            if dtype != KvDtype::F32 {
+                                assert_eq!(
+                                    m.reprefill_drops, 0,
+                                    "{ctx}: quantized replay is not bit-exact"
+                                );
+                            }
+                        }
+                        "reprefill" => {
+                            assert!(m.reprefill_drops > 0, "{ctx}: no disk tier: must replay");
+                            assert_eq!(m.spills, 0, "{ctx}: spilled without a dir");
+                        }
+                        _ => assert_eq!(
+                            m.spills + m.reprefill_drops,
+                            0,
+                            "{ctx}: unlimited resident budget must not leave host memory"
+                        ),
+                    }
+                    let tps = m.decode_tokens_per_second();
+                    if *tier == "resident" {
+                        resident_tps = tps;
+                    }
+                    table.row(vec![
+                        cfg_str.to_string(),
+                        dtype.tag().to_string(),
+                        "off".to_string(),
+                        tier.to_string(),
+                        n_t.to_string(),
+                        n_t.to_string(),
+                        format!("{tps:.1}"),
+                        format!("{resident_tps:.1}"),
+                        format!("{:.2}x", tps / resident_tps.max(f64::MIN_POSITIVE)),
+                        format!("{:.2}", m.decode_occupancy(n_t)),
+                        format!("{:.1}", m.kv_bytes_peak as f64 / 1024.0),
+                        m.pool_budget_blocks.to_string(),
+                        m.pool_block_bytes.to_string(),
+                        format!("{:.3}", m.pool_utilization_peak),
+                        format!("{:.2}", m.prefix_hit_rate()),
+                        m.kv_evictions.to_string(),
+                        format!("{:.1}", m.kv_dequant_bytes as f64 / 1024.0),
+                        format!("{:.1}", m.kv_dequant_bytes_avoided as f64 / 1024.0),
+                        format!("{weight_mib:.2}"),
+                        format!("{:.1}", m.weight_bytes_streamed as f64 / 1024.0),
+                        format!("{:.1}", m.weight_bytes_avoided as f64 / 1024.0),
+                        "0".to_string(),
+                        "0".to_string(),
+                        "0".to_string(),
+                        "0.00".to_string(),
+                        format!("{:.2}", m.tokens_per_round()),
+                    ]);
+                    eprintln!(
+                        "  {ctx}: {tps:.1} tok/s | preempts {} | spilled {:.1} KiB in {} files \
+                         | restore {:.3} ms/seq | codec ratio {:.2} | reprefill drops {}",
+                        m.preemptions,
+                        m.spilled_bytes as f64 / 1024.0,
+                        m.spills,
+                        m.restore_mean_ms(),
+                        m.spill_codec_ratio(),
+                        m.reprefill_drops
+                    );
+                }
+            }
+        }
     }
     table.print();
     table.save_json("serving");

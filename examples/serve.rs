@@ -44,6 +44,15 @@
 //!   synthetic model when artifacts are absent, so the CI smoke step
 //!   can exercise the full submit → stream → cancel → reclaim loop
 //!   without `make artifacts`.
+//! * `--swap-dir <path>` (gateway mode) — enable the disk spill tier
+//!   for preempted sequences; with `--swap-resident-budget N` host
+//!   bytes of resident snapshots allowed before spilling (default 0 =
+//!   spill everything under pressure).
+//! * `--replicas N` (gateway mode) — serve through the prefix-aware
+//!   multi-engine router over N engine replicas; each replica gets a
+//!   private subdirectory under `--swap-dir`. `--migrate-after K`
+//!   additionally migrates every stream once to the least-loaded peer
+//!   after K generated tokens (K=1 ≈ prefill→decode disaggregation).
 
 use sdq::coordinator::{batcher::BatchPolicy, Engine, Request};
 use sdq::data::Split;
@@ -87,8 +96,34 @@ fn gateway_main(args: &Args) -> sdq::Result<()> {
         ),
     };
     let port = args.get_usize("port", 8090)?;
-    let gw = Gateway::start(model, policy, spec, opts);
+    let swap = match args.get("swap-dir") {
+        None => None,
+        Some(p) => Some(sdq::swap::SwapConfig {
+            dir: Some(sdq::swap::SwapDir::new(p)?),
+            resident_budget_bytes: args.get_usize("swap-resident-budget", 0)?,
+            ..Default::default()
+        }),
+    };
+    let replicas = args.get_usize("replicas", 1)?;
+    let migrate_after = args.get("migrate-after").map(|s| s.parse()).transpose()?;
     let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
+    if replicas > 1 {
+        anyhow::ensure!(
+            spec.is_none(),
+            "--replicas needs --spec off (drafters are per-engine)"
+        );
+        let ropts = sdq::router::RouterOpts { migrate_after };
+        let router = sdq::router::Router::start(&model, replicas, policy, opts, ropts, swap)?;
+        println!(
+            "router listening on http://127.0.0.1:{port} \
+             ({replicas} replicas, kv {}, preempt {}, migrate-after {migrate_after:?})",
+            args.get_or("kv-dtype", "model-default"),
+            policy.preempt,
+        );
+        sdq::gateway::http::serve(listener, router.handle())?;
+        return Ok(());
+    }
+    let gw = Gateway::start_with_swap(model, policy, spec, opts, swap.unwrap_or_default());
     println!(
         "gateway listening on http://127.0.0.1:{port} \
          (kv {}, preempt {}, spec {spec_mode}, queue {})",

@@ -147,6 +147,32 @@ pub struct Metrics {
     /// sequence whose cached middle blocks were LRU-evicted while it
     /// was swapped; quantized pools never re-prefill).
     pub resume_reprefill_tokens: u64,
+    /// Preemption snapshots the victim cost model ([`crate::swap`])
+    /// sent to the disk tier instead of keeping resident.
+    pub spills: u64,
+    /// Wire-format bytes written to the swap dir by those spills
+    /// (after the optional RLE codec).
+    pub spilled_bytes: u64,
+    /// Spilled sequences read back from the swap dir at resume.
+    pub restores: u64,
+    /// Wire-format bytes read back by those restores.
+    pub restored_bytes: u64,
+    /// Wall time spent reading + decoding spilled sequences.
+    pub restore_time: Duration,
+    /// Preemption snapshots dropped outright for bit-exact replay
+    /// (f32 pools only — the cheapest tier for short sequences).
+    pub reprefill_drops: u64,
+    /// Raw quantized code-slab bytes that went through the spill
+    /// codec (denominator of [`Self::spill_codec_ratio`]).
+    pub codec_raw_bytes: u64,
+    /// Those same slabs as framed on the wire (RLE where it won, raw
+    /// where it did not) — numerator of [`Self::spill_codec_ratio`].
+    pub codec_encoded_bytes: u64,
+    /// Sequences migrated out of this engine mid-flight (suspended
+    /// here, resumed on another engine).
+    pub migrations_out: u64,
+    /// Sequences migrated into this engine mid-flight.
+    pub migrations_in: u64,
     /// f32 bytes a quantized pool staged through the [`KvScratch`]
     /// dequant route ([`BlockPool::layer_views`]) — write-then-reread
     /// traffic the quantized-domain attention path exists to avoid.
@@ -314,6 +340,37 @@ impl Metrics {
         self.resume_reprefill_tokens as f64 / self.resumes as f64
     }
 
+    /// Fraction of preemptions whose snapshot went to the disk tier.
+    /// `0.0` before any preemption — never NaN, same
+    /// `BENCH_serving.json` contract as [`Self::prefix_hit_rate`].
+    pub fn spill_rate(&self) -> f64 {
+        if self.preemptions == 0 {
+            return 0.0;
+        }
+        self.spills as f64 / self.preemptions as f64
+    }
+
+    /// Spill codec compression ratio: framed bytes over raw bytes for
+    /// every code slab that went through the wire codec (`1.0` ≈
+    /// incompressible, lower is better). `0.0` before any spill —
+    /// deliberately not `1.0` or NaN: the cold value must be exactly
+    /// 0.0 for the JSON-emitted-rate contract.
+    pub fn spill_codec_ratio(&self) -> f64 {
+        if self.codec_raw_bytes == 0 {
+            return 0.0;
+        }
+        self.codec_encoded_bytes as f64 / self.codec_raw_bytes as f64
+    }
+
+    /// Mean wall time of one disk restore, in milliseconds. `0.0`
+    /// before any restore — never NaN.
+    pub fn restore_mean_ms(&self) -> f64 {
+        if self.restores == 0 {
+            return 0.0;
+        }
+        self.restore_time.as_secs_f64() * 1e3 / self.restores as f64
+    }
+
     /// Fraction of would-be KV dequant traffic served in the quantized
     /// domain instead: `avoided / (staged + avoided)`. `1.0` when every
     /// quantized read went through [`crate::kv::qattn`]; `0.0` both for
@@ -446,6 +503,8 @@ impl Metrics {
              dequant={:.1}KiB dequant_avoided={:.1}KiB \
              w_streamed={:.1}KiB w_avoided={:.1}KiB \
              evictions={} preempt={} resumes={} swap={:.1}KiB reprefill={} \
+             spills={} spilled={:.1}KiB restores={} drops={} codec={:.2} \
+             migr_out={} migr_in={} \
              spec={} accept={:.2} tok/round={:.2} \
              submitted={} cancelled={} rejected={} q_peak={} \
              ttft_mean={:.1}ms ttft_p99={:.1}ms total_mean={:.1}ms",
@@ -468,6 +527,13 @@ impl Metrics {
             self.resumes,
             self.swap_bytes as f64 / 1024.0,
             self.resume_reprefill_tokens,
+            self.spills,
+            self.spilled_bytes as f64 / 1024.0,
+            self.restores,
+            self.reprefill_drops,
+            self.spill_codec_ratio(),
+            self.migrations_out,
+            self.migrations_in,
             if self.spec_drafter.is_empty() { "off" } else { self.spec_drafter.as_str() },
             self.spec_acceptance_rate(),
             self.tokens_per_round(),
@@ -591,6 +657,9 @@ mod tests {
             ("tokens_per_round", m.tokens_per_round()),
             ("preemption_rate", m.preemption_rate()),
             ("resume_reprefill_rate", m.resume_reprefill_rate()),
+            ("spill_rate", m.spill_rate()),
+            ("spill_codec_ratio", m.spill_codec_ratio()),
+            ("restore_mean_ms", m.restore_mean_ms()),
             ("pool_utilization_peak", m.pool_utilization_peak),
             ("kv_dequant_avoided_rate", m.kv_dequant_avoided_rate()),
             ("weight_stream_avoided_rate", m.weight_stream_avoided_rate()),
@@ -675,6 +744,36 @@ mod tests {
         assert!(s.contains("resumes=2"));
         assert!(s.contains("swap=4.0KiB"));
         assert!(s.contains("reprefill=10"));
+    }
+
+    #[test]
+    fn spill_counters_and_rates() {
+        let mut m = Metrics::default();
+        assert_eq!(m.spill_rate(), 0.0, "cold rate is 0.0, never NaN");
+        assert_eq!(m.spill_codec_ratio(), 0.0, "cold ratio is 0.0, not 1.0 or NaN");
+        assert_eq!(m.restore_mean_ms(), 0.0);
+        m.preemptions = 8;
+        m.spills = 2;
+        m.spilled_bytes = 3072;
+        m.restores = 2;
+        m.restored_bytes = 3072;
+        m.restore_time = Duration::from_millis(4);
+        m.reprefill_drops = 1;
+        m.codec_raw_bytes = 4096;
+        m.codec_encoded_bytes = 1024;
+        m.migrations_out = 1;
+        m.migrations_in = 1;
+        assert!((m.spill_rate() - 0.25).abs() < 1e-9);
+        assert!((m.spill_codec_ratio() - 0.25).abs() < 1e-9);
+        assert!((m.restore_mean_ms() - 2.0).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("spills=2"), "summary must surface the spill tier: {s}");
+        assert!(s.contains("spilled=3.0KiB"));
+        assert!(s.contains("restores=2"));
+        assert!(s.contains("drops=1"));
+        assert!(s.contains("codec=0.25"));
+        assert!(s.contains("migr_out=1"));
+        assert!(s.contains("migr_in=1"));
     }
 
     #[test]

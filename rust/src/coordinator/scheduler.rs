@@ -86,6 +86,7 @@ use crate::kv::{BlockPool, BlockTable, KvDtype, KvScratch, Snapshot};
 use crate::model::generate::KvCache;
 use crate::model::{Model, ModelConfig};
 use crate::spec::SpecPolicy;
+use crate::swap::{self, SwapConfig, SwapVerdict};
 use crate::util::par::par_chunks_mut;
 
 /// Disjoint `&mut BlockTable` borrows of the selected (ascending)
@@ -108,11 +109,36 @@ fn with_tables<R>(
     body(&mut tbs)
 }
 
-/// A preempted sequence parked off-pool: its in-flight request state
-/// plus the swapped-out KV [`Snapshot`] that rebuilds its table.
+/// Where a parked sequence's KV waits — the tier the victim cost model
+/// ([`crate::swap::choose`]) picked for it at suspend time.
+enum Parked {
+    /// [`Snapshot`] held in host memory (the default tier).
+    Resident(Snapshot),
+    /// Serialized through [`crate::kv::wire`] into the configured
+    /// [`crate::swap::SwapDir`], keyed by request id; only the
+    /// committed length stays behind for the resume head-room check.
+    Spilled { len: usize },
+    /// Dropped outright (f32 pools only): resume replays the committed
+    /// token history through the model, bit-exactly.
+    Dropped { tokens: Vec<u8>, max_tokens: usize },
+}
+
+impl Parked {
+    /// Committed sequence length, however the KV is parked.
+    fn len(&self) -> usize {
+        match self {
+            Parked::Resident(s) => s.len(),
+            Parked::Spilled { len } => *len,
+            Parked::Dropped { tokens, .. } => tokens.len(),
+        }
+    }
+}
+
+/// A preempted (or migrated-in) sequence parked off-pool: its
+/// in-flight request state plus wherever its swapped-out KV went.
 struct Swapped {
     f: InFlight,
-    snap: Snapshot,
+    park: Parked,
 }
 
 /// Scheduler over a (possibly compressed) model.
@@ -132,6 +158,9 @@ pub struct Scheduler<'m> {
     /// Speculative decode policy (paged mode only): draft → fused
     /// verify → accept/rollback per round. `None` = plain decode.
     spec: Option<SpecPolicy>,
+    /// Tiered spill policy consulted at every preemption; the default
+    /// keeps every snapshot resident (PR 5 behavior).
+    swap: SwapConfig,
     /// Monotonic round counter (paged mode) — the hysteresis clock.
     round_idx: u64,
     /// Monotonic admission stamp — the preemption priority order.
@@ -192,12 +221,19 @@ impl<'m> Scheduler<'m> {
             pool,
             scratch: KvScratch::new(),
             spec,
+            swap: SwapConfig::default(),
             round_idx: 0,
             arrival_seq: 0,
             w_stream_per_fwd,
             w_avoid_per_fwd,
             metrics,
         }
+    }
+
+    /// Configure the tiered spill policy ([`crate::swap`]) consulted at
+    /// every preemption. The default keeps every snapshot resident.
+    pub fn set_swap(&mut self, cfg: SwapConfig) {
+        self.swap = cfg;
     }
 
     /// Account `n` full weight streams (one per forward call issued).
@@ -248,6 +284,11 @@ impl<'m> Scheduler<'m> {
         }
         if let Some(i) = self.swapped.iter().position(|s| s.f.req.id == id) {
             let s = self.swapped.remove(i).expect("position() indexed into swapped");
+            if matches!(s.park, Parked::Spilled { .. }) {
+                if let Some(dir) = self.swap.dir.as_ref() {
+                    dir.discard(s.f.req.id);
+                }
+            }
             self.metrics.requests_cancelled += 1;
             self.metrics.tokens_cancelled += s.f.generated.len() as u64;
             return true;
@@ -328,42 +369,102 @@ impl<'m> Scheduler<'m> {
     /// **force-resumed** — the pool's hard cap fits one `max_seq`
     /// sequence, so the engine can always make progress.
     fn resume_swapped(&mut self) {
-        let model = self.model;
         loop {
             let Some(head) = self.swapped.front() else { return };
             if self.active.len() >= self.policy.max_active {
                 return;
             }
-            // +1: the first post-resume decode row must also fit.
-            let need = self
-                .pool
-                .blocks_for_tokens((head.snap.len() + 1).min(self.model.cfg.max_seq));
-            if need > self.pool.headroom_blocks() && !self.active.is_empty() {
+            let max_seq = self.model.cfg.max_seq;
+            let (need, have) = if self.policy.preempt {
+                // +1: the first post-resume decode row must also fit.
+                let need = self.pool.blocks_for_tokens((head.park.len() + 1).min(max_seq));
+                (need, self.pool.headroom_blocks())
+            } else {
+                // A migrated-in sequence resuming on a non-preempt
+                // engine is held to that engine's admission rule —
+                // worst-case final footprint against unreserved budget
+                // — so growth can never exhaust the pool.
+                let fin = (head.park.len() + head.f.remaining()).min(max_seq);
+                let reserved: usize = self.active.iter().map(|f| self.blocks_reserved(f)).sum();
+                let need = self.pool.blocks_for_tokens(fin);
+                (need, self.pool.budget_blocks().saturating_sub(reserved))
+            };
+            if need > have && !self.active.is_empty() {
                 return;
             }
-            let Swapped { mut f, snap } = self.swapped.pop_front().expect("peeked");
-            let (mut tb, ready) = self.pool.resume(&snap);
-            if ready < snap.len() {
-                // Evicted-middle fallback (f32 pools): recompute the
-                // missing rows through the normal paged forward — rows
-                // are verbatim and kernels row-independent, so the
-                // rebuilt KV is bit-identical to what was swapped out.
-                let missing = &snap.tokens()[ready..];
-                let _ = model.forward_paged_in(
-                    &[missing],
-                    &mut self.pool,
-                    &mut [&mut tb],
-                    &mut self.scratch,
-                );
-                self.metrics.resume_reprefill_tokens += missing.len() as u64;
-                self.note_weight_stream(1);
-            }
-            debug_assert_eq!(tb.len(), snap.len(), "resume rebuilt the wrong length");
+            let Swapped { mut f, park } = self.swapped.pop_front().expect("peeked");
+            let want = park.len();
+            let tb = match park {
+                Parked::Resident(snap) => self.resume_snapshot(&snap),
+                Parked::Spilled { .. } => {
+                    let snap = self.restore_spilled(f.req.id);
+                    self.resume_snapshot(&snap)
+                }
+                Parked::Dropped { tokens, max_tokens } => self.replay_dropped(&tokens, max_tokens),
+            };
+            debug_assert_eq!(tb.len(), want, "resume rebuilt the wrong length");
             f.table = Some(tb);
             f.resumed_round = Some(self.round_idx);
             self.metrics.resumes += 1;
             self.active.push(f);
         }
+    }
+
+    /// Rebuild a table from an in-memory [`Snapshot`], re-prefilling
+    /// any LRU-evicted middle (f32 pools) bit-exactly.
+    fn resume_snapshot(&mut self, snap: &Snapshot) -> BlockTable {
+        let model = self.model;
+        let (mut tb, ready) = self.pool.resume(snap);
+        if ready < snap.len() {
+            // Evicted-middle fallback (f32 pools): recompute the
+            // missing rows through the normal paged forward — rows
+            // are verbatim and kernels row-independent, so the
+            // rebuilt KV is bit-identical to what was swapped out.
+            let missing = &snap.tokens()[ready..];
+            let _ = model.forward_paged_in(
+                &[missing],
+                &mut self.pool,
+                &mut [&mut tb],
+                &mut self.scratch,
+            );
+            self.metrics.resume_reprefill_tokens += missing.len() as u64;
+            self.note_weight_stream(1);
+        }
+        tb
+    }
+
+    /// Read one spilled sequence back from the swap dir and decode it.
+    /// A failed read or decode is unrecoverable — for quantized pools
+    /// the bytes exist nowhere else — so fail loudly rather than
+    /// silently corrupt the sequence.
+    fn restore_spilled(&mut self, id: u64) -> Snapshot {
+        let t0 = Instant::now();
+        let dir = self.swap.dir.as_ref().expect("spilled sequences require a swap dir");
+        let bytes =
+            dir.restore(id).unwrap_or_else(|e| panic!("swap restore of seq {id} failed: {e}"));
+        let snap = self
+            .pool
+            .snapshot_from_wire(&bytes)
+            .unwrap_or_else(|e| panic!("swap decode of seq {id} failed: {e}"));
+        self.metrics.restores += 1;
+        self.metrics.restored_bytes += bytes.len() as u64;
+        self.metrics.restore_time += t0.elapsed();
+        snap
+    }
+
+    /// Rebuild a dropped sequence by replay: re-attach whatever of its
+    /// chain is still cached, then recompute the suffix in one fused
+    /// forward — bit-exact on the f32 pools this tier is restricted to.
+    fn replay_dropped(&mut self, tokens: &[u8], max_tokens: usize) -> BlockTable {
+        let model = self.model;
+        let mut tb = BlockTable::new(max_tokens);
+        let shared = self.pool.attach_cached(&mut tb, tokens);
+        let missing = &tokens[shared..];
+        let _ =
+            model.forward_paged_in(&[missing], &mut self.pool, &mut [&mut tb], &mut self.scratch);
+        self.metrics.resume_reprefill_tokens += missing.len() as u64;
+        self.note_weight_stream(1);
+        tb
     }
 
     /// Swap out active sequences (lowest priority first) until the pool
@@ -436,8 +537,102 @@ impl<'m> Scheduler<'m> {
         f.preempt_count += 1;
         self.metrics.preemptions += 1;
         self.metrics.swap_bytes += snap.bytes() as u64;
-        self.swapped.push_back(Swapped { f, snap });
+        let park = self.park(f.req.id, snap);
+        self.swapped.push_back(Swapped { f, park });
         true
+    }
+
+    /// Host bytes currently held by resident snapshots — what the
+    /// spill cost model budgets against.
+    fn resident_snapshot_bytes(&self) -> usize {
+        self.swapped
+            .iter()
+            .map(|s| match &s.park {
+                Parked::Resident(snap) => snap.bytes(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Park one freshly suspended snapshot in the tier the victim cost
+    /// model picks: resident (default), spilled to disk through the
+    /// wire format, or dropped for bit-exact replay (f32 pools only).
+    /// A disk write failure degrades to resident — spilling is an
+    /// optimization, never a correctness dependency.
+    fn park(&mut self, id: u64, snap: Snapshot) -> Parked {
+        let exact = swap::reprefill_is_exact(self.pool.dtype());
+        match swap::choose(&self.swap, self.resident_snapshot_bytes(), &snap, exact) {
+            SwapVerdict::Resident => Parked::Resident(snap),
+            SwapVerdict::Spill => {
+                let (wire, raw, enc) = self.pool.snapshot_to_wire_ex(&snap, self.swap.codec);
+                let dir = self.swap.dir.as_ref().expect("Spill verdict implies a dir");
+                match dir.spill(id, &wire) {
+                    Ok(()) => {
+                        self.metrics.spills += 1;
+                        self.metrics.spilled_bytes += wire.len() as u64;
+                        self.metrics.codec_raw_bytes += raw;
+                        self.metrics.codec_encoded_bytes += enc;
+                        Parked::Spilled { len: snap.len() }
+                    }
+                    Err(_) => Parked::Resident(snap),
+                }
+            }
+            SwapVerdict::Reprefill => {
+                self.metrics.reprefill_drops += 1;
+                let Snapshot { tokens, max_tokens, .. } = snap;
+                Parked::Dropped { tokens, max_tokens }
+            }
+        }
+    }
+
+    // ---- cross-engine migration (suspend here, resume elsewhere) ----
+
+    /// Migrate-out: pull one in-flight sequence out of this engine
+    /// entirely. An active sequence is suspended exactly as
+    /// preemption's swap-out (blocks return to the pool, frozen prefix
+    /// blocks stay cached); an already-parked one is materialized back
+    /// to a [`Snapshot`], reading the swap dir or replaying a dropped
+    /// f32 history as needed. Returns `None` when the id is not in
+    /// flight here. Serializing the snapshot for the wire
+    /// ([`BlockPool::snapshot_to_wire`]) is the caller's job.
+    pub fn extract(&mut self, id: u64) -> Option<(InFlight, Snapshot)> {
+        if let Some(i) = self.active.iter().position(|f| f.req.id == id) {
+            let mut f = self.active.remove(i);
+            let tb = f.table.take().expect("active sequences are prefilled");
+            let snap = self.pool.suspend(tb);
+            self.metrics.migrations_out += 1;
+            return Some((f, snap));
+        }
+        let i = self.swapped.iter().position(|s| s.f.req.id == id)?;
+        let Swapped { f, park } =
+            self.swapped.remove(i).expect("position() indexed into swapped");
+        let snap = match park {
+            Parked::Resident(snap) => snap,
+            Parked::Spilled { .. } => self.restore_spilled(f.req.id),
+            Parked::Dropped { tokens, max_tokens } => {
+                let tb = self.replay_dropped(&tokens, max_tokens);
+                self.pool.suspend(tb)
+            }
+        };
+        self.metrics.migrations_out += 1;
+        Some((f, snap))
+    }
+
+    /// Migrate-in: hand this engine a sequence extracted elsewhere. It
+    /// parks in the swapped queue (resident tier) and re-enters through
+    /// the normal resume machinery ahead of any new admission — the
+    /// same expect-guarded attach + re-install (+ f32 re-prefill) path
+    /// that makes preemption byte-exact makes migration byte-exact.
+    /// Paged mode only: the legacy baseline has no snapshot story.
+    pub fn inject(&mut self, mut f: InFlight, snap: Snapshot) {
+        assert!(self.policy.batched_decode, "migration needs the paged scheduler");
+        f.table = None;
+        f.cache = None;
+        f.arrival = self.arrival_seq;
+        self.arrival_seq += 1;
+        f.resumed_round = None;
+        self.metrics.migrations_in += 1;
+        self.swapped.push_back(Swapped { f, park: Parked::Resident(snap) });
     }
 
     /// One scheduling round. Returns completed responses.
@@ -457,12 +652,19 @@ impl<'m> Scheduler<'m> {
         self.round_idx += 1;
 
         // ---- swap-in: preempted sequences re-enter first (FIFO) ----
-        if self.policy.preempt {
+        // Migrated-in sequences park in the same queue, so resume must
+        // run even on engines with preemption off.
+        if self.policy.preempt || !self.swapped.is_empty() {
             self.resume_swapped();
         }
 
         // ---- admission against pool free blocks ----
-        let mut admitted = if !self.policy.preempt {
+        let mut admitted = if !self.swapped.is_empty() {
+            // Mid-flight (preempted or migrated-in) sequences drain
+            // first — no new admission while anything is parked, so
+            // they cannot starve behind fresh arrivals.
+            Vec::new()
+        } else if !self.policy.preempt {
             // Worst-case reservation: admitted work can always run to
             // completion without touching anyone else.
             let reserved: usize = self.active.iter().map(|f| self.blocks_reserved(f)).sum();
@@ -471,12 +673,10 @@ impl<'m> Scheduler<'m> {
             batcher.admit(&self.policy, self.active.len(), reserved, pool.budget_blocks(), |r| {
                 Self::blocks_for_request(pool, cfg, r)
             })
-        } else if self.swapped.is_empty() {
+        } else {
             // Oversubscribed admission: charge only blocks actually
             // resident — growth pressure is preemption's job, not the
-            // admission gate's. New work never overtakes the swapped
-            // queue (drained above), so mid-flight sequences cannot
-            // starve behind fresh arrivals.
+            // admission gate's.
             let resident: usize = self
                 .active
                 .iter()
@@ -487,8 +687,6 @@ impl<'m> Scheduler<'m> {
             batcher.admit(&self.policy, self.active.len(), resident, pool.budget_blocks(), |r| {
                 Self::blocks_for_admission(pool, cfg, r)
             })
-        } else {
-            Vec::new()
         };
         if admitted.is_empty() && self.active.is_empty() && self.swapped.is_empty() {
             // Over-budget head-of-queue: run it alone — the pool's hard

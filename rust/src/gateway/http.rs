@@ -1,9 +1,11 @@
-//! HTTP/1.1 + SSE surface over the gateway core.
+//! HTTP/1.1 + SSE surface over a serving [`Frontend`] — the
+//! single-engine [`GatewayHandle`](super::GatewayHandle) or the
+//! multi-replica [`crate::router::RouterHandle`].
 //!
-//! Hand-rolled on [`std::net::TcpListener`], thread-per-connection,
-//! `Connection: close` (no keep-alive, no chunked encoding) — the
-//! crate's only dependency is `anyhow`, and this is the protocol
-//! subset per-token streaming actually needs. Routes:
+//! Hand-rolled on [`std::net::TcpListener`], thread-per-connection, no
+//! chunked encoding — the crate's only dependency is `anyhow`, and
+//! this is the protocol subset per-token streaming actually needs.
+//! Routes:
 //!
 //! | route                  | behavior                                   |
 //! |------------------------|--------------------------------------------|
@@ -11,6 +13,16 @@
 //! | `GET /metrics`         | latest JSON metrics snapshot               |
 //! | `POST /v1/cancel/<id>` | flag a live request for cancellation       |
 //! | `POST /v1/completions` | submit + stream tokens as SSE              |
+//!
+//! **Keep-alive:** a client that sends `Connection: keep-alive` may
+//! pipeline further requests on the same socket after any
+//! *non-streaming* response (poll `/metrics`, fire `/v1/cancel/<id>`
+//! without a reconnect). The server answers in kind and holds the
+//! socket up to [`KEEPALIVE_IDLE`] between requests. Without the
+//! header the connection closes after one response (the conservative
+//! default for a hand-rolled server), and a completions stream always
+//! closes at `[DONE]` — SSE owns the socket until the stream ends, so
+//! there is nothing to reuse.
 //!
 //! The completions body is JSON: `{"prompt": "...}` required;
 //! `max_new_tokens` (default 16), `temperature` (default 0.0 =
@@ -25,13 +37,18 @@
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
 
-use super::{GatewayHandle, GatewayRequest, Priority, StreamEvent, SubmitError};
+use super::{Frontend, GatewayRequest, Priority, StreamEvent, SubmitError};
 use crate::util::json::Json;
+
+/// How long a keep-alive socket may sit idle between requests before
+/// the server closes it.
+pub const KEEPALIVE_IDLE: Duration = Duration::from_secs(30);
 
 /// Accept loop: one thread per connection, forever (the process model
 /// is "kill the server to stop it" — CI does exactly that).
-pub fn serve(listener: TcpListener, handle: GatewayHandle) -> std::io::Result<()> {
+pub fn serve<F: Frontend>(listener: TcpListener, handle: F) -> std::io::Result<()> {
     for conn in listener.incoming() {
         let stream = conn?;
         let h = handle.clone();
@@ -42,78 +59,120 @@ pub fn serve(listener: TcpListener, handle: GatewayHandle) -> std::io::Result<()
     Ok(())
 }
 
-fn handle_conn(mut stream: TcpStream, h: GatewayHandle) -> std::io::Result<()> {
+fn handle_conn<F: Frontend>(mut stream: TcpStream, h: F) -> std::io::Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("").to_string();
-
-    let mut content_length = 0usize;
-    let mut expect_continue = false;
+    let mut served = 0u32;
     loop {
-        let mut hl = String::new();
-        if reader.read_line(&mut hl)? == 0 {
-            break;
+        let mut line = String::new();
+        // After the first exchange the socket idles between pipelined
+        // requests; any read error (timeout, reset, EOF) just closes.
+        let n = match reader.read_line(&mut line) {
+            Ok(n) => n,
+            Err(e) if served == 0 => return Err(e),
+            Err(_) => return Ok(()),
+        };
+        if n == 0 {
+            return Ok(());
         }
-        let t = hl.trim();
-        if t.is_empty() {
-            break;
-        }
-        let lower = t.to_ascii_lowercase();
-        if let Some(v) = lower.strip_prefix("content-length:") {
-            content_length = v.trim().parse().unwrap_or(0);
-        } else if lower.starts_with("expect:") && lower.contains("100-continue") {
-            expect_continue = true;
-        }
-    }
-    if expect_continue {
-        stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
-    }
-    let mut body = vec![0u8; content_length.min(1 << 20)];
-    if !body.is_empty() {
-        reader.read_exact(&mut body)?;
-    }
-    let body = String::from_utf8_lossy(&body).into_owned();
+        let mut parts = line.split_whitespace();
+        let method = parts.next().unwrap_or("").to_string();
+        let path = parts.next().unwrap_or("").to_string();
 
-    match (method.as_str(), path.as_str()) {
-        ("GET", "/healthz") => respond(&mut stream, 200, "text/plain", "ok\n"),
-        ("GET", "/metrics") => {
-            let snap = h.metrics_json();
-            respond(&mut stream, 200, "application/json", &(snap + "\n"))
-        }
-        ("POST", p) if p.starts_with("/v1/cancel/") => {
-            match p["/v1/cancel/".len()..].parse::<u64>() {
-                Ok(id) => {
-                    let hit = h.cancel(id);
-                    let j = Json::obj(vec![
-                        ("id", Json::from(id as usize)),
-                        ("cancelled", Json::from(hit)),
-                    ]);
-                    let status = if hit { 200 } else { 404 };
-                    respond(&mut stream, status, "application/json", &(j.to_string() + "\n"))
-                }
-                Err(_) => {
-                    respond(&mut stream, 400, "application/json", "{\"error\":\"bad id\"}\n")
-                }
+        let mut content_length = 0usize;
+        let mut expect_continue = false;
+        let mut keep = false;
+        loop {
+            let mut hl = String::new();
+            if reader.read_line(&mut hl)? == 0 {
+                break;
+            }
+            let t = hl.trim();
+            if t.is_empty() {
+                break;
+            }
+            let lower = t.to_ascii_lowercase();
+            if let Some(v) = lower.strip_prefix("content-length:") {
+                content_length = v.trim().parse().unwrap_or(0);
+            } else if lower.starts_with("expect:") && lower.contains("100-continue") {
+                expect_continue = true;
+            } else if lower.starts_with("connection:") && lower.contains("keep-alive") {
+                keep = true;
             }
         }
-        ("POST", "/v1/completions") => completions(&mut stream, &h, &body),
-        _ => respond(&mut stream, 404, "text/plain", "not found\n"),
+        if expect_continue {
+            stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+        }
+        let mut body = vec![0u8; content_length.min(1 << 20)];
+        if !body.is_empty() {
+            reader.read_exact(&mut body)?;
+        }
+        let body = String::from_utf8_lossy(&body).into_owned();
+
+        match (method.as_str(), path.as_str()) {
+            ("GET", "/healthz") => respond(&mut stream, 200, "text/plain", "ok\n", keep)?,
+            ("GET", "/metrics") => {
+                let snap = h.metrics_json();
+                respond(&mut stream, 200, "application/json", &(snap + "\n"), keep)?
+            }
+            ("POST", p) if p.starts_with("/v1/cancel/") => {
+                match p["/v1/cancel/".len()..].parse::<u64>() {
+                    Ok(id) => {
+                        let hit = h.cancel(id);
+                        let j = Json::obj(vec![
+                            ("id", Json::from(id as usize)),
+                            ("cancelled", Json::from(hit)),
+                        ]);
+                        let status = if hit { 200 } else { 404 };
+                        let body = j.to_string() + "\n";
+                        respond(&mut stream, status, "application/json", &body, keep)?
+                    }
+                    Err(_) => respond(
+                        &mut stream,
+                        400,
+                        "application/json",
+                        "{\"error\":\"bad id\"}\n",
+                        keep,
+                    )?,
+                }
+            }
+            // SSE owns the socket until the stream ends — always the
+            // last exchange on this connection.
+            ("POST", "/v1/completions") => return completions(&mut stream, &h, &body),
+            _ => respond(&mut stream, 404, "text/plain", "not found\n", keep)?,
+        }
+        if !keep {
+            return Ok(());
+        }
+        served += 1;
+        if served == 1 {
+            // SO_RCVTIMEO is per-socket, so this covers `reader` too.
+            stream.set_read_timeout(Some(KEEPALIVE_IDLE))?;
+        }
     }
 }
 
-fn completions(stream: &mut TcpStream, h: &GatewayHandle, body: &str) -> std::io::Result<()> {
+fn completions<F: Frontend>(stream: &mut TcpStream, h: &F, body: &str) -> std::io::Result<()> {
     let parsed = match Json::parse(body) {
         Ok(j) => j,
         Err(_) => {
-            return respond(stream, 400, "application/json", "{\"error\":\"invalid JSON\"}\n")
+            return respond(
+                stream,
+                400,
+                "application/json",
+                "{\"error\":\"invalid JSON\"}\n",
+                false,
+            )
         }
     };
     let Some(prompt) = parsed.get("prompt").and_then(|v| v.as_str()).map(|s| s.as_bytes().to_vec())
     else {
-        return respond(stream, 400, "application/json", "{\"error\":\"missing prompt\"}\n");
+        return respond(
+            stream,
+            400,
+            "application/json",
+            "{\"error\":\"missing prompt\"}\n",
+            false,
+        );
     };
     let req = GatewayRequest {
         prompt,
@@ -128,10 +187,22 @@ fn completions(stream: &mut TcpStream, h: &GatewayHandle, body: &str) -> std::io
     let s = match h.submit(req) {
         Ok(s) => s,
         Err(SubmitError::QueueFull) => {
-            return respond(stream, 429, "application/json", "{\"error\":\"queue full\"}\n")
+            return respond(
+                stream,
+                429,
+                "application/json",
+                "{\"error\":\"queue full\"}\n",
+                false,
+            )
         }
         Err(SubmitError::ShutDown) => {
-            return respond(stream, 503, "application/json", "{\"error\":\"shutting down\"}\n")
+            return respond(
+                stream,
+                503,
+                "application/json",
+                "{\"error\":\"shutting down\"}\n",
+                false,
+            )
         }
     };
     stream.write_all(
@@ -184,7 +255,13 @@ fn write_event(stream: &mut TcpStream, data: &str) -> std::io::Result<()> {
     stream.flush()
 }
 
-fn respond(stream: &mut TcpStream, status: u16, ctype: &str, body: &str) -> std::io::Result<()> {
+fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    ctype: &str,
+    body: &str,
+    keep: bool,
+) -> std::io::Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -193,10 +270,11 @@ fn respond(stream: &mut TcpStream, status: u16, ctype: &str, body: &str) -> std:
         503 => "Service Unavailable",
         _ => "Error",
     };
+    let conn = if keep { "keep-alive" } else { "close" };
     write!(
         stream,
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+         Content-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
         body.len()
     )?;
     stream.flush()

@@ -47,11 +47,13 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::{Metrics, PRIORITY_CLASSES};
-use crate::coordinator::request::Request;
+use crate::coordinator::request::{InFlight, Request};
 use crate::coordinator::scheduler::Scheduler;
 use crate::model::Model;
 use crate::spec::SpecPolicy;
+use crate::swap::SwapConfig;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 /// Admission priority class. Lower value = served first: each loop
 /// iteration feeds the scheduler's admission queue interactive →
@@ -150,6 +152,18 @@ pub struct StreamOutcome {
 }
 
 impl StreamHandle {
+    /// Assemble a handle around an existing channel — the router wraps
+    /// its forwarding channel this way so a client holds one handle for
+    /// the stream's whole life even as the sequence hops engines.
+    pub(crate) fn attach(id: u64, rx: Receiver<StreamEvent>, cancel: Arc<AtomicBool>) -> Self {
+        StreamHandle { id, rx, cancel }
+    }
+
+    /// Disassemble (router side of [`StreamHandle::attach`]).
+    pub(crate) fn into_parts(self) -> (u64, Receiver<StreamEvent>, Arc<AtomicBool>) {
+        (self.id, self.rx, self.cancel)
+    }
+
     /// Request mid-flight cancellation; the loop acts on it within one
     /// scheduling round. Idempotent.
     pub fn cancel(&self) {
@@ -213,6 +227,16 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// What the HTTP surface ([`http::serve`]) needs from a serving
+/// backend. Implemented by the single-engine [`GatewayHandle`] and the
+/// multi-replica [`crate::router::RouterHandle`], so the same
+/// hand-rolled HTTP front end serves both.
+pub trait Frontend: Clone + Send + 'static {
+    fn submit(&self, req: GatewayRequest) -> Result<StreamHandle, SubmitError>;
+    fn cancel(&self, id: u64) -> bool;
+    fn metrics_json(&self) -> String;
+}
+
 /// Gateway tuning knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct GatewayOpts {
@@ -243,6 +267,55 @@ pub struct Drained {
     pub blocks_in_use: usize,
 }
 
+/// A sequence suspended on one engine for resumption on another: the
+/// complete generation state ([`Scheduler::extract`]'s [`InFlight`]
+/// fields plus the KV snapshot serialized through [`crate::kv::wire`])
+/// *and* the loop-side stream state. Because the original
+/// [`StreamEvent`] sender rides along, the destination engine keeps
+/// writing into the very channel the client is already reading — a
+/// mid-stream migration is invisible to the consumer except for the
+/// token indices continuing where the source stopped.
+///
+/// Metrics accounting splits across engines: the source counted the
+/// submit/admit, the destination counts the completion; each side also
+/// bumps its own `migrations_out` / `migrations_in`.
+#[derive(Debug)]
+pub struct MigratedSeq {
+    prompt: Vec<u8>,
+    max_new_tokens: usize,
+    temperature: f32,
+    /// Original sampling seed — survives the id reassignment so the
+    /// continuation is bit-identical to an unmigrated run.
+    seed: u64,
+    generated: Vec<u8>,
+    preempt_count: u32,
+    rng_state: [u64; 4],
+    submitted: Instant,
+    started: Option<Instant>,
+    first_token_at: Option<Instant>,
+    /// KV snapshot in [`crate::kv::wire`] format (geometry-checked by
+    /// the destination pool before anything is mutated).
+    wire: Vec<u8>,
+    prio: Priority,
+    tx: Sender<StreamEvent>,
+    cancel: Arc<AtomicBool>,
+    watermark: usize,
+    first_token: bool,
+    last_emit: Instant,
+}
+
+impl MigratedSeq {
+    /// Serialized KV payload size (what actually crosses engines).
+    pub fn kv_bytes(&self) -> usize {
+        self.wire.len()
+    }
+
+    /// Tokens generated so far (prefill done ⇒ ≥ 1).
+    pub fn tokens_done(&self) -> usize {
+        self.generated.len()
+    }
+}
+
 enum Msg {
     Submit {
         id: u64,
@@ -250,6 +323,19 @@ enum Msg {
         tx: Sender<StreamEvent>,
         cancel: Arc<AtomicBool>,
         submitted: Instant,
+    },
+    /// Suspend a live decoded-at-least-once request and hand it out.
+    /// Replies `None` if the id is unknown, still queued (nothing to
+    /// ship yet), doomed, or the engine runs the legacy path.
+    MigrateOut { id: u64, resp: Sender<Option<Box<MigratedSeq>>> },
+    /// Adopt a sequence suspended elsewhere. Replies `Err(seq)` —
+    /// returning the sequence intact for re-injection at the source —
+    /// if this engine cannot host it (legacy mode or mismatched pool
+    /// geometry).
+    MigrateIn {
+        seq: Box<MigratedSeq>,
+        #[allow(clippy::type_complexity)]
+        resp: Sender<std::result::Result<u64, Box<MigratedSeq>>>,
     },
     Shutdown,
 }
@@ -267,6 +353,12 @@ struct Shared {
     cancels: Mutex<HashMap<u64, Arc<AtomicBool>>>,
     /// Serialized metrics snapshot, refreshed every loop iteration.
     snapshot: Mutex<String>,
+    /// Content digests of every cached prefix chain in this engine's
+    /// pool (refreshed every loop iteration) — the router's
+    /// prefix-affinity routing signal.
+    digests: Mutex<Vec<u64>>,
+    /// Pool block granularity in tokens (set once at loop start).
+    block_tokens: AtomicUsize,
 }
 
 /// Cheap, cloneable submitter — one per connection thread.
@@ -334,6 +426,62 @@ impl GatewayHandle {
     pub fn queue_depth(&self) -> usize {
         self.shared.depth.load(Ordering::SeqCst)
     }
+
+    /// Content digests of every cached prefix chain this engine's pool
+    /// could currently serve (refreshed once per scheduling round).
+    /// Compare against [`crate::kv::prompt_digests`] of an incoming
+    /// prompt to score prefix affinity.
+    pub fn prefix_digests(&self) -> Vec<u64> {
+        self.shared.digests.lock().unwrap().clone()
+    }
+
+    /// Pool block granularity in tokens.
+    pub fn block_tokens(&self) -> usize {
+        self.shared.block_tokens.load(Ordering::SeqCst)
+    }
+
+    /// Suspend live request `id` and hand back its complete migration
+    /// state, or `None` if it is unknown, not yet decoding, doomed, or
+    /// the engine runs the legacy (non-paged) path. On success the
+    /// request is *gone* from this engine — its stream channel rides in
+    /// the returned [`MigratedSeq`].
+    pub fn migrate_out(&self, id: u64) -> Option<MigratedSeq> {
+        let (rtx, rrx) = channel();
+        self.tx.send(Msg::MigrateOut { id, resp: rtx }).ok()?;
+        rrx.recv().ok().flatten().map(|b| *b)
+    }
+
+    /// Adopt a sequence suspended on another engine; returns the fresh
+    /// engine-local id. `Err(Some(seq))` hands the sequence back intact
+    /// when this engine cannot host it (re-inject at the source);
+    /// `Err(None)` means the loop died mid-handoff and the sequence is
+    /// lost (its clients see a dead channel).
+    pub fn migrate_in(&self, seq: MigratedSeq) -> std::result::Result<u64, Option<MigratedSeq>> {
+        let (rtx, rrx) = channel();
+        if let Err(send_err) = self.tx.send(Msg::MigrateIn { seq: Box::new(seq), resp: rtx }) {
+            let Msg::MigrateIn { seq, .. } = send_err.0 else { unreachable!() };
+            return Err(Some(*seq));
+        }
+        match rrx.recv() {
+            Ok(Ok(id)) => Ok(id),
+            Ok(Err(seq)) => Err(Some(*seq)),
+            Err(_) => Err(None),
+        }
+    }
+}
+
+impl Frontend for GatewayHandle {
+    fn submit(&self, req: GatewayRequest) -> Result<StreamHandle, SubmitError> {
+        GatewayHandle::submit(self, req)
+    }
+
+    fn cancel(&self, id: u64) -> bool {
+        GatewayHandle::cancel(self, id)
+    }
+
+    fn metrics_json(&self) -> String {
+        GatewayHandle::metrics_json(self)
+    }
 }
 
 /// The running gateway. Owns the loop thread; [`Gateway::shutdown`]
@@ -355,6 +503,19 @@ impl Gateway {
         spec: Option<SpecPolicy>,
         opts: GatewayOpts,
     ) -> Gateway {
+        Gateway::start_with_swap(model, policy, spec, opts, SwapConfig::default())
+    }
+
+    /// [`Gateway::start`] plus a spill-tier configuration for the
+    /// scheduler's preemption path (see [`crate::swap`]). The default
+    /// keeps every preempted snapshot resident.
+    pub fn start_with_swap(
+        model: Model,
+        policy: BatchPolicy,
+        spec: Option<SpecPolicy>,
+        opts: GatewayOpts,
+        swap: SwapConfig,
+    ) -> Gateway {
         let (tx, rx) = channel::<Msg>();
         let shared = Arc::new(Shared {
             capacity: opts.queue_capacity.max(1),
@@ -364,10 +525,13 @@ impl Gateway {
             next_id: AtomicU64::new(0),
             cancels: Mutex::new(HashMap::new()),
             snapshot: Mutex::new(String::from("{}")),
+            digests: Mutex::new(Vec::new()),
+            block_tokens: AtomicUsize::new(0),
         });
         let worker_shared = shared.clone();
         let worker = std::thread::spawn(move || {
             let mut sched = Scheduler::with_spec(&model, policy, spec);
+            sched.set_swap(swap);
             gateway_loop(&mut sched, opts, rx, &worker_shared)
         });
         Gateway { tx, shared, worker: Some(worker) }
@@ -427,6 +591,7 @@ fn gateway_loop(
     let mut live: HashMap<u64, Entry> = HashMap::new();
     let mut classq: [VecDeque<(u64, Request)>; PRIORITY_CLASSES] = Default::default();
     let mut shutdown = false;
+    shared.block_tokens.store(sched.pool().block_tokens(), Ordering::SeqCst);
     loop {
         // `live` ⊆ {class queues ∪ batcher ∪ scheduler}, so empty-live
         // ⇔ nothing to drive: block for a message instead of spinning.
@@ -438,13 +603,13 @@ fn gateway_loop(
                 break;
             }
             match rx.recv() {
-                Ok(msg) => apply_msg(msg, sched, &mut live, &mut classq, &mut shutdown),
+                Ok(msg) => apply_msg(msg, sched, &mut live, &mut classq, &mut shutdown, shared),
                 // Every handle and the Gateway itself are gone.
                 Err(_) => break,
             }
         }
         while let Ok(msg) = rx.try_recv() {
-            apply_msg(msg, sched, &mut live, &mut classq, &mut shutdown);
+            apply_msg(msg, sched, &mut live, &mut classq, &mut shutdown, shared);
         }
 
         // Cancellations: explicit flags and disconnected streams.
@@ -523,6 +688,7 @@ fn apply_msg(
     live: &mut HashMap<u64, Entry>,
     classq: &mut [VecDeque<(u64, Request)>; PRIORITY_CLASSES],
     shutdown: &mut bool,
+    shared: &Shared,
 ) {
     match msg {
         Msg::Submit { id, req, tx, cancel, submitted } => {
@@ -546,6 +712,89 @@ fn apply_msg(
                 },
             );
             classq[prio as usize].push_back((id, r));
+        }
+        Msg::MigrateOut { id, resp } => {
+            // Doomed streams stay here for the cancel sweep; requests
+            // still in the class/batcher queues have no KV to ship and
+            // are cheaper to leave where they are.
+            let eligible = sched.policy.batched_decode
+                && live
+                    .get(&id)
+                    .map(|e| !e.dead && !e.cancel.load(Ordering::SeqCst))
+                    .unwrap_or(false);
+            let out = if eligible { sched.extract(id) } else { None }.map(|(f, snap)| {
+                let wire = sched.pool().snapshot_to_wire(&snap, true);
+                let e = live.remove(&id).expect("extracted id was live");
+                shared.cancels.lock().unwrap().remove(&id);
+                Box::new(MigratedSeq {
+                    prompt: f.req.prompt,
+                    max_new_tokens: f.req.max_new_tokens,
+                    temperature: f.req.temperature,
+                    seed: f.req.seed,
+                    generated: f.generated,
+                    preempt_count: f.preempt_count,
+                    rng_state: f.rng.state(),
+                    submitted: e.submitted,
+                    started: f.started,
+                    first_token_at: f.first_token,
+                    wire,
+                    prio: e.prio,
+                    tx: e.tx,
+                    cancel: e.cancel,
+                    watermark: e.watermark,
+                    first_token: e.first_token,
+                    last_emit: e.last_emit,
+                })
+            });
+            let _ = resp.send(out);
+        }
+        Msg::MigrateIn { seq, resp } => {
+            // Validate before mutating anything so a refusal hands the
+            // sequence back untouched.
+            let snap = if sched.policy.batched_decode {
+                sched.pool().snapshot_from_wire(&seq.wire).ok()
+            } else {
+                None
+            };
+            match snap {
+                None => {
+                    let _ = resp.send(Err(seq));
+                }
+                Some(snap) => {
+                    let id = shared.next_id.fetch_add(1, Ordering::SeqCst);
+                    let s = *seq;
+                    let req = Request::new(id, s.prompt, s.max_new_tokens)
+                        .with_temperature(s.temperature)
+                        .with_seed(s.seed);
+                    let mut f = InFlight::new(req);
+                    f.submitted = s.submitted;
+                    f.started = s.started;
+                    f.first_token = s.first_token_at;
+                    f.generated = s.generated;
+                    f.preempt_count = s.preempt_count;
+                    f.rng = Rng::from_state(s.rng_state);
+                    shared.cancels.lock().unwrap().insert(id, s.cancel.clone());
+                    live.insert(
+                        id,
+                        Entry {
+                            prio: s.prio,
+                            submitted: s.submitted,
+                            tx: s.tx,
+                            cancel: s.cancel,
+                            watermark: s.watermark,
+                            last_emit: s.last_emit,
+                            first_token: s.first_token,
+                            // The source engine took the depth charge
+                            // and counted the admission — don't repeat
+                            // either here.
+                            admitted: true,
+                            dead: false,
+                        },
+                    );
+                    sched.inject(f, snap);
+                    let _ = resp.send(Ok(id));
+                }
+            }
         }
         Msg::Shutdown => *shutdown = true,
     }
@@ -625,6 +874,7 @@ fn ms(d: Duration) -> f64 {
 /// atomics (rejections, peak depth) into `sched.metrics`, so the
 /// `Drained` record carries them too.
 fn refresh_snapshot(sched: &mut Scheduler, shared: &Shared, live_streams: usize) {
+    *shared.digests.lock().unwrap() = sched.pool().prefix_digests();
     sched.metrics.requests_rejected = shared.rejected.load(Ordering::SeqCst);
     sched.metrics.queue_depth_peak =
         sched.metrics.queue_depth_peak.max(shared.depth_peak.load(Ordering::SeqCst) as u64);
@@ -658,6 +908,14 @@ fn refresh_snapshot(sched: &mut Scheduler, shared: &Shared, live_streams: usize)
         ("live_streams", Json::from(live_streams)),
         ("preemptions", Json::from(m.preemptions as usize)),
         ("resumes", Json::from(m.resumes as usize)),
+        ("spills", Json::from(m.spills as usize)),
+        ("spilled_bytes", Json::from(m.spilled_bytes as usize)),
+        ("restores", Json::from(m.restores as usize)),
+        ("reprefill_drops", Json::from(m.reprefill_drops as usize)),
+        ("spill_codec_ratio", Json::Num(m.spill_codec_ratio())),
+        ("restore_mean_ms", Json::Num(m.restore_mean_ms())),
+        ("migrations_out", Json::from(m.migrations_out as usize)),
+        ("migrations_in", Json::from(m.migrations_in as usize)),
         ("pool_referenced_blocks", Json::from(sched.pool().referenced_blocks())),
         ("pool_blocks_in_use", Json::from(sched.pool().blocks_in_use())),
         ("cancellation_rate", Json::Num(m.cancellation_rate())),

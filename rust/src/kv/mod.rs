@@ -123,11 +123,13 @@ pub mod pool;
 pub mod qattn;
 pub mod store;
 pub mod table;
+pub mod wire;
 
 pub use pool::{BlockPool, PoolStats, Snapshot, SpecCheckpoint};
 pub use qattn::QuantSeg;
 pub use store::{fp8_e4m3_decode, fp8_e4m3_encode, KvDtype, KvScratch};
 pub use table::BlockTable;
+pub use wire::{prompt_digests, WireInfo};
 
 /// Tokens per KV block. Matches the chunked cache's grow quantum so the
 /// paged and chunked paths have comparable allocation granularity; a

@@ -131,29 +131,34 @@ impl SpecCheckpoint {
 ///   incremental history. Owning the bytes makes resume exact
 ///   unconditionally; per-block purity taint rides along so an impure
 ///   slab stays out of the dedup index across a suspend/resume cycle.
-#[derive(Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Snapshot {
-    dtype: KvDtype,
+    pub(crate) dtype: KvDtype,
     /// Committed token count at suspension.
-    len: usize,
+    pub(crate) len: usize,
     /// Table capacity (the model's `max_seq`) for the rebuilt table.
-    max_tokens: usize,
+    pub(crate) max_tokens: usize,
     /// Full committed token history — the attach keys for resume and
     /// the replay source for the re-prefill fallback.
-    tokens: Vec<u8>,
+    pub(crate) tokens: Vec<u8>,
     /// Block index of the first owned store below; stores cover block
     /// indices `owned_from ..` of the sequence.
-    owned_from: usize,
+    pub(crate) owned_from: usize,
     /// Byte-exact clones of the owned blocks with their purity taint.
-    stores: Vec<(KvStore, bool)>,
+    pub(crate) stores: Vec<(KvStore, bool)>,
     /// Compressed bytes held by `stores` (the `swap_bytes` metric).
-    bytes: usize,
+    pub(crate) bytes: usize,
 }
 
 impl Snapshot {
     /// Committed token count the resume restores to.
     pub fn len(&self) -> usize {
         self.len
+    }
+
+    /// Storage dtype the snapshot's blocks were captured at.
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
     }
 
     pub fn is_empty(&self) -> bool {
@@ -269,7 +274,12 @@ impl BlockPool {
         self.dtype
     }
 
-    fn block_bytes_for(n_layer: usize, block_tokens: usize, d: usize, dtype: KvDtype) -> usize {
+    pub(crate) fn block_bytes_for(
+        n_layer: usize,
+        block_tokens: usize,
+        d: usize,
+        dtype: KvDtype,
+    ) -> usize {
         // K + V payloads for all layers, plus per-layer-per-side scale
         // metadata for quantized stores.
         2 * n_layer * (block_tokens * d * dtype.bytes_per_elem() + dtype.scale_bytes())
@@ -478,6 +488,21 @@ impl BlockPool {
         table.len = shared;
         self.stats.shared_tokens += shared as u64;
         self.stats.prompt_tokens += prompt.len() as u64;
+        shared
+    }
+
+    /// [`Self::attach_prefix`] without the prompt-share accounting: the
+    /// replay hook for the drop-and-reprefill spill tier, which
+    /// re-attaches whatever of a dropped sequence's chain is still
+    /// cached before recomputing the rest — that is resume work, not
+    /// prompt sharing, so it must not inflate the prefix-hit stats.
+    pub(crate) fn attach_cached(&mut self, table: &mut BlockTable, tokens: &[u8]) -> usize {
+        assert!(table.len == 0 && table.blocks.is_empty(), "attach needs a fresh table");
+        let bt = self.block_tokens;
+        let max_share = (tokens.len().saturating_sub(1) / bt) * bt;
+        let shared = self.attach_chain(table, tokens, max_share, None);
+        table.tokens.extend_from_slice(&tokens[..shared]);
+        table.len = shared;
         shared
     }
 
@@ -849,6 +874,92 @@ impl BlockPool {
             table.tokens = snap.tokens[..ready].to_vec();
             (table, ready)
         }
+    }
+
+    // ---- wire serialization + routing digests ----
+
+    /// Serialize a snapshot into the versioned [`super::wire`] format
+    /// (geometry header + codes + scales + taint + checksum). With
+    /// `codec` set, quantized code slabs additionally go through the
+    /// byte-RLE codec when it actually shrinks them. Round-trips
+    /// byte-exactly: [`Self::resume`] after
+    /// [`Self::snapshot_from_wire`] is bit-identical to resuming the
+    /// in-memory snapshot.
+    pub fn snapshot_to_wire(&self, snap: &Snapshot, codec: bool) -> Vec<u8> {
+        super::wire::encode(snap, self.n_layer, self.block_tokens, self.d, codec)
+    }
+
+    /// [`Self::snapshot_to_wire`] plus the codec accounting the spill
+    /// tier reports: `(wire bytes, raw code-slab bytes, framed
+    /// code-slab bytes)`.
+    pub fn snapshot_to_wire_ex(&self, snap: &Snapshot, codec: bool) -> (Vec<u8>, u64, u64) {
+        super::wire::encode_ex(snap, self.n_layer, self.block_tokens, self.d, codec)
+    }
+
+    /// Decode a [`Self::snapshot_to_wire`] byte stream and validate its
+    /// geometry header against this pool, so a snapshot can never be
+    /// resumed into a pool with a different dtype or block shape.
+    pub fn snapshot_from_wire(&self, bytes: &[u8]) -> crate::Result<Snapshot> {
+        let (snap, info) = super::wire::decode(bytes)?;
+        anyhow::ensure!(
+            info.dtype == self.dtype
+                && info.n_layer == self.n_layer
+                && info.block_tokens == self.block_tokens
+                && info.d == self.d,
+            "wire geometry {:?}/{}L/{}t/{}d does not match pool {:?}/{}L/{}t/{}d",
+            info.dtype,
+            info.n_layer,
+            info.block_tokens,
+            info.d,
+            self.dtype,
+            self.n_layer,
+            self.block_tokens,
+            self.d,
+        );
+        Ok(snap)
+    }
+
+    /// Content digests of every frozen token prefix the pool's index
+    /// can serve: one FNV-1a 64 digest per indexed block, taken over
+    /// the **full token history** from the chain root through that
+    /// block. A router matches a prompt's own block-aligned prefix
+    /// digests ([`super::wire::prompt_digests`]) against this set to
+    /// find the replica with the longest cached prefix — digests are a
+    /// routing hint only (a hash collision merely misroutes; attach
+    /// still compares real bytes), which is what makes them portable
+    /// across engines where the slot-local [`BlockKey`]s are not.
+    pub fn prefix_digests(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.index.len());
+        for key in self.index.keys() {
+            let mut chain: Vec<&BlockKey> = vec![key];
+            let mut parent = key.parent;
+            let mut parent_gen = key.parent_gen;
+            let ok = loop {
+                if parent == NO_PARENT {
+                    break true;
+                }
+                let pb = &self.blocks[parent];
+                // A reused or evicted parent slot breaks the chain: the
+                // prefix is no longer attachable, so it is not a
+                // routing target either.
+                match &pb.key {
+                    Some(pk) if pb.gen == parent_gen => {
+                        chain.push(pk);
+                        parent = pk.parent;
+                        parent_gen = pk.parent_gen;
+                    }
+                    _ => break false,
+                }
+            };
+            if ok {
+                let mut h = super::wire::FNV_OFFSET;
+                for k in chain.iter().rev() {
+                    h = super::wire::fnv1a(h, &k.tokens);
+                }
+                out.push(h);
+            }
+        }
+        out
     }
 
     // ---- invariant checking (tests + debug assertions) ----

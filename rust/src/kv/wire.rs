@@ -1,0 +1,650 @@
+//! Versioned wire/disk format for [`Snapshot`] — the serialization
+//! layer the spill tier ([`crate::swap`]) and the cross-engine
+//! migration path ([`crate::router`]) share.
+//!
+//! A suspended sequence's KV state already lives in plain owned byte
+//! buffers (codes + per-block-per-layer scales + purity taint, see
+//! [`Snapshot`]); this module turns it into a self-describing byte
+//! stream and back **byte-exactly**, so [`BlockPool::resume`] after
+//! [`decode`] is bit-identical to resuming the in-memory snapshot —
+//! the property every migrated or spilled sequence's bit-identity
+//! rests on.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic "SDQW" · version u16 · dtype u8 · flags u8
+//! n_layer u32 · block_tokens u32 · d u32          (block geometry)
+//! len u64 · max_tokens u64 · owned_from u64
+//! token history (u64 count + bytes)
+//! store count u64, then per owned block:
+//!   taint u8
+//!   f32:  K slab · V slab              (verbatim f32 LE)
+//!   quantized: K codes · V codes       (raw, or RLE-framed if flags&1)
+//!              K amax · V amax         (one f32 per layer, verbatim)
+//! checksum u64 (FNV-1a over everything above)
+//! ```
+//!
+//! The optional codec (flag bit 0) is a byte-oriented run-length code
+//! applied to the **quantized code slabs only** — they are the bulk of
+//! the bytes and entropy-friendly (unwritten tail rows are runs of
+//! zero codes; Double Compression, arXiv 2502.15443, motivates going
+//! further). Each slab is framed with a method byte so RLE is only
+//! kept when it actually shrinks the slab; scales and f32 rows pass
+//! through verbatim. Decoding rejects a bad magic, an unknown version,
+//! and a checksum mismatch with distinct errors, and validates every
+//! structural invariant (`tokens.len() == len`, store count vs.
+//! geometry, f32-never-tainted) before a [`Snapshot`] is rebuilt.
+//!
+//! The module also provides [`prompt_digests`]: the chained FNV-1a
+//! digests of a token stream at each block boundary, the portable
+//! content address [`BlockPool::prefix_digests`] exposes for
+//! prefix-aware routing (pool-local `BlockKey`s embed slot ids and
+//! generations, so they cannot leave the process).
+
+use anyhow::{bail, ensure};
+
+use super::pool::{BlockPool, Snapshot};
+use super::store::{KvDtype, KvStore};
+
+/// Format magic: "SDQ wire".
+pub const MAGIC: [u8; 4] = *b"SDQW";
+/// Current (and only) format version.
+pub const VERSION: u16 = 1;
+
+/// FNV-1a 64 offset basis — the seed for [`fnv1a`] digest chains.
+pub(crate) const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `bytes` into a running FNV-1a 64 digest. Byte-sequential, so
+/// folding block-by-block equals hashing the concatenated stream —
+/// what makes per-block prefix digests composable.
+pub(crate) fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Digest of each block-aligned prefix of `tokens`: entry `i` is the
+/// FNV-1a digest of `tokens[..(i + 1) * block_tokens]`. Matching a
+/// prompt's digests against [`BlockPool::prefix_digests`] counts how
+/// many leading blocks a replica already holds.
+pub fn prompt_digests(tokens: &[u8], block_tokens: usize) -> Vec<u64> {
+    let full = tokens.len() / block_tokens;
+    let mut out = Vec::with_capacity(full);
+    let mut h = FNV_OFFSET;
+    for bi in 0..full {
+        h = fnv1a(h, &tokens[bi * block_tokens..(bi + 1) * block_tokens]);
+        out.push(h);
+    }
+    out
+}
+
+/// Geometry and codec accounting recovered from a wire header — the
+/// caller validates it against the receiving pool
+/// ([`BlockPool::snapshot_from_wire`]) and feeds the byte counts into
+/// the codec-ratio metrics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireInfo {
+    pub dtype: KvDtype,
+    pub n_layer: usize,
+    pub block_tokens: usize,
+    pub d: usize,
+    /// Quantized code-slab bytes before the codec (0 for f32 streams).
+    pub raw_slab_bytes: u64,
+    /// The same slabs as stored on the wire.
+    pub encoded_slab_bytes: u64,
+}
+
+fn dtype_tag(d: KvDtype) -> u8 {
+    match d {
+        KvDtype::F32 => 0,
+        KvDtype::Fp8E4M3 => 1,
+        KvDtype::Int8 => 2,
+    }
+}
+
+fn dtype_from_tag(t: u8) -> anyhow::Result<KvDtype> {
+    match t {
+        0 => Ok(KvDtype::F32),
+        1 => Ok(KvDtype::Fp8E4M3),
+        2 => Ok(KvDtype::Int8),
+        _ => bail!("unknown kv dtype tag {t}"),
+    }
+}
+
+// ---- primitive writers / reader ----
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "wire stream truncated");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> anyhow::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> anyhow::Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+// ---- RLE codec (quantized code slabs) ----
+
+/// Byte RLE: (run u8 ∈ 1..=255, value u8) pairs. Worst case 2×, which
+/// the per-slab method byte below guards against.
+fn rle_encode(bytes: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        let v = bytes[i];
+        let mut run = 1usize;
+        while run < 255 && i + run < bytes.len() && bytes[i + run] == v {
+            run += 1;
+        }
+        out.push(run as u8);
+        out.push(v);
+        i += run;
+    }
+    out
+}
+
+fn rle_decode(enc: &[u8], expect_len: usize) -> anyhow::Result<Vec<u8>> {
+    ensure!(enc.len() % 2 == 0, "RLE slab has a dangling half-pair");
+    let mut out = Vec::with_capacity(expect_len);
+    for pair in enc.chunks_exact(2) {
+        let (run, v) = (pair[0] as usize, pair[1]);
+        ensure!(run > 0, "RLE run of zero");
+        ensure!(out.len() + run <= expect_len, "RLE slab overruns its block");
+        out.resize(out.len() + run, v);
+    }
+    ensure!(out.len() == expect_len, "RLE slab underruns its block");
+    Ok(out)
+}
+
+const SLAB_RAW: u8 = 0;
+const SLAB_RLE: u8 = 1;
+
+/// Write one quantized code slab with method framing, keeping the RLE
+/// form only when it is strictly smaller. Returns the framed payload
+/// size (for the codec-ratio counters).
+fn put_code_slab(out: &mut Vec<u8>, slab: &[u8], codec: bool) -> u64 {
+    if !codec {
+        out.extend_from_slice(slab);
+        return slab.len() as u64;
+    }
+    let rle = rle_encode(slab);
+    if rle.len() < slab.len() {
+        out.push(SLAB_RLE);
+        put_u64(out, rle.len() as u64);
+        let n = rle.len() as u64;
+        out.extend_from_slice(&rle);
+        1 + 8 + n
+    } else {
+        out.push(SLAB_RAW);
+        put_u64(out, slab.len() as u64);
+        out.extend_from_slice(slab);
+        1 + 8 + slab.len() as u64
+    }
+}
+
+fn read_code_slab(r: &mut Reader<'_>, elems: usize, codec: bool) -> anyhow::Result<Vec<u8>> {
+    if !codec {
+        return Ok(r.take(elems)?.to_vec());
+    }
+    let method = r.u8()?;
+    let n = r.u64()? as usize;
+    let payload = r.take(n)?;
+    match method {
+        SLAB_RAW => {
+            ensure!(n == elems, "raw slab length {n} != {elems}");
+            Ok(payload.to_vec())
+        }
+        SLAB_RLE => rle_decode(payload, elems),
+        m => bail!("unknown slab method {m}"),
+    }
+}
+
+// ---- encode / decode ----
+
+/// Serialize `snap` under the given block geometry. Callers normally go
+/// through [`BlockPool::snapshot_to_wire`], which supplies the pool's
+/// own geometry.
+pub fn encode(
+    snap: &Snapshot,
+    n_layer: usize,
+    block_tokens: usize,
+    d: usize,
+    codec: bool,
+) -> Vec<u8> {
+    encode_ex(snap, n_layer, block_tokens, d, codec).0
+}
+
+/// [`encode`] plus the codec accounting: (raw quantized-slab bytes,
+/// framed bytes as stored) — the `codec_raw_bytes` /
+/// `codec_encoded_bytes` metrics the spill tier reports.
+pub fn encode_ex(
+    snap: &Snapshot,
+    n_layer: usize,
+    block_tokens: usize,
+    d: usize,
+    codec: bool,
+) -> (Vec<u8>, u64, u64) {
+    let mut out = Vec::with_capacity(64 + snap.bytes);
+    out.extend_from_slice(&MAGIC);
+    put_u16(&mut out, VERSION);
+    out.push(dtype_tag(snap.dtype));
+    out.push(if codec { 1 } else { 0 });
+    put_u32(&mut out, n_layer as u32);
+    put_u32(&mut out, block_tokens as u32);
+    put_u32(&mut out, d as u32);
+    put_u64(&mut out, snap.len as u64);
+    put_u64(&mut out, snap.max_tokens as u64);
+    put_u64(&mut out, snap.owned_from as u64);
+    put_u64(&mut out, snap.tokens.len() as u64);
+    out.extend_from_slice(&snap.tokens);
+    put_u64(&mut out, snap.stores.len() as u64);
+    let (mut raw, mut enc) = (0u64, 0u64);
+    for (store, tainted) in &snap.stores {
+        out.push(*tainted as u8);
+        match store {
+            KvStore::F32 { k, v } => {
+                put_f32s(&mut out, k);
+                put_f32s(&mut out, v);
+            }
+            KvStore::Q8 { k, v, k_amax, v_amax, .. } => {
+                raw += (k.len() + v.len()) as u64;
+                enc += put_code_slab(&mut out, k, codec);
+                enc += put_code_slab(&mut out, v, codec);
+                put_f32s(&mut out, k_amax);
+                put_f32s(&mut out, v_amax);
+            }
+        }
+    }
+    let sum = fnv1a(FNV_OFFSET, &out);
+    put_u64(&mut out, sum);
+    (out, raw, enc)
+}
+
+/// Decode a wire stream back into a [`Snapshot`] plus the geometry it
+/// was captured under. Magic and version are checked first (so a
+/// version bump reports as such, not as corruption), then the trailing
+/// checksum over everything before it, then every structural
+/// invariant.
+pub fn decode(bytes: &[u8]) -> anyhow::Result<(Snapshot, WireInfo)> {
+    ensure!(bytes.len() >= MAGIC.len() + 2 + 8, "wire stream shorter than header");
+    ensure!(bytes[..4] == MAGIC, "bad magic: not an SDQW snapshot stream");
+    let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+    ensure!(version == VERSION, "unsupported wire version {version} (expected {VERSION})");
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let want = u64::from_le_bytes(tail.try_into().unwrap());
+    let got = fnv1a(FNV_OFFSET, body);
+    ensure!(got == want, "wire checksum mismatch (corrupt stream)");
+
+    let mut r = Reader { buf: body, pos: 6 };
+    let dtype = dtype_from_tag(r.u8()?)?;
+    let flags = r.u8()?;
+    ensure!(flags <= 1, "unknown wire flags {flags:#x}");
+    let codec = flags & 1 != 0;
+    let n_layer = r.u32()? as usize;
+    let block_tokens = r.u32()? as usize;
+    let d = r.u32()? as usize;
+    ensure!(n_layer > 0 && block_tokens > 0 && d > 0, "degenerate block geometry");
+    let len = r.u64()? as usize;
+    let max_tokens = r.u64()? as usize;
+    let owned_from = r.u64()? as usize;
+    ensure!(len <= max_tokens, "len {len} exceeds table capacity {max_tokens}");
+    let n_tokens = r.u64()? as usize;
+    ensure!(n_tokens == len, "token history length {n_tokens} != len {len}");
+    let tokens = r.take(n_tokens)?.to_vec();
+
+    let blocks = len.div_ceil(block_tokens);
+    if dtype == KvDtype::F32 {
+        ensure!(owned_from == len / block_tokens, "f32 snapshot must own exactly the tail");
+    } else {
+        ensure!(owned_from == 0, "quantized snapshot must own every block");
+    }
+    let n_stores = r.u64()? as usize;
+    ensure!(n_stores == blocks - owned_from, "store count {n_stores} != {}", blocks - owned_from);
+
+    let elems = n_layer * block_tokens * d;
+    let (mut raw, mut enc) = (0u64, 0u64);
+    let mut stores = Vec::with_capacity(n_stores);
+    for _ in 0..n_stores {
+        let taint = match r.u8()? {
+            0 => false,
+            1 => true,
+            t => bail!("bad taint byte {t}"),
+        };
+        let store = if dtype == KvDtype::F32 {
+            ensure!(!taint, "f32 blocks are never tainted");
+            KvStore::F32 { k: r.f32s(elems)?, v: r.f32s(elems)? }
+        } else {
+            let before = r.pos;
+            let k = read_code_slab(&mut r, elems, codec)?;
+            let v = read_code_slab(&mut r, elems, codec)?;
+            raw += 2 * elems as u64;
+            enc += (r.pos - before) as u64;
+            KvStore::Q8 { dtype, k, v, k_amax: r.f32s(n_layer)?, v_amax: r.f32s(n_layer)? }
+        };
+        stores.push((store, taint));
+    }
+    ensure!(r.pos == body.len(), "trailing bytes after snapshot payload");
+
+    let bytes_held = stores.len() * BlockPool::block_bytes_for(n_layer, block_tokens, d, dtype);
+    let snap = Snapshot {
+        dtype,
+        len,
+        max_tokens,
+        tokens,
+        owned_from,
+        stores,
+        bytes: bytes_held,
+    };
+    let info = WireInfo {
+        dtype,
+        n_layer,
+        block_tokens,
+        d,
+        raw_slab_bytes: raw,
+        encoded_slab_bytes: enc,
+    };
+    Ok((snap, info))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::table::BlockTable;
+    use crate::model::{Arch, ModelConfig};
+    use crate::util::rng::Rng;
+
+    const ALL_DTYPES: [KvDtype; 3] = [KvDtype::F32, KvDtype::Fp8E4M3, KvDtype::Int8];
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "wire-test".into(),
+            arch: Arch::Gpt,
+            d_model: 8,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 16,
+            vocab: 256,
+            max_seq: 64,
+            eps: 1e-5,
+            rope_theta: 10000.0,
+            kv_dtype: KvDtype::F32,
+        }
+    }
+
+    fn pool_dt(budget: usize, dtype: KvDtype) -> BlockPool {
+        let c = cfg();
+        let bb = BlockPool::block_bytes_for(c.n_layer, 4, c.d_model, dtype);
+        BlockPool::with_params(&c, budget * bb, 4, dtype)
+    }
+
+    /// Feed `toks` through a table the way the model does (prepare /
+    /// write_row / commit), with per-position row values that exercise
+    /// amax growth on quantized stores.
+    fn run_tokens(p: &mut BlockPool, t: &mut BlockTable, toks: &[u8]) {
+        p.prepare_tokens(t, toks.len());
+        for (j, tok) in toks.iter().enumerate() {
+            let pos = t.len() + j;
+            for li in 0..2 {
+                let val = *tok as f32 * 0.37 + li as f32 * 0.5;
+                let row = vec![val; 8];
+                let vrow = vec![-val; 8];
+                p.write_row(t, li, pos, &row, &vrow);
+            }
+        }
+        p.commit(t, toks);
+    }
+
+    fn round_trip(pool: &BlockPool, snap: &Snapshot, codec: bool) -> Snapshot {
+        let wire = pool.snapshot_to_wire(snap, codec);
+        let back = pool.snapshot_from_wire(&wire).expect("decode");
+        assert_eq!(&back, snap, "wire round-trip must be byte-exact (codec={codec})");
+        back
+    }
+
+    #[test]
+    fn round_trip_plain_and_partial_tail() {
+        for dtype in ALL_DTYPES {
+            for n in [4usize, 8, 11] {
+                // block-aligned and mid-block tails
+                let toks: Vec<u8> = (10..10 + n as u8).collect();
+                let mut p = pool_dt(16, dtype);
+                let mut t = BlockTable::new(64);
+                run_tokens(&mut p, &mut t, &toks);
+                let snap = p.suspend(t);
+                for codec in [false, true] {
+                    let back = round_trip(&p, &snap, codec);
+                    // Resuming the decoded snapshot on a fresh pool is
+                    // bit-identical to resuming the original.
+                    let mut pa = pool_dt(16, dtype);
+                    let mut pb = pool_dt(16, dtype);
+                    let (ta, ra) = pa.resume(&snap);
+                    let (tb, rb) = pb.resume(&back);
+                    assert_eq!(ra, rb, "{dtype:?}/{n}: resume ready count diverged");
+                    assert_eq!(ta.tokens(), tb.tokens());
+                    pa.assert_consistent();
+                    pb.assert_consistent();
+                    pa.release(ta);
+                    pb.release(tb);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_tainted_mid_block_truncation() {
+        // Quantized mid-block truncate taints the tail slab; the taint
+        // must survive the wire so a resumed block stays out of the
+        // dedup index.
+        for dtype in [KvDtype::Fp8E4M3, KvDtype::Int8] {
+            let mut p = pool_dt(16, dtype);
+            let mut t = BlockTable::new(64);
+            run_tokens(&mut p, &mut t, &(20..31).collect::<Vec<u8>>()); // 11 tokens
+            p.truncate(&mut t, 6); // mid-block cut → tainted tail
+            let snap = p.suspend(t);
+            assert!(snap.stores.iter().any(|(_, taint)| *taint), "{dtype:?}: expected a taint");
+            for codec in [false, true] {
+                round_trip(&p, &snap, codec);
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_cow_forked_snapshot() {
+        for dtype in ALL_DTYPES {
+            let mut p = pool_dt(32, dtype);
+            let mut a = BlockTable::new(64);
+            run_tokens(&mut p, &mut a, &(40..50).collect::<Vec<u8>>());
+            let mut b = p.fork(&a);
+            // Diverge the fork (copy-on-write on the shared tail).
+            run_tokens(&mut p, &mut b, &[91, 92, 93]);
+            let snap = p.suspend(b);
+            for codec in [false, true] {
+                round_trip(&p, &snap, codec);
+            }
+            p.release(a);
+        }
+    }
+
+    #[test]
+    fn randomized_round_trip_across_shapes() {
+        let mut rng = Rng::seed_from_u64(0x5d9_1ce);
+        for _ in 0..60 {
+            let dtype = ALL_DTYPES[rng.below(3)];
+            let mut p = pool_dt(32, dtype);
+            let mut t = BlockTable::new(64);
+            let n = 1 + rng.below(20);
+            let toks: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            run_tokens(&mut p, &mut t, &toks);
+            // Random mid-flight truncation (possibly mid-block → taint
+            // on quantized), keeping at least one token.
+            if rng.bool(0.5) && t.len() > 2 {
+                let cut = 1 + rng.below(t.len() - 1);
+                p.truncate(&mut t, cut);
+            }
+            let t = if rng.bool(0.3) {
+                let fork = p.fork(&t);
+                p.release(t);
+                fork
+            } else {
+                t
+            };
+            let snap = p.suspend(t);
+            let codec = rng.bool(0.5);
+            round_trip(&p, &snap, codec);
+        }
+    }
+
+    #[test]
+    fn codec_shrinks_sparse_slabs_and_reports_sizes() {
+        // A mostly-empty quantized block (1 token written, 3 rows of
+        // zero codes per slab) is RLE-friendly; the framed size must
+        // shrink and the decode side must report matching accounting.
+        let mut p = pool_dt(8, KvDtype::Int8);
+        let mut t = BlockTable::new(64);
+        run_tokens(&mut p, &mut t, &[7]);
+        let snap = p.suspend(t);
+        let (wire, raw, enc) = {
+            let plain = p.snapshot_to_wire(&snap, false);
+            let (wire, raw, enc) = super::encode_ex(&snap, 2, 4, 8, true);
+            assert!(wire.len() < plain.len(), "codec failed to shrink a sparse slab");
+            (wire, raw, enc)
+        };
+        assert!(enc < raw, "framed bytes {enc} not below raw {raw}");
+        let (back, info) = decode(&wire).expect("decode");
+        assert_eq!(back, snap);
+        assert_eq!(info.raw_slab_bytes, raw);
+        assert_eq!(info.encoded_slab_bytes, enc);
+        assert_eq!(info.dtype, KvDtype::Int8);
+    }
+
+    #[test]
+    fn corrupted_checksum_rejected() {
+        let mut p = pool_dt(8, KvDtype::Int8);
+        let mut t = BlockTable::new(64);
+        run_tokens(&mut p, &mut t, &[1, 2, 3, 4, 5]);
+        let snap = p.suspend(t);
+        let wire = p.snapshot_to_wire(&snap, true);
+        // Flip one payload byte (past the header, before the checksum).
+        let mut bad = wire.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        let err = decode(&bad).expect_err("corrupt stream must not decode");
+        assert!(err.to_string().contains("checksum"), "unexpected error: {err}");
+        // Truncation is also caught (the checksum covers length).
+        let err = decode(&wire[..wire.len() - 3]).expect_err("truncated stream must not decode");
+        assert!(err.to_string().contains("checksum"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn wrong_version_and_magic_rejected() {
+        let mut p = pool_dt(8, KvDtype::F32);
+        let mut t = BlockTable::new(64);
+        run_tokens(&mut p, &mut t, &[9, 9, 9]);
+        let snap = p.suspend(t);
+        let wire = p.snapshot_to_wire(&snap, false);
+        let mut vbad = wire.clone();
+        vbad[4] = 0xfe; // version field
+        let err = decode(&vbad).expect_err("future version must be rejected");
+        assert!(err.to_string().contains("version"), "unexpected error: {err}");
+        let mut mbad = wire;
+        mbad[0] = b'X';
+        let err = decode(&mbad).expect_err("foreign magic must be rejected");
+        assert!(err.to_string().contains("magic"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected_by_pool() {
+        let mut p = pool_dt(8, KvDtype::Int8);
+        let mut t = BlockTable::new(64);
+        run_tokens(&mut p, &mut t, &[1, 2, 3]);
+        let snap = p.suspend(t);
+        let wire = p.snapshot_to_wire(&snap, false);
+        let other = pool_dt(8, KvDtype::Fp8E4M3);
+        let err = other.snapshot_from_wire(&wire).expect_err("dtype mismatch must be rejected");
+        assert!(err.to_string().contains("geometry"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn prompt_digests_match_pool_prefix_digests() {
+        let mut p = pool_dt(16, KvDtype::Int8);
+        let prompt: Vec<u8> = (100..120).collect(); // 5 full blocks at bt=4
+        let mut t = BlockTable::new(64);
+        run_tokens(&mut p, &mut t, &prompt);
+        p.release(t); // freeze + cache the chain
+        let have: std::collections::HashSet<u64> = p.prefix_digests().into_iter().collect();
+        let want = prompt_digests(&prompt, 4);
+        assert_eq!(want.len(), 5);
+        for (i, dg) in want.iter().enumerate() {
+            assert!(have.contains(dg), "prefix digest {i} missing from the pool set");
+        }
+        // A foreign prompt's digests must not match.
+        for dg in prompt_digests(&(200..216).collect::<Vec<u8>>(), 4) {
+            assert!(!have.contains(&dg), "foreign digest spuriously present");
+        }
+    }
+
+    #[test]
+    fn rle_round_trips_random_buffers() {
+        let mut rng = Rng::seed_from_u64(77);
+        for _ in 0..50 {
+            let n = rng.below(400);
+            // Mix runs and noise.
+            let mut buf = Vec::with_capacity(n);
+            while buf.len() < n {
+                let v = rng.below(256) as u8;
+                let run = 1 + rng.below(20).min(n - buf.len() - 1 + 1);
+                buf.resize(buf.len() + run, v);
+            }
+            buf.truncate(n);
+            let enc = rle_encode(&buf);
+            assert_eq!(rle_decode(&enc, n).unwrap(), buf);
+        }
+    }
+}

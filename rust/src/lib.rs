@@ -82,9 +82,11 @@ pub mod harness;
 pub mod kv;
 pub mod model;
 pub mod perfmodel;
+pub mod router;
 pub mod runtime;
 pub mod sdq;
 pub mod spec;
+pub mod swap;
 pub mod tensor;
 pub mod util;
 

@@ -1,0 +1,412 @@
+//! Prefix-aware multi-engine router with cross-engine sequence
+//! migration.
+//!
+//! One [`Gateway`] is one engine: one scheduler loop, one
+//! [`crate::kv::BlockPool`]. This module runs **N replicas** of that
+//! engine behind a single submit surface and adds the two scheduling
+//! moves a fleet has that a single engine does not:
+//!
+//! * **Prefix-aware routing.** Each replica publishes the content
+//!   digests of every cached prefix chain in its pool
+//!   ([`GatewayHandle::prefix_digests`], refreshed once per scheduling
+//!   round). A new prompt is digested block-by-block
+//!   ([`crate::kv::prompt_digests`]) and routed to the replica holding
+//!   the longest cached leading run — turning the pool's
+//!   content-addressed prefix cache from a per-engine optimization
+//!   into a fleet-level placement signal. With no cached prefix
+//!   anywhere, the prompt falls to the least-loaded replica
+//!   (round-robin on ties).
+//! * **Mid-stream migration.** A live sequence can be suspended on one
+//!   replica and resumed on another without the client noticing:
+//!   [`GatewayHandle::migrate_out`] extracts the generation state plus
+//!   the KV snapshot serialized through [`crate::kv::wire`],
+//!   [`GatewayHandle::migrate_in`] geometry-checks and adopts it, and
+//!   because the stream channel rides inside the
+//!   [`crate::gateway::MigratedSeq`] the
+//!   destination keeps writing into the very channel the client is
+//!   reading. Greedy output is bit-identical to an unmigrated run
+//!   (pinned in `tests/migration.rs`); sampled requests stay exact too
+//!   because the RNG state and original seed migrate with the
+//!   sequence.
+//!
+//! [`RouterOpts::migrate_after`] turns the second move into a policy:
+//! every stream migrates once after that many generated tokens.
+//! `migrate_after = 1` is **prefill→decode disaggregation** — the
+//! routed replica serves the prefill (ideally on a cached prefix) and
+//! the first token, then the decode tail moves to the least-loaded
+//! peer.
+//!
+//! Replicas run without speculation ([`crate::spec::SpecPolicy`] holds
+//! a boxed drafter and cannot be cloned per replica); compose spec
+//! with single-[`Gateway`] serving where it matters.
+//!
+//! The router is transport-independent and implements
+//! [`Frontend`], so the hand-rolled HTTP/SSE surface
+//! ([`crate::gateway::http::serve`]) serves a fleet exactly as it
+//! serves one engine (`examples/serve.rs --replicas N`).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::gateway::{
+    Drained, Frontend, Gateway, GatewayHandle, GatewayOpts, GatewayRequest, StreamEvent,
+    StreamHandle, SubmitError,
+};
+use crate::kv::prompt_digests;
+use crate::model::Model;
+use crate::swap::{SwapConfig, SwapDir};
+use crate::util::json::Json;
+
+/// Fleet-level policy knobs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RouterOpts {
+    /// Migrate each stream once, to the least-loaded peer, after this
+    /// many generated tokens. `Some(1)` is prefill→decode
+    /// disaggregation; `None` (default) never migrates.
+    pub migrate_after: Option<usize>,
+}
+
+/// Where one public stream currently lives.
+struct Route {
+    replica: usize,
+    local: u64,
+    /// The cancel flag shared with the engine-side entry — it travels
+    /// inside [`crate::gateway::MigratedSeq`], so flagging it reaches
+    /// the sequence wherever it currently runs.
+    cancel: Arc<AtomicBool>,
+}
+
+struct RouterInner {
+    handles: Vec<GatewayHandle>,
+    /// Public id → current placement. Entries are removed by the
+    /// stream's forwarder thread when the stream ends.
+    map: Mutex<HashMap<u64, Route>>,
+    next_public: AtomicU64,
+    migrations: AtomicU64,
+    /// Round-robin cursor for the no-affinity tiebreak.
+    rr: AtomicUsize,
+    migrate_after: Option<usize>,
+}
+
+/// The running fleet. Owns the replica [`Gateway`]s;
+/// [`Router::shutdown`] drains each and returns their [`Drained`]
+/// records in replica order.
+pub struct Router {
+    gateways: Vec<Gateway>,
+    inner: Arc<RouterInner>,
+}
+
+/// Cheap, cloneable fleet submitter (the [`Frontend`] the HTTP surface
+/// serves).
+#[derive(Clone)]
+pub struct RouterHandle {
+    inner: Arc<RouterInner>,
+}
+
+impl Router {
+    /// Start `replicas` engine replicas of `model`. Each replica gets
+    /// its own scheduler thread and pool; `swap` (if any) is cloned
+    /// per replica with a **private** spill subdirectory
+    /// (`<dir>/replica-<i>`), because spill files are keyed by
+    /// engine-local request ids, which collide across replicas.
+    pub fn start(
+        model: &Model,
+        replicas: usize,
+        policy: BatchPolicy,
+        opts: GatewayOpts,
+        ropts: RouterOpts,
+        swap: Option<SwapConfig>,
+    ) -> crate::Result<Router> {
+        anyhow::ensure!(replicas >= 1, "router needs at least one replica");
+        let mut gateways = Vec::with_capacity(replicas);
+        for i in 0..replicas {
+            let cfg = match &swap {
+                None => SwapConfig::default(),
+                Some(c) => SwapConfig {
+                    dir: match &c.dir {
+                        None => None,
+                        Some(d) => Some(SwapDir::new(d.path().join(format!("replica-{i}")))?),
+                    },
+                    ..c.clone()
+                },
+            };
+            gateways.push(Gateway::start_with_swap(model.clone(), policy, None, opts, cfg));
+        }
+        let handles = gateways.iter().map(|g| g.handle()).collect();
+        let inner = Arc::new(RouterInner {
+            handles,
+            map: Mutex::new(HashMap::new()),
+            next_public: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
+            rr: AtomicUsize::new(0),
+            migrate_after: ropts.migrate_after,
+        });
+        Ok(Router { gateways, inner })
+    }
+
+    pub fn handle(&self) -> RouterHandle {
+        RouterHandle { inner: self.inner.clone() }
+    }
+
+    /// Drain every replica and return their final states in replica
+    /// order. Forwarder threads exit on their own once the replica
+    /// channels close.
+    pub fn shutdown(self) -> Vec<Drained> {
+        self.gateways.into_iter().map(|g| g.shutdown()).collect()
+    }
+}
+
+impl RouterHandle {
+    /// Route and submit: longest cached prefix run wins, otherwise the
+    /// least-loaded replica (round-robin on ties). The returned handle
+    /// carries a fleet-wide public id; the stream survives any number
+    /// of migrations underneath it.
+    pub fn submit(&self, req: GatewayRequest) -> Result<StreamHandle, SubmitError> {
+        let inner = &self.inner;
+        let ri = inner.route(&req.prompt);
+        let local = inner.handles[ri].submit(req)?;
+        let public = inner.next_public.fetch_add(1, Ordering::SeqCst);
+        let (lid, lrx, cancel) = local.into_parts();
+        inner.map.lock().unwrap().insert(
+            public,
+            Route { replica: ri, local: lid, cancel: cancel.clone() },
+        );
+        let (ctx, crx) = channel();
+        let fwd = inner.clone();
+        let fwd_cancel = cancel.clone();
+        std::thread::spawn(move || forward(&fwd, public, lrx, ctx, fwd_cancel));
+        Ok(StreamHandle::attach(public, crx, cancel))
+    }
+
+    /// Flag a live stream for cancellation by public id; reaches the
+    /// sequence on whichever replica currently runs it.
+    pub fn cancel(&self, public: u64) -> bool {
+        match self.inner.map.lock().unwrap().get(&public) {
+            Some(r) => {
+                r.cancel.store(true, Ordering::SeqCst);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Completed cross-replica migrations.
+    pub fn migrations(&self) -> u64 {
+        self.inner.migrations.load(Ordering::SeqCst)
+    }
+
+    /// Fleet metrics: the router's own counters plus every replica's
+    /// latest snapshot (under `"engines"`, in replica order).
+    pub fn metrics_json(&self) -> String {
+        let inner = &self.inner;
+        let mut engines = Vec::new();
+        let mut referenced = 0usize;
+        for h in &inner.handles {
+            let j = Json::parse(&h.metrics_json()).unwrap_or_else(|_| Json::obj(Vec::new()));
+            if let Some(n) = j.get("pool_referenced_blocks").and_then(|v| v.as_usize()) {
+                referenced += n;
+            }
+            engines.push(j);
+        }
+        Json::obj(vec![
+            ("replicas", Json::from(inner.handles.len())),
+            ("migrations", Json::from(inner.migrations.load(Ordering::SeqCst) as usize)),
+            ("live_streams", Json::from(inner.map.lock().unwrap().len())),
+            ("pool_referenced_blocks_total", Json::from(referenced)),
+            ("engines", Json::Arr(engines)),
+        ])
+        .to_string()
+    }
+}
+
+impl Frontend for RouterHandle {
+    fn submit(&self, req: GatewayRequest) -> Result<StreamHandle, SubmitError> {
+        RouterHandle::submit(self, req)
+    }
+
+    fn cancel(&self, id: u64) -> bool {
+        RouterHandle::cancel(self, id)
+    }
+
+    fn metrics_json(&self) -> String {
+        RouterHandle::metrics_json(self)
+    }
+}
+
+impl RouterInner {
+    /// Pick the replica for a new prompt.
+    fn route(&self, prompt: &[u8]) -> usize {
+        let mut best_i = 0usize;
+        let mut best_score = 0usize;
+        for (i, h) in self.handles.iter().enumerate() {
+            let bt = h.block_tokens();
+            if bt == 0 {
+                continue;
+            }
+            let want = prompt_digests(prompt, bt);
+            if want.is_empty() {
+                break;
+            }
+            let have: HashSet<u64> = h.prefix_digests().into_iter().collect();
+            let score = want.iter().take_while(|d| have.contains(d)).count();
+            if score > best_score {
+                best_score = score;
+                best_i = i;
+            }
+        }
+        if best_score > 0 {
+            return best_i;
+        }
+        let n = self.handles.len();
+        let start = self.rr.fetch_add(1, Ordering::SeqCst) % n;
+        (0..n)
+            .map(|k| (start + k) % n)
+            .min_by_key(|&i| self.handles[i].queue_depth())
+            .unwrap_or(0)
+    }
+
+    /// Move one live stream to the least-loaded other replica. A
+    /// refusal at either end leaves the stream running where it was
+    /// (the destination hands the sequence back intact on failure and
+    /// it re-injects at the source).
+    fn try_migrate(&self, public: u64) {
+        let n = self.handles.len();
+        if n < 2 {
+            return;
+        }
+        let placed = {
+            let m = self.map.lock().unwrap();
+            m.get(&public).map(|r| (r.replica, r.local))
+        };
+        let Some((src, lid)) = placed else { return };
+        let dst = (0..n)
+            .filter(|&i| i != src)
+            .min_by_key(|&i| self.handles[i].queue_depth())
+            .expect("n >= 2 leaves at least one peer");
+        let Some(seq) = self.handles[src].migrate_out(lid) else { return };
+        match self.handles[dst].migrate_in(seq) {
+            Ok(new_lid) => {
+                if let Some(r) = self.map.lock().unwrap().get_mut(&public) {
+                    r.replica = dst;
+                    r.local = new_lid;
+                }
+                self.migrations.fetch_add(1, Ordering::SeqCst);
+            }
+            Err(Some(seq)) => {
+                if let Ok(new_lid) = self.handles[src].migrate_in(seq) {
+                    if let Some(r) = self.map.lock().unwrap().get_mut(&public) {
+                        r.local = new_lid;
+                    }
+                }
+            }
+            // Destination loop died mid-handoff; the stream channel
+            // died with it and the client sees a disconnect.
+            Err(None) => {}
+        }
+    }
+}
+
+/// Per-stream forwarder: ferries events from the replica-side channel
+/// to the client, counts tokens to trigger the one scheduled
+/// migration, propagates client disconnects as cancellation, and
+/// retires the routing entry when the stream ends. Migration does
+/// *not* re-plumb this channel — the destination engine inherits the
+/// replica-side sender, so `rx` keeps producing across the hop.
+fn forward(
+    inner: &RouterInner,
+    public: u64,
+    rx: Receiver<StreamEvent>,
+    ctx: Sender<StreamEvent>,
+    cancel: Arc<AtomicBool>,
+) {
+    let after = inner.migrate_after;
+    let mut seen = 0usize;
+    let mut tried = false;
+    loop {
+        // Replica gone (shutdown mid-stream): dropping `ctx` tells the
+        // client.
+        let Ok(ev) = rx.recv() else { break };
+        let done = matches!(ev, StreamEvent::Done { .. });
+        if matches!(ev, StreamEvent::Token { .. }) {
+            seen += 1;
+        }
+        if ctx.send(ev).is_err() {
+            // Client disconnected: the shared flag reaches the
+            // sequence on whichever replica runs it.
+            cancel.store(true, Ordering::SeqCst);
+            break;
+        }
+        if done {
+            break;
+        }
+        if !tried && matches!(after, Some(a) if seen >= a) {
+            tried = true;
+            inner.try_migrate(public);
+        }
+    }
+    inner.map.lock().unwrap().remove(&public);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_model;
+    use crate::model::Arch;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn prefix_affinity_routes_to_warm_replica() {
+        let model = tiny_model(Arch::Gpt, 81);
+        let router = Router::start(
+            &model,
+            2,
+            BatchPolicy::default(),
+            GatewayOpts::default(),
+            RouterOpts::default(),
+            None,
+        )
+        .unwrap();
+        let h = router.handle();
+        // Long enough to span at least one full KV block.
+        let prompt = vec![65u8; 40];
+        let s = h.submit(GatewayRequest::greedy(prompt.clone(), 4)).unwrap();
+        assert!(!s.drain().cancelled);
+        // Find the replica that served it (metrics refresh just after
+        // `Done` is delivered, so poll briefly) — its published digests
+        // now hold the frozen prompt prefix.
+        let completed = |i: usize| {
+            Json::parse(&router.inner.handles[i].metrics_json())
+                .ok()
+                .and_then(|j| j.get("requests_completed").and_then(|v| v.as_usize()))
+                .unwrap_or(0)
+        };
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let first = loop {
+            if let Some(i) = (0..2).find(|&i| completed(i) == 1) {
+                break i;
+            }
+            assert!(Instant::now() < deadline, "completion never surfaced");
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        let rh = &router.inner.handles[first];
+        assert!(!rh.prefix_digests().is_empty(), "finished prefix must be cached");
+        // Same prompt again: affinity must pick the warm replica.
+        let s2 = h.submit(GatewayRequest::greedy(prompt, 4)).unwrap();
+        assert!(!s2.drain().cancelled);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while completed(first) != 2 {
+            assert!(Instant::now() < deadline, "second request must hit the warm replica");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(completed(1 - first), 0, "cold replica must stay idle");
+        let m = Json::parse(&h.metrics_json()).unwrap();
+        assert_eq!(m.get("replicas").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(m.get("migrations").and_then(|v| v.as_usize()), Some(0));
+        for d in router.shutdown() {
+            assert_eq!(d.referenced_blocks, 0);
+        }
+    }
+}

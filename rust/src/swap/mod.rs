@@ -1,0 +1,267 @@
+//! Tiered KV spill: where a preempted sequence's [`Snapshot`] waits.
+//!
+//! PR 5's preemption always parked the swapped-out snapshot in host
+//! memory. That is the right call when host RAM is plentiful — restore
+//! is a memcpy — but it means the KV bytes the pool just freed are
+//! still held by the process, so an oversubscribed engine's *host*
+//! footprint grows with the swap queue, not with the pool budget. This
+//! module adds the other two tiers and the policy that picks between
+//! them, per victim, at suspend time:
+//!
+//! * **resident** — keep the [`Snapshot`] in memory (the default, and
+//!   the fallback when the disk tier is unavailable);
+//! * **spill** — serialize through [`crate::kv::wire`] (optionally
+//!   RLE-compressing the quantized code slabs) into a [`SwapDir`] and
+//!   drop the in-memory bytes; restore is a read + decode, byte-exact
+//!   by the wire round-trip guarantee;
+//! * **reprefill** — drop the bytes entirely and re-run the model over
+//!   the committed token history at resume. Only offered on **f32**
+//!   pools, where verbatim rows + row-independent kernels make replay
+//!   bit-exact at any batching; quantized codes depend on the exact
+//!   incremental write/read schedule (see
+//!   [`crate::kv::pool::Snapshot`]), so quantized victims never take
+//!   this tier.
+//!
+//! The victim cost model ([`choose`]) ranks the freeing tiers by
+//! **bytes freed per token lost**: both spill and reprefill free the
+//! snapshot's bytes, so the comparison collapses to their token-
+//! denominated costs — a disk round-trip priced at
+//! [`SwapConfig::disk_cost_tokens`] versus recomputing `len` tokens.
+//! Short sequences are cheaper to replay; long ones are cheaper to
+//! ship to disk. Neither fires while resident snapshots still fit
+//! [`SwapConfig::resident_budget_bytes`].
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::kv::{KvDtype, Snapshot};
+
+/// A directory holding spilled snapshots, one wire-format file per
+/// suspended sequence. Keys are the engine-local request ids, so a
+/// `SwapDir` must not be shared between engine replicas — give each
+/// replica its own subdirectory (as `examples/serve.rs --swap-dir`
+/// does).
+#[derive(Clone, Debug)]
+pub struct SwapDir {
+    root: PathBuf,
+}
+
+impl SwapDir {
+    /// Open (creating if needed) a spill directory.
+    pub fn new(path: impl Into<PathBuf>) -> crate::Result<Self> {
+        let root = path.into();
+        fs::create_dir_all(&root)?;
+        Ok(SwapDir { root })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.root
+    }
+
+    fn file(&self, key: u64) -> PathBuf {
+        self.root.join(format!("seq-{key}.kvw"))
+    }
+
+    /// Persist one sequence's wire bytes.
+    pub fn spill(&self, key: u64, bytes: &[u8]) -> crate::Result<()> {
+        Ok(fs::write(self.file(key), bytes)?)
+    }
+
+    /// Read a spilled sequence back and remove its file.
+    pub fn restore(&self, key: u64) -> crate::Result<Vec<u8>> {
+        let p = self.file(key);
+        let bytes = fs::read(&p)?;
+        let _ = fs::remove_file(&p);
+        Ok(bytes)
+    }
+
+    /// Drop a spilled sequence without reading it (cancellation).
+    pub fn discard(&self, key: u64) {
+        let _ = fs::remove_file(self.file(key));
+    }
+}
+
+/// Spill-tier configuration the scheduler consults on every
+/// preemption ([`crate::coordinator::Scheduler::set_swap`]). The
+/// default is PR 5's behavior exactly: every snapshot stays resident.
+#[derive(Clone, Debug)]
+pub struct SwapConfig {
+    /// Disk tier; `None` disables spilling.
+    pub dir: Option<SwapDir>,
+    /// Host bytes the resident snapshot tier may hold before the cost
+    /// model starts freeing (`usize::MAX` = never spill or drop).
+    pub resident_budget_bytes: usize,
+    /// Price of one disk round-trip in recompute-token equivalents —
+    /// the exchange rate between the spill and reprefill tiers. A
+    /// victim shorter than this replays; a longer one spills.
+    pub disk_cost_tokens: usize,
+    /// Run the quantized code slabs through the wire RLE codec when
+    /// spilling.
+    pub codec: bool,
+}
+
+impl Default for SwapConfig {
+    fn default() -> Self {
+        SwapConfig {
+            dir: None,
+            resident_budget_bytes: usize::MAX,
+            disk_cost_tokens: 8,
+            codec: true,
+        }
+    }
+}
+
+/// Where the cost model parks one victim.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapVerdict {
+    Resident,
+    Spill,
+    Reprefill,
+}
+
+/// The victim cost model: bytes freed per token lost.
+///
+/// * A snapshot that owns no bytes (block-aligned f32 tail) frees
+///   nothing whatever tier it takes — keep it resident.
+/// * While `resident_bytes + snap.bytes()` fits the resident budget
+///   there is no host pressure — resident.
+/// * Otherwise both freeing tiers release `snap.bytes()`, so the
+///   bytes-per-token-lost ranking reduces to comparing token costs:
+///   spill pays `disk_cost_tokens`, reprefill pays `snap.len()`
+///   recomputed tokens. Reprefill is only *sound* on f32 pools
+///   (`reprefill_exact`); when neither tier is available the snapshot
+///   degrades to resident.
+pub fn choose(
+    cfg: &SwapConfig,
+    resident_bytes: usize,
+    snap: &Snapshot,
+    reprefill_exact: bool,
+) -> SwapVerdict {
+    if snap.bytes() == 0 {
+        return SwapVerdict::Resident;
+    }
+    if resident_bytes.saturating_add(snap.bytes()) <= cfg.resident_budget_bytes {
+        return SwapVerdict::Resident;
+    }
+    let can_spill = cfg.dir.is_some();
+    let can_drop = reprefill_exact && snap.len() > 0;
+    match (can_spill, can_drop) {
+        (false, false) => SwapVerdict::Resident,
+        (true, false) => SwapVerdict::Spill,
+        (false, true) => SwapVerdict::Reprefill,
+        // Same bytes freed either way — lower token cost wins; ties go
+        // to the disk (exact for every dtype, no model time).
+        (true, true) => {
+            if snap.len() < cfg.disk_cost_tokens {
+                SwapVerdict::Reprefill
+            } else {
+                SwapVerdict::Spill
+            }
+        }
+    }
+}
+
+/// Whether the reprefill tier is sound for a pool dtype: replay is
+/// bit-exact only where rows are stored verbatim and kernels are
+/// row-independent — f32.
+pub fn reprefill_is_exact(dtype: KvDtype) -> bool {
+    dtype == KvDtype::F32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::{BlockPool, BlockTable};
+    use crate::model::{Arch, ModelConfig};
+    use crate::util::testdir::TempDir;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "swap-test".into(),
+            arch: Arch::Gpt,
+            d_model: 8,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 16,
+            vocab: 256,
+            max_seq: 64,
+            eps: 1e-5,
+            rope_theta: 10000.0,
+            kv_dtype: KvDtype::F32,
+        }
+    }
+
+    fn snapshot(dtype: KvDtype, n: usize) -> (BlockPool, Snapshot) {
+        let c = cfg();
+        let bb = BlockPool::block_bytes_for(c.n_layer, 4, c.d_model, dtype);
+        let mut p = BlockPool::with_params(&c, 16 * bb, 4, dtype);
+        let mut t = BlockTable::new(64);
+        p.prepare_tokens(&mut t, n);
+        let toks: Vec<u8> = (1..=n as u8).collect();
+        for (j, tok) in toks.iter().enumerate() {
+            for li in 0..2 {
+                let row = vec![*tok as f32 + li as f32; 8];
+                p.write_row(&t, li, j, &row, &row);
+            }
+        }
+        p.commit(&mut t, &toks);
+        let s = p.suspend(t);
+        (p, s)
+    }
+
+    #[test]
+    fn swapdir_round_trip_and_discard() {
+        let tmp = TempDir::new("swapdir");
+        let dir = SwapDir::new(tmp.path().join("tier")).unwrap();
+        dir.spill(7, b"payload").unwrap();
+        assert_eq!(dir.restore(7).unwrap(), b"payload");
+        // restore removed the file
+        assert!(dir.restore(7).is_err());
+        dir.spill(9, b"x").unwrap();
+        dir.discard(9);
+        assert!(dir.restore(9).is_err());
+    }
+
+    #[test]
+    fn cost_model_tiers() {
+        let tmp = TempDir::new("swap-cost");
+        let with_dir = SwapConfig {
+            dir: Some(SwapDir::new(tmp.path().join("d")).unwrap()),
+            resident_budget_bytes: 0,
+            disk_cost_tokens: 8,
+            codec: true,
+        };
+        // Quantized snapshot (owns bytes): must spill, never replay.
+        let (_, q) = snapshot(KvDtype::Int8, 11);
+        assert!(q.bytes() > 0);
+        assert_eq!(
+            choose(&with_dir, 0, &q, reprefill_is_exact(KvDtype::Int8)),
+            SwapVerdict::Spill
+        );
+        // f32 partial tail, short sequence → cheaper to replay.
+        let (_, f) = snapshot(KvDtype::F32, 5);
+        assert!(f.bytes() > 0);
+        assert_eq!(
+            choose(&with_dir, 0, &f, reprefill_is_exact(KvDtype::F32)),
+            SwapVerdict::Reprefill
+        );
+        // Long f32 sequence → disk round-trip wins.
+        let (_, long) = snapshot(KvDtype::F32, 21);
+        assert_eq!(
+            choose(&with_dir, 0, &long, reprefill_is_exact(KvDtype::F32)),
+            SwapVerdict::Spill
+        );
+        // Under the resident budget nothing is freed.
+        let roomy = SwapConfig { resident_budget_bytes: usize::MAX, ..with_dir.clone() };
+        assert_eq!(choose(&roomy, 0, &q, false), SwapVerdict::Resident);
+        // No dir, quantized → degrade to resident even under pressure.
+        let no_dir = SwapConfig { dir: None, resident_budget_bytes: 0, ..SwapConfig::default() };
+        assert_eq!(choose(&no_dir, 0, &q, false), SwapVerdict::Resident);
+        // No dir, f32 → replay is the only freeing tier.
+        assert_eq!(choose(&no_dir, 0, &long, true), SwapVerdict::Reprefill);
+        // Block-aligned f32 snapshot owns zero bytes → resident.
+        let (_, aligned) = snapshot(KvDtype::F32, 8);
+        assert_eq!(aligned.bytes(), 0);
+        assert_eq!(choose(&with_dir, 0, &aligned, true), SwapVerdict::Resident);
+    }
+}

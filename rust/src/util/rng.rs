@@ -24,6 +24,21 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// The raw generator state — with [`Self::from_state`], lets a
+    /// mid-stream sampled sequence carry its RNG across a process or
+    /// engine boundary (sequence migration) and keep its exact stream.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a [`Self::state`] capture. The all-zero
+    /// state is a fixed point of xoshiro256**; reject it so a corrupt
+    /// envelope cannot smuggle in a degenerate stream.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        assert!(s.iter().any(|&w| w != 0), "all-zero rng state");
+        Rng { s }
+    }
+
     /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {

@@ -445,3 +445,67 @@ fn http_stream_cancel_and_metrics_roundtrip() {
     }
     drop(gw); // shutdown joins the worker; the serve thread dies with the process
 }
+
+/// Read one HTTP response (status line + headers + `Content-Length`
+/// body) off a keep-alive socket, leaving the reader positioned at the
+/// start of the next response. Returns `(head, body)`.
+fn read_response(reader: &mut BufReader<TcpStream>) -> (String, String) {
+    let mut head = String::new();
+    let mut len = 0usize;
+    loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "socket closed mid-response");
+        if line.trim().is_empty() {
+            break;
+        }
+        if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap();
+        }
+        head.push_str(&line);
+    }
+    let mut body = vec![0u8; len];
+    use std::io::Read;
+    reader.read_exact(&mut body).unwrap();
+    (head, String::from_utf8_lossy(&body).into_owned())
+}
+
+#[test]
+fn keep_alive_serves_sequential_requests_on_one_socket() {
+    let model = tiny_model(Arch::Gpt, 161);
+    let gw = Gateway::start(model, BatchPolicy::default(), None, GatewayOpts::default());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let h = gw.handle();
+    std::thread::spawn(move || {
+        let _ = sdq::gateway::http::serve(listener, h);
+    });
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    write!(
+        conn,
+        "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\nContent-Length: 0\r\n\r\n"
+    )
+    .unwrap();
+    let (head, body) = read_response(&mut reader);
+    assert!(head.starts_with("HTTP/1.1 200"), "got: {head}");
+    assert!(head.to_ascii_lowercase().contains("connection: keep-alive"), "got: {head}");
+    assert_eq!(body, "ok\n");
+
+    // Second request on the SAME socket: the metrics snapshot.
+    write!(conn, "GET /metrics HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\r\n").unwrap();
+    let (head, body) = read_response(&mut reader);
+    assert!(head.starts_with("HTTP/1.1 200"), "got: {head}");
+    let snap = Json::parse(body.trim()).expect("metrics over keep-alive is JSON");
+    assert!(snap.get("requests_submitted").is_some());
+
+    // Third request drops the header: the server answers, then closes.
+    write!(conn, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut rest = String::new();
+    use std::io::Read;
+    reader.read_to_string(&mut rest).unwrap();
+    assert!(rest.starts_with("HTTP/1.1 200"), "got: {rest}");
+    assert!(rest.to_ascii_lowercase().contains("connection: close"), "got: {rest}");
+    assert!(rest.ends_with("ok\n"));
+    drop(gw);
+}

@@ -1,0 +1,283 @@
+//! Cross-engine migration + tiered KV spill integration tests (PR 9).
+//!
+//! The claims, pinned end-to-end on tiny in-memory models:
+//!
+//! * **Migration bit-identity** — suspending a sequence on engine A
+//!   ([`Scheduler::extract`]), shipping its KV through the versioned
+//!   wire format ([`BlockPool::snapshot_to_wire`] →
+//!   [`BlockPool::snapshot_from_wire`]), and resuming on engine B
+//!   ([`Scheduler::inject`]) yields byte-identical output to an
+//!   unmigrated run — for every `KvDtype`, with mid-block (tainted)
+//!   tails and COW-shared prefixes in the workload, at both
+//!   migrate-after-1 (prefill→decode handoff) and mid-decode points.
+//!   Sampled requests survive too: the RNG state rides along.
+//! * **Source reclamation** — after every sequence is extracted or
+//!   retired, engine A holds zero referenced blocks.
+//! * **Spill byte-exactness** — under preemption pressure with the
+//!   disk tier enabled, spill → restore round-trips through
+//!   [`sdq::swap::SwapDir`] keep output bit-identical; the f32
+//!   reprefill tier does the same by replay.
+//! * **Router streaming** — a 2-replica [`Router`] with forced
+//!   mid-stream migration delivers exact, gapless streams and leaks no
+//!   blocks on either replica.
+//!
+//! [`Scheduler::extract`]: sdq::coordinator::scheduler::Scheduler::extract
+//! [`Scheduler::inject`]: sdq::coordinator::scheduler::Scheduler::inject
+//! [`BlockPool::snapshot_to_wire`]: sdq::kv::BlockPool::snapshot_to_wire
+//! [`BlockPool::snapshot_from_wire`]: sdq::kv::BlockPool::snapshot_from_wire
+
+use std::collections::HashSet;
+
+use sdq::coordinator::batcher::{BatchPolicy, Batcher};
+use sdq::coordinator::metrics::Metrics;
+use sdq::coordinator::scheduler::Scheduler;
+use sdq::coordinator::{assert_bit_identical, Request, Response};
+use sdq::gateway::{GatewayOpts, GatewayRequest};
+use sdq::kv::{KvDtype, KV_BLOCK_TOKENS};
+use sdq::model::testutil::tiny_model;
+use sdq::model::{Arch, Model};
+use sdq::router::{Router, RouterOpts};
+use sdq::swap::SwapConfig;
+use sdq::util::testdir::TempDir;
+
+/// Workload covering the three snapshot shapes at once: short ragged
+/// prompts (partial f32 tails / tainted quantized tails at every
+/// suspend point), a block-crossing prompt, and a COW pair sharing a
+/// one-block prefix. All greedy unless `sampled_last`.
+fn workload(sampled_last: bool) -> Vec<Request> {
+    let prefix: Vec<u8> = (0..KV_BLOCK_TOKENS as u8).map(|j| 100 + j).collect();
+    let mut prompts: Vec<Vec<u8>> = vec![vec![65, 66, 67], vec![70; KV_BLOCK_TOKENS + 5]];
+    let mut fork_a = prefix.clone();
+    fork_a.extend([1, 2, 3]);
+    let mut fork_b = prefix;
+    fork_b.extend([4, 5]);
+    prompts.push(fork_a);
+    prompts.push(fork_b);
+    prompts
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let r = Request::new(i as u64, p, 9 + i);
+            if sampled_last && i == 3 {
+                r.with_temperature(0.7)
+            } else {
+                r
+            }
+        })
+        .collect()
+}
+
+/// Drive one scheduler to drain; id-sorted responses + metrics.
+fn run_plain(
+    model: &Model,
+    policy: BatchPolicy,
+    swap: Option<SwapConfig>,
+    reqs: Vec<Request>,
+) -> (Vec<Response>, Metrics) {
+    let mut sched = Scheduler::with_spec(model, policy, None);
+    if let Some(cfg) = swap {
+        sched.set_swap(cfg);
+    }
+    let mut batcher = Batcher::new();
+    for r in reqs {
+        batcher.enqueue(r);
+    }
+    let mut out = Vec::new();
+    let mut rounds = 0;
+    while sched.has_work(&batcher) {
+        out.extend(sched.round(&mut batcher));
+        sched.pool().assert_consistent();
+        rounds += 1;
+        assert!(rounds < 4000, "scheduler failed to drain");
+    }
+    assert_eq!(sched.pool().referenced_blocks(), 0, "drained engine leaked blocks");
+    out.sort_by_key(|r| r.id);
+    (out, sched.metrics)
+}
+
+/// Drive engine A, migrating every sequence to engine B (through the
+/// full wire encode → decode) once it has `migrate_at` tokens; drain B;
+/// return the combined id-sorted responses.
+fn run_migrated(
+    model: &Model,
+    policy: BatchPolicy,
+    reqs: Vec<Request>,
+    migrate_at: usize,
+) -> Vec<Response> {
+    let n = reqs.len();
+    let mut a = Scheduler::with_spec(model, policy, None);
+    let mut ba = Batcher::new();
+    for r in reqs {
+        ba.enqueue(r);
+    }
+    let mut b = Scheduler::with_spec(model, policy, None);
+    let mut bb = Batcher::new();
+    let mut done = Vec::new();
+    let mut migrated: HashSet<u64> = HashSet::new();
+    let mut rounds = 0;
+    while a.has_work(&ba) {
+        done.extend(a.round(&mut ba));
+        a.pool().assert_consistent();
+        let mut ready = Vec::new();
+        a.for_each_progress(|id, toks| {
+            if toks.len() >= migrate_at && !migrated.contains(&id) {
+                ready.push(id);
+            }
+        });
+        for id in ready {
+            let (f, snap) = a.extract(id).expect("progressing sequence is in flight");
+            let bytes = a.pool().snapshot_to_wire(&snap, true);
+            let snap_b = b.pool().snapshot_from_wire(&bytes).expect("identical geometry");
+            b.inject(f, snap_b);
+            migrated.insert(id);
+        }
+        rounds += 1;
+        assert!(rounds < 4000, "engine A failed to drain");
+    }
+    // The acceptance invariant: once everything is handed off or
+    // retired, the source holds nothing.
+    assert_eq!(a.pool().referenced_blocks(), 0, "source engine leaked blocks after handoff");
+    assert!(!migrated.is_empty(), "workload never reached the migration point");
+    assert_eq!(a.metrics.migrations_out, migrated.len() as u64);
+    let mut rounds = 0;
+    while b.has_work(&bb) {
+        done.extend(b.round(&mut bb));
+        b.pool().assert_consistent();
+        rounds += 1;
+        assert!(rounds < 4000, "engine B failed to drain");
+    }
+    assert_eq!(b.pool().referenced_blocks(), 0, "destination engine leaked blocks");
+    assert_eq!(b.metrics.migrations_in, migrated.len() as u64);
+    assert_eq!(done.len(), n, "every request must retire exactly once");
+    done.sort_by_key(|r| r.id);
+    done
+}
+
+// ---------------------------------------------------------------------
+// Scheduler-level bit-identity
+// ---------------------------------------------------------------------
+
+#[test]
+fn migration_bit_identical_every_dtype_and_suspend_shape() {
+    for (di, dtype) in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3].into_iter().enumerate() {
+        let model = tiny_model(if di % 2 == 0 { Arch::Gpt } else { Arch::Llama }, 210 + di as u64);
+        let policy = BatchPolicy { kv_dtype: Some(dtype), ..Default::default() };
+        let (want, _) = run_plain(&model, policy, None, workload(false));
+        // migrate_at 1 = prefill→decode handoff (ship right after the
+        // first token); 3 = mid-decode, mid-block for every sequence.
+        for migrate_at in [1usize, 3] {
+            let got = run_migrated(&model, policy, workload(false), migrate_at);
+            assert_bit_identical(&format!("{dtype} migrate@{migrate_at}"), &got, &want);
+        }
+    }
+}
+
+#[test]
+fn sampled_rng_stream_survives_migration() {
+    let model = tiny_model(Arch::Gpt, 230);
+    let policy = BatchPolicy { kv_dtype: Some(KvDtype::F32), ..Default::default() };
+    let (want, _) = run_plain(&model, policy, None, workload(true));
+    let got = run_migrated(&model, policy, workload(true), 3);
+    assert_bit_identical("sampled migration", &got, &want);
+}
+
+// ---------------------------------------------------------------------
+// Spill tier under preemption pressure
+// ---------------------------------------------------------------------
+
+#[test]
+fn spill_and_reprefill_tiers_stay_bit_exact_under_pressure() {
+    for (di, dtype) in [KvDtype::F32, KvDtype::Int8].into_iter().enumerate() {
+        let model = tiny_model(Arch::Gpt, 240 + di as u64);
+        let roomy = BatchPolicy { kv_dtype: Some(dtype), ..Default::default() };
+        // Block-denominated pressure (dtype-independent: a compressed
+        // pool would sail under any fixed byte budget).
+        let tight = BatchPolicy {
+            kv_budget_bytes: usize::MAX,
+            max_resident_blocks: Some(3),
+            preempt: true,
+            ..roomy
+        };
+        let (want, _) = run_plain(&model, roomy, None, workload(false));
+        let tmp = TempDir::new("migration-spill");
+        let cfg = SwapConfig {
+            dir: Some(sdq::swap::SwapDir::new(tmp.path().join(format!("d{di}"))).unwrap()),
+            resident_budget_bytes: 0,
+            ..Default::default()
+        };
+        let (got, m) = run_plain(&model, tight, Some(cfg), workload(false));
+        assert_bit_identical(&format!("{dtype} spill tier"), &got, &want);
+        assert!(m.preemptions > 0, "[{dtype}] tight pool never preempted");
+        assert!(
+            m.spills + m.reprefill_drops > 0,
+            "[{dtype}] zero resident budget never left the resident tier"
+        );
+        assert_eq!(m.restores, m.spills, "every spilled sequence must restore exactly once");
+        if dtype == KvDtype::Int8 {
+            // Quantized victims may never take the replay tier, and the
+            // codec accounting must cover what was framed.
+            assert_eq!(m.reprefill_drops, 0, "quantized replay is not bit-exact");
+            assert!(m.spills > 0, "quantized victims must spill");
+            assert!(m.codec_encoded_bytes <= m.codec_raw_bytes);
+            assert!(m.spilled_bytes > 0);
+        }
+    }
+    // No disk tier at all: f32 victims drop to reprefill instead.
+    let model = tiny_model(Arch::Gpt, 245);
+    let roomy = BatchPolicy { kv_dtype: Some(KvDtype::F32), ..Default::default() };
+    let tight = BatchPolicy {
+        kv_budget_bytes: usize::MAX,
+        max_resident_blocks: Some(3),
+        preempt: true,
+        ..roomy
+    };
+    let (want, _) = run_plain(&model, roomy, None, workload(false));
+    let cfg = SwapConfig { resident_budget_bytes: 0, ..Default::default() };
+    let (got, m) = run_plain(&model, tight, Some(cfg), workload(false));
+    assert_bit_identical("f32 reprefill tier", &got, &want);
+    assert!(m.preemptions > 0);
+    assert!(m.reprefill_drops > 0, "no disk tier: f32 must replay");
+    assert_eq!(m.spills, 0);
+}
+
+// ---------------------------------------------------------------------
+// Router-level streaming migration
+// ---------------------------------------------------------------------
+
+#[test]
+fn router_migrates_mid_stream_and_streams_stay_exact() {
+    let model = tiny_model(Arch::Gpt, 250);
+    // Long decodes (24 tokens past a migrate-after of 2) so every
+    // forwarder's migration trigger lands while its sequence is still
+    // in flight — the tiny model finishes rounds in microseconds.
+    let want: Vec<Vec<u8>> =
+        (0..4u8).map(|i| model.generate(&[65 + i; 5], 24, 0.0, 0)).collect();
+    let router = Router::start(
+        &model,
+        2,
+        BatchPolicy::default(),
+        GatewayOpts::default(),
+        RouterOpts { migrate_after: Some(2) },
+        None,
+    )
+    .unwrap();
+    let h = router.handle();
+    let streams: Vec<_> = (0..4u8)
+        .map(|i| h.submit(GatewayRequest::greedy(vec![65 + i; 5], 24)).unwrap())
+        .collect();
+    for (s, want) in streams.into_iter().zip(&want) {
+        let out = s.drain();
+        assert!(!out.cancelled, "migrated stream must not cancel");
+        assert_eq!(&out.streamed, want, "streamed tokens diverged across the hop");
+        assert_eq!(out.final_tokens, out.streamed, "Done must echo the gapless stream");
+    }
+    assert!(h.migrations() >= 1, "migrate_after=2 never migrated any stream");
+    let drained = router.shutdown();
+    for d in &drained {
+        assert_eq!(d.referenced_blocks, 0, "replica leaked blocks");
+    }
+    let out_total: u64 = drained.iter().map(|d| d.metrics.migrations_out).sum();
+    let in_total: u64 = drained.iter().map(|d| d.metrics.migrations_in).sum();
+    assert_eq!(out_total, in_total, "every migrate-out must land as a migrate-in");
+    assert_eq!(out_total, h.migrations(), "router counter must tally the engines");
+}
