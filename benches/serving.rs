@@ -223,7 +223,8 @@ fn main() {
             let mut f32_out: Vec<sdq::coordinator::Response> = Vec::new();
             let mut f32_blocks = 0usize;
             let mut f32_rounds = 0u64;
-            for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let mut int8_blocks = 0usize;
+            for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier] {
                 let (paged_out, batched) = run(true, dtype, None, reqs.clone());
                 let divergence: usize = if dtype == KvDtype::F32 {
                     // Live equivalence guard: paged + fused must not
@@ -254,6 +255,7 @@ fn main() {
                         .sum()
                 };
                 if dtype == KvDtype::Int8 {
+                    int8_blocks = batched.pool_budget_blocks;
                     // Compressed storage is the point: the same byte
                     // budget must buy substantially more blocks.
                     assert!(
@@ -283,6 +285,39 @@ fn main() {
                             "smoke: int8 KV diverged from f32 greedy outputs"
                         );
                     }
+                }
+                if dtype == KvDtype::Int4Outlier {
+                    // Packed nibbles halve the dense plane again (the
+                    // bounded outlier side-table rides outside the
+                    // uniform block charge), so the same byte budget
+                    // must admit ≥1.8× int8's blocks.
+                    assert!(
+                        batched.pool_budget_blocks as f64 >= 1.8 * int8_blocks as f64,
+                        "int4 pool must hold ≥1.8× the blocks of int8 at the same budget \
+                         ({} vs {})",
+                        batched.pool_budget_blocks,
+                        int8_blocks
+                    );
+                    assert_eq!(
+                        batched.kv_dequant_bytes, 0,
+                        "int4 decode staged dequantized KV through scratch"
+                    );
+                    assert!(
+                        batched.kv_dequant_bytes_avoided > 0,
+                        "int4 decode reported no quantized-domain reads"
+                    );
+                    // Divergence vs f32 is *reported* (the table's
+                    // div column), only bounded here: a 4-bit dense
+                    // plane is lossy, but outlier rows cap the error —
+                    // blowing past half the tokens means the
+                    // decomposition is broken, not merely coarse.
+                    let total_tokens: usize =
+                        f32_out.iter().map(|r| r.tokens.len()).sum();
+                    assert!(
+                        divergence <= total_tokens / 2,
+                        "int4 KV diverged on {divergence}/{total_tokens} greedy tokens \
+                         — outlier decomposition is not bounding the error"
+                    );
                 }
                 let speedup =
                     batched.decode_tokens_per_second() / per_seq.decode_tokens_per_second();

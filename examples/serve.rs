@@ -3,7 +3,7 @@
 //!
 //! Run: `cargo run --release --example serve -- [--model gpt-micro]
 //!       [--config SDQ-W7:8-1:8int8-6:8fp4] [--requests 16] [--max-new 32]
-//!       [--kv-dtype f32|fp8-e4m3|int8]
+//!       [--kv-dtype f32|fp8-e4m3|int8|int4]
 //!       [--spec off|ngram|sdq-draft] [--spec-k 4]
 //!       [--draft-config Q-VSQuant-WAint4]
 //!       [--preempt] [--max-resident 32] [--no-packed-weights]`

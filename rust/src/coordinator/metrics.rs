@@ -112,7 +112,7 @@ pub struct Metrics {
     /// chunked caches' actual allocated fp32 bytes).
     pub kv_bytes_peak: usize,
     /// Storage dtype tag of the paged pool (`"f32"`, `"fp8-e4m3"`,
-    /// `"int8"`); empty until a scheduler stamps it.
+    /// `"int8"`, `"int4"`); empty until a scheduler stamps it.
     pub kv_dtype: String,
     /// The pool's admission budget in blocks at its compressed block
     /// size — the capacity the byte budget actually buys (int8 ≈ 4×
@@ -188,6 +188,13 @@ pub struct Metrics {
     ///
     /// [`BlockPool::layer_code_views`]: crate::kv::BlockPool::layer_code_views
     pub kv_dequant_bytes_avoided: u64,
+    /// Resident int4 outlier side-table entries (rows kept as exact
+    /// f32 beside the nibble planes), summed over K and V across all
+    /// live + cached pool blocks. Always 0 for other dtypes. These
+    /// bytes sit outside the uniform `pool_block_bytes` charge, so the
+    /// counter is the observability hook for the sparse plane's true
+    /// footprint (`rows · d_model · 4` bytes).
+    pub kv_outlier_rows: u64,
     /// Weight bytes the serving forwards actually streamed: packed
     /// codes + scales + sparse gather metadata for compressed planes,
     /// f32 for plain ones ([`Linear::weight_stream_bytes`] summed over
@@ -500,7 +507,7 @@ impl Metrics {
             "requests={} tokens={} tput={:.1} tok/s decode={:.1} tok/s \
              width_mean={:.2} width_max={} prefill_width_mean={:.2} \
              kv_peak={:.1}KiB pool_util_peak={:.2} prefix_hit={:.2} \
-             dequant={:.1}KiB dequant_avoided={:.1}KiB \
+             dequant={:.1}KiB dequant_avoided={:.1}KiB outlier_rows={} \
              w_streamed={:.1}KiB w_avoided={:.1}KiB \
              evictions={} preempt={} resumes={} swap={:.1}KiB reprefill={} \
              spills={} spilled={:.1}KiB restores={} drops={} codec={:.2} \
@@ -520,6 +527,7 @@ impl Metrics {
             self.prefix_hit_rate(),
             self.kv_dequant_bytes as f64 / 1024.0,
             self.kv_dequant_bytes_avoided as f64 / 1024.0,
+            self.kv_outlier_rows,
             self.weight_bytes_streamed as f64 / 1024.0,
             self.weight_bytes_avoided as f64 / 1024.0,
             self.kv_evictions,

@@ -811,6 +811,7 @@ impl<'m> Scheduler<'m> {
         self.metrics.sync_pool(&self.pool.stats, self.pool.utilization());
         self.metrics.kv_dequant_bytes = self.pool.dequant_bytes();
         self.metrics.kv_dequant_bytes_avoided = self.pool.dequant_bytes_avoided();
+        self.metrics.kv_outlier_rows = self.pool.outlier_rows();
 
         // ---- retire completed ----
         let mut done = Vec::new();
@@ -1354,7 +1355,7 @@ mod tests {
         // two identical runs must emit identical tokens.
         use crate::kv::KvDtype;
         let model = tiny_model(Arch::Llama, 18);
-        for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier] {
             let run = || {
                 let policy = BatchPolicy { kv_dtype: Some(dtype), ..Default::default() };
                 let mut sched = Scheduler::new(&model, policy);
@@ -1501,7 +1502,7 @@ mod tests {
         // makes every n-gram draft right, a real model makes most wrong.
         use crate::kv::KvDtype;
         use crate::spec::SpecPolicy;
-        for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier] {
             for (seed, constant) in [(43u64, false), (44, true)] {
                 let model =
                     if constant { constant_output_model(seed) } else { tiny_model(Arch::Gpt, seed) };
@@ -1672,7 +1673,7 @@ mod tests {
         use crate::coordinator::request::assert_bit_identical;
         use crate::spec::SpecPolicy;
         let model = tiny_model(Arch::Gpt, 51);
-        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier] {
             for spec in [false, true] {
                 let mk_spec = || spec.then(|| SpecPolicy::ngram(3));
                 let roomy = BatchPolicy { kv_dtype: Some(dtype), ..Default::default() };

@@ -26,7 +26,15 @@
 //!
 //! The completions body is JSON: `{"prompt": "...}` required;
 //! `max_new_tokens` (default 16), `temperature` (default 0.0 =
-//! greedy), `priority` (`interactive` | `standard` | `batch`) optional.
+//! greedy), `seed` (u64; fixes the sampling RNG so non-greedy
+//! completions reproduce across runs and replicas — defaults to the
+//! server-assigned request id), `priority` (`interactive` |
+//! `standard` | `batch`) optional.
+//!
+//! **Body limits:** requests larger than [`MAX_BODY`] are refused with
+//! `413` and an unparseable `Content-Length` with `400`; both close
+//! the connection, because the unread (or unknowable) body tail left
+//! in the socket would desync the next keep-alive request.
 //! The SSE stream opens with `data: {"id":N}` (N is the
 //! `/v1/cancel/<id>` key), carries one `data: {"index":i,"token":t}`
 //! per token, then a final `data: {"done":true,"cancelled":…,
@@ -45,6 +53,12 @@ use crate::util::json::Json;
 /// How long a keep-alive socket may sit idle between requests before
 /// the server closes it.
 pub const KEEPALIVE_IDLE: Duration = Duration::from_secs(30);
+
+/// Largest accepted request body. Oversize bodies are refused up
+/// front (`413` + close) instead of being read partially — a
+/// truncated read leaves the tail in the socket and the next
+/// pipelined request parses garbage.
+pub const MAX_BODY: usize = 1 << 20;
 
 /// Accept loop: one thread per connection, forever (the process model
 /// is "kill the server to stop it" — CI does exactly that).
@@ -79,6 +93,7 @@ fn handle_conn<F: Frontend>(mut stream: TcpStream, h: F) -> std::io::Result<()> 
         let path = parts.next().unwrap_or("").to_string();
 
         let mut content_length = 0usize;
+        let mut bad_content_length = false;
         let mut expect_continue = false;
         let mut keep = false;
         loop {
@@ -92,17 +107,40 @@ fn handle_conn<F: Frontend>(mut stream: TcpStream, h: F) -> std::io::Result<()> 
             }
             let lower = t.to_ascii_lowercase();
             if let Some(v) = lower.strip_prefix("content-length:") {
-                content_length = v.trim().parse().unwrap_or(0);
+                match v.trim().parse() {
+                    Ok(n) => content_length = n,
+                    Err(_) => bad_content_length = true,
+                }
             } else if lower.starts_with("expect:") && lower.contains("100-continue") {
                 expect_continue = true;
             } else if lower.starts_with("connection:") && lower.contains("keep-alive") {
                 keep = true;
             }
         }
+        if bad_content_length {
+            // The number of body bytes on the wire is unknowable; any
+            // answer but an error-and-hangup desyncs the stream.
+            return respond(
+                &mut stream,
+                400,
+                "application/json",
+                "{\"error\":\"bad Content-Length\"}\n",
+                false,
+            );
+        }
+        if content_length > MAX_BODY {
+            return respond(
+                &mut stream,
+                413,
+                "application/json",
+                "{\"error\":\"body exceeds 1 MiB\"}\n",
+                false,
+            );
+        }
         if expect_continue {
             stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
         }
-        let mut body = vec![0u8; content_length.min(1 << 20)];
+        let mut body = vec![0u8; content_length];
         if !body.is_empty() {
             reader.read_exact(&mut body)?;
         }
@@ -178,6 +216,7 @@ fn completions<F: Frontend>(stream: &mut TcpStream, h: &F, body: &str) -> std::i
         prompt,
         max_new_tokens: parsed.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(16),
         temperature: parsed.get("temperature").and_then(|v| v.as_f64()).unwrap_or(0.0) as f32,
+        seed: parsed.get("seed").and_then(|v| v.as_f64()).map(|s| s as u64),
         priority: parsed
             .get("priority")
             .and_then(|v| v.as_str())
@@ -266,6 +305,7 @@ fn respond(
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        413 => "Payload Too Large",
         429 => "Too Many Requests",
         503 => "Service Unavailable",
         _ => "Error",

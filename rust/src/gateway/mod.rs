@@ -85,16 +85,22 @@ impl Priority {
 }
 
 /// What a client submits. The gateway assigns the request id (returned
-/// on the [`StreamHandle`]) and derives the sampling seed from it, so
-/// ids are unique by construction and replayable: a synchronous
-/// reference run that enqueues the same prompts with ids in submission
-/// order reproduces the gateway's output exactly.
+/// on the [`StreamHandle`]) and, unless the client pins a `seed`,
+/// derives the sampling seed from it, so ids are unique by
+/// construction and replayable: a synchronous reference run that
+/// enqueues the same prompts with ids in submission order reproduces
+/// the gateway's output exactly.
 #[derive(Clone, Debug)]
 pub struct GatewayRequest {
     pub prompt: Vec<u8>,
     pub max_new_tokens: usize,
     /// 0.0 = greedy (the bit-identity-pinned path).
     pub temperature: f32,
+    /// Client-pinned sampling seed. `None` falls back to the
+    /// server-assigned request id, which is unique per submission —
+    /// reproducible only within one gateway run. Pin it to make
+    /// sampled completions replayable across runs and replicas.
+    pub seed: Option<u64>,
     pub priority: Priority,
 }
 
@@ -105,8 +111,14 @@ impl GatewayRequest {
             prompt,
             max_new_tokens,
             temperature: 0.0,
+            seed: None,
             priority: Priority::Standard,
         }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
     }
 
     pub fn with_priority(mut self, p: Priority) -> Self {
@@ -695,8 +707,11 @@ fn apply_msg(
             let prio = req.priority;
             sched.metrics.requests_submitted += 1;
             sched.metrics.class_submitted[prio as usize] += 1;
-            let r = Request::new(id, req.prompt, req.max_new_tokens)
+            let mut r = Request::new(id, req.prompt, req.max_new_tokens)
                 .with_temperature(req.temperature);
+            if let Some(seed) = req.seed {
+                r = r.with_seed(seed);
+            }
             live.insert(
                 id,
                 Entry {

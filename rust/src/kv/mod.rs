@@ -67,13 +67,25 @@
 //!   onto the new scale. Because rows always arrive in order, codes are
 //!   a pure function of the token chain — freeze-time dedup stays exact
 //!   (it keys on token bytes, never on floats).
+//! * `Int4Outlier` — SDQ's dense-and-sparse decomposition applied to
+//!   the cache: the dense plane packs two's-complement nibble codes
+//!   (two elements per byte, `code_max` 7) on the same running-amax
+//!   scale machinery, while rows whose residual on the current grid
+//!   exceeds a fixed fraction of `amax` go to a small sorted **outlier
+//!   side-table** as exact f32 (capped at ~1/16 of block rows, per
+//!   layer per side). The outlier decision is itself a pure function
+//!   of write history, so dedup and the bit-exactness invariants below
+//!   carry over unchanged.
 //!
-//! A quantized block is `2 · n_layer · (bt·d + 4)` bytes vs
-//! `2 · n_layer · bt·d · 4` for f32 — ~4× denser — and **every**
+//! A quantized block is `2 · n_layer · (bt·row_bytes + 4)` bytes vs
+//! `2 · n_layer · bt·d · 4` for f32 — ~4× denser for the one-byte
+//! dtypes, ~8× for int4's packed nibbles — and **every**
 //! byte-denominated number in the system (budget→block conversion,
 //! residency, peak metrics, admission reservations) uses this actual
-//! compressed size, so an int8 pool admits ~4× the blocks at the same
-//! byte budget.
+//! compressed size, so an int8 pool admits ~4× the blocks (and int4
+//! ~2× int8's) at the same byte budget. Int4's bounded outlier
+//! side-table lives outside this uniform per-block charge; its
+//! residency is observable via [`BlockPool::outlier_rows`].
 //!
 //! The model reads K/V through tables along two routes:
 //!

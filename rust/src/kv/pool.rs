@@ -281,8 +281,14 @@ impl BlockPool {
         dtype: KvDtype,
     ) -> usize {
         // K + V payloads for all layers, plus per-layer-per-side scale
-        // metadata for quantized stores.
-        2 * n_layer * (block_tokens * d * dtype.bytes_per_elem() + dtype.scale_bytes())
+        // metadata for quantized stores. Int4 rows pack two codes per
+        // byte; its bounded outlier side-table (at most
+        // `store::outlier_cap` exact rows per slab, one for the default
+        // 16-token block) is deliberately *excluded* from the uniform
+        // per-block charge — admission budgets stay a pure function of
+        // geometry, and the actual side-table residency is observable
+        // via [`BlockPool::outlier_rows`].
+        2 * n_layer * (block_tokens * dtype.row_bytes(d) + dtype.scale_bytes())
     }
 
     /// *Actual* (compressed) bytes of one block: K + V payloads at the
@@ -350,6 +356,25 @@ impl BlockPool {
     /// avoided so far (see the field docs).
     pub fn dequant_bytes_avoided(&self) -> u64 {
         self.dequant_bytes_avoided.load(Ordering::Relaxed)
+    }
+
+    /// Exact-f32 outlier rows currently resident across all int4 block
+    /// slabs (0 for every other dtype) — the sparse half of the
+    /// dense-and-sparse decomposition, i.e. the side-table bytes
+    /// [`Self::block_bytes`]'s uniform geometry charge leaves out.
+    /// Bounded by `2 · n_layer · outlier_cap · blocks`.
+    pub fn outlier_rows(&self) -> u64 {
+        self.blocks
+            .iter()
+            .map(|b| match &b.store {
+                KvStore::Q4 { k_out, v_out, .. } => k_out
+                    .iter()
+                    .chain(v_out.iter())
+                    .map(|t| t.len() as u64)
+                    .sum(),
+                _ => 0,
+            })
+            .sum()
     }
 
     /// Cached blocks reclaimable on demand (frozen, unreferenced).
@@ -1131,9 +1156,9 @@ impl BlockPool {
                 for bi in 0..nb {
                     let rows = (upto - bi * bt).min(bt);
                     let store = &self.blocks[t.blocks[bi]].store;
-                    let (kc, vc, kscale, vscale) = store.code_slices(li, rows, bt, d);
-                    ks.push(QuantSeg { codes: kc, scale: kscale });
-                    vs.push(QuantSeg { codes: vc, scale: vscale });
+                    let (kseg, vseg) = store.quant_segs(li, rows, bt, d);
+                    ks.push(kseg);
+                    vs.push(vseg);
                 }
                 (ks, vs)
             })
@@ -1247,7 +1272,7 @@ mod tests {
 
     #[test]
     fn code_views_match_scratch_views_bitwise() {
-        for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier] {
             let mut p = pool_dt(8, dtype);
             let mut t = BlockTable::new(64);
             run_tokens(&mut p, &mut t, &[1, 2, 3, 4, 5, 6]); // 2 blocks (4 + 2)
@@ -1387,7 +1412,7 @@ mod tests {
 
     #[test]
     fn identical_streams_dedup_at_freeze() {
-        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier] {
             let mut p = pool_dt(8, dtype);
             let toks: Vec<u8> = (1..6).collect();
             let mut a = BlockTable::new(64);
@@ -1607,7 +1632,7 @@ mod tests {
         // freeze-time dedup can't alias the comparison) that never
         // speculated — at every dtype, despite the speculative rows
         // having inflated the quantized tail's running amax.
-        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier] {
             let mut p = pool_dt(16, dtype);
             let mut ctrl_p = pool_dt(16, dtype);
             let mut spec_t = BlockTable::new(64);
@@ -1741,7 +1766,7 @@ mod tests {
         // The happy path: suspend, resume while every full block is
         // still cached → everything re-attaches or re-installs and the
         // KV is bit-identical to a control table that never swapped.
-        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier] {
             let mut p = pool_dt(16, dtype);
             let mut ctrl_p = pool_dt(16, dtype);
             let toks: Vec<u8> = (1..11).collect(); // 2 full blocks + 2-row tail

@@ -16,13 +16,16 @@
 //!
 //! # Bit-exactness
 //!
-//! These kernels are bit-identical to dequantize-then-attend for *both*
+//! These kernels are bit-identical to dequantize-then-attend for *all*
 //! quantized dtypes, which is what lets the serving path switch over
 //! without disturbing any pinned logits:
 //!
 //! * each element decodes as `fl(raw(code) · scale)` — exactly the op
 //!   `KvStore::dequant_into` applies (int8: `code as f32`, exact; fp8:
-//!   a 256-entry table of the pure [`super::fp8_e4m3_decode`]);
+//!   a 256-entry table of the pure [`super::fp8_e4m3_decode`]; int4:
+//!   sign-extended nibble `as f32`, exact — and an int4 **outlier** row
+//!   resolves to its stored f32s, so its dot *is*
+//!   [`crate::tensor::dot`] and its axpy replays the fp32 loop);
 //! * [`dot_head`] then replays [`crate::tensor::dot`]'s exact
 //!   schedule (32-lane accumulator array, pairwise tree reduction,
 //!   scalar tail) over the decoded values, and [`axpy_head`] replays
@@ -39,15 +42,48 @@
 
 use std::sync::OnceLock;
 
-use super::store::{fp8_e4m3_decode, KvDtype};
+use super::store::{fp8_e4m3_decode, nib_at, KvDtype};
 
 /// One block's worth of raw K or V codes for one layer, plus the
-/// effective decode scale (`amax / code_max`). `codes` is `rows × d`
-/// bytes, row-major, exactly the slab layout `KvStore` keeps.
+/// effective decode scale (`amax / code_max`), in the slab layout
+/// `KvStore` keeps: one byte per element (int8 / fp8-e4m3), or packed
+/// nibbles with an exact-f32 outlier side-table (dense-and-sparse
+/// int4). Row-major either way.
 #[derive(Clone, Copy, Debug)]
-pub struct QuantSeg<'a> {
-    pub codes: &'a [u8],
-    pub scale: f32,
+pub enum QuantSeg<'a> {
+    /// `rows × d` one-byte codes.
+    Byte { codes: &'a [u8], scale: f32 },
+    /// `rows × d.div_ceil(2)` packed nibble bytes; `outliers` is the
+    /// slab's sorted `(row, exact f32 row)` side-table (rows in it have
+    /// zero nibbles in `codes` and decode from the table instead).
+    Nibble { codes: &'a [u8], scale: f32, outliers: &'a [(u16, Vec<f32>)] },
+}
+
+impl QuantSeg<'_> {
+    /// Stored elements this segment covers (`rows × d` — the packed
+    /// nibble byte count is divided back out), for shape checks.
+    pub fn elems(&self, d: usize) -> usize {
+        match self {
+            QuantSeg::Byte { codes, .. } => codes.len(),
+            QuantSeg::Nibble { codes, .. } => codes.len() / d.div_ceil(2) * d,
+        }
+    }
+}
+
+/// One row's head-column span resolved out of a [`QuantSeg`] — what the
+/// kernels below actually consume. `Exact` is the int4 outlier-row
+/// override: the row never had quantized codes, so the kernels fall
+/// back to the plain fp32 ops (identical to the scratch route's).
+#[derive(Clone, Copy, Debug)]
+pub enum HeadCodes<'a> {
+    /// `dh` one-byte codes.
+    Byte { codes: &'a [u8], scale: f32 },
+    /// One full packed nibble row; the head span starts at element
+    /// `start` (a nibble, not byte, offset — head columns may straddle
+    /// a byte).
+    Nibble { row: &'a [u8], start: usize, scale: f32 },
+    /// Exact f32 head slice of an int4 outlier row.
+    Exact(&'a [f32]),
 }
 
 /// 256-entry decode table for fp8-e4m3 codes. [`fp8_e4m3_decode`] is a
@@ -70,41 +106,52 @@ pub fn raw_decode(dtype: KvDtype, b: u8) -> f32 {
     match dtype {
         KvDtype::Int8 => (b as i8) as f32,
         KvDtype::Fp8E4M3 => fp8_lut()[b as usize],
+        KvDtype::Int4Outlier => unreachable!("int4 decodes nibbles, not whole bytes"),
         KvDtype::F32 => unreachable!("f32 pools read zero-copy, not via codes"),
     }
 }
 
 /// Dot product of an fp32 query head slice against a quantized K head
-/// slice, decoding in register. Bit-identical to
-/// `dot(q, dequantized_k_row)` — see the module docs.
+/// span, decoding in register. Bit-identical to
+/// `dot(q, dequantized_k_row)` — see the module docs. The `Exact` arm
+/// (int4 outlier row) *is* [`crate::tensor::dot`] over the stored f32s,
+/// so it matches the scratch route by construction.
 #[inline]
-pub fn dot_head(q: &[f32], codes: &[u8], scale: f32, dtype: KvDtype) -> f32 {
-    match dtype {
-        KvDtype::Int8 => dot_head_raw(q, codes, scale, |b| (b as i8) as f32),
-        KvDtype::Fp8E4M3 => {
-            let lut = fp8_lut();
-            dot_head_raw(q, codes, scale, |b| lut[b as usize])
+pub fn dot_head(q: &[f32], hc: HeadCodes, dtype: KvDtype) -> f32 {
+    match hc {
+        HeadCodes::Byte { codes, scale } => {
+            debug_assert_eq!(q.len(), codes.len());
+            match dtype {
+                KvDtype::Int8 => dot_head_at(q, |i| (codes[i] as i8) as f32 * scale),
+                KvDtype::Fp8E4M3 => {
+                    let lut = fp8_lut();
+                    dot_head_at(q, |i| lut[codes[i] as usize] * scale)
+                }
+                _ => unreachable!("byte codes are int8/fp8 only"),
+            }
         }
-        KvDtype::F32 => unreachable!("f32 pools read zero-copy, not via codes"),
+        HeadCodes::Nibble { row, start, scale } => {
+            dot_head_at(q, |i| nib_at(row, start + i) as f32 * scale)
+        }
+        HeadCodes::Exact(vals) => crate::tensor::dot(q, vals),
     }
 }
 
 /// The [`crate::tensor::dot`] schedule — 32 independent
 /// accumulators, pairwise tree reduction, scalar tail — replayed over
-/// `fl(raw(code) · scale)` elements. Any change here must stay in
-/// lockstep with `dot` or the bit-exactness pins break.
+/// `get(i)` elements (each a `fl(code · scale)` decode). Any change
+/// here must stay in lockstep with `dot` or the bit-exactness pins
+/// break.
 #[inline]
-fn dot_head_raw(x: &[f32], codes: &[u8], scale: f32, raw: impl Fn(u8) -> f32) -> f32 {
-    debug_assert_eq!(x.len(), codes.len());
+fn dot_head_at(x: &[f32], get: impl Fn(usize) -> f32) -> f32 {
     let n = x.len();
     const W: usize = 32;
     let mut acc = [0.0f32; W];
     let chunks = n / W;
     for i in 0..chunks {
         let xi = &x[i * W..i * W + W];
-        let yi = &codes[i * W..i * W + W];
         for l in 0..W {
-            acc[l] += xi[l] * (raw(yi[l]) * scale);
+            acc[l] += xi[l] * get(i * W + l);
         }
     }
     let mut width = W / 2;
@@ -116,59 +163,83 @@ fn dot_head_raw(x: &[f32], codes: &[u8], scale: f32, raw: impl Fn(u8) -> f32) ->
     }
     let mut s = acc[0];
     for i in chunks * W..n {
-        s += x[i] * (raw(codes[i]) * scale);
+        s += x[i] * get(i);
     }
     s
 }
 
-/// `out[l] += w · decode(codes[l])` — the score·V accumulation with the
+/// `out[l] += w · decode(l)` — the score·V accumulation with the
 /// V decode fused in. Bit-identical to the fp32 path's
-/// `out += w · v_row` over a dequantized row.
+/// `out += w · v_row` over a dequantized row (the `Exact` arm replays
+/// that loop verbatim over the stored outlier f32s).
 #[inline]
-pub fn axpy_head(out: &mut [f32], w: f32, codes: &[u8], scale: f32, dtype: KvDtype) {
-    match dtype {
-        KvDtype::Int8 => {
-            for (o, &b) in out.iter_mut().zip(codes) {
-                *o += w * ((b as i8) as f32 * scale);
+pub fn axpy_head(out: &mut [f32], w: f32, hc: HeadCodes, dtype: KvDtype) {
+    match hc {
+        HeadCodes::Byte { codes, scale } => match dtype {
+            KvDtype::Int8 => {
+                for (o, &b) in out.iter_mut().zip(codes) {
+                    *o += w * ((b as i8) as f32 * scale);
+                }
+            }
+            KvDtype::Fp8E4M3 => {
+                let lut = fp8_lut();
+                for (o, &b) in out.iter_mut().zip(codes) {
+                    *o += w * (lut[b as usize] * scale);
+                }
+            }
+            _ => unreachable!("byte codes are int8/fp8 only"),
+        },
+        HeadCodes::Nibble { row, start, scale } => {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o += w * (nib_at(row, start + i) as f32 * scale);
             }
         }
-        KvDtype::Fp8E4M3 => {
-            let lut = fp8_lut();
-            for (o, &b) in out.iter_mut().zip(codes) {
-                *o += w * (lut[b as usize] * scale);
+        HeadCodes::Exact(vals) => {
+            for (o, vv) in out.iter_mut().zip(vals) {
+                *o += w * vv;
             }
         }
-        KvDtype::F32 => unreachable!("f32 pools read zero-copy, not via codes"),
     }
 }
 
-/// Decode a head slice into `dst` (`dst[l] = decode(codes[l])`) — used
-/// to fill the per-head K panel that RoPE rotates in place. Same
-/// per-element op as `KvStore::dequant_into`, so the panel holds the
-/// same bits the scratch route would have copied in.
+/// Decode a head span into `dst` (`dst[l] = decode(l)`) — used to fill
+/// the per-head K panel that RoPE rotates in place. Same per-element op
+/// as `KvStore::dequant_into` (outlier rows copy their exact f32s), so
+/// the panel holds the same bits the scratch route would have copied in.
 #[inline]
-pub fn decode_head_into(dst: &mut [f32], codes: &[u8], scale: f32, dtype: KvDtype) {
-    debug_assert_eq!(dst.len(), codes.len());
-    match dtype {
-        KvDtype::Int8 => {
-            for (o, &b) in dst.iter_mut().zip(codes) {
-                *o = (b as i8) as f32 * scale;
+pub fn decode_head_into(dst: &mut [f32], hc: HeadCodes, dtype: KvDtype) {
+    match hc {
+        HeadCodes::Byte { codes, scale } => {
+            debug_assert_eq!(dst.len(), codes.len());
+            match dtype {
+                KvDtype::Int8 => {
+                    for (o, &b) in dst.iter_mut().zip(codes) {
+                        *o = (b as i8) as f32 * scale;
+                    }
+                }
+                KvDtype::Fp8E4M3 => {
+                    let lut = fp8_lut();
+                    for (o, &b) in dst.iter_mut().zip(codes) {
+                        *o = lut[b as usize] * scale;
+                    }
+                }
+                _ => unreachable!("byte codes are int8/fp8 only"),
             }
         }
-        KvDtype::Fp8E4M3 => {
-            let lut = fp8_lut();
-            for (o, &b) in dst.iter_mut().zip(codes) {
-                *o = lut[b as usize] * scale;
+        HeadCodes::Nibble { row, start, scale } => {
+            for (i, o) in dst.iter_mut().enumerate() {
+                *o = nib_at(row, start + i) as f32 * scale;
             }
         }
-        KvDtype::F32 => unreachable!("f32 pools read zero-copy, not via codes"),
+        HeadCodes::Exact(vals) => dst.copy_from_slice(vals),
     }
 }
 
-/// Head-column slice of a quantized row: the code analogue of the fp32
+/// Head-column span of a quantized row: the code analogue of the fp32
 /// path's `seg_head`. `r` is the absolute row over the concatenated
 /// segments (`seg_tokens` rows per segment), `col0..col0+dh` the head
-/// columns.
+/// columns. Int4 outlier rows resolve to their exact f32 span here, so
+/// every kernel sees the override uniformly.
 #[inline]
 pub fn seg_head_codes<'a>(
     segs: &[QuantSeg<'a>],
@@ -177,9 +248,26 @@ pub fn seg_head_codes<'a>(
     col0: usize,
     dh: usize,
     r: usize,
-) -> (&'a [u8], f32) {
-    let seg = &segs[r / seg_tokens];
-    (&seg.codes[(r % seg_tokens) * d + col0..][..dh], seg.scale)
+) -> HeadCodes<'a> {
+    let row = r % seg_tokens;
+    match &segs[r / seg_tokens] {
+        QuantSeg::Byte { codes, scale } => {
+            HeadCodes::Byte { codes: &codes[row * d + col0..][..dh], scale: *scale }
+        }
+        QuantSeg::Nibble { codes, scale, outliers } => {
+            match outliers.binary_search_by_key(&(row as u16), |(rr, _)| *rr) {
+                Ok(i) => HeadCodes::Exact(&outliers[i].1[col0..col0 + dh]),
+                Err(_) => {
+                    let stride = d.div_ceil(2);
+                    HeadCodes::Nibble {
+                        row: &codes[row * stride..(row + 1) * stride],
+                        start: col0,
+                        scale: *scale,
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -228,10 +316,82 @@ mod tests {
             for n in [8usize, 32, 67] {
                 let (codes, deq, scale) = codes_and_floats(dtype, n, 7 + n as u64);
                 let q: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
-                let fused = dot_head(&q, &codes, scale, dtype);
+                let fused =
+                    dot_head(&q, HeadCodes::Byte { codes: &codes, scale }, dtype);
                 let reference = dot(&q, &deq);
                 assert_eq!(fused.to_bits(), reference.to_bits(), "{dtype:?} n={n}");
             }
+        }
+    }
+
+    fn nibble_row(n: usize, seed: u64) -> (Vec<u8>, Vec<f32>, f32) {
+        let mut s = seed;
+        let mut next = move || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+            (s >> 33) as u32
+        };
+        let scale = 0.31f32;
+        let mut packed = vec![0u8; n.div_ceil(2)];
+        let mut deq = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = (next() % 15) as i8 - 7;
+            packed[i / 2] |= ((c as u8) & 0x0f) << (4 * (i % 2));
+            deq.push(c as f32 * scale);
+        }
+        (packed, deq, scale)
+    }
+
+    #[test]
+    fn nibble_dot_head_bit_matches_dequant_then_dot() {
+        for n in [8usize, 32, 67] {
+            let (packed, deq, scale) = nibble_row(n, 11 + n as u64);
+            let q: Vec<f32> = (0..n).map(|i| (i as f32 * 0.41).cos()).collect();
+            let fused = dot_head(
+                &q,
+                HeadCodes::Nibble { row: &packed, start: 0, scale },
+                KvDtype::Int4Outlier,
+            );
+            assert_eq!(fused.to_bits(), dot(&q, &deq).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn nibble_head_span_may_straddle_a_byte() {
+        // start = 3 (odd): the span begins on a high nibble.
+        let (packed, deq, scale) = nibble_row(16, 23);
+        let (start, dh) = (3, 8);
+        let q: Vec<f32> = (0..dh).map(|i| 0.2 + i as f32 * 0.1).collect();
+        let fused = dot_head(
+            &q,
+            HeadCodes::Nibble { row: &packed, start, scale },
+            KvDtype::Int4Outlier,
+        );
+        assert_eq!(fused.to_bits(), dot(&q, &deq[start..start + dh]).to_bits());
+        let mut dst = vec![0.0f32; dh];
+        decode_head_into(
+            &mut dst,
+            HeadCodes::Nibble { row: &packed, start, scale },
+            KvDtype::Int4Outlier,
+        );
+        for (a, b) in dst.iter().zip(&deq[start..start + dh]) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn exact_arm_matches_f32_ops() {
+        let vals: Vec<f32> = (0..12).map(|i| (i as f32 * 0.7).sin() * 40.0).collect();
+        let q: Vec<f32> = (0..12).map(|i| 0.05 * i as f32 - 0.3).collect();
+        let fused = dot_head(&q, HeadCodes::Exact(&vals), KvDtype::Int4Outlier);
+        assert_eq!(fused.to_bits(), dot(&q, &vals).to_bits());
+        let mut fused_o: Vec<f32> = (0..12).map(|i| i as f32 * 0.01).collect();
+        let mut ref_o = fused_o.clone();
+        axpy_head(&mut fused_o, 0.375, HeadCodes::Exact(&vals), KvDtype::Int4Outlier);
+        for (o, vv) in ref_o.iter_mut().zip(&vals) {
+            *o += 0.375 * vv;
+        }
+        for (a, b) in fused_o.iter().zip(&ref_o) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 
@@ -242,13 +402,29 @@ mod tests {
             let (codes, deq, scale) = codes_and_floats(dtype, n, 99);
             let mut fused: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
             let mut reference = fused.clone();
-            axpy_head(&mut fused, 0.625, &codes, scale, dtype);
+            axpy_head(&mut fused, 0.625, HeadCodes::Byte { codes: &codes, scale }, dtype);
             for (o, &v) in reference.iter_mut().zip(&deq) {
                 *o += 0.625 * v;
             }
             for (a, b) in fused.iter().zip(&reference) {
                 assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?}");
             }
+        }
+        let n = 24;
+        let (packed, deq, scale) = nibble_row(n, 101);
+        let mut fused: Vec<f32> = (0..n).map(|i| i as f32 * 0.02).collect();
+        let mut reference = fused.clone();
+        axpy_head(
+            &mut fused,
+            0.625,
+            HeadCodes::Nibble { row: &packed, start: 0, scale },
+            KvDtype::Int4Outlier,
+        );
+        for (o, &v) in reference.iter_mut().zip(&deq) {
+            *o += 0.625 * v;
+        }
+        for (a, b) in fused.iter().zip(&reference) {
+            assert_eq!(a.to_bits(), b.to_bits(), "int4");
         }
     }
 
@@ -257,7 +433,7 @@ mod tests {
         for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3] {
             let (codes, deq, scale) = codes_and_floats(dtype, 16, 5);
             let mut dst = vec![0.0f32; 16];
-            decode_head_into(&mut dst, &codes, scale, dtype);
+            decode_head_into(&mut dst, HeadCodes::Byte { codes: &codes, scale }, dtype);
             for (a, b) in dst.iter().zip(&deq) {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
@@ -269,10 +445,40 @@ mod tests {
         let (d, st, dh) = (4, 2, 2);
         let a: Vec<u8> = (0..st * d).map(|i| i as u8).collect();
         let b: Vec<u8> = (0..st * d).map(|i| 100 + i as u8).collect();
-        let segs =
-            [QuantSeg { codes: &a, scale: 1.0 }, QuantSeg { codes: &b, scale: 2.0 }];
-        let (head, sc) = seg_head_codes(&segs, st, d, 2, dh, 3);
-        assert_eq!(head, &[106, 107]);
-        assert_eq!(sc, 2.0);
+        let segs = [
+            QuantSeg::Byte { codes: &a, scale: 1.0 },
+            QuantSeg::Byte { codes: &b, scale: 2.0 },
+        ];
+        match seg_head_codes(&segs, st, d, 2, dh, 3) {
+            HeadCodes::Byte { codes, scale } => {
+                assert_eq!(codes, &[106, 107]);
+                assert_eq!(scale, 2.0);
+            }
+            other => panic!("expected byte span, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn seg_head_codes_resolves_nibble_outlier_rows() {
+        let d = 4; // stride 2
+        let st = 2;
+        let codes: Vec<u8> = vec![0x21, 0x43, 0, 0]; // row 0 dense, row 1 zeroed
+        let exact = vec![10.0f32, -20.0, 30.0, -40.0];
+        let outliers = vec![(1u16, exact.clone())];
+        let segs = [QuantSeg::Nibble { codes: &codes, scale: 0.5, outliers: &outliers }];
+        match seg_head_codes(&segs, st, d, 2, 2, 0) {
+            HeadCodes::Nibble { row, start, scale } => {
+                assert_eq!(row, &[0x21, 0x43]);
+                assert_eq!(start, 2);
+                assert_eq!(scale, 0.5);
+                assert_eq!(nib_at(row, 2), 3);
+                assert_eq!(nib_at(row, 3), 4);
+            }
+            other => panic!("expected nibble span, got {other:?}"),
+        }
+        match seg_head_codes(&segs, st, d, 2, 2, 1) {
+            HeadCodes::Exact(vals) => assert_eq!(vals, &[30.0, -40.0]),
+            other => panic!("expected exact override, got {other:?}"),
+        }
     }
 }

@@ -1,5 +1,5 @@
-//! Block storage backends: fp32 or quantized (fp8-e4m3 / int8) with
-//! per-block, per-layer K/V scales.
+//! Block storage backends: fp32 or quantized (fp8-e4m3 / int8 /
+//! dense-and-sparse int4) with per-block, per-layer K/V scales.
 //!
 //! A [`KvStore`] holds one block's K and V rows for every layer. The
 //! `F32` variant is the exact baseline (rows stored verbatim). The `Q8`
@@ -16,6 +16,20 @@
 //! written in order, the final codes are a pure function of the row
 //! values, which keeps freeze-time dedup exact: identical token chains
 //! produce bit-identical quantized blocks.
+//!
+//! The `Q4` variant ([`KvDtype::Int4Outlier`]) is SDQ's dense-and-sparse
+//! decomposition applied to the KV cache (SqueezeLLM / SpQR style):
+//! a dense plane of packed two's-complement **nibble** codes (two
+//! elements per byte, the `sdq::qmat` packing convention) on the same
+//! running-amax scale, plus a small sorted **outlier side-table** of
+//! rows kept as exact f32. A row goes to the side-table when encoding
+//! it on the current block grid would leave a residual above
+//! [`OUTLIER_THRESH`]·amax — which is exactly the row that would
+//! otherwise force a catastrophic rescale of its neighbours — capped at
+//! [`outlier_cap`] rows per (layer, side) slab. Outlier rows store zero
+//! nibbles in the dense plane (rescales keep them zero), never touch
+//! `amax`, and decode exactly; the outlier decision is a pure function
+//! of the write history, so dedup stays exact for int4 blocks too.
 
 use crate::formats::NumFormat;
 
@@ -29,14 +43,21 @@ pub enum KvDtype {
     Fp8E4M3,
     /// Symmetric int8 codes with per-block-per-layer f32 scales.
     Int8,
+    /// Dense-and-sparse int4: packed two's-complement nibble codes on
+    /// per-block-per-layer f32 scales, plus a capped exact-f32 outlier
+    /// row side-table per (layer, side) slab.
+    Int4Outlier,
 }
 
 impl KvDtype {
-    /// Storage bytes per stored K/V element.
-    pub fn bytes_per_elem(self) -> usize {
+    /// Packed payload bytes of one stored K/V row of `d` elements
+    /// (int4 packs two codes per byte; a row is byte-padded so rows
+    /// stay byte-addressable).
+    pub fn row_bytes(self, d: usize) -> usize {
         match self {
-            KvDtype::F32 => 4,
-            KvDtype::Fp8E4M3 | KvDtype::Int8 => 1,
+            KvDtype::F32 => 4 * d,
+            KvDtype::Fp8E4M3 | KvDtype::Int8 => d,
+            KvDtype::Int4Outlier => d.div_ceil(2),
         }
     }
 
@@ -45,7 +66,7 @@ impl KvDtype {
     pub fn scale_bytes(self) -> usize {
         match self {
             KvDtype::F32 => 0,
-            KvDtype::Fp8E4M3 | KvDtype::Int8 => 4,
+            KvDtype::Fp8E4M3 | KvDtype::Int8 | KvDtype::Int4Outlier => 4,
         }
     }
 
@@ -54,6 +75,7 @@ impl KvDtype {
             KvDtype::F32 => "f32",
             KvDtype::Fp8E4M3 => "fp8-e4m3",
             KvDtype::Int8 => "int8",
+            KvDtype::Int4Outlier => "int4",
         }
     }
 
@@ -64,7 +86,8 @@ impl KvDtype {
             "f32" | "fp32" => Ok(KvDtype::F32),
             "fp8" | "fp8-e4m3" | "fp8e4m3" => Ok(KvDtype::Fp8E4M3),
             "int8" => Ok(KvDtype::Int8),
-            _ => anyhow::bail!("unknown kv dtype: {s} (expected f32 | fp8-e4m3 | int8)"),
+            "int4" | "int4-outlier" => Ok(KvDtype::Int4Outlier),
+            _ => anyhow::bail!("unknown kv dtype: {s} (expected f32 | fp8-e4m3 | int8 | int4)"),
         }
     }
 
@@ -75,8 +98,51 @@ impl KvDtype {
             KvDtype::F32 => unreachable!("f32 blocks are not scaled"),
             KvDtype::Fp8E4M3 => 448.0,
             KvDtype::Int8 => 127.0,
+            KvDtype::Int4Outlier => 7.0,
         }
     }
+}
+
+/// A row joins the int4 outlier side-table when quantizing it on the
+/// current block grid leaves a max-abs residual above this fraction of
+/// the block's `amax`. In-range rows land within half a grid step
+/// (`amax/14 ≈ 0.07·amax`), so only rows that would blow past the grid
+/// — the ones that would otherwise force a coarse rescale of their
+/// neighbours — qualify.
+pub(crate) const OUTLIER_THRESH: f32 = 0.25;
+
+/// Outlier side-table capacity per (layer, K/V side) slab: ~1/16 of the
+/// block's rows, at least one (a 16-token block keeps exactly one
+/// exact-f32 escape hatch per slab).
+pub(crate) fn outlier_cap(block_tokens: usize) -> usize {
+    (block_tokens / 16).max(1)
+}
+
+/// Sign-extended int4 code at element index `idx` of a packed nibble
+/// row (`qmat.rs` convention: element `i` lives in byte `i/2`, low
+/// nibble for even `i`).
+#[inline]
+pub(crate) fn nib_at(bytes: &[u8], idx: usize) -> i8 {
+    let n = (bytes[idx / 2] >> (4 * (idx % 2))) & 0x0f;
+    ((n << 4) as i8) >> 4
+}
+
+/// Store an int4 code at element index `idx`, preserving its byte's
+/// other nibble.
+#[inline]
+fn nib_set(bytes: &mut [u8], idx: usize, code: i8) {
+    let shift = 4 * (idx % 2);
+    let b = &mut bytes[idx / 2];
+    *b = (*b & !(0x0f << shift)) | (((code as u8) & 0x0f) << shift);
+}
+
+/// Encode one element onto the int4 grid under `scale` (`amax / 7`).
+#[inline]
+fn enc_i4(scale: f32, x: f32) -> i8 {
+    if scale == 0.0 {
+        return 0;
+    }
+    (x / scale).round_ties_even().clamp(-7.0, 7.0) as i8
 }
 
 impl std::fmt::Display for KvDtype {
@@ -130,6 +196,7 @@ fn enc(dtype: KvDtype, scale: f32, x: f32) -> u8 {
         KvDtype::F32 => unreachable!("f32 rows are stored verbatim"),
         KvDtype::Int8 => (x / scale).round_ties_even().clamp(-127.0, 127.0) as i8 as u8,
         KvDtype::Fp8E4M3 => fp8_e4m3_encode(x / scale),
+        KvDtype::Int4Outlier => unreachable!("int4 rows go through the nibble codec"),
     }
 }
 
@@ -140,6 +207,7 @@ fn dec(dtype: KvDtype, scale: f32, b: u8) -> f32 {
         KvDtype::F32 => unreachable!("f32 rows are stored verbatim"),
         KvDtype::Int8 => (b as i8) as f32 * scale,
         KvDtype::Fp8E4M3 => fp8_e4m3_decode(b) * scale,
+        KvDtype::Int4Outlier => unreachable!("int4 rows go through the nibble codec"),
     }
 }
 
@@ -168,6 +236,21 @@ pub(crate) enum KvStore {
         /// Per-layer running max-abs of the V rows.
         v_amax: Vec<f32>,
     },
+    /// Dense-and-sparse int4: packed nibble slabs (`block_tokens ×
+    /// d.div_ceil(2)` bytes per layer per side) + per-layer sorted
+    /// outlier side-tables of `(row, exact f32 row)` entries. Outlier
+    /// rows keep zero nibbles in the dense plane and are excluded from
+    /// the `amax` running max.
+    Q4 {
+        k: Vec<u8>,
+        v: Vec<u8>,
+        k_amax: Vec<f32>,
+        v_amax: Vec<f32>,
+        /// Per-layer K outlier tables, sorted by row index.
+        k_out: Vec<Vec<(u16, Vec<f32>)>>,
+        /// Per-layer V outlier tables, sorted by row index.
+        v_out: Vec<Vec<(u16, Vec<f32>)>>,
+    },
 }
 
 impl KvStore {
@@ -175,6 +258,17 @@ impl KvStore {
         let n = n_layer * block_tokens * d;
         match dtype {
             KvDtype::F32 => KvStore::F32 { k: vec![0.0; n], v: vec![0.0; n] },
+            KvDtype::Int4Outlier => {
+                let nb = n_layer * block_tokens * d.div_ceil(2);
+                KvStore::Q4 {
+                    k: vec![0; nb],
+                    v: vec![0; nb],
+                    k_amax: vec![0.0; n_layer],
+                    v_amax: vec![0.0; n_layer],
+                    k_out: vec![Vec::new(); n_layer],
+                    v_out: vec![Vec::new(); n_layer],
+                }
+            }
             _ => KvStore::Q8 {
                 dtype,
                 k: vec![0; n],
@@ -189,18 +283,31 @@ impl KvStore {
         match self {
             KvStore::F32 { .. } => KvDtype::F32,
             KvStore::Q8 { dtype, .. } => *dtype,
+            KvStore::Q4 { .. } => KvDtype::Int4Outlier,
         }
     }
 
     /// Reset per-slot state on (re)allocation. Quantized scales MUST be
     /// cleared: a stale `amax` from the slot's previous tenant would
     /// change the codes new rows quantize to, breaking the determinism
-    /// freeze-time dedup relies on. Codes/rows need no clearing — reads
-    /// never pass the written row count.
+    /// freeze-time dedup relies on. Int4 outlier tables likewise — a
+    /// stale entry would shadow the new tenant's dense rows. Codes/rows
+    /// need no clearing — reads never pass the written row count, and
+    /// int4 writes zero a row's packed bytes before setting nibbles.
     pub fn reset(&mut self) {
-        if let KvStore::Q8 { k_amax, v_amax, .. } = self {
-            k_amax.fill(0.0);
-            v_amax.fill(0.0);
+        match self {
+            KvStore::F32 { .. } => {}
+            KvStore::Q8 { k_amax, v_amax, .. } => {
+                k_amax.fill(0.0);
+                v_amax.fill(0.0);
+            }
+            KvStore::Q4 { k_amax, v_amax, k_out, v_out, .. } => {
+                k_amax.fill(0.0);
+                v_amax.fill(0.0);
+                for t in k_out.iter_mut().chain(v_out.iter_mut()) {
+                    t.clear();
+                }
+            }
         }
     }
 
@@ -226,6 +333,29 @@ impl KvStore {
                 let slab = li * bt * d;
                 write_side(*dtype, &mut k[slab..slab + bt * d], &mut k_amax[li], row, d, k_row);
                 write_side(*dtype, &mut v[slab..slab + bt * d], &mut v_amax[li], row, d, v_row);
+            }
+            KvStore::Q4 { k, v, k_amax, v_amax, k_out, v_out } => {
+                let stride = d.div_ceil(2);
+                let slab = li * bt * stride;
+                let cap = outlier_cap(bt);
+                write_side_q4(
+                    &mut k[slab..slab + bt * stride],
+                    &mut k_amax[li],
+                    &mut k_out[li],
+                    row,
+                    d,
+                    cap,
+                    k_row,
+                );
+                write_side_q4(
+                    &mut v[slab..slab + bt * stride],
+                    &mut v_amax[li],
+                    &mut v_out[li],
+                    row,
+                    d,
+                    cap,
+                    v_row,
+                );
             }
         }
     }
@@ -263,6 +393,31 @@ impl KvStore {
                 k_amax.copy_from_slice(ska);
                 v_amax.copy_from_slice(sva);
             }
+            (
+                KvStore::Q4 { k, v, k_amax, v_amax, k_out, v_out },
+                KvStore::Q4 { k: sk, v: sv, k_amax: ska, v_amax: sva, k_out: sko, v_out: svo },
+            ) => {
+                let stride = d.div_ceil(2);
+                for li in 0..n_layer {
+                    let base = li * bt * stride;
+                    k[base..base + rows * stride]
+                        .copy_from_slice(&sk[base..base + rows * stride]);
+                    v[base..base + rows * stride]
+                        .copy_from_slice(&sv[base..base + rows * stride]);
+                }
+                k_amax.copy_from_slice(ska);
+                v_amax.copy_from_slice(sva);
+                // Side-tables come along too, filtered to the copied
+                // rows (entries are sorted, so the filter keeps order).
+                for li in 0..n_layer {
+                    k_out[li].clear();
+                    k_out[li]
+                        .extend(sko[li].iter().filter(|(r, _)| (*r as usize) < rows).cloned());
+                    v_out[li].clear();
+                    v_out[li]
+                        .extend(svo[li].iter().filter(|(r, _)| (*r as usize) < rows).cloned());
+                }
+            }
             _ => unreachable!("pool blocks share one dtype"),
         }
     }
@@ -275,7 +430,7 @@ impl KvStore {
                 let base = li * bt * d;
                 (&k[base..base + rows * d], &v[base..base + rows * d])
             }
-            KvStore::Q8 { .. } => unreachable!("quantized blocks dequantize via scratch"),
+            _ => unreachable!("quantized blocks dequantize via scratch"),
         }
     }
 
@@ -293,12 +448,59 @@ impl KvStore {
         d: usize,
     ) -> (&[u8], &[u8], f32, f32) {
         match self {
-            KvStore::F32 { .. } => unreachable!("f32 blocks read zero-copy via f32_slices"),
             KvStore::Q8 { dtype, k, v, k_amax, v_amax } => {
                 let base = li * bt * d;
                 let ks = k_amax[li] / dtype.code_max();
                 let vs = v_amax[li] / dtype.code_max();
                 (&k[base..base + rows * d], &v[base..base + rows * d], ks, vs)
+            }
+            _ => unreachable!("code_slices is the one-byte-per-element (Q8) view"),
+        }
+    }
+
+    /// Build the quantized-domain K and V segment views for layer `li`
+    /// covering the first `rows` rows — the dtype-generic source behind
+    /// [`super::BlockPool::layer_code_views`]. Q8 stores hand out byte
+    /// segments; Q4 stores hand out nibble segments carrying their
+    /// outlier side-tables.
+    pub fn quant_segs(
+        &self,
+        li: usize,
+        rows: usize,
+        bt: usize,
+        d: usize,
+    ) -> (super::qattn::QuantSeg<'_>, super::qattn::QuantSeg<'_>) {
+        use super::qattn::QuantSeg;
+        match self {
+            KvStore::F32 { .. } => unreachable!("f32 blocks read zero-copy via f32_slices"),
+            KvStore::Q8 { dtype, k, v, k_amax, v_amax } => {
+                let base = li * bt * d;
+                (
+                    QuantSeg::Byte {
+                        codes: &k[base..base + rows * d],
+                        scale: k_amax[li] / dtype.code_max(),
+                    },
+                    QuantSeg::Byte {
+                        codes: &v[base..base + rows * d],
+                        scale: v_amax[li] / dtype.code_max(),
+                    },
+                )
+            }
+            KvStore::Q4 { k, v, k_amax, v_amax, k_out, v_out } => {
+                let stride = d.div_ceil(2);
+                let base = li * bt * stride;
+                (
+                    QuantSeg::Nibble {
+                        codes: &k[base..base + rows * stride],
+                        scale: k_amax[li] / KvDtype::Int4Outlier.code_max(),
+                        outliers: &k_out[li],
+                    },
+                    QuantSeg::Nibble {
+                        codes: &v[base..base + rows * stride],
+                        scale: v_amax[li] / KvDtype::Int4Outlier.code_max(),
+                        outliers: &v_out[li],
+                    },
+                )
             }
         }
     }
@@ -333,6 +535,41 @@ impl KvStore {
                     *o = dec(*dtype, vs, *b);
                 }
             }
+            KvStore::Q4 { k, v, k_amax, v_amax, k_out: ko, v_out: vo } => {
+                let stride = d.div_ceil(2);
+                let base = li * bt * stride;
+                let ks = k_amax[li] / KvDtype::Int4Outlier.code_max();
+                let vs = v_amax[li] / KvDtype::Int4Outlier.code_max();
+                dequant_side_q4(&k[base..], &ko[li], rows, d, stride, ks, k_out);
+                dequant_side_q4(&v[base..], &vo[li], rows, d, stride, vs, v_out);
+            }
+        }
+    }
+}
+
+/// Decode `rows` dense-and-sparse int4 rows: outlier rows copy their
+/// exact f32 entry, dense rows decode `fl(code · scale)` per element —
+/// the identical op [`super::qattn`]'s nibble kernels apply in register,
+/// which is what pins the scratch and quantized-domain attention routes
+/// bit-equal for int4.
+fn dequant_side_q4(
+    slab: &[u8],
+    table: &[(u16, Vec<f32>)],
+    rows: usize,
+    d: usize,
+    stride: usize,
+    scale: f32,
+    dst: &mut [f32],
+) {
+    for r in 0..rows {
+        let dst_row = &mut dst[r * d..(r + 1) * d];
+        if let Ok(i) = table.binary_search_by_key(&(r as u16), |(row, _)| *row) {
+            dst_row.copy_from_slice(&table[i].1);
+        } else {
+            let rb = &slab[r * stride..(r + 1) * stride];
+            for (j, o) in dst_row.iter_mut().enumerate() {
+                *o = nib_at(rb, j) as f32 * scale;
+            }
         }
     }
 }
@@ -356,6 +593,69 @@ fn write_side(dtype: KvDtype, slab: &mut [u8], amax: &mut f32, row: usize, d: us
     let s = *amax / dtype.code_max();
     for (c, x) in slab[row * d..(row + 1) * d].iter_mut().zip(vals) {
         *c = enc(dtype, s, *x);
+    }
+}
+
+/// Append one row to a dense-and-sparse int4 layer slab (`bt × stride`
+/// packed bytes + a sorted outlier side-table). Decision order — a pure
+/// function of the write history, so identical histories still yield
+/// identical blocks:
+///
+/// 1. Drop any stale side-table entry for `row` (speculative rollback
+///    re-stages rows in place).
+/// 2. If the block grid is live (`amax > 0`), the table has room, and
+///    encoding the row on the **current** grid leaves a residual above
+///    `OUTLIER_THRESH · amax`, the row goes to the side-table exact:
+///    zero nibbles in the dense plane, `amax` untouched. This is
+///    precisely the row that would otherwise force a coarse rescale of
+///    every neighbour.
+/// 3. Otherwise the row is dense: grow `amax`/requantize prior rows as
+///    the byte path does (outlier rows hold zero codes, and zero decodes
+///    and re-encodes to zero, so rescales leave them zero), then encode.
+fn write_side_q4(
+    slab: &mut [u8],
+    amax: &mut f32,
+    table: &mut Vec<(u16, Vec<f32>)>,
+    row: usize,
+    d: usize,
+    cap: usize,
+    vals: &[f32],
+) {
+    debug_assert_eq!(vals.len(), d);
+    let stride = d.div_ceil(2);
+    if let Some(i) = table.iter().position(|(r, _)| *r as usize == row) {
+        table.remove(i);
+    }
+    if *amax > 0.0 && table.len() < cap {
+        let s = *amax / 7.0;
+        let res = vals.iter().fold(0.0f32, |a, &x| a.max((x - enc_i4(s, x) as f32 * s).abs()));
+        if res > OUTLIER_THRESH * *amax {
+            let i = table.partition_point(|(r, _)| (*r as usize) < row);
+            table.insert(i, (row as u16, vals.to_vec()));
+            slab[row * stride..(row + 1) * stride].fill(0);
+            return;
+        }
+    }
+    let m = vals.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+    if m > *amax {
+        let old_scale = *amax / 7.0;
+        *amax = m;
+        let new_scale = m / 7.0;
+        if old_scale > 0.0 {
+            for r in 0..row {
+                let rb = r * stride;
+                for j in 0..d {
+                    let x = nib_at(&slab[rb..rb + stride], j) as f32 * old_scale;
+                    nib_set(&mut slab[rb..rb + stride], j, enc_i4(new_scale, x));
+                }
+            }
+        }
+    }
+    let s = *amax / 7.0;
+    let rb = row * stride;
+    slab[rb..rb + stride].fill(0);
+    for (j, &x) in vals.iter().enumerate() {
+        nib_set(&mut slab[rb..rb + stride], j, enc_i4(s, x));
     }
 }
 
@@ -583,6 +883,166 @@ mod tests {
                 assert_eq!(v_amax, va2);
             }
             _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn int4_in_range_rows_roundtrip_within_grid_step() {
+        let (bt, d) = (4, 8);
+        let mut s = KvStore::new(KvDtype::Int4Outlier, 1, bt, d);
+        let row: Vec<f32> = (0..d).map(|i| (i as f32 - 3.5) * 0.25).collect();
+        s.write_row(0, 0, bt, d, &row, &row);
+        let mut k = vec![0.0; d];
+        let mut v = vec![0.0; d];
+        s.dequant_into(0, 1, bt, d, &mut k, &mut v);
+        let amax = row.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+        for (got, want) in k.iter().zip(&row) {
+            // Half an int4 grid step.
+            assert!((got - want).abs() <= amax / 14.0 + 1e-6, "{got} vs {want}");
+        }
+        assert_eq!(k, v);
+    }
+
+    #[test]
+    fn int4_outlier_row_is_exact_and_leaves_amax_alone() {
+        let (bt, d) = (4, 4);
+        let mut s = KvStore::new(KvDtype::Int4Outlier, 1, bt, d);
+        s.write_row(0, 0, bt, d, &[0.1, -0.2, 0.3, 0.05], &[0.1; 4]);
+        // 100× the running amax: residual on the current grid blows the
+        // threshold, so the row must land in the side-table exact while
+        // row 0's codes (and the 0.3 amax) stay untouched.
+        let spike = [30.0, -10.0, 5.0, 1.0];
+        s.write_row(0, 1, bt, d, &spike, &[0.1; 4]);
+        match &s {
+            KvStore::Q4 { k_amax, k_out, v_out, .. } => {
+                assert_eq!(k_amax[0], 0.3, "outlier must not grow amax");
+                assert_eq!(k_out[0].len(), 1);
+                assert_eq!(k_out[0][0].0, 1);
+                assert_eq!(k_out[0][0].1, spike.to_vec());
+                assert!(v_out[0].is_empty(), "in-range V rows stay dense");
+            }
+            _ => unreachable!(),
+        }
+        let mut k = vec![0.0; 2 * d];
+        let mut v = vec![0.0; 2 * d];
+        s.dequant_into(0, 2, bt, d, &mut k, &mut v);
+        assert_eq!(&k[d..], &spike, "outlier decodes exactly");
+        // Row 0 kept its fine 0.3/7 grid instead of a 30/7 one.
+        for (got, want) in k[..d].iter().zip(&[0.1, -0.2, 0.3, 0.05]) {
+            assert!((got - want).abs() <= 0.3 / 14.0 + 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn int4_outlier_cap_forces_dense_rescale_when_full() {
+        let (bt, d) = (4, 4);
+        assert_eq!(outlier_cap(bt), 1);
+        let mut s = KvStore::new(KvDtype::Int4Outlier, 1, bt, d);
+        s.write_row(0, 0, bt, d, &[0.2, -0.1, 0.15, 0.05], &[0.0; 4]);
+        s.write_row(0, 1, bt, d, &[40.0, 1.0, -2.0, 0.5], &[0.0; 4]); // → side-table
+        // Cap is full: this spike must take the dense path and grow amax.
+        s.write_row(0, 2, bt, d, &[70.0, -7.0, 3.5, 0.0], &[0.0; 4]);
+        match &s {
+            KvStore::Q4 { k_amax, k_out, .. } => {
+                assert_eq!(k_out[0].len(), 1);
+                assert_eq!(k_amax[0], 70.0);
+            }
+            _ => unreachable!(),
+        }
+        let mut k = vec![0.0; 3 * d];
+        let mut v = vec![0.0; 3 * d];
+        s.dequant_into(0, 3, bt, d, &mut k, &mut v);
+        assert_eq!(&k[d..2 * d], &[40.0, 1.0, -2.0, 0.5], "side-table survives rescale");
+        for (got, want) in k[2 * d..].iter().zip(&[70.0, -7.0, 3.5, 0.0]) {
+            assert!((got - want).abs() <= 70.0 / 14.0 + 1e-4, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn int4_identical_write_histories_produce_identical_blocks() {
+        let (bt, d) = (4, 8);
+        let rows: Vec<Vec<f32>> = (0..4)
+            .map(|r| {
+                (0..d)
+                    .map(|i| {
+                        let base = ((r * d + i) as f32).sin() * (r as f32 + 0.1);
+                        // Make row 2 an outlier in both replicas.
+                        if r == 2 { base * 50.0 } else { base }
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut a = KvStore::new(KvDtype::Int4Outlier, 2, bt, d);
+        let mut b = KvStore::new(KvDtype::Int4Outlier, 2, bt, d);
+        for (r, row) in rows.iter().enumerate() {
+            for li in 0..2 {
+                a.write_row(li, r, bt, d, row, row);
+                b.write_row(li, r, bt, d, row, row);
+            }
+        }
+        assert_eq!(a, b, "dedup needs int4 codes + side-tables to be history-pure");
+        match &a {
+            KvStore::Q4 { k_out, .. } => assert_eq!(k_out[0].len(), 1, "spike row went sparse"),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn int4_reset_clears_scales_and_side_tables() {
+        let (bt, d) = (4, 4);
+        let mut s = KvStore::new(KvDtype::Int4Outlier, 1, bt, d);
+        s.write_row(0, 0, bt, d, &[0.1; 4], &[0.1; 4]);
+        s.write_row(0, 1, bt, d, &[90.0, 0.0, 0.0, 0.0], &[0.1; 4]);
+        s.reset();
+        match &s {
+            KvStore::Q4 { k_amax, k_out, .. } => {
+                assert_eq!(k_amax[0], 0.0);
+                assert!(k_out[0].is_empty(), "stale side-table would shadow the next tenant");
+            }
+            _ => unreachable!(),
+        }
+        s.write_row(0, 0, bt, d, &[0.01, 0.02, -0.03, 0.0], &[0.0; 4]);
+        let mut k = vec![0.0; d];
+        let mut v = vec![0.0; d];
+        s.dequant_into(0, 1, bt, d, &mut k, &mut v);
+        assert!((k[2] + 0.03).abs() <= 0.03 / 14.0 + 1e-7, "fresh grid after reset: {}", k[2]);
+    }
+
+    #[test]
+    fn int4_rewriting_a_row_drops_its_stale_outlier_entry() {
+        // Speculative rollback re-stages rows in place: an outlier that
+        // becomes in-range on rewrite must leave the side-table.
+        let (bt, d) = (4, 4);
+        let mut s = KvStore::new(KvDtype::Int4Outlier, 1, bt, d);
+        s.write_row(0, 0, bt, d, &[0.2, -0.1, 0.05, 0.0], &[0.0; 4]);
+        s.write_row(0, 1, bt, d, &[50.0, 0.0, 0.0, 0.0], &[0.0; 4]);
+        s.write_row(0, 1, bt, d, &[0.1, 0.1, -0.1, 0.1], &[0.0; 4]);
+        match &s {
+            KvStore::Q4 { k_out, .. } => assert!(k_out[0].is_empty()),
+            _ => unreachable!(),
+        }
+        let mut k = vec![0.0; 2 * d];
+        let mut v = vec![0.0; 2 * d];
+        s.dequant_into(0, 2, bt, d, &mut k, &mut v);
+        for (got, want) in k[d..].iter().zip(&[0.1, 0.1, -0.1, 0.1]) {
+            assert!((got - want).abs() <= 0.2 / 14.0 + 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn int4_odd_width_pads_rows_to_bytes() {
+        let (bt, d) = (2, 5); // stride 3, last nibble unused
+        assert_eq!(KvDtype::Int4Outlier.row_bytes(d), 3);
+        let mut s = KvStore::new(KvDtype::Int4Outlier, 1, bt, d);
+        let r0: Vec<f32> = vec![0.7, -0.7, 0.3, -0.1, 0.5];
+        let r1: Vec<f32> = vec![-0.2, 0.6, -0.6, 0.4, 0.0];
+        s.write_row(0, 0, bt, d, &r0, &r0);
+        s.write_row(0, 1, bt, d, &r1, &r1);
+        let mut k = vec![0.0; 2 * d];
+        let mut v = vec![0.0; 2 * d];
+        s.dequant_into(0, 2, bt, d, &mut k, &mut v);
+        for (got, want) in k.iter().zip(r0.iter().chain(&r1)) {
+            assert!((got - want).abs() <= 0.7 / 14.0 + 1e-6, "{got} vs {want}");
         }
     }
 }

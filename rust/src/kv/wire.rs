@@ -20,8 +20,11 @@
 //! store count u64, then per owned block:
 //!   taint u8
 //!   f32:  K slab · V slab              (verbatim f32 LE)
-//!   quantized: K codes · V codes       (raw, or RLE-framed if flags&1)
+//!   quantized: K codes · V codes       (raw, or RLE-framed if flags&1;
+//!              int4 slabs are the packed nibble bytes)
 //!              K amax · V amax         (one f32 per layer, verbatim)
+//!   int4 only, per side then per layer: outlier side-table
+//!              (u16 count · per entry: row u16 · d exact f32s)
 //! checksum u64 (FNV-1a over everything above)
 //! ```
 //!
@@ -45,7 +48,7 @@
 use anyhow::{bail, ensure};
 
 use super::pool::{BlockPool, Snapshot};
-use super::store::{KvDtype, KvStore};
+use super::store::{outlier_cap, KvDtype, KvStore};
 
 /// Format magic: "SDQ wire".
 pub const MAGIC: [u8; 4] = *b"SDQW";
@@ -103,6 +106,7 @@ fn dtype_tag(d: KvDtype) -> u8 {
         KvDtype::F32 => 0,
         KvDtype::Fp8E4M3 => 1,
         KvDtype::Int8 => 2,
+        KvDtype::Int4Outlier => 3,
     }
 }
 
@@ -111,6 +115,7 @@ fn dtype_from_tag(t: u8) -> anyhow::Result<KvDtype> {
         0 => Ok(KvDtype::F32),
         1 => Ok(KvDtype::Fp8E4M3),
         2 => Ok(KvDtype::Int8),
+        3 => Ok(KvDtype::Int4Outlier),
         _ => bail!("unknown kv dtype tag {t}"),
     }
 }
@@ -300,6 +305,23 @@ pub fn encode_ex(
                 put_f32s(&mut out, k_amax);
                 put_f32s(&mut out, v_amax);
             }
+            KvStore::Q4 { k, v, k_amax, v_amax, k_out, v_out } => {
+                raw += (k.len() + v.len()) as u64;
+                enc += put_code_slab(&mut out, k, codec);
+                enc += put_code_slab(&mut out, v, codec);
+                put_f32s(&mut out, k_amax);
+                put_f32s(&mut out, v_amax);
+                // Outlier side-tables ride behind the slabs verbatim:
+                // tiny (bounded by `outlier_cap` per slab) and exact
+                // f32, so no codec framing.
+                for table in k_out.iter().chain(v_out.iter()) {
+                    put_u16(&mut out, table.len() as u16);
+                    for (row, vals) in table {
+                        put_u16(&mut out, *row);
+                        put_f32s(&mut out, vals);
+                    }
+                }
+            }
         }
     }
     let sum = fnv1a(FNV_OFFSET, &out);
@@ -360,6 +382,39 @@ pub fn decode(bytes: &[u8]) -> anyhow::Result<(Snapshot, WireInfo)> {
         let store = if dtype == KvDtype::F32 {
             ensure!(!taint, "f32 blocks are never tainted");
             KvStore::F32 { k: r.f32s(elems)?, v: r.f32s(elems)? }
+        } else if dtype == KvDtype::Int4Outlier {
+            // Packed nibble slabs: the framed unit is the byte count,
+            // not the element count.
+            let slab_bytes = n_layer * block_tokens * d.div_ceil(2);
+            let before = r.pos;
+            let k = read_code_slab(&mut r, slab_bytes, codec)?;
+            let v = read_code_slab(&mut r, slab_bytes, codec)?;
+            raw += 2 * slab_bytes as u64;
+            enc += (r.pos - before) as u64;
+            let k_amax = r.f32s(n_layer)?;
+            let v_amax = r.f32s(n_layer)?;
+            let cap = outlier_cap(block_tokens);
+            let mut read_tables = |r: &mut Reader<'_>| -> anyhow::Result<Vec<Vec<(u16, Vec<f32>)>>> {
+                let mut sides = Vec::with_capacity(n_layer);
+                for _ in 0..n_layer {
+                    let n = r.u16()? as usize;
+                    ensure!(n <= cap, "outlier table of {n} exceeds cap {cap}");
+                    let mut table = Vec::with_capacity(n);
+                    let mut prev: Option<u16> = None;
+                    for _ in 0..n {
+                        let row = r.u16()?;
+                        ensure!((row as usize) < block_tokens, "outlier row {row} out of block");
+                        ensure!(prev.is_none_or(|p| p < row), "outlier rows must be sorted");
+                        prev = Some(row);
+                        table.push((row, r.f32s(d)?));
+                    }
+                    sides.push(table);
+                }
+                Ok(sides)
+            };
+            let k_out = read_tables(&mut r)?;
+            let v_out = read_tables(&mut r)?;
+            KvStore::Q4 { k, v, k_amax, v_amax, k_out, v_out }
         } else {
             let before = r.pos;
             let k = read_code_slab(&mut r, elems, codec)?;
@@ -400,7 +455,8 @@ mod tests {
     use crate::model::{Arch, ModelConfig};
     use crate::util::rng::Rng;
 
-    const ALL_DTYPES: [KvDtype; 3] = [KvDtype::F32, KvDtype::Fp8E4M3, KvDtype::Int8];
+    const ALL_DTYPES: [KvDtype; 4] =
+        [KvDtype::F32, KvDtype::Fp8E4M3, KvDtype::Int8, KvDtype::Int4Outlier];
 
     fn cfg() -> ModelConfig {
         ModelConfig {
@@ -482,7 +538,7 @@ mod tests {
         // Quantized mid-block truncate taints the tail slab; the taint
         // must survive the wire so a resumed block stays out of the
         // dedup index.
-        for dtype in [KvDtype::Fp8E4M3, KvDtype::Int8] {
+        for dtype in [KvDtype::Fp8E4M3, KvDtype::Int8, KvDtype::Int4Outlier] {
             let mut p = pool_dt(16, dtype);
             let mut t = BlockTable::new(64);
             run_tokens(&mut p, &mut t, &(20..31).collect::<Vec<u8>>()); // 11 tokens
@@ -516,7 +572,7 @@ mod tests {
     fn randomized_round_trip_across_shapes() {
         let mut rng = Rng::seed_from_u64(0x5d9_1ce);
         for _ in 0..60 {
-            let dtype = ALL_DTYPES[rng.below(3)];
+            let dtype = ALL_DTYPES[rng.below(4)];
             let mut p = pool_dt(32, dtype);
             let mut t = BlockTable::new(64);
             let n = 1 + rng.below(20);
@@ -537,6 +593,38 @@ mod tests {
             };
             let snap = p.suspend(t);
             let codec = rng.bool(0.5);
+            round_trip(&p, &snap, codec);
+        }
+    }
+
+    #[test]
+    fn round_trip_int4_with_populated_outlier_tables() {
+        // One spiked row per block forces a side-table entry (bt=4 →
+        // cap 1); the table must survive the wire byte-exactly under
+        // both framings.
+        let mut p = pool_dt(16, KvDtype::Int4Outlier);
+        let mut t = BlockTable::new(64);
+        let toks: Vec<u8> = (30..41).collect(); // 11 tokens, mid-block tail
+        p.prepare_tokens(&mut t, toks.len());
+        for (j, tok) in toks.iter().enumerate() {
+            for li in 0..2 {
+                // Every 4th position spikes 60× over the running amax,
+                // tripping the outlier residual test on the old grid.
+                let base = *tok as f32 * 0.11 + 0.3;
+                let val = if j % 4 == 2 { base * 60.0 } else { base };
+                p.write_row(&mut t, li, j, &vec![val; 8], &vec![-val; 8]);
+            }
+        }
+        p.commit(&mut t, &toks);
+        let snap = p.suspend(t);
+        let has_outliers = snap.stores.iter().any(|(s, _)| match s {
+            KvStore::Q4 { k_out, v_out, .. } => {
+                k_out.iter().chain(v_out.iter()).any(|t| !t.is_empty())
+            }
+            _ => false,
+        });
+        assert!(has_outliers, "spiked rows failed to populate a side-table");
+        for codec in [false, true] {
             round_trip(&p, &snap, codec);
         }
     }

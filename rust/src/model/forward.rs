@@ -60,19 +60,20 @@ pub enum KvSegs<'a> {
 }
 
 impl KvSegs<'_> {
-    /// Total K elements across segments (debug shape check).
-    fn k_len(&self) -> usize {
+    /// Total K elements across segments (debug shape check; `d` divides
+    /// packed nibble bytes back into element counts).
+    fn k_len(&self, d: usize) -> usize {
         match self {
             KvSegs::F32 { k, .. } => k.iter().map(|b| b.len()).sum(),
-            KvSegs::Quant { k, .. } => k.iter().map(|b| b.codes.len()).sum(),
+            KvSegs::Quant { k, .. } => k.iter().map(|b| b.elems(d)).sum(),
         }
     }
 
     /// Total V elements across segments (debug shape check).
-    fn v_len(&self) -> usize {
+    fn v_len(&self, d: usize) -> usize {
         match self {
             KvSegs::F32 { v, .. } => v.iter().map(|b| b.len()).sum(),
-            KvSegs::Quant { v, .. } => v.iter().map(|b| b.codes.len()).sum(),
+            KvSegs::Quant { v, .. } => v.iter().map(|b| b.elems(d)).sum(),
         }
     }
 }
@@ -286,8 +287,8 @@ pub fn paged_attention(
         let kv_len = s.past + s.n_new;
         let st = s.seg_tokens;
         debug_assert!(st > 0, "segment size must be positive");
-        debug_assert_eq!(s.segs.k_len(), kv_len * d, "K prefix length mismatch");
-        debug_assert_eq!(s.segs.v_len(), kv_len * d, "V prefix length mismatch");
+        debug_assert_eq!(s.segs.k_len(d), kv_len * d, "K prefix length mismatch");
+        debug_assert_eq!(s.segs.v_len(d), kv_len * d, "V prefix length mismatch");
         let col0 = hd * dh;
         // RoPE'd K head panel, built once per (seq, head) task and
         // reused across this sequence's query rows. GPT (no RoPE)
@@ -300,8 +301,8 @@ pub fn paged_attention(
                         kh.row_mut(r).copy_from_slice(seg_head(k, st, d, col0, dh, r));
                     }
                     KvSegs::Quant { dtype, k, .. } => {
-                        let (codes, sc) = qattn::seg_head_codes(k, st, d, col0, dh, r);
-                        qattn::decode_head_into(kh.row_mut(r), codes, sc, *dtype);
+                        let hc = qattn::seg_head_codes(k, st, d, col0, dh, r);
+                        qattn::decode_head_into(kh.row_mut(r), hc, *dtype);
                     }
                 }
             }
@@ -326,8 +327,8 @@ pub fn paged_attention(
                     None => match &s.segs {
                         KvSegs::F32 { k, .. } => dot(&qh, seg_head(k, st, d, col0, dh, r)),
                         KvSegs::Quant { dtype, k, .. } => {
-                            let (codes, sc) = qattn::seg_head_codes(k, st, d, col0, dh, r);
-                            qattn::dot_head(&qh, codes, sc, *dtype)
+                            let hc = qattn::seg_head_codes(k, st, d, col0, dh, r);
+                            qattn::dot_head(&qh, hc, *dtype)
                         }
                     },
                 };
@@ -344,8 +345,8 @@ pub fn paged_attention(
                         }
                     }
                     KvSegs::Quant { dtype, v, .. } => {
-                        let (codes, sc) = qattn::seg_head_codes(v, st, d, col0, dh, r);
-                        qattn::axpy_head(orow, w, codes, sc, *dtype);
+                        let hc = qattn::seg_head_codes(v, st, d, col0, dh, r);
+                        qattn::axpy_head(orow, w, hc, *dtype);
                     }
                 }
             }

@@ -130,6 +130,28 @@ pub fn greedy_row(logits: &Matrix, row: usize) -> u8 {
     best as u8
 }
 
+/// Invert the cumulative distribution of the (unnormalized) mass
+/// vector `probs` at `u ∈ [0, Σprobs]`.
+///
+/// Float rounding can leave `u > 0` after the full scan — e.g. `u`
+/// drawn exactly at the sum while the running subtraction rounds low —
+/// so the fallback is the **last index with nonzero mass**: the token
+/// an exact CDF inversion would assign that boundary to, never an
+/// arbitrary out-of-distribution constant.
+fn pick_from_probs(probs: &[f32], mut u: f32) -> u8 {
+    let mut last = 0usize;
+    for (i, p) in probs.iter().enumerate() {
+        if *p > 0.0 {
+            u -= p;
+            if u <= 0.0 {
+                return i as u8;
+            }
+            last = i;
+        }
+    }
+    last as u8
+}
+
 impl Model {
     /// Process `tokens` (one sequence) on top of `cache`, appending to
     /// it. Returns logits `[tokens.len(), vocab]`.
@@ -310,14 +332,8 @@ impl Model {
         let max = row.iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
         let probs: Vec<f32> = row.iter().map(|v| ((v - max) / temperature).exp()).collect();
         let sum: f32 = probs.iter().sum();
-        let mut u = rng.range_f32(0.0, sum);
-        for (i, p) in probs.iter().enumerate() {
-            u -= p;
-            if u <= 0.0 {
-                return i as u8;
-            }
-        }
-        255
+        let u = rng.range_f32(0.0, sum);
+        pick_from_probs(&probs, u)
     }
 
     /// Greedy / temperature sampling from the last row of `logits`.
@@ -463,5 +479,25 @@ mod tests {
         m.forward_cached(&[1], &mut cache); // crosses into chunk 2
         assert!(cache.bytes() > one_chunk, "17th token must grow the cache");
         assert!(cache.bytes() >= KvCache::bytes_for_tokens(&m.cfg, KV_CHUNK_TOKENS + 1));
+    }
+
+    #[test]
+    fn cdf_boundary_falls_back_to_last_supported_token() {
+        // u drawn exactly at the sum (or overshooting it by rounding):
+        // the running subtraction can leave u > 0 after the full scan.
+        // The pick must be the last token with nonzero mass, never a
+        // hardcoded out-of-distribution constant.
+        let probs = vec![0.1f32, 0.2, 0.3, 0.0, 0.4, 0.0];
+        let sum: f32 = probs.iter().sum();
+        assert_eq!(pick_from_probs(&probs, sum), 4);
+        assert_eq!(pick_from_probs(&probs, sum + 1e-3), 4, "forced fallthrough");
+        // Interior draws are unaffected.
+        assert_eq!(pick_from_probs(&probs, 0.0), 0);
+        assert_eq!(pick_from_probs(&probs, 0.15), 1);
+        // Tiny-temperature degenerate case: all mass on one token, the
+        // boundary draw still lands on it.
+        let degenerate = vec![0.0f32, 0.0, 1.0, 0.0];
+        assert_eq!(pick_from_probs(&degenerate, 1.0), 2);
+        assert_eq!(pick_from_probs(&degenerate, 1.0 + f32::EPSILON), 2);
     }
 }

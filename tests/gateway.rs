@@ -87,7 +87,10 @@ fn sync_oracle(
 
 #[test]
 fn streams_bit_identical_to_sync_run_across_dtypes_and_preempt() {
-    for (di, dtype) in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3].into_iter().enumerate() {
+    for (di, dtype) in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier]
+        .into_iter()
+        .enumerate()
+    {
         for preempt in [false, true] {
             let model = tiny_model(Arch::Gpt, 90 + di as u64);
             let mut rng = Rng::seed_from_u64(0xBE5E ^ ((di as u64) << 2) ^ (preempt as u64));
@@ -507,5 +510,96 @@ fn keep_alive_serves_sequential_requests_on_one_socket() {
     assert!(rest.starts_with("HTTP/1.1 200"), "got: {rest}");
     assert!(rest.to_ascii_lowercase().contains("connection: close"), "got: {rest}");
     assert!(rest.ends_with("ok\n"));
+    drop(gw);
+}
+
+#[test]
+fn oversize_body_gets_413_and_connection_close() {
+    let model = tiny_model(Arch::Gpt, 162);
+    let gw = Gateway::start(model, BatchPolicy::default(), None, GatewayOpts::default());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let h = gw.handle();
+    std::thread::spawn(move || {
+        let _ = sdq::gateway::http::serve(listener, h);
+    });
+
+    // Claim a body far over the 1 MiB cap and send none of it: the
+    // server must refuse from the header alone (no truncated read that
+    // leaves a tail in the socket) and hang up even though the client
+    // asked for keep-alive.
+    let mut conn = TcpStream::connect(addr).unwrap();
+    write!(
+        conn,
+        "POST /v1/completions HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\
+         Content-Length: {}\r\n\r\n",
+        2 << 20
+    )
+    .unwrap();
+    let mut out = String::new();
+    use std::io::Read;
+    // read_to_string only returns because the server closed the socket.
+    conn.read_to_string(&mut out).unwrap();
+    assert!(out.starts_with("HTTP/1.1 413"), "got: {out}");
+    assert!(out.to_ascii_lowercase().contains("connection: close"), "got: {out}");
+    drop(gw);
+}
+
+#[test]
+fn unparseable_content_length_gets_400_and_connection_close() {
+    let model = tiny_model(Arch::Gpt, 163);
+    let gw = Gateway::start(model, BatchPolicy::default(), None, GatewayOpts::default());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let h = gw.handle();
+    std::thread::spawn(move || {
+        let _ = sdq::gateway::http::serve(listener, h);
+    });
+
+    // A Content-Length the server cannot parse means the body length
+    // on the wire is unknowable — treating it as 0 (the old behavior)
+    // desyncs the next pipelined request. Expect 400 + hangup.
+    let mut conn = TcpStream::connect(addr).unwrap();
+    write!(
+        conn,
+        "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\
+         Content-Length: banana\r\n\r\n"
+    )
+    .unwrap();
+    let mut out = String::new();
+    use std::io::Read;
+    conn.read_to_string(&mut out).unwrap();
+    assert!(out.starts_with("HTTP/1.1 400"), "got: {out}");
+    assert!(out.to_ascii_lowercase().contains("connection: close"), "got: {out}");
+    drop(gw);
+}
+
+#[test]
+fn client_seed_makes_sampled_completions_reproducible() {
+    let model = tiny_model(Arch::Gpt, 164);
+    let gw = Gateway::start(model, BatchPolicy::default(), None, GatewayOpts::default());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let h = gw.handle();
+    std::thread::spawn(move || {
+        let _ = sdq::gateway::http::serve(listener, h);
+    });
+
+    // Two sampled submissions with the same pinned seed get different
+    // server-assigned ids; identical outputs prove the client seed —
+    // not the id — drives the sampling RNG.
+    let body = r#"{"prompt":"abc","max_new_tokens":8,"temperature":0.9,"seed":7}"#;
+    let done_event = |resp: &str| -> String {
+        sse_events(resp)
+            .into_iter()
+            .rev()
+            .find(|e| e.contains("\"done\""))
+            .expect("stream must end with a done event")
+    };
+    let a = done_event(&http(addr, "POST", "/v1/completions", body));
+    let b = done_event(&http(addr, "POST", "/v1/completions", body));
+    assert_eq!(a, b, "same seed must reproduce the sampled completion");
+    let toks = Json::parse(&a).unwrap().get("tokens").cloned().expect("tokens array");
+    assert!(matches!(&toks, Json::Arr(v) if v.len() == 8), "got: {toks:?}");
     drop(gw);
 }

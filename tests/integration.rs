@@ -494,7 +494,7 @@ fn speculative_bit_identity_all_drafters_and_kv_dtypes() {
                 })
                 .collect()
         };
-        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier] {
             let policy = BatchPolicy {
                 kv_dtype: Some(dtype),
                 max_active: 3,

@@ -159,7 +159,10 @@ fn run_migrated(
 
 #[test]
 fn migration_bit_identical_every_dtype_and_suspend_shape() {
-    for (di, dtype) in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3].into_iter().enumerate() {
+    for (di, dtype) in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier]
+        .into_iter()
+        .enumerate()
+    {
         let model = tiny_model(if di % 2 == 0 { Arch::Gpt } else { Arch::Llama }, 210 + di as u64);
         let policy = BatchPolicy { kv_dtype: Some(dtype), ..Default::default() };
         let (want, _) = run_plain(&model, policy, None, workload(false));

@@ -104,7 +104,7 @@ fn stress_preemption_bit_exact_every_dtype_and_drafter() {
         let reqs = random_requests(&mut rng, n);
         let budget_blocks = 3 + rng.below(2); // 3..=4 blocks
         let max_active = 4 + rng.below(4);
-        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+        for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier] {
             for drafter in ["off", "ngram"] {
                 let mk_spec = || (drafter == "ngram").then(|| SpecPolicy::ngram(3));
                 let roomy = BatchPolicy {
@@ -222,7 +222,7 @@ impl Lane {
 
 #[test]
 fn stress_pool_interleavings_match_never_swapping_mirror() {
-    for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3] {
+    for dtype in [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier] {
         for seed in 0..6u64 {
             let ctx = format!("{dtype:?} seed {seed}");
             let mut rng = Rng::seed_from_u64(0xBADD00D ^ (seed * 1013));

@@ -660,7 +660,8 @@ fn prop_truncate_fork_rollback_pool_invariants() {
     check("truncate/fork/rollback invariants", 10, |rng| {
         let d = 8usize;
         let cfg = kv_test_cfg(d);
-        let dtype = [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3][rng.below(3)];
+        let dtype = [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier]
+            [rng.below(4)];
         let mut pool = BlockPool::with_params(&cfg, 8 << 20, 8, dtype);
         // (table, shadow copy of its committed tokens)
         let mut live: Vec<(BlockTable, Vec<u8>)> = Vec::new();
@@ -779,7 +780,8 @@ fn prop_speculative_greedy_is_bit_identical() {
     check("speculative == plain greedy", 6, |rng| {
         let arch = [sdq::model::Arch::Gpt, sdq::model::Arch::Llama][rng.below(2)];
         let model = sdq::model::testutil::tiny_model(arch, rng.next_u64());
-        let dtype = [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3][rng.below(3)];
+        let dtype = [KvDtype::F32, KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier]
+            [rng.below(4)];
         let k = 1 + rng.below(4);
         let reqs: Vec<Request> = (0..4)
             .map(|i| {
@@ -804,6 +806,65 @@ fn prop_speculative_greedy_is_bit_identical() {
         let spec = run(Some(SpecPolicy::ngram(k)));
         if spec != plain {
             return Err(format!("{arch:?}/{dtype:?} k={k}: speculative output diverged"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sample_row_deterministic_in_vocab_and_tracks_softmax() {
+    // `Model::sample_row` properties: (a) a fixed RNG seed makes the
+    // draw sequence deterministic, (b) every draw is in-vocab even at
+    // the CDF boundary, (c) over a skewed 4-token distribution the
+    // empirical frequencies track softmax within a tolerance.
+    use sdq::model::testutil::tiny_model;
+    check("sample_row: deterministic + in-vocab + softmax", 8, |rng| {
+        let model = tiny_model(sdq::model::Arch::Gpt, rng.next_u64());
+        let temperature = 0.5 + rng.below(10) as f32 * 0.1; // 0.5..1.4
+        // Skewed 4-token logit row, padded with -inf-ish mass so all
+        // probability sits on tokens 0..4.
+        let spread = 1.0 + rng.below(3) as f32; // softmax skew knob
+        let mut logits = vec![-1e9f32; 16];
+        for (t, l) in logits.iter_mut().take(4).enumerate() {
+            *l = t as f32 * spread * 0.5;
+        }
+        let m = Matrix::from_vec(1, 16, logits.clone());
+
+        let seed = rng.next_u64();
+        let draw_seq = |n: usize| -> Vec<u8> {
+            let mut r = Rng::seed_from_u64(seed);
+            (0..n).map(|_| model.sample_row(&m, 0, temperature, &mut r)).collect()
+        };
+        let n = 4000usize;
+        let a = draw_seq(n);
+        if a != draw_seq(n) {
+            return Err("fixed seed must reproduce the draw sequence".into());
+        }
+        let mut counts = [0usize; 16];
+        for &t in &a {
+            if t as usize >= 16 {
+                return Err(format!("out-of-vocab token {t}"));
+            }
+            counts[t as usize] += 1;
+        }
+        if counts[4..].iter().sum::<usize>() != 0 {
+            return Err("mass leaked onto ~zero-probability tokens".into());
+        }
+        // Softmax reference over the 4 live tokens.
+        let max = logits[..4].iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
+        let w: Vec<f64> =
+            logits[..4].iter().map(|l| (((l - max) / temperature) as f64).exp()).collect();
+        let z: f64 = w.iter().sum();
+        for (t, wt) in w.iter().enumerate() {
+            let want = wt / z;
+            let got = counts[t] as f64 / n as f64;
+            // ~5 sigma on a binomial proportion at n=4000, floored.
+            let tol = (5.0 * (want * (1.0 - want) / n as f64).sqrt()).max(0.015);
+            if (got - want).abs() > tol {
+                return Err(format!(
+                    "token {t}: empirical {got:.4} vs softmax {want:.4} (tol {tol:.4})"
+                ));
+            }
         }
         Ok(())
     });

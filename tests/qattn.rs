@@ -5,9 +5,10 @@
 //! ([`BlockPool::layer_code_views`] → [`KvSegs::Quant`], decoded in
 //! register by `kv::qattn`) is **bit-for-bit identical** to the same
 //! kernel over scratch-dequantized fp32 segments
-//! ([`BlockPool::layer_views`] → [`KvSegs::F32`]) — for int8 AND
-//! fp8-e4m3, with and without RoPE, under a randomized pool mutation
-//! history that hits every hazard the quantized store has:
+//! ([`BlockPool::layer_views`] → [`KvSegs::F32`]) — for int8,
+//! fp8-e4m3 AND int4-outlier (dense nibble plane + exact f32
+//! side-table rows), with and without RoPE, under a randomized pool
+//! mutation history that hits every hazard the quantized store has:
 //!
 //! * **random block boundaries** — 4-token blocks and ragged extends,
 //!   so views constantly cut mid-block;
@@ -17,7 +18,10 @@
 //!   code segments are read through shared and privately-copied blocks;
 //! * **mid-block truncation** — [`BlockPool::truncate`] to a non-block
 //!   boundary then re-extend, so stale quantized tails sit past live
-//!   rows inside the same block.
+//!   rows inside the same block;
+//! * **suspend/resume** — [`BlockPool::suspend`] then immediate
+//!   [`BlockPool::resume`], so reads go through snapshot-owned bytes
+//!   reinstalled in fresh slots.
 //!
 //! Riding along: a loose divergence sanity bound for the quantized
 //! routes against an fp32-pool reference (the *storage* error — both
@@ -139,7 +143,7 @@ fn assert_routes_bit_identical(
 
 #[test]
 fn quantized_domain_attention_bit_identical_under_churn() {
-    for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+    for dtype in [KvDtype::Int8, KvDtype::Fp8E4M3, KvDtype::Int4Outlier] {
         for seed in 0..4u64 {
             let cfg = tiny_cfg(dtype);
             // 4-token blocks: every extend crosses boundaries quickly.
@@ -158,8 +162,8 @@ fn quantized_domain_attention_bit_identical_under_churn() {
                 // block's amax and force requantization of its
                 // already-staged rows.
                 let mag = 0.3 + 0.6 * round as f32;
-                let ti = rng.below(tables.len() as u64) as usize;
-                match rng.below(4) {
+                let ti = rng.below(tables.len());
+                match rng.below(5) {
                     0 | 1 => {
                         let n = 1 + rng.below(9) as usize;
                         extend(&cfg, &mut pool, &mut tables[ti], &mut rng, n, mag);
@@ -169,13 +173,13 @@ fn quantized_domain_attention_bit_identical_under_churn() {
                         // fresh rows over the stale quantized tail.
                         let len = tables[ti].len();
                         if len >= 3 {
-                            let new_len = 1 + rng.below(len as u64 - 1) as usize;
+                            let new_len = 1 + rng.below(len - 1);
                             pool.truncate(&mut tables[ti], new_len);
                         }
                         let n = 1 + rng.below(5) as usize;
                         extend(&cfg, &mut pool, &mut tables[ti], &mut rng, n, mag);
                     }
-                    _ => {
+                    3 => {
                         // Fork, then diverge both sides: the shared
                         // open block goes through copy-on-write.
                         if tables.len() < 4 {
@@ -186,6 +190,18 @@ fn quantized_domain_attention_bit_identical_under_churn() {
                         }
                         let n = 1 + rng.below(5) as usize;
                         extend(&cfg, &mut pool, &mut tables[ti], &mut rng, n, mag);
+                    }
+                    _ => {
+                        // Swap out / swap in: quantized snapshots own
+                        // the exact codes, scales (and int4 outlier
+                        // tables), so the resumed table must keep both
+                        // read routes bit-identical with zero
+                        // re-prefill.
+                        let t = tables.remove(ti);
+                        let snap = pool.suspend(t);
+                        let (t2, ready) = pool.resume(&snap);
+                        assert_eq!(ready, t2.len(), "quantized resume must be exact");
+                        tables.insert(ti, t2);
                     }
                 }
                 let tb_refs: Vec<&BlockTable> = tables.iter().collect();
@@ -203,7 +219,9 @@ fn quantized_domain_attention_bit_identical_under_churn() {
 /// relative, likewise amplified).
 #[test]
 fn quantized_routes_track_f32_reference() {
-    for (dtype, bound) in [(KvDtype::Int8, 0.1f32), (KvDtype::Fp8E4M3, 0.75f32)] {
+    for (dtype, bound) in
+        [(KvDtype::Int8, 0.1f32), (KvDtype::Fp8E4M3, 0.75f32), (KvDtype::Int4Outlier, 1.5f32)]
+    {
         let cfgq = tiny_cfg(dtype);
         let cfgf = tiny_cfg(KvDtype::F32);
         let mut pq = BlockPool::with_params(&cfgq, 1 << 22, 4, dtype);
